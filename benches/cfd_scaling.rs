@@ -1,0 +1,45 @@
+//! Bench: Fig 7 — CFD strong scaling (speedup + parallel efficiency vs
+//! N_ranks, T_1 and T_100 series), plus the real single-rank CFD period
+//! cost on this machine that anchors the DES calibration.
+//!
+//! Run: `cargo bench --bench cfd_scaling`
+
+use drlfoam::cluster::Calibration;
+use drlfoam::env::CfdEnv;
+use drlfoam::io_interface::{make_interface, IoMode};
+use drlfoam::reproduce;
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::util::bench;
+
+fn main() {
+    let out = std::path::Path::new("out");
+    std::fs::create_dir_all(out).unwrap();
+    let calib = Calibration::paper_scale();
+    println!("{}", reproduce::fig7(&calib, out).unwrap());
+
+    // --- real anchor: single-rank CFD actuation period on this machine
+    let m = Manifest::load("artifacts").expect("run `make artifacts`");
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let vm = m.variant("small").unwrap().clone();
+    rt.load(&vm.cfd_period_file).unwrap();
+    let work = std::env::temp_dir().join("drlfoam-bench-cfd");
+    std::fs::create_dir_all(&work).unwrap();
+    let mut env = CfdEnv::new(
+        vm.clone(),
+        m.load_state0("small").unwrap(),
+        m.drl.action_smoothing_beta,
+        m.drl.reward_lift_penalty,
+        make_interface(IoMode::InMemory, &work, 0).unwrap(),
+    );
+    let cfd = rt.get(&vm.cfd_period_file).unwrap();
+    env.reset(cfd).unwrap();
+    let r = bench::bench("cfd_period small (1 rank, real)", 3, 20, || {
+        env.step(cfd, 0.1).unwrap();
+    });
+    println!(
+        "\n(real {:.1} ms/period on this machine vs paper-scale {:.2} s; the DES\n uses the paper scale for absolute hours, `--calib out/calib.json`\n for machine scale)",
+        r.mean_s * 1e3,
+        calib.t_period_1rank
+    );
+    bench::save("cfd_scaling", &[r]);
+}

@@ -1,0 +1,68 @@
+//! Bench: Fig 10 — per-episode time breakdown (CFD vs I/O vs DRL) as the
+//! environment count grows, via the DES at paper scale; plus the real
+//! measured breakdown of one episode on this machine.
+//!
+//! Run: `cargo bench --bench episode_breakdown`
+
+use drlfoam::cluster::Calibration;
+use drlfoam::drl::Policy;
+use drlfoam::env::CfdEnv;
+use drlfoam::io_interface::{make_interface, IoMode};
+use drlfoam::reproduce;
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::util::rng::Rng;
+
+fn main() {
+    let out = std::path::Path::new("out");
+    std::fs::create_dir_all(out).unwrap();
+    let calib = Calibration::paper_scale();
+    println!("{}", reproduce::fig10(&calib, out).unwrap());
+
+    // --- real measured breakdown, one 20-period episode per I/O mode
+    let m = Manifest::load("artifacts").expect("make artifacts");
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let vm = m.variant("small").unwrap().clone();
+    rt.load(&vm.cfd_period_file).unwrap();
+    rt.load(&m.drl.policy_apply_file).unwrap();
+    let params = m.load_params_init().unwrap();
+    let policy = Policy::new(m.drl.n_obs);
+
+    println!("real breakdown on this machine (20 periods, `small` grid):");
+    println!(
+        "{:<12} {:>10} {:>10} {:>12}",
+        "mode", "cfd (ms)", "io (ms)", "policy (ms)"
+    );
+    for mode in [IoMode::InMemory, IoMode::Optimized, IoMode::Baseline] {
+        let work = std::env::temp_dir().join(format!("drlfoam-bench-bd-{}", mode.name()));
+        std::fs::create_dir_all(&work).unwrap();
+        let mut env = CfdEnv::new(
+            vm.clone(),
+            m.load_state0("small").unwrap(),
+            m.drl.action_smoothing_beta,
+            m.drl.reward_lift_penalty,
+            make_interface(mode, &work, 0).unwrap(),
+        );
+        let cfd = rt.get(&vm.cfd_period_file).unwrap();
+        let pol = rt.get(&m.drl.policy_apply_file).unwrap();
+        let mut rng = Rng::new(0);
+        let mut obs = env.reset(cfd).unwrap();
+        let (mut t_cfd, mut t_io, mut t_pol) = (0.0, 0.0, 0.0);
+        for _ in 0..20 {
+            let t0 = std::time::Instant::now();
+            let pout = policy.apply(pol, &params, &obs).unwrap();
+            t_pol += t0.elapsed().as_secs_f64();
+            let (a, _) = policy.sample(&pout, &mut rng);
+            let sr = env.step(cfd, a).unwrap();
+            t_cfd += sr.timings.cfd_s;
+            t_io += sr.timings.io_s;
+            obs = sr.obs;
+        }
+        println!(
+            "{:<12} {:>10.1} {:>10.1} {:>12.1}",
+            mode.name(),
+            t_cfd * 1e3,
+            t_io * 1e3,
+            t_pol * 1e3
+        );
+    }
+}

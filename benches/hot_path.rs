@@ -1,0 +1,99 @@
+//! Bench: request-path micro-benchmarks (the perf-pass instrument for
+//! EXPERIMENTS.md section Perf). Not tied to a paper figure: this is the L3
+//! latency budget — policy serving, CFD period execution, PPO minibatch,
+//! and the literal-conversion overhead around each.
+//!
+//! Run: `cargo bench --bench hot_path`
+
+use drlfoam::drl::{Batch, Policy, PpoTrainer, Trajectory, Transition};
+use drlfoam::runtime::{literal_f32, Manifest, Runtime};
+use drlfoam::util::bench;
+use drlfoam::util::rng::Rng;
+
+fn main() {
+    let m = Manifest::load("artifacts").expect("run `make artifacts`");
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let vm = m.variant("small").unwrap().clone();
+    rt.load(&vm.cfd_period_file).unwrap();
+    rt.load(&m.drl.policy_apply_file).unwrap();
+    rt.load(&m.drl.ppo_update_file).unwrap();
+    let params = m.load_params_init().unwrap();
+    let mut results = Vec::new();
+
+    // --- policy serving (B=1)
+    let pol = rt.get(&m.drl.policy_apply_file).unwrap();
+    let policy = Policy::new(m.drl.n_obs);
+    let obs = vec![0.2f32; m.drl.n_obs];
+    results.push(bench::bench("policy_apply B=1", 10, 100, || {
+        policy.apply(pol, &params, &obs).unwrap();
+    }));
+
+    // --- device-resident params session (perf fast path)
+    let session = drlfoam::drl::policy::PolicySession::new(&rt, &params, m.drl.n_obs).unwrap();
+    results.push(bench::bench("policy_apply B=1 (session/buffers)", 10, 100, || {
+        session.apply(&rt, pol, &obs).unwrap();
+    }));
+
+    // --- literal upload overhead for the params vector (340k f32)
+    results.push(bench::bench("literal_f32 340k params", 10, 100, || {
+        literal_f32(&params, &[params.len() as i64]).unwrap();
+    }));
+
+    // --- CFD period (the dominant cost; includes state up/download)
+    let (u, v, p) = m.load_state0("small").unwrap();
+    let dims = [vm.ny as i64, vm.nx as i64];
+    let cfd = rt.get(&vm.cfd_period_file).unwrap();
+    results.push(bench::bench("cfd_period small (incl. transfers)", 3, 30, || {
+        let args = [
+            literal_f32(&u, &dims).unwrap(),
+            literal_f32(&v, &dims).unwrap(),
+            literal_f32(&p, &dims).unwrap(),
+            drlfoam::runtime::scalar_f32(0.1),
+        ];
+        cfd.run(&args).unwrap();
+    }));
+
+    // --- PPO minibatch update
+    let mut rng = Rng::new(1);
+    let traj = Trajectory {
+        transitions: (0..m.drl.minibatch)
+            .map(|_| Transition {
+                obs: (0..m.drl.n_obs).map(|_| rng.normal() as f32).collect(),
+                action: rng.normal() * 0.1,
+                logp: -1.0,
+                reward: rng.normal() * 0.1,
+                value: 0.0,
+            })
+            .collect(),
+        last_value: 0.0,
+        env_id: 0,
+    };
+    let batch = Batch::assemble(&[traj], m.drl.n_obs, 0.99, 0.95);
+    let mut trainer = PpoTrainer::new(&m.drl, params.clone(), 1);
+    let upd = rt.get(&m.drl.ppo_update_file).unwrap();
+    results.push(bench::bench("ppo_update 1 minibatch (64)", 3, 30, || {
+        trainer.update(upd, &batch, &mut rng).unwrap();
+    }));
+
+    // --- GAE + batch assembly (pure rust part of the loop)
+    let trajs: Vec<Trajectory> = (0..8)
+        .map(|e| Trajectory {
+            transitions: (0..100)
+                .map(|_| Transition {
+                    obs: vec![0.1; m.drl.n_obs],
+                    action: 0.0,
+                    logp: -1.0,
+                    reward: 0.05,
+                    value: 0.01,
+                })
+                .collect(),
+            last_value: 0.0,
+            env_id: e,
+        })
+        .collect();
+    results.push(bench::bench("batch assemble 8x100 samples", 5, 50, || {
+        Batch::assemble(&trajs, m.drl.n_obs, 0.99, 0.95);
+    }));
+
+    bench::save("hot_path", &results);
+}

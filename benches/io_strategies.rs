@@ -1,0 +1,54 @@
+//! Bench: Table II + Figs 11/12 — the three I/O strategies (Baseline /
+//! I/O-Disabled / Optimized) across env counts via the DES, plus the real
+//! per-exchange cost of each interface on this machine's filesystem
+//! (bytes written, serialize+parse wall time).
+//!
+//! Run: `cargo bench --bench io_strategies`
+
+use drlfoam::cluster::Calibration;
+use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
+use drlfoam::reproduce;
+use drlfoam::util::bench;
+use drlfoam::util::rng::Rng;
+
+fn main() {
+    let out = std::path::Path::new("out");
+    std::fs::create_dir_all(out).unwrap();
+    let calib = Calibration::paper_scale();
+    println!("{}", reproduce::table2(&calib, out).unwrap());
+    println!("{}", reproduce::summary(&calib, out).unwrap());
+
+    // --- real per-exchange costs on this machine (the `small` grid)
+    let (ny, nx, substeps) = (48usize, 258usize, 10usize);
+    let mut rng = Rng::new(5);
+    let u: Vec<f32> = (0..ny * nx).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..ny * nx).map(|_| rng.normal() as f32).collect();
+    let p: Vec<f32> = (0..ny * nx).map(|_| rng.normal() as f32).collect();
+    let payload = CfdOutput {
+        probes: (0..149).map(|_| rng.normal() as f32).collect(),
+        cd_hist: vec![3.1; substeps],
+        cl_hist: vec![-0.7; substeps],
+    };
+    let work = std::env::temp_dir().join("drlfoam-bench-io");
+    std::fs::create_dir_all(&work).unwrap();
+
+    let mut results = Vec::new();
+    for mode in [IoMode::Baseline, IoMode::Optimized, IoMode::InMemory] {
+        let mut iface = make_interface(mode, &work, 0).unwrap();
+        let flow = FlowSnapshot { u: &u, v: &v, p: &p, ny, nx };
+        let (_, st) = iface.exchange(0, &payload, &flow).unwrap();
+        let mut k = 1usize;
+        let r = bench::bench(&format!("exchange {} (real fs)", mode.name()), 2, 15, || {
+            let flow = FlowSnapshot { u: &u, v: &v, p: &p, ny, nx };
+            iface.exchange(k, &payload, &flow).unwrap();
+            iface.inject_action(k, 0.4).unwrap();
+            k += 1;
+        });
+        println!(
+            "    -> {} bytes/exchange ({} files)",
+            st.bytes_written, st.files
+        );
+        results.push(r);
+    }
+    bench::save("io_strategies", &results);
+}

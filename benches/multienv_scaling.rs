@@ -1,0 +1,57 @@
+//! Bench: Table I + Figs 8/9 — multi-environment scaling across the
+//! hybrid (N_envs x N_ranks) grid via the cluster DES, plus real
+//! multi-threaded pool rollouts at machine scale (1/2/4 envs) as the
+//! shadow that validates the DES ordering.
+//!
+//! Run: `cargo bench --bench multienv_scaling`
+
+use std::sync::Arc;
+
+use drlfoam::cluster::Calibration;
+use drlfoam::coordinator::pool::{EnvPool, PoolConfig};
+use drlfoam::io_interface::IoMode;
+use drlfoam::reproduce;
+use drlfoam::runtime::Manifest;
+use drlfoam::util::bench;
+
+fn main() {
+    let out = std::path::Path::new("out");
+    std::fs::create_dir_all(out).unwrap();
+    let calib = Calibration::paper_scale();
+    println!("{}", reproduce::table1(&calib, out).unwrap());
+    println!("{}", reproduce::fig8(&calib, out).unwrap());
+    println!("{}", reproduce::fig9(&calib, out).unwrap());
+
+    // --- real shadow: thread-pool rollout wall time at machine scale.
+    // On a 1-core box threads interleave, so wall time grows ~linearly
+    // with TOTAL episodes; the point is exercising the real coordinator.
+    let manifest = Arc::new(Manifest::load("artifacts").expect("make artifacts"));
+    let params = Arc::new(manifest.load_params_init().unwrap());
+    let mut results = Vec::new();
+    for envs in [1usize, 2, 4] {
+        let work = std::env::temp_dir().join(format!("drlfoam-bench-pool{envs}"));
+        std::fs::create_dir_all(&work).unwrap();
+        let mut pool = EnvPool::new(
+            &PoolConfig {
+                artifact_dir: "artifacts".into(),
+                work_dir: work,
+                variant: "small".into(),
+                n_envs: envs,
+                io_mode: IoMode::InMemory,
+                seed: 0,
+            },
+            &manifest,
+        )
+        .unwrap();
+        let r = bench::bench(
+            &format!("pool rollout x{envs} envs (horizon 5, real)"),
+            1,
+            5,
+            || {
+                pool.rollout(&params, 5, 0).unwrap();
+            },
+        );
+        results.push(r);
+    }
+    bench::save("multienv_scaling", &results);
+}

@@ -1,0 +1,59 @@
+//! I/O-strategy comparison at REAL machine scale (the paper's section III D
+//! experiment, shrunk to this box): run the same short training through
+//! the three exchange interfaces and compare measured wall time, bytes
+//! moved, and result equivalence.
+//!
+//!     cargo run --release --example io_comparison
+
+use anyhow::Result;
+use drlfoam::coordinator::{train, TrainConfig};
+use drlfoam::io_interface::IoMode;
+
+fn main() -> Result<()> {
+    println!("same 2-env x 6-iteration training through each exchange interface:\n");
+    println!(
+        "{:<12} {:>9} {:>14} {:>14} {:>12}",
+        "mode", "wall (s)", "KB/episode", "final reward", "cfd time (s)"
+    );
+    let mut rewards = Vec::new();
+    for mode in [IoMode::InMemory, IoMode::Optimized, IoMode::Baseline] {
+        let root = std::path::PathBuf::from(format!("out/io-comparison/{}", mode.name()));
+        let cfg = TrainConfig {
+            artifact_dir: "artifacts".into(),
+            work_dir: root.join("work"),
+            out_dir: root,
+            variant: "small".into(),
+            n_envs: 2,
+            io_mode: mode,
+            horizon: 10,
+            iterations: 6,
+            epochs: 2,
+            seed: 3,
+            log_every: 1,
+            quiet: true,
+        };
+        let s = train(&cfg)?;
+        let last = s.log.last().unwrap();
+        let cfd_total: f64 = s.log.iter().map(|r| r.cfd_s).sum();
+        println!(
+            "{:<12} {:>9.2} {:>14.1} {:>14.4} {:>12.2}",
+            mode.name(),
+            s.total_s,
+            s.io_bytes_per_episode / 1024.0,
+            last.mean_reward,
+            cfd_total
+        );
+        rewards.push(last.mean_reward);
+    }
+    println!(
+        "\nbinary (optimized) exchange is bit-exact: reward delta vs in-memory = {:.2e}",
+        (rewards[0] - rewards[1]).abs()
+    );
+    println!(
+        "ascii (baseline) parses through regex: reward delta = {:.2e} (parse precision)",
+        (rewards[0] - rewards[2]).abs()
+    );
+    println!("\nAt 60 envs the byte volumes above are what saturate the shared disk —");
+    println!("run `drlfoam reproduce table2` to see the projected cluster effect.");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT artifacts, run one controlled actuation
+//! period, and print what the agent sees.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end slice of the stack: Pallas kernels
+//! (L1) inside the JAX-lowered CFD executable (L2), driven by the Rust
+//! runtime and environment (L3). Python is not involved at run time.
+
+use anyhow::Result;
+use drlfoam::drl::Policy;
+use drlfoam::env::CfdEnv;
+use drlfoam::io_interface::{make_interface, IoMode};
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. manifest + runtime: compile the HLO-text artifacts on the PJRT
+    //    CPU client (once; executables are cached)
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::new("artifacts")?;
+    let variant = manifest.variant("small")?.clone();
+    rt.load(&variant.cfd_period_file)?;
+    rt.load(&manifest.drl.policy_apply_file)?;
+    println!(
+        "loaded variant `{}`: {}x{} grid, {} SOR sweeps, Cd0 = {:.3}",
+        variant.name, variant.ny, variant.nx, variant.n_sweeps, variant.cd0
+    );
+
+    // 2. environment: developed base flow + in-memory exchange interface
+    let work = std::env::temp_dir().join("drlfoam-quickstart");
+    std::fs::create_dir_all(&work)?;
+    let mut env = CfdEnv::new(
+        variant.clone(),
+        manifest.load_state0("small")?,
+        manifest.drl.action_smoothing_beta,
+        manifest.drl.reward_lift_penalty,
+        make_interface(IoMode::InMemory, &work, 0)?,
+    );
+
+    // 3. policy: initial (untrained) parameters
+    let params = manifest.load_params_init()?;
+    let policy = Policy::new(manifest.drl.n_obs);
+    let mut rng = Rng::new(0);
+
+    let cfd = rt.get(&variant.cfd_period_file)?;
+    let pol = rt.get(&manifest.drl.policy_apply_file)?;
+    let mut obs = env.reset(cfd)?;
+    println!("\n step    jet      Cd       Cl      reward");
+    for step in 0..10 {
+        let pout = policy.apply(pol, &params, &obs)?;
+        let (action, _logp) = policy.sample(&pout, &mut rng);
+        let sr = env.step(cfd, action)?;
+        println!(
+            "{step:>5} {:>7.3} {:>8.3} {:>8.3} {:>9.4}",
+            sr.jet, sr.cd_mean, sr.cl_mean, sr.reward
+        );
+        obs = sr.obs;
+    }
+    println!("\nOK — the three-layer stack is wired. Next: examples/train_cylinder.rs");
+    Ok(())
+}

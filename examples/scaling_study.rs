@@ -1,0 +1,32 @@
+//! Scaling study driver: regenerates EVERY table and figure of the
+//! paper's evaluation section in one run (DESIGN.md section 6) using the
+//! calibrated cluster DES, and prints the headline comparison.
+//!
+//!     cargo run --release --example scaling_study
+//!     cargo run --release --example scaling_study -- --calib out/calib.json
+//!
+//! Output: out/{fig7,table1,fig8,fig9,fig10,table2_fig11_fig12,summary}.csv
+
+use anyhow::Result;
+use drlfoam::cluster::Calibration;
+use drlfoam::reproduce;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let calib = match args.iter().position(|a| a == "--calib") {
+        Some(i) => Calibration::load(std::path::Path::new(&args[i + 1]))?,
+        None => Calibration::paper_scale(),
+    };
+    let out = std::path::Path::new("out");
+    std::fs::create_dir_all(out)?;
+
+    println!("{}", reproduce::fig7(&calib, out)?);
+    println!("{}", reproduce::table1(&calib, out)?);
+    println!("{}", reproduce::fig8(&calib, out)?);
+    println!("{}", reproduce::fig9(&calib, out)?);
+    println!("{}", reproduce::fig10(&calib, out)?);
+    println!("{}", reproduce::table2(&calib, out)?);
+    println!("{}", reproduce::summary(&calib, out)?);
+    println!("all series written under out/*.csv");
+    Ok(())
+}

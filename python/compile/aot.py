@@ -1,0 +1,212 @@
+"""AOT pipeline: lower the L2 functions to HLO text + build-time data.
+
+Run once by ``make artifacts`` (never on the request path):
+
+  artifacts/
+    manifest.json              -- shapes, layouts, physics + DRL constants
+    cfd_period_<variant>.hlo.txt
+    policy_apply_b1.hlo.txt
+    ppo_update_b<M>.hlo.txt
+    params_init.bin            -- flat f32 policy params (LE)
+    state0_<variant>.bin       -- developed base flow (u|v|p, f32 LE)
+
+Interchange is HLO *text*: the xla crate's xla_extension 0.5.1 rejects
+jax>=0.5 serialized HloModuleProtos (64-bit instruction ids); the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+The base-flow development run also measures C_D0 (the uncontrolled mean
+drag used in the reward, Eq. 12; paper: 3.205) and per-probe
+normalisation statistics, both recorded in the manifest.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import cfd
+from . import model
+from .configs import VARIANTS, DRL
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default elides
+    big literals as ``{...}``, which the text parser on the Rust side
+    silently reads back as garbage — the baked geometry masks (solid,
+    jets, checkerboards, probe gather tables) must survive the trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_cfd_period(cfg, geom, use_pallas=True):
+    fn = cfd.make_period_fn(cfg, geom, use_pallas)
+    grid = jax.ShapeDtypeStruct((cfg.ny, cfg.nx), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(grid, grid, grid, scalar))
+
+
+def lower_policy_apply(batch, use_pallas=True):
+    fn = model.make_policy_apply(DRL, batch, use_pallas)
+    flat = jax.ShapeDtypeStruct((DRL.n_params,), jnp.float32)
+    obs = jax.ShapeDtypeStruct((batch, DRL.n_obs), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(flat, obs))
+
+
+def lower_ppo_update():
+    fn = model.make_ppo_update(DRL)
+    b = DRL.minibatch
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((DRL.n_params,), f32),   # flat
+        jax.ShapeDtypeStruct((DRL.n_params,), f32),   # adam m
+        jax.ShapeDtypeStruct((DRL.n_params,), f32),   # adam v
+        jax.ShapeDtypeStruct((), f32),                # t (1-based step)
+        jax.ShapeDtypeStruct((b, DRL.n_obs), f32),    # obs
+        jax.ShapeDtypeStruct((b, DRL.n_act), f32),    # act
+        jax.ShapeDtypeStruct((b,), f32),              # logp_old
+        jax.ShapeDtypeStruct((b,), f32),              # adv
+        jax.ShapeDtypeStruct((b,), f32),              # ret
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def develop_and_measure(cfg, geom, use_pallas=True, report=True):
+    """Run the uncontrolled base flow; returns (state0, cd0, probe stats)."""
+    period = jax.jit(cfd.make_period_fn(cfg, geom, use_pallas))
+    u, v, p = cfd.quiescent_state(cfg, geom)
+    n_periods = int(round(cfg.base_flow_time / cfg.period))
+    cds, cls, probes = [], [], []
+    t0 = time.time()
+    for k in range(n_periods):
+        u, v, p, pr, cd_h, cl_h = period(u, v, p, jnp.float32(0.0))
+        cds.append(float(jnp.mean(cd_h)))
+        cls.append(float(jnp.mean(cl_h)))
+        probes.append(np.asarray(pr))
+        if report and (k + 1) % max(1, n_periods // 6) == 0:
+            print(f"  [{cfg.name}] base flow t={(k + 1) * cfg.period:6.1f}"
+                  f"/{cfg.base_flow_time:.0f}  cd={cds[-1]:6.3f}"
+                  f"  cl={cls[-1]:+6.3f}  ({time.time() - t0:5.1f}s)",
+                  flush=True)
+    tail = slice(max(1, n_periods // 2), None)       # developed half
+    cd0 = float(np.mean(cds[tail]))
+    pr_tail = np.stack(probes[tail.start:], axis=0)
+    probe_mean = pr_tail.mean(axis=0)
+    probe_std = np.maximum(pr_tail.std(axis=0), 1e-3)
+    return (np.asarray(u), np.asarray(v), np.asarray(p)), cd0, \
+        (probe_mean, probe_std), (np.array(cds), np.array(cls))
+
+
+def write_bin(path, *arrays):
+    with open(path, "wb") as f:
+        for a in arrays:
+            f.write(np.ascontiguousarray(a, np.float32).tobytes())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default="small",
+                    help="comma-separated subset of: small,paper,tiny")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--base-flow-time", type=float, default=None,
+                    help="override development time (t.u.) for all variants")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="build artifacts from the pure-jnp reference path")
+    args = ap.parse_args(argv)
+    use_pallas = not args.no_pallas
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    variants = [v.strip() for v in args.variants.split(",") if v.strip()]
+
+    slots, n_params = model.param_layout(DRL)
+    manifest = {
+        "format_version": 1,
+        "kernel_impl": "pallas" if use_pallas else "ref",
+        "drl": {
+            "n_obs": DRL.n_obs, "n_act": DRL.n_act, "hidden": DRL.hidden,
+            "n_params": n_params, "minibatch": DRL.minibatch,
+            "lr": DRL.lr, "clip_eps": DRL.clip_eps,
+            "vf_coef": DRL.vf_coef, "ent_coef": DRL.ent_coef,
+            "gamma": DRL.gamma, "gae_lambda": DRL.gae_lambda,
+            "action_smoothing_beta": DRL.action_smoothing_beta,
+            "reward_lift_penalty": DRL.reward_lift_penalty,
+            "init_logstd": DRL.init_logstd,
+            "param_layout": [
+                {"name": s.name, "offset": s.offset, "shape": list(s.shape)}
+                for s in slots
+            ],
+        },
+        "artifacts": {
+            "policy_apply": {"file": "policy_apply_b1.hlo.txt", "batch": 1},
+            "ppo_update": {"file": f"ppo_update_b{DRL.minibatch}.hlo.txt",
+                           "batch": DRL.minibatch},
+        },
+        "variants": {},
+    }
+
+    print("== lowering DRL executables ==", flush=True)
+    with open(os.path.join(out, "policy_apply_b1.hlo.txt"), "w") as f:
+        f.write(lower_policy_apply(1, use_pallas))
+    with open(os.path.join(out, manifest["artifacts"]["ppo_update"]["file"]),
+              "w") as f:
+        f.write(lower_ppo_update())
+
+    params0 = model.init_params(DRL, seed=args.seed)
+    write_bin(os.path.join(out, "params_init.bin"), params0)
+    print(f"   params_init.bin  ({n_params} f32)", flush=True)
+
+    for name in variants:
+        cfg = VARIANTS[name]
+        if args.base_flow_time is not None:
+            from dataclasses import replace
+            cfg = replace(cfg, base_flow_time=args.base_flow_time)
+        geom = cfd.build_geometry(cfg)
+        print(f"== variant {name}: grid {cfg.ny}x{cfg.nx} "
+              f"h={cfg.h:.4f} dt={cfg.dt} ==", flush=True)
+
+        hlo = lower_cfd_period(cfg, geom, use_pallas)
+        fn = f"cfd_period_{name}.hlo.txt"
+        with open(os.path.join(out, fn), "w") as f:
+            f.write(hlo)
+        print(f"   {fn}  ({len(hlo)} chars)", flush=True)
+
+        state0, cd0, (pmean, pstd), (cds, cls) = develop_and_measure(
+            cfg, geom, use_pallas)
+        write_bin(os.path.join(out, f"state0_{name}.bin"), *state0)
+        cl_tail = cls[len(cls) // 2:]
+        manifest["variants"][name] = {
+            "cfd_period": fn,
+            "state0": f"state0_{name}.bin",
+            "ny": cfg.ny, "nx": cfg.nx, "h": cfg.h, "dt": cfg.dt,
+            "substeps": cfg.substeps, "period": cfg.period,
+            "re": cfg.re, "n_sweeps": cfg.n_sweeps,
+            "jet_max": cfg.jet_max, "jet_width_deg": cfg.jet_width_deg,
+            "cd0": cd0,
+            "cl0_amplitude": float(np.std(cl_tail)),
+            "base_flow_time": cfg.base_flow_time,
+            "probe_mean": [float(x) for x in pmean],
+            "probe_std": [float(x) for x in pstd],
+            "probe_xy": [[float(a), float(b)] for a, b in geom.probe_xy],
+        }
+        print(f"   cd0={cd0:.3f}  cl'={np.std(cl_tail):.3f}", flush=True)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""L2: 2D incompressible Navier-Stokes solver for the confined cylinder.
+
+From-scratch substitute for the paper's OpenFOAM ``pimpleFoam`` substrate
+(DESIGN.md section 2): Chorin projection on a uniform collocated grid with
+pseudo-staggered div/grad pairing, RK2 central advection-diffusion
+predictor, red-black SOR pressure projection (Pallas kernel), and a
+direct-forcing immersed-boundary cylinder carrying the two synthetic jets
+(theta = 90/270 deg, width 10 deg, parabolic lip profile, zero net mass
+flux: V_G1 = -V_G2 = action).
+
+Everything here runs at *build time only*: ``aot.py`` lowers
+``make_period_fn`` once to HLO text and the Rust runtime executes it.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .configs import GridConfig
+from .kernels import poisson as k_poisson
+from .kernels import stencil as k_stencil
+from .kernels import ref as k_ref
+
+
+# --------------------------------------------------------------------------
+# Geometry: masks, jets, probes (all static numpy, baked into the HLO)
+# --------------------------------------------------------------------------
+
+@dataclass
+class Geometry:
+    """Static fields derived from a GridConfig (numpy, f32)."""
+
+    cfg: GridConfig
+    xc: np.ndarray          # (nx,) cell-centre x coordinates
+    yc: np.ndarray          # (ny,)
+    solid: np.ndarray       # (ny,nx) 1 inside the cylinder
+    jet_u: np.ndarray       # (ny,nx) unit-action jet velocity, x component
+    jet_v: np.ndarray       # (ny,nx)
+    red: np.ndarray         # (ny,nx) interior red checkerboard
+    black: np.ndarray       # (ny,nx)
+    interior: np.ndarray    # (ny,nx) non-boundary cells
+    u_in: np.ndarray        # (ny,) parabolic inlet profile
+    probe_xy: np.ndarray    # (n_probes, 2)
+    probe_idx: np.ndarray   # (n_probes, 4, 2) bilinear corner (j,i)
+    probe_w: np.ndarray     # (n_probes, 4) bilinear weights
+
+
+def probe_positions(n_probes: int = 149) -> np.ndarray:
+    """149 pressure probes: two rings around the cylinder, a near-jet ring,
+    and a wake grid — the Wang et al. layout is not published, so we follow
+    its description (around the cylinder + wake region, sparse)."""
+    pts = []
+    for r, n in ((0.75, 24), (1.0, 24)):
+        th = np.linspace(0.0, 2.0 * np.pi, n, endpoint=False)
+        pts.append(np.stack([r * np.cos(th), r * np.sin(th)], axis=1))
+    # near-jet probes just off the two lips
+    th_j = np.concatenate([
+        np.deg2rad(np.linspace(75, 105, 5)),
+        np.deg2rad(np.linspace(255, 285, 5)),
+    ])
+    pts.append(np.stack([0.6 * np.cos(th_j), 0.6 * np.sin(th_j)], axis=1))
+    # wake grid 13 x 7
+    gx, gy = np.meshgrid(np.linspace(1.0, 8.0, 13), np.linspace(-1.5, 1.5, 7))
+    pts.append(np.stack([gx.ravel(), gy.ravel()], axis=1))
+    out = np.concatenate(pts, axis=0)
+    assert out.shape[0] == n_probes, out.shape
+    return out.astype(np.float32)
+
+
+def build_geometry(cfg: GridConfig) -> Geometry:
+    ny, nx, h = cfg.ny, cfg.nx, cfg.h
+    xc = (-cfg.x_up + (np.arange(nx) + 0.5) * h).astype(np.float32)
+    yc = (cfg.y_lo + (np.arange(ny) + 0.5) * h).astype(np.float32)
+    X, Y = np.meshgrid(xc, yc)                      # (ny, nx)
+    r = np.sqrt(X * X + Y * Y)
+    solid = (r < cfg.radius).astype(np.float32)
+
+    # Jet cells: outermost solid ring (solid with >=1 fluid neighbour)
+    fluid = 1.0 - solid
+    nb_fluid = (np.roll(fluid, 1, 0) + np.roll(fluid, -1, 0)
+                + np.roll(fluid, 1, 1) + np.roll(fluid, -1, 1))
+    shell = (solid > 0) & (nb_fluid > 0)
+    theta = np.arctan2(Y, X)                        # [-pi, pi]
+    half_w = np.deg2rad(cfg.jet_width_deg) / 2.0
+
+    jet_u = np.zeros((ny, nx), np.float32)
+    jet_v = np.zeros((ny, nx), np.float32)
+    for theta0, sign in ((np.pi / 2, 1.0), (-np.pi / 2, -1.0)):
+        d = np.arctan2(np.sin(theta - theta0), np.cos(theta - theta0))
+        in_arc = shell & (np.abs(d) < half_w)
+        w = 1.0 - (d / half_w) ** 2                 # parabolic lip profile
+        jet_u += np.where(in_arc, sign * w * np.cos(theta), 0.0)
+        jet_v += np.where(in_arc, sign * w * np.sin(theta), 0.0)
+
+    jj, ii = np.meshgrid(np.arange(ny), np.arange(nx), indexing="ij")
+    interior = ((jj > 0) & (jj < ny - 1) & (ii > 0) & (ii < nx - 1))
+    red = (((jj + ii) % 2 == 0) & interior).astype(np.float32)
+    black = (((jj + ii) % 2 == 1) & interior).astype(np.float32)
+
+    u_in = (cfg.u_max
+            * (1.0 - ((yc - cfg.y_center) / (cfg.height / 2.0)) ** 2)
+            ).astype(np.float32)
+
+    pxy = probe_positions()
+    # bilinear gather: cell-centre based; clamp to interior
+    fx = (pxy[:, 0] + cfg.x_up) / h - 0.5
+    fy = (pxy[:, 1] - cfg.y_lo) / h - 0.5
+    i0 = np.clip(np.floor(fx).astype(np.int32), 0, nx - 2)
+    j0 = np.clip(np.floor(fy).astype(np.int32), 0, ny - 2)
+    tx = (fx - i0).astype(np.float32)
+    ty = (fy - j0).astype(np.float32)
+    idx = np.stack([
+        np.stack([j0, i0], 1), np.stack([j0, i0 + 1], 1),
+        np.stack([j0 + 1, i0], 1), np.stack([j0 + 1, i0 + 1], 1),
+    ], axis=1)                                      # (P,4,2)
+    w = np.stack([(1 - tx) * (1 - ty), tx * (1 - ty),
+                  (1 - tx) * ty, tx * ty], axis=1).astype(np.float32)
+
+    return Geometry(cfg=cfg, xc=xc, yc=yc, solid=solid, jet_u=jet_u,
+                    jet_v=jet_v, red=red, black=black,
+                    interior=interior.astype(np.float32), u_in=u_in,
+                    probe_xy=pxy, probe_idx=idx, probe_w=w)
+
+
+# --------------------------------------------------------------------------
+# Boundary conditions
+# --------------------------------------------------------------------------
+
+def apply_vel_bcs(u, v, u_in):
+    """Inlet Dirichlet (parabolic), outlet zero-gradient, no-slip walls."""
+    u = u.at[:, 0].set(u_in)
+    v = v.at[:, 0].set(0.0)
+    u = u.at[:, -1].set(u[:, -2])
+    v = v.at[:, -1].set(v[:, -2])
+    u = u.at[0, :].set(0.0).at[-1, :].set(0.0)
+    v = v.at[0, :].set(0.0).at[-1, :].set(0.0)
+    return u, v
+
+
+def apply_pressure_bcs(p):
+    """Neumann at inlet/walls, Dirichlet p=0 at the outlet."""
+    p = p.at[:, 0].set(p[:, 1])
+    p = p.at[0, :].set(p[1, :])
+    p = p.at[-1, :].set(p[-2, :])
+    p = p.at[:, -1].set(0.0)
+    return p
+
+
+# --------------------------------------------------------------------------
+# One projection substep
+# --------------------------------------------------------------------------
+
+def make_substep_fn(cfg: GridConfig, geom: Geometry, use_pallas: bool = True):
+    """Returns substep((u,v,p), jet_a) -> ((u,v,p), (cd, cl)).
+
+    jet_a is the smoothed jet amplitude V_G1 (V_G2 = -V_G1 by construction
+    of geom.jet_{u,v}); cd/cl from immersed-boundary momentum exchange.
+    """
+    h, dt, nu = cfg.h, cfg.dt, 1.0 / cfg.re
+    solid = jnp.asarray(geom.solid)
+    jet_u = jnp.asarray(geom.jet_u)
+    jet_v = jnp.asarray(geom.jet_v)
+    red = jnp.asarray(geom.red)
+    black = jnp.asarray(geom.black)
+    u_in = jnp.asarray(geom.u_in)
+    qref = 0.5 * cfg.u_mean ** 2 * (2.0 * cfg.radius)   # 0.5 rho Ubar^2 D
+
+    if use_pallas:
+        adv_diff = functools.partial(k_stencil.adv_diff_rhs, h=h, nu=nu)
+        sweep = functools.partial(k_poisson.rb_sor_sweep,
+                                  omega=cfg.sor_omega, h=h)
+    else:
+        adv_diff = lambda u, v: k_ref.adv_diff_rhs(u, v, h, nu)
+        sweep = lambda p, rhs, r, b: k_ref.rb_sor_sweep(
+            p, rhs, r, b, cfg.sor_omega, h)
+
+    def poisson_solve(p, rhs):
+        def body(_, p):
+            p = apply_pressure_bcs(p)
+            return sweep(p, rhs, red, black)
+        p = jax.lax.fori_loop(0, cfg.n_sweeps, body, p)
+        return apply_pressure_bcs(p)
+
+    def substep(state, jet_a):
+        u, v, p = state
+        u, v = apply_vel_bcs(u, v, u_in)
+
+        # RK2 (midpoint) predictor, central advection + diffusion
+        ru, rv = adv_diff(u, v)
+        uh = u + 0.5 * dt * ru
+        vh = v + 0.5 * dt * rv
+        uh, vh = apply_vel_bcs(uh, vh, u_in)
+        ru, rv = adv_diff(uh, vh)
+        us = u + dt * ru
+        vs = v + dt * rv
+        us, vs = apply_vel_bcs(us, vs, u_in)
+
+        # Immersed boundary: direct forcing + momentum-exchange force.
+        # The force on the body is the negative of ALL momentum the forcing
+        # injects during the step: the predictor correction (viscous/
+        # convective part) plus the post-projection correction, which by
+        # the divergence theorem carries the pressure drag
+        # (sum_solid grad p * h^2 ~ surface integral of p n dS).
+        ut = jet_a * jet_u
+        vt = jet_a * jet_v
+        fx1 = -(h * h / dt) * jnp.sum(solid * (ut - us))
+        fy1 = -(h * h / dt) * jnp.sum(solid * (vt - vs))
+        us = us * (1.0 - solid) + ut
+        vs = vs * (1.0 - solid) + vt
+
+        # Projection (pseudo-staggered pairing, see kernels/ref.py)
+        rhs = k_ref.divergence(us, vs, h) / dt
+        p = poisson_solve(p, rhs)
+        gpx, gpy = k_ref.grad_p(p, h)
+        u = us - dt * gpx
+        v = vs - dt * gpy
+        u, v = apply_vel_bcs(u, v, u_in)
+        fx2 = -(h * h / dt) * jnp.sum(solid * (ut - u))
+        fy2 = -(h * h / dt) * jnp.sum(solid * (vt - v))
+        u = u * (1.0 - solid) + ut
+        v = v * (1.0 - solid) + vt
+
+        fx = fx1 + fx2
+        fy = fy1 + fy2
+        return (u, v, p), (fx / qref, fy / qref)
+
+    return substep
+
+
+# --------------------------------------------------------------------------
+# One actuation period (the unit the Rust coordinator executes)
+# --------------------------------------------------------------------------
+
+def sample_probes(p, geom: Geometry):
+    idx = jnp.asarray(geom.probe_idx)      # (P,4,2)
+    w = jnp.asarray(geom.probe_w)          # (P,4)
+    vals = p[idx[..., 0], idx[..., 1]]     # (P,4)
+    return jnp.sum(vals * w, axis=1)
+
+
+def make_period_fn(cfg: GridConfig, geom: Geometry, use_pallas: bool = True):
+    """Returns period(u, v, p, jet_a) ->
+    (u', v', p', probes[P], cd_hist[S], cl_hist[S]).
+
+    One actuation period = cfg.substeps projection steps at constant jet
+    amplitude (the agent's zero-order hold). The Rust env averages the
+    cd/cl histories for the reward (Eq. 12) and feeds probes (normalised)
+    to the policy as the next state.
+    """
+    substep = make_substep_fn(cfg, geom, use_pallas)
+
+    def period(u, v, p, jet_a):
+        def body(state, _):
+            state, (cd, cl) = substep(state, jet_a)
+            return state, (cd, cl)
+        (u, v, p), (cd_h, cl_h) = jax.lax.scan(
+            body, (u, v, p), None, length=cfg.substeps)
+        return u, v, p, sample_probes(p, geom), cd_h, cl_h
+
+    return period
+
+
+def quiescent_state(cfg: GridConfig, geom: Geometry):
+    """Initial condition: inlet profile everywhere (impulsive start)."""
+    u = np.broadcast_to(geom.u_in[:, None], (cfg.ny, cfg.nx)).astype(np.float32)
+    u = u * (1.0 - geom.solid)
+    v = np.zeros((cfg.ny, cfg.nx), np.float32)
+    p = np.zeros((cfg.ny, cfg.nx), np.float32)
+    return jnp.asarray(u), jnp.asarray(v), jnp.asarray(p)
+
+
+def develop_base_flow(cfg: GridConfig, geom: Geometry, use_pallas: bool = True,
+                      time_units: float | None = None, report_every: int = 0):
+    """Run the uncontrolled flow from an impulsive start until vortex
+    shedding is developed. Returns (u, v, p, cd_hist, cl_hist) where the
+    histories are per-period means over the run (used for C_D0 and for the
+    probe-normalisation statistics)."""
+    t_total = cfg.base_flow_time if time_units is None else time_units
+    n_periods = int(round(t_total / cfg.period))
+    period = jax.jit(make_period_fn(cfg, geom, use_pallas))
+    u, v, p = quiescent_state(cfg, geom)
+    cds, cls = [], []
+    for k in range(n_periods):
+        u, v, p, _, cd_h, cl_h = period(u, v, p, jnp.float32(0.0))
+        cds.append(float(jnp.mean(cd_h)))
+        cls.append(float(jnp.mean(cl_h)))
+        if report_every and (k + 1) % report_every == 0:
+            print(f"  base flow t={(k + 1) * cfg.period:7.2f} "
+                  f"cd={cds[-1]:7.3f} cl={cls[-1]:7.3f}", flush=True)
+    return u, v, p, np.array(cds), np.array(cls)

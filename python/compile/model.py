@@ -1,0 +1,185 @@
+"""L2: PPO policy/value model and update step (TensorForce substitute).
+
+The paper trains a Rabault-style agent: 2x512 tanh MLP Gaussian policy,
+clipped-surrogate PPO. We express the whole algorithm in JAX and lower two
+executables (see aot.py):
+
+  policy_apply(flat, obs)                    -- serving path, B=1
+  ppo_update(flat, m, v, t, obs, act, logp_old, adv, ret)
+                                             -- one Adam minibatch step
+
+Parameters travel as ONE flat f32 vector so the Rust trainer holds three
+opaque buffers (params, adam_m, adam_v) and never needs the layout; the
+layout table still goes into the manifest for checkpoint tooling.
+
+The serving forward runs the Pallas MXU kernel (kernels/mlp.py); the
+differentiated forward inside ppo_update uses the pure-jnp twin because
+interpret-mode pallas_call does not support reverse-mode AD (asserted in
+python/tests/test_mlp.py). Both are allclose-tested against each other, so
+the first-epoch ratio is 1 up to f32 rounding.
+"""
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .configs import DrlConfig
+from .kernels import mlp as k_mlp
+from .kernels import ref as k_ref
+
+LOG_2PI = math.log(2.0 * math.pi)
+
+
+# --------------------------------------------------------------------------
+# Flat parameter vector layout
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Slot:
+    name: str
+    offset: int
+    shape: tuple
+
+
+def param_layout(cfg: DrlConfig):
+    """Ordered (name, shape) table; offsets are cumulative."""
+    o, h, a = cfg.n_obs, cfg.hidden, cfg.n_act
+    shapes = [
+        ("w1", (o, h)), ("b1", (h,)),
+        ("w2", (h, h)), ("b2", (h,)),
+        ("wmu", (h, a)), ("bmu", (a,)),
+        ("logstd", (a,)),
+        ("wv", (h, 1)), ("bv", (1,)),
+    ]
+    slots, off = [], 0
+    for name, shp in shapes:
+        n = int(np.prod(shp))
+        slots.append(Slot(name, off, shp))
+        off += n
+    assert off == cfg.n_params, (off, cfg.n_params)
+    return slots, off
+
+
+def unflatten(flat, cfg: DrlConfig):
+    slots, _ = param_layout(cfg)
+    out = {}
+    for s in slots:
+        n = int(np.prod(s.shape))
+        out[s.name] = jax.lax.dynamic_slice(flat, (s.offset,), (n,)).reshape(s.shape)
+    return out
+
+
+def init_params(cfg: DrlConfig, seed: int = 0) -> np.ndarray:
+    """Glorot-scaled init; tiny mu head so initial actions are near zero
+    (the paper's agent starts with small actions, Fig 5b episode 1)."""
+    rng = np.random.default_rng(seed)
+    slots, n = param_layout(cfg)
+    flat = np.zeros(n, np.float32)
+    for s in slots:
+        size = int(np.prod(s.shape))
+        if s.name == "logstd":
+            vals = np.full(size, cfg.init_logstd, np.float32)
+        elif len(s.shape) == 1:
+            vals = np.zeros(size, np.float32)
+        else:
+            fan_in, fan_out = s.shape[0], s.shape[1]
+            scale = 0.01 if s.name in ("wmu",) else np.sqrt(2.0 / (fan_in + fan_out))
+            vals = (rng.standard_normal(size) * scale).astype(np.float32)
+        flat[s.offset:s.offset + size] = vals
+    return flat
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def forward(flat, obs, cfg: DrlConfig, use_pallas: bool):
+    """obs (B, n_obs) -> (mu (B,a), logstd (a,), v (B,))."""
+    p = unflatten(flat, cfg)
+    dense = k_mlp.dense if use_pallas else k_ref.dense
+    h1 = dense(obs, p["w1"], p["b1"], "tanh")
+    h2 = dense(h1, p["w2"], p["b2"], "tanh")
+    mu = h2 @ p["wmu"] + p["bmu"]
+    v = (h2 @ p["wv"] + p["bv"])[:, 0]
+    return mu, p["logstd"], v
+
+
+def make_policy_apply(cfg: DrlConfig, batch: int, use_pallas: bool = True):
+    """Serving-path function to lower: (flat, obs) -> (mu, logstd, v)."""
+
+    def policy_apply(flat, obs):
+        return forward(flat, obs, cfg, use_pallas)
+
+    return policy_apply
+
+
+def gaussian_logp(act, mu, logstd):
+    """Diagonal-Gaussian log density, summed over the action dim."""
+    std = jnp.exp(logstd)
+    z = (act - mu) / std
+    return jnp.sum(-0.5 * z * z - logstd - 0.5 * LOG_2PI, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# PPO clipped-surrogate update (Eq. 10) + Adam
+# --------------------------------------------------------------------------
+
+def ppo_loss(flat, obs, act, logp_old, adv, ret, cfg: DrlConfig):
+    mu, logstd, vpred = forward(flat, obs, cfg, use_pallas=False)
+    logp = gaussian_logp(act, mu, logstd)
+    ratio = jnp.exp(logp - logp_old)
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps)
+    pg_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    v_loss = jnp.mean((vpred - ret) ** 2)
+    entropy = jnp.sum(logstd + 0.5 * (LOG_2PI + 1.0))
+    total = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+    stats = jnp.stack([
+        pg_loss, v_loss, entropy,
+        jnp.mean(logp_old - logp),                         # approx KL
+        jnp.mean((jnp.abs(ratio - 1.0) > cfg.clip_eps).astype(jnp.float32)),
+        jnp.float32(0.0),                                  # grad norm, below
+    ])
+    return total, stats
+
+
+def make_ppo_update(cfg: DrlConfig):
+    """One Adam minibatch step to lower:
+    (flat, m, v, t, obs, act, logp_old, adv, ret)
+        -> (flat', m', v', stats[6])."""
+
+    def ppo_update(flat, m, v, t, obs, act, logp_old, adv, ret):
+        grad_fn = jax.grad(ppo_loss, has_aux=True)
+        g, stats = grad_fn(flat, obs, act, logp_old, adv, ret, cfg)
+        gnorm = jnp.sqrt(jnp.sum(g * g))
+        stats = stats.at[5].set(gnorm)
+
+        m = cfg.adam_b1 * m + (1.0 - cfg.adam_b1) * g
+        v = cfg.adam_b2 * v + (1.0 - cfg.adam_b2) * g * g
+        mhat = m / (1.0 - cfg.adam_b1 ** t)
+        vhat = v / (1.0 - cfg.adam_b2 ** t)
+        flat = flat - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+        return flat, m, v, stats
+
+    return ppo_update
+
+
+# --------------------------------------------------------------------------
+# Reference rollout utilities (used by python tests; Rust re-implements)
+# --------------------------------------------------------------------------
+
+def gae(rewards, values, last_value, gamma, lam):
+    """Generalised advantage estimation, numpy reference for the Rust twin
+    (rust/src/drl/gae.rs is tested against vectors generated from this)."""
+    n = len(rewards)
+    adv = np.zeros(n, np.float32)
+    last = 0.0
+    for t in reversed(range(n)):
+        nxt = last_value if t == n - 1 else values[t + 1]
+        delta = rewards[t] + gamma * nxt - values[t]
+        last = delta + gamma * lam * last
+        adv[t] = last
+    ret = adv + np.asarray(values, np.float32)
+    return adv, ret

@@ -1,0 +1,173 @@
+"""CFD solver invariants: geometry, BCs, projection, forces, probes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import cfd
+from compile.configs import TINY, SMALL, VARIANTS
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny_geom():
+    return cfd.build_geometry(TINY)
+
+
+@pytest.fixture(scope="module")
+def small_geom():
+    return cfd.build_geometry(SMALL)
+
+
+class TestGeometry:
+    def test_solid_is_cylinder(self, small_geom):
+        g, cfg = small_geom, SMALL
+        area = g.solid.sum() * cfg.h * cfg.h
+        assert abs(area - np.pi * cfg.radius**2) / (np.pi * cfg.radius**2) < 0.15
+
+    def test_jets_have_cells_and_balance(self, small_geom):
+        g = small_geom
+        jet_cells = (np.abs(g.jet_u) + np.abs(g.jet_v)) > 0
+        assert jet_cells.sum() >= 4, "each jet needs >=2 cells on this grid"
+        # jets are inside the solid shell
+        assert np.all(g.solid[jet_cells] == 1.0)
+        # V_G1 = -V_G2: net mass flux of the unit-action jet field ~ 0
+        # (top jet blows radially out, bottom sucks radially in)
+        net = g.jet_v.sum()
+        gross = np.abs(g.jet_v).sum()
+        assert gross > 0
+        # both jets point +y for positive action: v-components add up
+        assert net > 0.9 * gross
+
+    def test_inlet_profile(self, small_geom):
+        g, cfg = small_geom, SMALL
+        # parabola peaks at channel centre with Um = 1.5 Ubar
+        assert abs(g.u_in.max() - cfg.u_max) < 0.01
+        assert g.u_in[0] >= 0 and g.u_in[-1] >= 0
+        # mean over the channel ~ Ubar (Eq. 5)
+        assert abs(g.u_in.mean() - cfg.u_mean) < 0.05
+
+    def test_checkerboard_partition(self, small_geom):
+        g = small_geom
+        assert np.all(g.red * g.black == 0)
+        inter = g.interior
+        np.testing.assert_array_equal(g.red + g.black, inter)
+
+    def test_probes_inside_domain(self, small_geom):
+        g, cfg = small_geom, SMALL
+        assert g.probe_xy.shape == (149, 2)
+        assert np.all(g.probe_xy[:, 0] > -cfg.x_up)
+        assert np.all(g.probe_xy[:, 0] < cfg.x_down)
+        assert np.all(g.probe_xy[:, 1] > cfg.y_lo)
+        assert np.all(g.probe_xy[:, 1] < cfg.y_hi)
+        # no probe inside the cylinder
+        r = np.hypot(g.probe_xy[:, 0], g.probe_xy[:, 1])
+        assert np.all(r > cfg.radius)
+
+    def test_probe_weights_partition_of_unity(self, small_geom):
+        np.testing.assert_allclose(small_geom.probe_w.sum(axis=1), 1.0,
+                                   rtol=1e-5)
+
+
+class TestBCs:
+    def test_velocity_bcs(self, tiny_geom):
+        g, cfg = tiny_geom, TINY
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((cfg.ny, cfg.nx)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((cfg.ny, cfg.nx)), jnp.float32)
+        u, v = cfd.apply_vel_bcs(u, v, jnp.asarray(g.u_in))
+        u, v = np.asarray(u), np.asarray(v)
+        np.testing.assert_allclose(u[1:-1, 0], g.u_in[1:-1], rtol=1e-6)
+        np.testing.assert_array_equal(v[1:-1, 0], 0.0)
+        np.testing.assert_array_equal(u[:, -1], u[:, -2])
+        np.testing.assert_array_equal(u[0, :], 0.0)
+        np.testing.assert_array_equal(u[-1, :], 0.0)
+        np.testing.assert_array_equal(v[0, :], 0.0)
+
+    def test_pressure_bcs(self):
+        rng = np.random.default_rng(1)
+        p = jnp.asarray(rng.standard_normal((12, 20)), jnp.float32)
+        p = np.asarray(cfd.apply_pressure_bcs(p))
+        np.testing.assert_array_equal(p[:, -1], 0.0)
+        np.testing.assert_array_equal(p[1:-1, 0], p[1:-1, 1])
+        np.testing.assert_array_equal(p[0, :], p[1, :])
+
+
+class TestSolver:
+    def test_probe_sampling_exact_for_linear_field(self, small_geom):
+        g, cfg = small_geom, SMALL
+        X, Y = np.meshgrid(g.xc, g.yc)
+        p = (0.3 * X - 0.7 * Y + 1.0).astype(np.float32)
+        got = np.asarray(cfd.sample_probes(jnp.asarray(p), g))
+        want = 0.3 * g.probe_xy[:, 0] - 0.7 * g.probe_xy[:, 1] + 1.0
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_substep_reduces_divergence(self, tiny_geom):
+        """The projection must make div(u) small relative to pre-projection."""
+        g, cfg = tiny_geom, TINY
+        substep = jax.jit(cfd.make_substep_fn(cfg, g))
+        u, v, p = cfd.quiescent_state(cfg, g)
+        state = (u, v, p)
+        for _ in range(10):
+            state, _ = substep(state, jnp.float32(0.0))
+        u, v, p = state
+        # exclude the IBM shell: direct re-forcing after projection leaves
+        # O(1) divergence in the 1-2 cells hugging the body (expected for
+        # this class of IBM); the bulk fluid must be far cleaner.
+        X, Y = np.meshgrid(g.xc, g.yc)
+        away = (np.hypot(X, Y) > cfg.radius + 2.5 * cfg.h).astype(np.float32)
+        inter = np.asarray(g.interior) * away
+        div = np.abs(np.asarray(ref.divergence(u, v, cfg.h)) * inter)
+        # scale: u_max/h would be O(30); projected flow must be far below
+        assert div.max() < 0.5, div.max()
+
+    def test_uncontrolled_drag_positive_and_plausible(self, tiny_geom):
+        g, cfg = tiny_geom, TINY
+        u, v, p, cds, cls = cfd.develop_base_flow(cfg, g, time_units=3.0)
+        assert cds[-1] > 1.0, "drag must be positive and O(1)"
+        assert cds[-1] < 10.0
+        assert np.all(np.isfinite(cds)) and np.all(np.isfinite(cls))
+
+    def test_jet_changes_flow_and_lift(self, tiny_geom):
+        """Blowing must alter the force history vs the uncontrolled run."""
+        g, cfg = tiny_geom, TINY
+        period = jax.jit(cfd.make_period_fn(cfg, g))
+        u, v, p, _, _ = cfd.develop_base_flow(cfg, g, time_units=2.0)
+        _, _, _, _, cd0, cl0 = period(u, v, p, jnp.float32(0.0))
+        _, _, _, _, cd1, cl1 = period(u, v, p, jnp.float32(1.0))
+        assert float(jnp.mean(jnp.abs(cl1 - cl0))) > 1e-3
+
+    def test_pallas_and_ref_paths_agree(self, tiny_geom):
+        g, cfg = tiny_geom, TINY
+        sp = jax.jit(cfd.make_substep_fn(cfg, g, use_pallas=True))
+        sr = jax.jit(cfd.make_substep_fn(cfg, g, use_pallas=False))
+        state = cfd.quiescent_state(cfg, g)
+        s1, (cd1, cl1) = sp(state, jnp.float32(0.3))
+        s2, (cd2, cl2) = sr(state, jnp.float32(0.3))
+        for a, b in zip(s1, s2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+        assert abs(float(cd1) - float(cd2)) < 1e-3
+
+    def test_period_fn_shapes(self, tiny_geom):
+        g, cfg = tiny_geom, TINY
+        period = jax.jit(cfd.make_period_fn(cfg, g))
+        u, v, p = cfd.quiescent_state(cfg, g)
+        u2, v2, p2, probes, cd_h, cl_h = period(u, v, p, jnp.float32(0.0))
+        assert u2.shape == (cfg.ny, cfg.nx)
+        assert probes.shape == (149,)
+        assert cd_h.shape == (cfg.substeps,)
+        assert cl_h.shape == (cfg.substeps,)
+
+
+class TestStability:
+    def test_all_variants_stable_configs(self):
+        for cfg in VARIANTS.values():
+            cfg.check_stability()
+
+    def test_long_run_bounded(self, tiny_geom):
+        g, cfg = tiny_geom, TINY
+        u, v, p, cds, _ = cfd.develop_base_flow(cfg, g, time_units=5.0)
+        assert float(jnp.max(jnp.abs(u))) < 10.0
+        assert np.all(np.isfinite(np.asarray(u)))

@@ -1,0 +1,60 @@
+"""Pallas dense kernel vs oracle, and the AD constraint it imposes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp, ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 64), i=st.integers(1, 160), o=st.integers(1, 128),
+       seed=st.integers(0, 2**31 - 1),
+       act=st.sampled_from(["tanh", "none"]))
+def test_matches_reference(b, i, o, seed, act):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, i)).astype(np.float32)
+    w = (rng.standard_normal((i, o)) * 0.1).astype(np.float32)
+    bias = rng.standard_normal(o).astype(np.float32)
+    got = mlp.dense(x, w, bias, act)
+    want = ref.dense(x, w, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_interpret_pallas_has_no_reverse_ad():
+    """Documents the constraint that forces ppo_update onto the ref forward:
+    reverse-mode AD through interpret-mode pallas_call raises. If this ever
+    starts passing, model.forward can switch the grad path to Pallas."""
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.ones((8, 8), jnp.float32) * 0.1
+    b = jnp.zeros(8, jnp.float32)
+    with pytest.raises(Exception):
+        jax.grad(lambda w_: mlp.dense(x, w_, b).sum())(w)
+
+
+def test_ref_grad_matches_finite_difference():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 6)).astype(np.float32)
+    w = (rng.standard_normal((6, 3)) * 0.2).astype(np.float32)
+    b = rng.standard_normal(3).astype(np.float32)
+
+    f = lambda w_: ref.dense(jnp.asarray(x), w_, jnp.asarray(b)).sum()
+    g = np.asarray(jax.grad(f)(jnp.asarray(w)))
+    eps = 1e-3
+    for idx in [(0, 0), (3, 2), (5, 1)]:
+        wp = w.copy(); wp[idx] += eps
+        wm = w.copy(); wm[idx] -= eps
+        fd = (float(f(jnp.asarray(wp))) - float(f(jnp.asarray(wm)))) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-2, (idx, fd, g[idx])
+
+
+def test_mxu_tiles():
+    n, pad = mlp.mxu_tiles(64, 512, 512)
+    assert n == 1 * 4 * 4
+    assert 0.0 <= pad < 1.0
+    # the 149-input layer pads badly, as documented
+    _, pad1 = mlp.mxu_tiles(64, 149, 512)
+    assert pad1 > 0.2

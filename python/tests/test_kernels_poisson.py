@@ -1,0 +1,119 @@
+"""Pallas red-black SOR kernel vs the pure-jnp oracle (ref.py)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import poisson, ref
+
+
+def masks(ny, nx):
+    jj, ii = np.meshgrid(np.arange(ny), np.arange(nx), indexing="ij")
+    interior = (jj > 0) & (jj < ny - 1) & (ii > 0) & (ii < nx - 1)
+    red = (((jj + ii) % 2 == 0) & interior).astype(np.float32)
+    black = (((jj + ii) % 2 == 1) & interior).astype(np.float32)
+    return red, black, interior.astype(np.float32)
+
+
+def rand_field(seed, ny, nx, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal((ny, nx)) * scale
+            ).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ny=st.integers(4, 40),
+    nx=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+    omega=st.floats(0.5, 1.95),
+)
+def test_matches_reference(ny, nx, seed, omega):
+    p = rand_field(seed, ny, nx)
+    rhs = rand_field(seed + 1, ny, nx)
+    red, black, _ = masks(ny, nx)
+    h = 0.1
+    got = poisson.rb_sor_sweep(p, rhs, red, black, omega=omega, h=h)
+    want = ref.rb_sor_sweep(p, rhs, red, black, omega, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_boundary_cells_untouched():
+    ny, nx = 16, 24
+    p = rand_field(0, ny, nx)
+    rhs = rand_field(1, ny, nx)
+    red, black, _ = masks(ny, nx)
+    out = np.asarray(poisson.rb_sor_sweep(p, rhs, red, black, omega=1.7, h=0.1))
+    np.testing.assert_array_equal(out[0, :], p[0, :])
+    np.testing.assert_array_equal(out[-1, :], p[-1, :])
+    np.testing.assert_array_equal(out[:, 0], p[:, 0])
+    np.testing.assert_array_equal(out[:, -1], p[:, -1])
+
+
+@pytest.mark.parametrize("omega", [1.0, 1.5, 1.7])
+def test_residual_contracts(omega):
+    """Sweeping must monotonically (on average) reduce the Poisson residual
+    for a zero-Dirichlet problem."""
+    ny, nx, h = 32, 32, 0.1
+    rhs = rand_field(7, ny, nx, scale=1.0)
+    red, black, interior = masks(ny, nx)
+    p = jnp.zeros((ny, nx), jnp.float32)
+    r0 = float(ref.poisson_residual(p, rhs * interior, h, interior))
+    for _ in range(200):
+        p = poisson.rb_sor_sweep(p, rhs * interior, red, black, omega=omega, h=h)
+    r1 = float(ref.poisson_residual(p, rhs * interior, h, interior))
+    assert r1 < 0.05 * r0, (r0, r1)
+
+
+def test_sor_faster_than_jacobi_like():
+    """omega=1.7 must converge faster than omega=1.0 (Gauss-Seidel)."""
+    ny, nx, h = 32, 32, 0.1
+    rhs = rand_field(3, ny, nx)
+    red, black, interior = masks(ny, nx)
+    rhs = rhs * interior
+
+    def run(omega, n):
+        p = jnp.zeros((ny, nx), jnp.float32)
+        for _ in range(n):
+            p = poisson.rb_sor_sweep(p, rhs, red, black, omega=omega, h=h)
+        return float(ref.poisson_residual(p, rhs, h, interior))
+
+    assert run(1.7, 60) < run(1.0, 60)
+
+
+def test_vmem_estimate():
+    # paper grid: (96 rows, 515 cols) panels of 32 rows -> well under 16 MiB
+    assert poisson.vmem_bytes(32, 515) < 16 * 2**20
+
+
+def test_dtype_support_f64():
+    """The shipped artifacts are f32; numerics-debug runs use f64 — the
+    kernel must agree with the oracle there too."""
+    import jax
+    ny, nx, h = 12, 16, 0.1
+    rng = np.random.default_rng(0)
+    with jax.experimental.enable_x64():
+        p = rng.standard_normal((ny, nx))
+        rhs = rng.standard_normal((ny, nx))
+        red, black, _ = masks(ny, nx)
+        got = poisson.rb_sor_sweep(p, rhs, red.astype(np.float64),
+                                   black.astype(np.float64), omega=1.5, h=h)
+        want = ref.rb_sor_sweep(p, rhs, red.astype(np.float64),
+                                black.astype(np.float64), 1.5, h)
+        assert np.asarray(got).dtype == np.float64
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-12)
+
+
+def test_sweep_is_idempotent_on_converged_solution():
+    """If p already solves the system exactly, a sweep must not move it
+    (fixed point of the SOR iteration)."""
+    ny, nx, h = 16, 16, 0.2
+    # build p first, then define rhs = lap(p): p is then an exact solution
+    p = rand_field(11, ny, nx)
+    rhs = np.asarray(ref.laplacian(p, h))
+    red, black, interior = masks(ny, nx)
+    out = np.asarray(poisson.rb_sor_sweep(p, rhs, red, black, omega=1.7, h=h))
+    np.testing.assert_allclose(out[1:-1, 1:-1], p[1:-1, 1:-1],
+                               rtol=1e-4, atol=1e-5)

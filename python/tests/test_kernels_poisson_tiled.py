@@ -1,0 +1,83 @@
+"""Row-panel-tiled SOR kernel (the TPU schedule) vs the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import poisson, poisson_tiled, ref
+from tests.test_kernels_poisson import masks, rand_field
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    blocks=st.integers(2, 6),
+    block_rows=st.sampled_from([4, 8]),
+    nx=st.integers(6, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_panel_interiors_match_reference(blocks, block_rows, nx, seed):
+    """Away from panel boundaries the tiled sweep must equal the
+    sequential red-black sweep exactly."""
+    ny = blocks * block_rows
+    p = rand_field(seed, ny, nx)
+    rhs = rand_field(seed + 1, ny, nx)
+    red, black, _ = masks(ny, nx)
+    h, omega = 0.1, 1.6
+    got = np.asarray(poisson_tiled.rb_sor_sweep_tiled(
+        p, rhs, red, black, omega=omega, h=h, block_rows=block_rows))
+    want = np.asarray(ref.rb_sor_sweep(p, rhs, red, black, omega, h))
+    # rows adjacent to a panel boundary may differ (block-async relaxation)
+    for b in range(blocks):
+        r0, r1 = b * block_rows, (b + 1) * block_rows
+        inner = slice(r0 + 1, r1 - 1)
+        np.testing.assert_allclose(got[inner], want[inner],
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"panel {b}")
+
+
+def test_boundary_rows_pass_through():
+    ny, nx = 24, 20
+    p = rand_field(3, ny, nx)
+    rhs = rand_field(4, ny, nx)
+    red, black, _ = masks(ny, nx)
+    out = np.asarray(poisson_tiled.rb_sor_sweep_tiled(
+        p, rhs, red, black, omega=1.7, h=0.1, block_rows=8))
+    np.testing.assert_array_equal(out[0, :], p[0, :])
+    np.testing.assert_array_equal(out[-1, :], p[-1, :])
+    np.testing.assert_array_equal(out[:, 0], p[:, 0])
+    np.testing.assert_array_equal(out[:, -1], p[:, -1])
+
+
+@pytest.mark.parametrize("block_rows", [4, 8, 16])
+def test_global_residual_contracts(block_rows):
+    """Block-asynchronous relaxation must still solve the system."""
+    ny, nx, h = 32, 32, 0.1
+    rhs = rand_field(7, ny, nx)
+    red, black, interior = masks(ny, nx)
+    rhs = rhs * interior
+    p = jnp.zeros((ny, nx), jnp.float32)
+    r0 = float(ref.poisson_residual(p, rhs, h, interior))
+    for _ in range(200):
+        p = poisson_tiled.rb_sor_sweep_tiled(
+            p, rhs, red, black, omega=1.6, h=h, block_rows=block_rows)
+    r1 = float(ref.poisson_residual(p, rhs, h, interior))
+    assert r1 < 0.05 * r0, (r0, r1)
+
+
+def test_single_panel_equals_untiled():
+    """block_rows == ny reduces to the production whole-array kernel."""
+    ny, nx = 16, 24
+    p = rand_field(0, ny, nx)
+    rhs = rand_field(1, ny, nx)
+    red, black, _ = masks(ny, nx)
+    a = poisson_tiled.rb_sor_sweep_tiled(p, rhs, red, black,
+                                         omega=1.7, h=0.1, block_rows=ny)
+    b = poisson.rb_sor_sweep(p, rhs, red, black, omega=1.7, h=0.1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_vmem_budget_paper_grid():
+    # paper grid nx=515, B=32: comfortably under VMEM with double buffering
+    assert poisson_tiled.vmem_per_instance(32, 515) < 2 * 2**20

@@ -1,0 +1,177 @@
+"""PPO model: layout, forward equivalence, loss/update math, GAE oracle."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.configs import DRL
+
+
+@pytest.fixture(scope="module")
+def flat0():
+    return jnp.asarray(model.init_params(DRL, seed=0))
+
+
+class TestLayout:
+    def test_layout_covers_vector(self):
+        slots, n = model.param_layout(DRL)
+        assert n == DRL.n_params
+        # contiguity: each slot starts where the previous ended
+        off = 0
+        for s in slots:
+            assert s.offset == off
+            off += int(np.prod(s.shape))
+        assert off == n
+
+    def test_unflatten_roundtrip(self, flat0):
+        p = model.unflatten(flat0, DRL)
+        assert p["w1"].shape == (DRL.n_obs, DRL.hidden)
+        assert p["logstd"].shape == (DRL.n_act,)
+        # re-flatten manually and compare
+        slots, n = model.param_layout(DRL)
+        re = np.concatenate([np.asarray(p[s.name]).ravel() for s in slots])
+        np.testing.assert_array_equal(re, np.asarray(flat0))
+
+    def test_init_params_deterministic(self):
+        a = model.init_params(DRL, seed=3)
+        b = model.init_params(DRL, seed=3)
+        c = model.init_params(DRL, seed=4)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_mu_head_small_at_init(self, flat0):
+        obs = jnp.asarray(np.random.default_rng(0).standard_normal((8, DRL.n_obs)),
+                          jnp.float32)
+        mu, logstd, v = model.forward(flat0, obs, DRL, use_pallas=False)
+        assert float(jnp.max(jnp.abs(mu))) < 0.5
+        np.testing.assert_allclose(np.asarray(logstd), DRL.init_logstd)
+
+
+class TestForward:
+    def test_pallas_matches_ref(self, flat0):
+        obs = jnp.asarray(np.random.default_rng(1).standard_normal((4, DRL.n_obs)),
+                          jnp.float32)
+        m1 = model.forward(flat0, obs, DRL, use_pallas=True)
+        m2 = model.forward(flat0, obs, DRL, use_pallas=False)
+        for a, b in zip(m1, m2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10**6))
+    def test_gaussian_logp(self, seed):
+        rng = np.random.default_rng(seed)
+        mu = rng.standard_normal((6, 1)).astype(np.float32)
+        logstd = rng.standard_normal(1).astype(np.float32) * 0.3
+        act = rng.standard_normal((6, 1)).astype(np.float32)
+        got = np.asarray(model.gaussian_logp(
+            jnp.asarray(act), jnp.asarray(mu), jnp.asarray(logstd)))
+        std = np.exp(logstd)
+        want = (-0.5 * ((act - mu) / std) ** 2 - np.log(std)
+                - 0.5 * math.log(2 * math.pi)).sum(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestUpdate:
+    def _batch(self, flat, seed=0):
+        rng = np.random.default_rng(seed)
+        b = DRL.minibatch
+        obs = jnp.asarray(rng.standard_normal((b, DRL.n_obs)), jnp.float32)
+        mu, logstd, _ = model.forward(flat, obs, DRL, use_pallas=False)
+        act = mu + jnp.exp(logstd) * jnp.asarray(
+            rng.standard_normal((b, DRL.n_act)), jnp.float32)
+        logp = model.gaussian_logp(act, mu, logstd)
+        adv = jnp.asarray(rng.standard_normal(b), jnp.float32)
+        ret = jnp.asarray(rng.standard_normal(b), jnp.float32)
+        return obs, act, logp, adv, ret
+
+    def test_first_epoch_ratio_is_one(self, flat0):
+        """With unchanged params, ratio == 1 -> pg loss == -mean(adv)."""
+        obs, act, logp, adv, ret = self._batch(flat0)
+        total, stats = model.ppo_loss(flat0, obs, act, logp, adv, ret, DRL)
+        pg = float(stats[0])
+        assert abs(pg - float(-jnp.mean(adv))) < 1e-4
+        assert abs(float(stats[3])) < 1e-5          # approx KL ~ 0
+        assert float(stats[4]) == 0.0               # clipfrac == 0
+
+    def test_update_moves_params_against_gradient(self, flat0):
+        obs, act, logp, adv, ret = self._batch(flat0)
+        upd = jax.jit(model.make_ppo_update(DRL))
+        m = jnp.zeros_like(flat0)
+        v = jnp.zeros_like(flat0)
+        f1, m1, v1, stats = upd(flat0, m, v, jnp.float32(1.0),
+                                obs, act, logp, adv, ret)
+        assert float(jnp.linalg.norm(f1 - flat0)) > 0
+        # Adam first step: |delta| <= lr per coordinate (up to eps)
+        assert float(jnp.max(jnp.abs(f1 - flat0))) <= DRL.lr * 1.01
+
+    def test_repeated_updates_reduce_value_loss(self, flat0):
+        """On a fixed regression batch the value head must fit."""
+        rng = np.random.default_rng(2)
+        b = DRL.minibatch
+        obs = jnp.asarray(rng.standard_normal((b, DRL.n_obs)), jnp.float32)
+        act = jnp.zeros((b, DRL.n_act), jnp.float32)
+        mu, logstd, _ = model.forward(flat0, obs, DRL, use_pallas=False)
+        logp = model.gaussian_logp(act, mu, logstd)
+        adv = jnp.zeros(b, jnp.float32)             # isolate the value loss
+        ret = jnp.asarray(rng.standard_normal(b), jnp.float32)
+        upd = jax.jit(model.make_ppo_update(DRL))
+        flat, m, v = flat0, jnp.zeros_like(flat0), jnp.zeros_like(flat0)
+        losses = []
+        for t in range(1, 60):
+            flat, m, v, stats = upd(flat, m, v, jnp.float32(t),
+                                    obs, act, logp, adv, ret)
+            losses.append(float(stats[1]))
+        assert losses[-1] < 0.5 * losses[0], (losses[0], losses[-1])
+
+    def test_adam_matches_numpy_reference(self, flat0):
+        """One full Adam step cross-checked against a numpy implementation."""
+        obs, act, logp, adv, ret = self._batch(flat0, seed=5)
+        g, _ = jax.grad(model.ppo_loss, has_aux=True)(
+            flat0, obs, act, logp, adv, ret, DRL)
+        g = np.asarray(g, np.float64)
+        f = np.asarray(flat0, np.float64)
+        m = DRL.adam_b1 * 0 + (1 - DRL.adam_b1) * g
+        v = (1 - DRL.adam_b2) * g * g
+        mh = m / (1 - DRL.adam_b1)
+        vh = v / (1 - DRL.adam_b2)
+        want = f - DRL.lr * mh / (np.sqrt(vh) + DRL.adam_eps)
+        upd = jax.jit(model.make_ppo_update(DRL))
+        got, _, _, _ = upd(flat0, jnp.zeros_like(flat0), jnp.zeros_like(flat0),
+                           jnp.float32(1.0), obs, act, logp, adv, ret)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-5)
+
+
+class TestGAE:
+    def test_constant_reward_closed_form(self):
+        """r=1, V=0 everywhere: adv_t = sum_k (gamma*lam)^k over remaining."""
+        n, gamma, lam = 10, 0.9, 0.8
+        rew = np.ones(n, np.float32)
+        val = np.zeros(n, np.float32)
+        adv, ret = model.gae(rew, val, 0.0, gamma, lam)
+        gl = gamma * lam
+        want = np.array([(1 - gl ** (n - t)) / (1 - gl) for t in range(n)])
+        np.testing.assert_allclose(adv, want, rtol=1e-5)
+        np.testing.assert_allclose(ret, adv, rtol=1e-6)   # V=0 -> ret == adv
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10**6), n=st.integers(1, 50))
+    def test_lambda_one_is_discounted_return(self, seed, n):
+        rng = np.random.default_rng(seed)
+        rew = rng.standard_normal(n).astype(np.float32)
+        val = rng.standard_normal(n).astype(np.float32)
+        last = float(rng.standard_normal())
+        gamma = 0.95
+        adv, ret = model.gae(rew, val, last, gamma, 1.0)
+        # with lam=1: ret_t = sum gamma^k r_{t+k} + gamma^{n-t} last
+        want = np.zeros(n)
+        acc = last
+        for t in reversed(range(n)):
+            acc = rew[t] + gamma * acc
+            want[t] = acc
+        np.testing.assert_allclose(ret, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,506 @@
+//! The discrete-event simulator itself.
+//!
+//! Entities:
+//! * `N_envs` environment processes, each statically assigned `N_ranks`
+//!   cores (the paper's allocation: N_total = N_envs x N_ranks, reserved
+//!   for the whole run — cores never contend);
+//! * one shared disk, a FIFO single server with finite bandwidth (the
+//!   resource whose queueing produces the paper's N_envs > 30 cliff);
+//! * the master/agent process: serial PPO update at the episode barrier.
+//!
+//! One training iteration = every env runs `horizon` actuation periods
+//! (each period: CFD compute -> action/probe exchange through the disk),
+//! then a global barrier, then the serial update. Repeat for
+//! `episodes_total / N_envs` iterations. Per-period CFD times draw
+//! lognormal jitter; everything is seeded and reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::cluster::calib::Calibration;
+use crate::io_interface::IoMode;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_envs: usize,
+    pub n_ranks: usize,
+    pub episodes_total: usize,
+    pub io_mode: IoMode,
+    pub seed: u64,
+}
+
+/// Aggregate time breakdown (per-episode averages; feeds Fig 10).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimBreakdown {
+    /// pure CFD compute per episode (s)
+    pub cfd_s: f64,
+    /// exchange: cpu serialize/parse + disk service + queue wait (s)
+    pub io_s: f64,
+    /// policy serving per episode (s)
+    pub policy_s: f64,
+    /// master update + barrier idle per episode (s)
+    pub update_barrier_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub cfg_envs: usize,
+    pub cfg_ranks: usize,
+    pub total_cpus: usize,
+    /// simulated wall-clock for the whole training run (s)
+    pub total_s: f64,
+    pub breakdown: SimBreakdown,
+    /// disk busy fraction over the run (diagnostic: saturation indicator)
+    pub disk_utilisation: f64,
+}
+
+impl SimResult {
+    pub fn total_hours(&self) -> f64 {
+        self.total_s / 3600.0
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+struct Event {
+    time: f64,
+    env: usize,
+    kind: EventKind,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// CFD compute for one period finished -> issue exchange
+    ComputeDone,
+    /// disk service for this env's exchange finished
+    DiskDone,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (BinaryHeap is a max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.env.cmp(&self.env))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate one full training run; returns totals + breakdown.
+pub fn simulate_training(calib: &Calibration, cfg: &SimConfig) -> SimResult {
+    let mut rng = Rng::new(cfg.seed ^ 0xDE5);
+    let n_envs = cfg.n_envs.max(1);
+    let iterations = cfg.episodes_total.div_ceil(n_envs);
+    let horizon = calib.horizon;
+
+    let (bytes, io_cpu) = match cfg.io_mode {
+        IoMode::Baseline => (calib.bytes_baseline, calib.t_io_cpu_baseline),
+        IoMode::Optimized => (calib.bytes_optimized, calib.t_io_cpu_optimized),
+        IoMode::InMemory => (0.0, 0.0),
+    };
+    let t_period = calib.t_period_1rank * calib.rank_model.period_factor(cfg.n_ranks);
+    // serial PPO update at the barrier: epochs x minibatches(total samples)
+    let samples = n_envs * horizon;
+    let minibatches = samples.div_ceil(calib.minibatch);
+    let t_update = calib.epochs as f64 * minibatches as f64 * calib.t_update_mb;
+
+    let mut clock = 0.0f64;
+    let mut agg = SimBreakdown::default();
+    let mut disk_busy = 0.0f64;
+
+    // per-env period jitter: lognormal, mean-corrected
+    let sigma = calib.period_jitter;
+    let mu_corr = -0.5 * sigma * sigma;
+    // per-env EPISODE jitter (see calib.rs: this drives the barrier loss)
+    let ep_sigma = calib.episode_jitter;
+    let ep_mu_corr = -0.5 * ep_sigma * ep_sigma;
+
+    for _iter in 0..iterations {
+        // --- one iteration: all envs start at `clock`
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut periods_left = vec![horizon; n_envs];
+        let mut env_done_at = vec![clock; n_envs];
+        let mut disk_free_at = clock;
+        // episode-level slowdown factor per env for this iteration
+        let ep_factor: Vec<f64> = (0..n_envs)
+            .map(|_| (ep_mu_corr + ep_sigma * rng.normal()).exp())
+            .collect();
+
+        for e in 0..n_envs {
+            let jit = ep_factor[e] * (mu_corr + sigma * rng.normal()).exp();
+            let dt = (t_period + calib.t_policy) * jit;
+            agg.cfd_s += t_period * jit;
+            agg.policy_s += calib.t_policy * jit;
+            heap.push(Event {
+                time: clock + dt,
+                env: e,
+                kind: EventKind::ComputeDone,
+            });
+        }
+
+        while let Some(ev) = heap.pop() {
+            match ev.kind {
+                EventKind::ComputeDone => {
+                    if bytes == 0.0 && io_cpu == 0.0 {
+                        // I/O-disabled: go straight to the next period
+                        finish_period(
+                            &mut heap,
+                            &mut periods_left,
+                            &mut env_done_at,
+                            ev.env,
+                            ev.time,
+                            t_period * ep_factor[ev.env],
+                            calib,
+                            sigma,
+                            mu_corr,
+                            &mut rng,
+                            &mut agg,
+                        );
+                    } else {
+                        // CPU-side serialize/parse on the env's own cores,
+                        // then a FIFO disk request. Because the heap pops
+                        // ComputeDone events in time order, assigning the
+                        // server in pop order IS arrival-order FIFO.
+                        let ready = ev.time + io_cpu;
+                        let svc = bytes / calib.disk_bw;
+                        let begin = disk_free_at.max(ready);
+                        agg.io_s += io_cpu + (begin - ready) + svc;
+                        disk_free_at = begin + svc;
+                        disk_busy += svc;
+                        heap.push(Event {
+                            time: disk_free_at,
+                            env: ev.env,
+                            kind: EventKind::DiskDone,
+                        });
+                    }
+                }
+                EventKind::DiskDone => {
+                    finish_period(
+                        &mut heap,
+                        &mut periods_left,
+                        &mut env_done_at,
+                        ev.env,
+                        ev.time,
+                        t_period * ep_factor[ev.env],
+                        calib,
+                        sigma,
+                        mu_corr,
+                        &mut rng,
+                        &mut agg,
+                    );
+                }
+            }
+        }
+
+        // barrier: iteration ends when the slowest env finishes
+        let barrier_at = env_done_at.iter().copied().fold(clock, f64::max);
+        let idle: f64 = env_done_at.iter().map(|&t| barrier_at - t).sum::<f64>()
+            / n_envs as f64;
+        agg.update_barrier_s += idle + t_update;
+        clock = barrier_at + t_update;
+    }
+
+    let episodes = (iterations * n_envs) as f64;
+    SimResult {
+        cfg_envs: n_envs,
+        cfg_ranks: cfg.n_ranks,
+        total_cpus: n_envs * cfg.n_ranks,
+        total_s: clock,
+        breakdown: SimBreakdown {
+            cfd_s: agg.cfd_s / episodes,
+            io_s: agg.io_s / episodes,
+            policy_s: agg.policy_s / episodes,
+            update_barrier_s: agg.update_barrier_s / (iterations as f64),
+        },
+        disk_utilisation: disk_busy / clock.max(1e-12),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_period(
+    heap: &mut BinaryHeap<Event>,
+    periods_left: &mut [usize],
+    env_done_at: &mut [f64],
+    env: usize,
+    now: f64,
+    t_period: f64,
+    calib: &Calibration,
+    sigma: f64,
+    mu_corr: f64,
+    rng: &mut Rng,
+    agg: &mut SimBreakdown,
+) {
+    periods_left[env] -= 1;
+    if periods_left[env] == 0 {
+        env_done_at[env] = now;
+        return;
+    }
+    let jit = (mu_corr + sigma * rng.normal()).exp();
+    let dt = (t_period + calib.t_policy) * jit;
+    agg.cfd_s += t_period * jit;
+    agg.policy_s += calib.t_policy * jit;
+    heap.push(Event {
+        time: now + dt,
+        env,
+        kind: EventKind::ComputeDone,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg(envs: usize, ranks: usize, mode: IoMode) -> SimConfig {
+        SimConfig {
+            n_envs: envs,
+            n_ranks: ranks,
+            episodes_total: 300,
+            io_mode: mode,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = Calibration::paper_scale();
+        let a = simulate_training(&c, &cfg(8, 1, IoMode::Baseline));
+        let b = simulate_training(&c, &cfg(8, 1, IoMode::Baseline));
+        assert_eq!(a.total_s, b.total_s);
+    }
+
+    #[test]
+    fn more_envs_is_faster() {
+        let c = Calibration::paper_scale();
+        let t1 = simulate_training(&c, &cfg(1, 1, IoMode::Baseline)).total_s;
+        let t4 = simulate_training(&c, &cfg(4, 1, IoMode::Baseline)).total_s;
+        let t8 = simulate_training(&c, &cfg(8, 1, IoMode::Baseline)).total_s;
+        assert!(t4 < t1);
+        assert!(t8 < t4);
+        // sublinear: efficiency < 1
+        assert!(t4 > t1 / 4.0);
+    }
+
+    #[test]
+    fn io_disabled_never_slower() {
+        let c = Calibration::paper_scale();
+        for envs in [1, 10, 40, 60] {
+            let base = simulate_training(&c, &cfg(envs, 1, IoMode::Baseline)).total_s;
+            let none = simulate_training(&c, &cfg(envs, 1, IoMode::InMemory)).total_s;
+            let opt = simulate_training(&c, &cfg(envs, 1, IoMode::Optimized)).total_s;
+            assert!(none <= base, "envs={envs}");
+            assert!(opt <= base * 1.001, "envs={envs}");
+        }
+    }
+
+    #[test]
+    fn disk_saturates_at_many_envs() {
+        let c = Calibration::paper_scale();
+        let u10 = simulate_training(&c, &cfg(10, 1, IoMode::Baseline)).disk_utilisation;
+        let u60 = simulate_training(&c, &cfg(60, 1, IoMode::Baseline)).disk_utilisation;
+        assert!(u60 > 0.85, "disk util at 60 envs = {u60}");
+        assert!(u10 < 0.5, "disk util at 10 envs = {u10}");
+    }
+
+    #[test]
+    fn invariants_hold_over_random_configs() {
+        let c = Calibration::paper_scale();
+        prop::check("DES invariants", 25, |rng| {
+            let envs = 1 + rng.below(64);
+            let ranks = 1 + rng.below(8);
+            let mode = match rng.below(3) {
+                0 => IoMode::Baseline,
+                1 => IoMode::Optimized,
+                _ => IoMode::InMemory,
+            };
+            let r = simulate_training(
+                &c,
+                &SimConfig {
+                    n_envs: envs,
+                    n_ranks: ranks,
+                    episodes_total: 60,
+                    io_mode: mode,
+                    seed: rng.next_u64(),
+                },
+            );
+            if !(r.total_s.is_finite() && r.total_s > 0.0) {
+                return Err("non-finite total".into());
+            }
+            if r.disk_utilisation > 1.0 + 1e-9 {
+                return Err(format!("disk util {}", r.disk_utilisation));
+            }
+            // an episode can never run faster than its pure compute
+            let floor = c.t_period_1rank * c.horizon as f64 * 0.5; // jitter slack
+            if (r.total_s / (60f64 / envs as f64).ceil()) < floor {
+                return Err("iteration faster than compute floor".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous-training variant (the paper's future-work ablation)
+// ---------------------------------------------------------------------------
+
+/// Simulate the asynchronous (barrier-free) training mode: environments
+/// run episodes back-to-back, and a dedicated master core applies one
+/// PPO update per arriving episode (FIFO); environments do NOT wait for
+/// updates (bounded-stale parameters, A3C-style). The run ends when the
+/// last update completes. Compare with [`simulate_training`] via
+/// `drlfoam reproduce ablation`.
+pub fn simulate_training_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
+    let mut rng = Rng::new(cfg.seed ^ 0xA57);
+    let n_envs = cfg.n_envs.max(1);
+    let episodes_per_env = cfg.episodes_total.div_ceil(n_envs);
+    let horizon = calib.horizon;
+
+    let (bytes, io_cpu) = match cfg.io_mode {
+        IoMode::Baseline => (calib.bytes_baseline, calib.t_io_cpu_baseline),
+        IoMode::Optimized => (calib.bytes_optimized, calib.t_io_cpu_optimized),
+        IoMode::InMemory => (0.0, 0.0),
+    };
+    let t_period = calib.t_period_1rank * calib.rank_model.period_factor(cfg.n_ranks);
+    // per-episode update (single trajectory): epochs x ceil(horizon/mb)
+    let t_update = calib.epochs as f64
+        * horizon.div_ceil(calib.minibatch) as f64
+        * calib.t_update_mb;
+
+    let sigma = calib.period_jitter;
+    let mu_corr = -0.5 * sigma * sigma;
+    let ep_sigma = calib.episode_jitter;
+    let ep_mu_corr = -0.5 * ep_sigma * ep_sigma;
+
+    let mut agg = SimBreakdown::default();
+    let mut disk_busy = 0.0f64;
+    let mut disk_free_at = 0.0f64;
+    let mut update_free_at = 0.0f64;
+
+    // one global event loop over the whole run: per env, remaining
+    // periods of the current episode + remaining episodes
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut periods_left = vec![horizon; n_envs];
+    let mut episodes_left = vec![episodes_per_env; n_envs];
+    let mut ep_factor = vec![1.0f64; n_envs];
+
+    let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64| -> f64 {
+        let jit = f * (mu_corr + sigma * rng.normal()).exp();
+        agg.cfd_s += t_period * jit;
+        agg.policy_s += calib.t_policy * jit;
+        (t_period + calib.t_policy) * jit
+    };
+
+    for e in 0..n_envs {
+        ep_factor[e] = (ep_mu_corr + ep_sigma * rng.normal()).exp();
+        let dt = draw_period(&mut rng, &mut agg, ep_factor[e]);
+        heap.push(Event { time: dt, env: e, kind: EventKind::ComputeDone });
+    }
+
+    let mut last_update_done = 0.0f64;
+    while let Some(ev) = heap.pop() {
+        let next_time = match ev.kind {
+            EventKind::ComputeDone if bytes > 0.0 || io_cpu > 0.0 => {
+                let ready = ev.time + io_cpu;
+                let svc = bytes / calib.disk_bw;
+                let begin = disk_free_at.max(ready);
+                agg.io_s += io_cpu + (begin - ready) + svc;
+                disk_free_at = begin + svc;
+                disk_busy += svc;
+                heap.push(Event { time: disk_free_at, env: ev.env, kind: EventKind::DiskDone });
+                continue;
+            }
+            _ => ev.time,
+        };
+        // a period (incl. any exchange) finished at next_time
+        periods_left[ev.env] -= 1;
+        if periods_left[ev.env] == 0 {
+            // episode complete: enqueue the update (env does not wait)
+            let begin = update_free_at.max(next_time);
+            update_free_at = begin + t_update;
+            last_update_done = last_update_done.max(update_free_at);
+            agg.update_barrier_s += t_update;
+            episodes_left[ev.env] -= 1;
+            if episodes_left[ev.env] == 0 {
+                continue;
+            }
+            periods_left[ev.env] = horizon;
+            ep_factor[ev.env] = (ep_mu_corr + ep_sigma * rng.normal()).exp();
+        }
+        let dt = draw_period(&mut rng, &mut agg, ep_factor[ev.env]);
+        heap.push(Event { time: next_time + dt, env: ev.env, kind: EventKind::ComputeDone });
+    }
+
+    let makespan = last_update_done;
+    let episodes = (episodes_per_env * n_envs) as f64;
+    SimResult {
+        cfg_envs: n_envs,
+        cfg_ranks: cfg.n_ranks,
+        total_cpus: n_envs * cfg.n_ranks,
+        total_s: makespan,
+        breakdown: SimBreakdown {
+            cfd_s: agg.cfd_s / episodes,
+            io_s: agg.io_s / episodes,
+            policy_s: agg.policy_s / episodes,
+            update_barrier_s: agg.update_barrier_s / episodes,
+        },
+        disk_utilisation: disk_busy / makespan.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod async_tests {
+    use super::*;
+
+    fn cfg(envs: usize, mode: IoMode) -> SimConfig {
+        SimConfig {
+            n_envs: envs,
+            n_ranks: 1,
+            episodes_total: 600,
+            io_mode: mode,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn async_no_slower_than_sync_without_io() {
+        let c = Calibration::paper_scale();
+        for envs in [4usize, 12, 30, 60] {
+            let sync = simulate_training(&c, &cfg(envs, IoMode::InMemory)).total_s;
+            let asyn = simulate_training_async(&c, &cfg(envs, IoMode::InMemory)).total_s;
+            assert!(
+                asyn <= sync * 1.02,
+                "envs={envs}: async {asyn:.0}s vs sync {sync:.0}s"
+            );
+        }
+    }
+
+    #[test]
+    fn async_removes_barrier_loss_at_scale() {
+        let c = Calibration::paper_scale();
+        let envs = 60;
+        let sync = simulate_training(&c, &cfg(envs, IoMode::Optimized)).total_s;
+        let asyn = simulate_training_async(&c, &cfg(envs, IoMode::Optimized)).total_s;
+        // the sync barrier costs >= 10% at 60 envs (max of 60 lognormals)
+        assert!(
+            asyn < sync * 0.95,
+            "async {asyn:.0}s not meaningfully faster than sync {sync:.0}s"
+        );
+    }
+
+    #[test]
+    fn async_deterministic() {
+        let c = Calibration::paper_scale();
+        let a = simulate_training_async(&c, &cfg(8, IoMode::Baseline)).total_s;
+        let b = simulate_training_async(&c, &cfg(8, IoMode::Baseline)).total_s;
+        assert_eq!(a, b);
+    }
+}

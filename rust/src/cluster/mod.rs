@@ -1,0 +1,22 @@
+//! Cluster discrete-event simulator (DES).
+//!
+//! This machine has ONE core (repro band: hardware gate), so the paper's
+//! 60-core scaling tables cannot be re-measured directly. Following the
+//! substitution rule in DESIGN.md section 2, we simulate the cluster: a
+//! discrete-event model of the multi-environment training framework whose
+//! per-component costs are either *measured* on this machine (CFD period,
+//! policy apply, PPO minibatch, exchange bytes — see `calibrate`) or
+//! *fit to the paper's own measurements* (MPI rank scaling, episode
+//! jitter, shared-disk bandwidth — each documented in [`calib`]).
+//!
+//! The DES reproduces the *shape* of Tables I-II and Figs 7-12: who wins,
+//! where the efficiency cliffs fall, and the crossovers between hybrid
+//! configurations.
+
+pub mod calib;
+pub mod des;
+pub mod mpi;
+
+pub use calib::Calibration;
+pub use des::{simulate_training, simulate_training_async, SimBreakdown, SimConfig, SimResult};
+pub use mpi::MpiScaling;

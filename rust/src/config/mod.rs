@@ -1,0 +1,151 @@
+//! CLI argument parsing (clap is not vendored offline) and shared run
+//! configuration helpers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `--key value` / `--flag` command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse, given the set of option names that take a value.
+    pub fn parse(argv: &[String], value_opts: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&name) {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .with_context(|| format!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Parse comma-separated usize list, e.g. "1,2,5".
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .with_context(|| format!("--{key}: bad entry {x:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Standard artifact-dir resolution: --artifacts, else $DRLFOAM_ARTIFACTS,
+/// else ./artifacts.
+pub fn artifact_dir(args: &Args) -> std::path::PathBuf {
+    if let Some(d) = args.get("artifacts") {
+        return d.into();
+    }
+    if let Ok(d) = std::env::var("DRLFOAM_ARTIFACTS") {
+        return d.into();
+    }
+    "artifacts".into()
+}
+
+pub fn ensure_positional(args: &Args, n: usize, usage: &str) -> Result<()> {
+    if args.positional.len() < n {
+        bail!("usage: {usage}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &sv(&["train", "--envs", "4", "--io=binary", "--quiet", "extra"]),
+            &["envs"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("envs"), Some("4"));
+        assert_eq!(a.get("io"), Some("binary"));
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.usize_or("envs", 1).unwrap(), 4);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let a = Args::parse(&sv(&["--envs", "x"]), &["envs"]).unwrap();
+        assert!(a.usize_or("envs", 1).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--ranks", "1,2,5"]), &["ranks"]).unwrap();
+        assert_eq!(a.usize_list_or("ranks", &[9]).unwrap(), vec![1, 2, 5]);
+        assert_eq!(a.usize_list_or("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--envs"]), &["envs"]).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Asynchronous PPO training — the paper's stated future-work direction
+//! ("such as asynchronous reinforcement learning training in AFC
+//! problems", section IV).
+//!
+//! Differences from the synchronous loop in [`super::train`]:
+//! * no episode barrier: the master updates the policy the moment ANY
+//!   environment delivers a trajectory and immediately re-dispatches that
+//!   environment with the fresh parameters;
+//! * environments therefore act on parameters that may be up to
+//!   `N_envs - 1` updates stale (bounded staleness, A3C-style);
+//! * the barrier idle time — the dominant multi-env efficiency loss in
+//!   Table I once I/O is optimized — disappears entirely.
+//!
+//! The DES twin (`cluster::des` with `sync = false` via
+//! [`crate::cluster::SimConfig`]... see `simulate_training_async`) projects
+//! the same policy onto the 60-core cluster; `drlfoam reproduce ablation`
+//! compares the two (EXPERIMENTS.md section Extensions).
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::pool::{EnvPool, PoolConfig};
+use crate::coordinator::train::TrainConfig;
+use crate::drl::{Batch, PpoTrainer};
+use crate::runtime::{write_f32_bin, Manifest, Runtime};
+use crate::util::rng::Rng;
+
+/// One row of the async learning curve.
+#[derive(Clone, Debug)]
+pub struct AsyncEpisodeLog {
+    pub episode: usize,
+    pub env_id: usize,
+    pub reward: f64,
+    pub cd_mean: f64,
+    pub staleness: u64,
+    pub update_s: f64,
+}
+
+pub struct AsyncTrainSummary {
+    pub log: Vec<AsyncEpisodeLog>,
+    pub final_params: Vec<f32>,
+    pub total_s: f64,
+}
+
+/// Asynchronous training: `cfg.iterations * cfg.n_envs` total episodes,
+/// one PPO update per arriving episode.
+pub fn train_async(cfg: &TrainConfig) -> Result<AsyncTrainSummary> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    std::fs::create_dir_all(&cfg.work_dir)?;
+    let manifest = Arc::new(Manifest::load(&cfg.artifact_dir)?);
+    let mut rt = Runtime::new(&cfg.artifact_dir)?;
+    rt.load(&manifest.drl.ppo_update_file)?;
+
+    let pool = EnvPool::new(
+        &PoolConfig {
+            artifact_dir: cfg.artifact_dir.clone(),
+            work_dir: cfg.work_dir.clone(),
+            variant: cfg.variant.clone(),
+            n_envs: cfg.n_envs,
+            io_mode: cfg.io_mode,
+            seed: cfg.seed,
+        },
+        &manifest,
+    )?;
+
+    let mut trainer = PpoTrainer::new(&manifest.drl, manifest.load_params_init()?, cfg.epochs);
+    let mut rng = Rng::new(cfg.seed ^ 0xA5A5);
+    let total_episodes = cfg.iterations * cfg.n_envs;
+    let t0 = Instant::now();
+
+    // track which policy version each env is running
+    let mut version: u64 = 0;
+    let mut env_version = vec![0u64; cfg.n_envs];
+
+    // prime every env once
+    let params = Arc::new(trainer.params.clone());
+    for e in 0..cfg.n_envs {
+        pool.dispatch(e, &params, cfg.horizon, e as u64)?;
+    }
+
+    let mut log = Vec::with_capacity(total_episodes);
+    let mut csv = std::fs::File::create(cfg.out_dir.join("train_async_log.csv"))?;
+    writeln!(csv, "episode,env_id,reward,cd_mean,staleness,update_s")?;
+
+    for ep in 0..total_episodes {
+        let out = pool.recv_one().context("async rollout")?;
+        let staleness = version - env_version[out.env_id];
+
+        // immediate update on this single trajectory
+        let batch = Batch::assemble(
+            std::slice::from_ref(&out.traj),
+            manifest.drl.n_obs,
+            manifest.drl.gamma,
+            manifest.drl.gae_lambda,
+        );
+        let upd = trainer.update(rt.get(&manifest.drl.ppo_update_file)?, &batch, &mut rng)?;
+        version += 1;
+
+        // re-dispatch the same env with fresh parameters (unless draining)
+        if ep + cfg.n_envs < total_episodes {
+            let params = Arc::new(trainer.params.clone());
+            env_version[out.env_id] = version;
+            pool.dispatch(out.env_id, &params, cfg.horizon, (ep + cfg.n_envs) as u64)?;
+        }
+
+        let row = AsyncEpisodeLog {
+            episode: ep,
+            env_id: out.env_id,
+            reward: out.stats.reward_sum,
+            cd_mean: out.stats.cd_mean,
+            staleness,
+            update_s: upd.wall_s,
+        };
+        writeln!(
+            csv,
+            "{},{},{:.6},{:.6},{},{:.4}",
+            row.episode, row.env_id, row.reward, row.cd_mean, row.staleness, row.update_s
+        )?;
+        if !cfg.quiet && ep % cfg.log_every == 0 {
+            println!(
+                "async ep {:>5} env {:>2}  R {:>8.4}  Cd {:>6.3}  staleness {}",
+                ep, out.env_id, row.reward, row.cd_mean, staleness
+            );
+        }
+        log.push(row);
+    }
+
+    let final_params = trainer.params.clone();
+    write_f32_bin(cfg.out_dir.join("policy_final_async.bin"), &final_params)?;
+    Ok(AsyncTrainSummary {
+        log,
+        final_params,
+        total_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,18 @@
+//! L3 coordination: the paper's multi-environment parallel DRL training
+//! framework (Fig 4), in Rust.
+//!
+//! * [`pool`]  — N environment workers on OS threads, each owning a full
+//!   PJRT runtime + CFD environment + exchange interface; the agent
+//!   broadcasts parameters at iteration start and the workers roll out
+//!   episodes independently ("embarrassingly parallel" data collection).
+//! * [`train`] — the synchronous PPO training loop: broadcast -> rollout
+//!   barrier -> GAE -> minibatch updates -> log, exactly the structure
+//!   whose scaling the paper studies.
+
+pub mod async_train;
+pub mod pool;
+pub mod train;
+
+pub use pool::{EnvPool, EpisodeOut, EpisodeStats, PoolConfig};
+pub use async_train::{train_async, AsyncTrainSummary};
+pub use train::{train, TrainConfig, TrainSummary};

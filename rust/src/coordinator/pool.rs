@@ -1,0 +1,278 @@
+//! Multi-environment worker pool.
+//!
+//! Mirrors the paper's resource model: each environment is an independent
+//! CFD instance (here: an OS thread owning its own PJRT client, compiled
+//! executables, flow state and exchange interface). Parameters are
+//! broadcast at episode boundaries; trajectories flow back over channels.
+//! On this 1-core testbed threads interleave rather than truly parallelise
+//! — the *structure* is the paper's, and the cluster DES (rust/src/cluster)
+//! projects the measured per-component costs onto 60 cores.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::drl::policy::PolicySession;
+use crate::drl::{Policy, Trajectory, Transition};
+use crate::env::CfdEnv;
+use crate::io_interface::{make_interface, IoMode, IoStats};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub work_dir: std::path::PathBuf,
+    pub variant: String,
+    pub n_envs: usize,
+    pub io_mode: IoMode,
+    pub seed: u64,
+}
+
+/// Per-episode summary returned alongside the trajectory.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeStats {
+    pub reward_sum: f64,
+    pub cd_mean: f64,
+    pub cl_abs_mean: f64,
+    pub jet_final: f64,
+    pub cfd_s: f64,
+    pub io_s: f64,
+    pub policy_s: f64,
+    pub wall_s: f64,
+    pub io: IoStats,
+}
+
+pub struct EpisodeOut {
+    pub env_id: usize,
+    pub traj: Trajectory,
+    pub stats: EpisodeStats,
+}
+
+enum Job {
+    Rollout {
+        params: Arc<Vec<f32>>,
+        horizon: usize,
+        /// decorrelates exploration across envs and iterations
+        episode_seed: u64,
+    },
+    Shutdown,
+}
+
+pub struct EnvPool {
+    job_txs: Vec<Sender<Job>>,
+    results: Receiver<Result<EpisodeOut>>,
+    joins: Vec<Option<JoinHandle<()>>>,
+}
+
+impl EnvPool {
+    pub fn new(cfg: &PoolConfig, manifest: &Arc<Manifest>) -> Result<Self> {
+        let mut job_txs = Vec::with_capacity(cfg.n_envs);
+        let mut joins = Vec::with_capacity(cfg.n_envs);
+        // one shared result channel: both the synchronous barrier and the
+        // asynchronous trainer consume from it
+        let (tx_out, rx_out) = channel::<Result<EpisodeOut>>();
+        for env_id in 0..cfg.n_envs {
+            let (tx_job, rx_job) = channel::<Job>();
+            let m = Arc::clone(manifest);
+            let cfg = cfg.clone();
+            let tx = tx_out.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("env-{env_id}"))
+                .spawn(move || worker_main(env_id, cfg, m, rx_job, tx))
+                .context("spawning env worker")?;
+            job_txs.push(tx_job);
+            joins.push(Some(join));
+        }
+        Ok(EnvPool {
+            job_txs,
+            results: rx_out,
+            joins,
+        })
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.job_txs.len()
+    }
+
+    /// Dispatch one episode to a specific environment (async mode).
+    pub fn dispatch(
+        &self,
+        env_id: usize,
+        params: &Arc<Vec<f32>>,
+        horizon: usize,
+        episode_index: u64,
+    ) -> Result<()> {
+        self.job_txs[env_id]
+            .send(Job::Rollout {
+                params: Arc::clone(params),
+                horizon,
+                episode_seed: episode_index
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(env_id as u64),
+            })
+            .context("worker channel closed")
+    }
+
+    /// Receive the next finished episode from ANY environment (async mode).
+    pub fn recv_one(&self) -> Result<EpisodeOut> {
+        self.results.recv().context("all workers died")?
+    }
+
+    /// Roll out one episode on every environment (the paper's synchronous
+    /// iteration); blocks until all trajectories arrive (episode barrier).
+    pub fn rollout(
+        &mut self,
+        params: &Arc<Vec<f32>>,
+        horizon: usize,
+        iteration: u64,
+    ) -> Result<Vec<EpisodeOut>> {
+        for env_id in 0..self.job_txs.len() {
+            self.dispatch(env_id, params, horizon, iteration)?;
+        }
+        let mut outs = Vec::with_capacity(self.job_txs.len());
+        for _ in 0..self.job_txs.len() {
+            outs.push(self.recv_one()?);
+        }
+        outs.sort_by_key(|o| o.env_id);
+        Ok(outs)
+    }
+}
+
+impl Drop for EnvPool {
+    fn drop(&mut self) {
+        for tx in &self.job_txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for j in &mut self.joins {
+            if let Some(j) = j.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    env_id: usize,
+    cfg: PoolConfig,
+    manifest: Arc<Manifest>,
+    rx: Receiver<Job>,
+    tx: Sender<Result<EpisodeOut>>,
+) {
+    // Each worker owns a full runtime: PJRT clients are not Send/Sync.
+    let setup = (|| -> Result<(Runtime, CfdEnv, Policy)> {
+        let mut rt = Runtime::new(&cfg.artifact_dir)?;
+        let variant = manifest.variant(&cfg.variant)?.clone();
+        rt.load(&variant.cfd_period_file)?;
+        rt.load(&manifest.drl.policy_apply_file)?;
+        let state0 = manifest.load_state0(&cfg.variant)?;
+        let exchange = make_interface(cfg.io_mode, &cfg.work_dir, env_id)?;
+        let env = CfdEnv::new(
+            variant,
+            state0,
+            manifest.drl.action_smoothing_beta,
+            manifest.drl.reward_lift_penalty,
+            exchange,
+        );
+        let policy = Policy::new(manifest.drl.n_obs);
+        Ok((rt, env, policy))
+    })();
+
+    let (rt, mut env, policy) = match setup {
+        Ok(x) => x,
+        Err(e) => {
+            let _ = tx.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Rollout {
+                params,
+                horizon,
+                episode_seed,
+            } => {
+                let out = run_episode(
+                    env_id,
+                    &rt,
+                    &mut env,
+                    &policy,
+                    &manifest,
+                    &params,
+                    horizon,
+                    cfg.seed ^ episode_seed,
+                );
+                if tx.send(out).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_episode(
+    env_id: usize,
+    rt: &Runtime,
+    env: &mut CfdEnv,
+    policy: &Policy,
+    manifest: &Manifest,
+    params: &[f32],
+    horizon: usize,
+    seed: u64,
+) -> Result<EpisodeOut> {
+    let t_wall = std::time::Instant::now();
+    let cfd_exe = rt.get(&env.variant.cfd_period_file)?;
+    let pol_exe = rt.get(&manifest.drl.policy_apply_file)?;
+    // params are constant for the whole episode: upload once (perf fast
+    // path, 3.1x on serving latency — EXPERIMENTS.md section Perf)
+    let session = PolicySession::new(rt, params, manifest.drl.n_obs)?;
+    let mut rng = Rng::new(seed);
+
+    let mut stats = EpisodeStats::default();
+    let mut traj = Trajectory {
+        env_id,
+        ..Default::default()
+    };
+
+    let mut obs = env.reset(cfd_exe)?;
+    for _t in 0..horizon {
+        let tp = std::time::Instant::now();
+        let pout = session.apply(rt, pol_exe, &obs)?;
+        let (action, logp) = policy.sample(&pout, &mut rng);
+        stats.policy_s += tp.elapsed().as_secs_f64();
+
+        let sr = env.step(cfd_exe, action)?;
+        stats.cfd_s += sr.timings.cfd_s;
+        stats.io_s += sr.timings.io_s;
+        stats.io.accumulate(&sr.io);
+        stats.reward_sum += sr.reward;
+        stats.cd_mean += sr.cd_mean / horizon as f64;
+        stats.cl_abs_mean += sr.cl_mean.abs() / horizon as f64;
+        stats.jet_final = sr.jet;
+
+        traj.transitions.push(Transition {
+            obs: std::mem::take(&mut obs),
+            action,
+            logp,
+            reward: sr.reward,
+            value: pout.value,
+        });
+        obs = sr.obs;
+    }
+    // bootstrap value for the truncated horizon
+    let tp = std::time::Instant::now();
+    traj.last_value = session.apply(rt, pol_exe, &obs)?.value;
+    stats.policy_s += tp.elapsed().as_secs_f64();
+    stats.wall_s = t_wall.elapsed().as_secs_f64();
+
+    Ok(EpisodeOut {
+        env_id,
+        traj,
+        stats,
+    })
+}

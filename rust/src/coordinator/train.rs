@@ -1,0 +1,198 @@
+//! Synchronous multi-environment PPO training loop (the paper's Fig 4).
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::pool::{EnvPool, PoolConfig};
+use crate::drl::{Batch, PpoTrainer};
+use crate::io_interface::IoMode;
+use crate::runtime::{write_f32_bin, Manifest, Runtime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub work_dir: std::path::PathBuf,
+    pub out_dir: std::path::PathBuf,
+    pub variant: String,
+    pub n_envs: usize,
+    pub io_mode: IoMode,
+    /// actuation periods per episode (paper: 100)
+    pub horizon: usize,
+    /// training iterations == episodes per environment
+    pub iterations: usize,
+    /// PPO epochs per iteration
+    pub epochs: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub quiet: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact_dir: "artifacts".into(),
+            work_dir: "out/work".into(),
+            out_dir: "out".into(),
+            variant: "small".into(),
+            n_envs: 1,
+            io_mode: IoMode::InMemory,
+            horizon: 100,
+            iterations: 100,
+            epochs: 4,
+            seed: 0,
+            log_every: 1,
+            quiet: false,
+        }
+    }
+}
+
+/// One row of the learning curve (written to train_log.csv; Fig 5a/6a).
+#[derive(Clone, Debug)]
+pub struct IterationLog {
+    pub iteration: usize,
+    pub episodes_done: usize,
+    pub mean_reward: f64,
+    pub mean_cd: f64,
+    pub mean_cl_abs: f64,
+    pub jet_final: f64,
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub approx_kl: f64,
+    pub rollout_s: f64,
+    pub update_s: f64,
+    pub cfd_s: f64,
+    pub io_s: f64,
+    pub policy_s: f64,
+}
+
+pub struct TrainSummary {
+    pub log: Vec<IterationLog>,
+    pub final_params: Vec<f32>,
+    pub total_s: f64,
+    /// exchanged bytes per environment-episode under the configured mode
+    pub io_bytes_per_episode: f64,
+}
+
+/// Run the full training loop; returns the learning curve + final policy.
+pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    std::fs::create_dir_all(&cfg.work_dir)?;
+    let manifest = Arc::new(Manifest::load(&cfg.artifact_dir)?);
+
+    // master-side runtime for ppo_update
+    let mut rt = Runtime::new(&cfg.artifact_dir)?;
+    rt.load(&manifest.drl.ppo_update_file)?;
+
+    let mut pool = EnvPool::new(
+        &PoolConfig {
+            artifact_dir: cfg.artifact_dir.clone(),
+            work_dir: cfg.work_dir.clone(),
+            variant: cfg.variant.clone(),
+            n_envs: cfg.n_envs,
+            io_mode: cfg.io_mode,
+            seed: cfg.seed,
+        },
+        &manifest,
+    )?;
+
+    let mut trainer = PpoTrainer::new(&manifest.drl, manifest.load_params_init()?, cfg.epochs);
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let mut log = Vec::with_capacity(cfg.iterations);
+    let mut io_bytes_acc = 0u64;
+    let mut episodes_done = 0usize;
+    let t_total = Instant::now();
+
+    let mut csv = std::fs::File::create(cfg.out_dir.join("train_log.csv"))?;
+    writeln!(
+        csv,
+        "iteration,episodes,mean_reward,mean_cd,mean_cl_abs,jet_final,pi_loss,v_loss,approx_kl,rollout_s,update_s,cfd_s,io_s,policy_s"
+    )?;
+
+    for it in 0..cfg.iterations {
+        let t0 = Instant::now();
+        let params = Arc::new(trainer.params.clone());
+        let outs = pool.rollout(&params, cfg.horizon, it as u64)?;
+        let rollout_s = t0.elapsed().as_secs_f64();
+        episodes_done += outs.len();
+
+        let n = outs.len() as f64;
+        let mean_reward = outs.iter().map(|o| o.stats.reward_sum).sum::<f64>() / n;
+        let mean_cd = outs.iter().map(|o| o.stats.cd_mean).sum::<f64>() / n;
+        let mean_cl = outs.iter().map(|o| o.stats.cl_abs_mean).sum::<f64>() / n;
+        let jet_final = outs.last().map(|o| o.stats.jet_final).unwrap_or(0.0);
+        let cfd_s = outs.iter().map(|o| o.stats.cfd_s).sum::<f64>() / n;
+        let io_s = outs.iter().map(|o| o.stats.io_s).sum::<f64>() / n;
+        let policy_s = outs.iter().map(|o| o.stats.policy_s).sum::<f64>() / n;
+        io_bytes_acc += outs
+            .iter()
+            .map(|o| o.stats.io.bytes_written + o.stats.io.bytes_read)
+            .sum::<u64>();
+
+        let trajs: Vec<_> = outs.into_iter().map(|o| o.traj).collect();
+        let batch = Batch::assemble(
+            &trajs,
+            manifest.drl.n_obs,
+            manifest.drl.gamma,
+            manifest.drl.gae_lambda,
+        );
+        let upd = trainer.update(rt.get(&manifest.drl.ppo_update_file)?, &batch, &mut rng)?;
+
+        let row = IterationLog {
+            iteration: it,
+            episodes_done,
+            mean_reward,
+            mean_cd,
+            mean_cl_abs: mean_cl,
+            jet_final,
+            pi_loss: upd.pi_loss,
+            v_loss: upd.v_loss,
+            approx_kl: upd.approx_kl,
+            rollout_s,
+            update_s: upd.wall_s,
+            cfd_s,
+            io_s,
+            policy_s,
+        };
+        writeln!(
+            csv,
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            row.iteration,
+            row.episodes_done,
+            row.mean_reward,
+            row.mean_cd,
+            row.mean_cl_abs,
+            row.jet_final,
+            row.pi_loss,
+            row.v_loss,
+            row.approx_kl,
+            row.rollout_s,
+            row.update_s,
+            row.cfd_s,
+            row.io_s,
+            row.policy_s
+        )?;
+        if !cfg.quiet && it % cfg.log_every == 0 {
+            println!(
+                "iter {:>4}  ep {:>5}  R {:>8.4}  Cd {:>6.3}  |Cl| {:>6.3}  kl {:>8.5}  rollout {:>6.2}s  update {:>5.2}s",
+                it, episodes_done, mean_reward, mean_cd, mean_cl, upd.approx_kl, rollout_s, upd.wall_s
+            );
+        }
+        log.push(row);
+    }
+
+    let final_params = trainer.params.clone();
+    write_f32_bin(cfg.out_dir.join("policy_final.bin"), &final_params)
+        .context("writing final policy")?;
+    write_f32_bin(cfg.out_dir.join("trainer_ckpt.bin"), &trainer.checkpoint())?;
+
+    Ok(TrainSummary {
+        io_bytes_per_episode: io_bytes_acc as f64 / episodes_done.max(1) as f64,
+        log,
+        final_params,
+        total_s: t_total.elapsed().as_secs_f64(),
+    })
+}

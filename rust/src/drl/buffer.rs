@@ -1,0 +1,204 @@
+//! Trajectory storage and minibatch assembly for PPO.
+
+use crate::drl::gae::gae;
+use crate::util::rng::Rng;
+
+/// One (s, a, r) tuple plus the serving-time policy byproducts.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub obs: Vec<f32>,
+    pub action: f64,
+    pub logp: f64,
+    pub reward: f64,
+    pub value: f64,
+}
+
+/// One environment episode.
+#[derive(Clone, Debug, Default)]
+pub struct Trajectory {
+    pub transitions: Vec<Transition>,
+    /// V(s_T) bootstrap for the truncated horizon.
+    pub last_value: f64,
+    pub env_id: usize,
+}
+
+impl Trajectory {
+    pub fn len(&self) -> usize {
+        self.transitions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transitions.is_empty()
+    }
+
+    pub fn total_reward(&self) -> f64 {
+        self.transitions.iter().map(|t| t.reward).sum()
+    }
+}
+
+/// Flattened training batch (all envs' episodes for one iteration).
+pub struct Batch {
+    pub n_obs: usize,
+    pub obs: Vec<f32>,     // (n, n_obs) row-major
+    pub act: Vec<f32>,     // (n, 1)
+    pub logp: Vec<f32>,    // (n,)
+    pub adv: Vec<f32>,     // (n,) normalised
+    pub ret: Vec<f32>,     // (n,)
+}
+
+impl Batch {
+    /// GAE per trajectory, flatten, then normalise advantages batch-wide
+    /// (standard PPO practice; keeps the update scale-invariant to the
+    /// reward magnitude, which for Eq. 12 is O(0.1)).
+    pub fn assemble(trajs: &[Trajectory], n_obs: usize, gamma: f64, lam: f64) -> Batch {
+        let total: usize = trajs.iter().map(|t| t.len()).sum();
+        let mut b = Batch {
+            n_obs,
+            obs: Vec::with_capacity(total * n_obs),
+            act: Vec::with_capacity(total),
+            logp: Vec::with_capacity(total),
+            adv: Vec::with_capacity(total),
+            ret: Vec::with_capacity(total),
+        };
+        for tr in trajs {
+            let rew: Vec<f64> = tr.transitions.iter().map(|t| t.reward).collect();
+            let val: Vec<f64> = tr.transitions.iter().map(|t| t.value).collect();
+            let (adv, ret) = gae(&rew, &val, tr.last_value, gamma, lam);
+            for (k, t) in tr.transitions.iter().enumerate() {
+                b.obs.extend_from_slice(&t.obs);
+                b.act.push(t.action as f32);
+                b.logp.push(t.logp as f32);
+                b.adv.push(adv[k] as f32);
+                b.ret.push(ret[k] as f32);
+            }
+        }
+        // advantage normalisation
+        let n = b.adv.len().max(1) as f64;
+        let mean: f64 = b.adv.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 = b
+            .adv
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / n;
+        let std = var.sqrt().max(1e-6);
+        for a in &mut b.adv {
+            *a = ((*a as f64 - mean) / std) as f32;
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.act.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.act.is_empty()
+    }
+
+    /// Shuffled minibatch index sets of exactly `mb` elements each; the
+    /// ragged tail is padded by resampling (the update artifact has a
+    /// static batch dimension).
+    pub fn minibatch_indices(&self, mb: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        let n = self.len();
+        if n == 0 {
+            return vec![];
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mut out = Vec::new();
+        for chunk in idx.chunks(mb) {
+            let mut c = chunk.to_vec();
+            while c.len() < mb {
+                c.push(idx[rng.below(n)]);
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// Gather one minibatch into dense arrays (obs, act, logp, adv, ret).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut obs = Vec::with_capacity(idx.len() * self.n_obs);
+        let mut act = Vec::with_capacity(idx.len());
+        let mut logp = Vec::with_capacity(idx.len());
+        let mut adv = Vec::with_capacity(idx.len());
+        let mut ret = Vec::with_capacity(idx.len());
+        for &i in idx {
+            obs.extend_from_slice(&self.obs[i * self.n_obs..(i + 1) * self.n_obs]);
+            act.push(self.act[i]);
+            logp.push(self.logp[i]);
+            adv.push(self.adv[i]);
+            ret.push(self.ret[i]);
+        }
+        (obs, act, logp, adv, ret)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn mk_traj(n: usize, env_id: usize) -> Trajectory {
+        Trajectory {
+            transitions: (0..n)
+                .map(|k| Transition {
+                    obs: vec![k as f32; 3],
+                    action: k as f64 * 0.1,
+                    logp: -1.0,
+                    reward: 1.0,
+                    value: 0.5,
+                })
+                .collect(),
+            last_value: 0.25,
+            env_id,
+        }
+    }
+
+    #[test]
+    fn assemble_counts_and_normalisation() {
+        let trajs = vec![mk_traj(7, 0), mk_traj(5, 1)];
+        let b = Batch::assemble(&trajs, 3, 0.99, 0.95);
+        assert_eq!(b.len(), 12);
+        assert_eq!(b.obs.len(), 12 * 3);
+        let mean: f64 = b.adv.iter().map(|&x| x as f64).sum::<f64>() / 12.0;
+        assert!(mean.abs() < 1e-5, "normalised mean {mean}");
+    }
+
+    #[test]
+    fn minibatches_cover_all_indices() {
+        prop::check("minibatch coverage", 30, |rng| {
+            let n = 1 + rng.below(200);
+            let mb = 1 + rng.below(64);
+            let trajs = vec![mk_traj(n, 0)];
+            let b = Batch::assemble(&trajs, 3, 0.99, 0.95);
+            let batches = b.minibatch_indices(mb, rng);
+            let mut seen = vec![false; n];
+            for mbatch in &batches {
+                if mbatch.len() != mb {
+                    return Err(format!("minibatch size {}", mbatch.len()));
+                }
+                for &i in mbatch {
+                    if i >= n {
+                        return Err(format!("index {i} out of range"));
+                    }
+                    seen[i] = true;
+                }
+            }
+            if seen.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err("some samples never visited".into())
+            }
+        });
+    }
+
+    #[test]
+    fn gather_layout() {
+        let b = Batch::assemble(&[mk_traj(4, 0)], 3, 0.99, 0.95);
+        let (obs, act, _, _, _) = b.gather(&[2, 0]);
+        assert_eq!(obs, vec![2.0, 2.0, 2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(act.len(), 2);
+    }
+}

@@ -1,0 +1,92 @@
+//! Generalised Advantage Estimation (Schulman et al. 2016).
+//!
+//! Twin of `python/compile/model.py::gae`; cross-validated in
+//! rust/tests against vectors generated from the python oracle and by the
+//! in-tree property tests (telescoping identity).
+
+/// Returns (advantages, returns) for one trajectory.
+///
+/// `last_value` bootstraps the value beyond the horizon (the episode is a
+/// time-truncated, non-terminal MDP — the flow keeps evolving).
+pub fn gae(
+    rewards: &[f64],
+    values: &[f64],
+    last_value: f64,
+    gamma: f64,
+    lam: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(rewards.len(), values.len());
+    let n = rewards.len();
+    let mut adv = vec![0.0; n];
+    let mut last = 0.0;
+    for t in (0..n).rev() {
+        let next_v = if t + 1 == n { last_value } else { values[t + 1] };
+        let delta = rewards[t] + gamma * next_v - values[t];
+        last = delta + gamma * lam * last;
+        adv[t] = last;
+    }
+    let ret: Vec<f64> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, ret)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn constant_reward_closed_form() {
+        let n = 10;
+        let (gamma, lam) = (0.9, 0.8);
+        let rew = vec![1.0; n];
+        let val = vec![0.0; n];
+        let (adv, ret) = gae(&rew, &val, 0.0, gamma, lam);
+        let gl: f64 = gamma * lam;
+        for t in 0..n {
+            let want = (1.0 - gl.powi((n - t) as i32)) / (1.0 - gl);
+            assert!((adv[t] - want).abs() < 1e-12, "t={t}");
+            assert!((ret[t] - adv[t]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lambda_one_gives_discounted_returns() {
+        prop::check("gae lam=1 == discounted return", 50, |rng| {
+            let n = 1 + rng.below(40);
+            let rew: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let val: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let last = rng.normal();
+            let gamma = 0.95;
+            let (_, ret) = gae(&rew, &val, last, gamma, 1.0);
+            let mut acc = last;
+            for t in (0..n).rev() {
+                acc = rew[t] + gamma * acc;
+                if (ret[t] - acc).abs() > 1e-9 {
+                    return Err(format!("t={t}: {} vs {}", ret[t], acc));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn telescoping_identity_lambda_zero() {
+        // lam=0: adv_t == delta_t == r_t + gamma V_{t+1} - V_t exactly
+        prop::check("gae lam=0 == TD residual", 50, |rng| {
+            let n = 1 + rng.below(30);
+            let rew: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let val: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let last = rng.normal();
+            let gamma = 0.99;
+            let (adv, _) = gae(&rew, &val, last, gamma, 0.0);
+            for t in 0..n {
+                let next_v = if t + 1 == n { last } else { val[t + 1] };
+                let delta = rew[t] + gamma * next_v - val[t];
+                if (adv[t] - delta).abs() > 1e-9 {
+                    return Err(format!("t={t}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

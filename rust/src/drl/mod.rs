@@ -1,0 +1,12 @@
+//! The DRL side of the framework: policy serving, trajectory buffers,
+//! GAE, and the PPO update loop (all orchestration in Rust; the numeric
+//! kernels are the AOT-compiled `policy_apply` / `ppo_update` artifacts).
+
+pub mod buffer;
+pub mod gae;
+pub mod policy;
+pub mod trainer;
+
+pub use buffer::{Batch, Trajectory, Transition};
+pub use policy::{Policy, PolicyOutput};
+pub use trainer::{PpoTrainer, UpdateStats};

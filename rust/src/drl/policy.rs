@@ -1,0 +1,127 @@
+//! Policy serving: wrap the `policy_apply` artifact + Gaussian sampling.
+
+use anyhow::Result;
+
+use crate::runtime::{literal_f32, to_vec_f32, Executable, Runtime};
+use crate::util::rng::Rng;
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+#[derive(Clone, Debug)]
+pub struct PolicyOutput {
+    pub mu: f64,
+    pub logstd: f64,
+    pub value: f64,
+}
+
+pub struct Policy {
+    n_obs: usize,
+}
+
+impl Policy {
+    pub fn new(n_obs: usize) -> Self {
+        Policy { n_obs }
+    }
+
+    /// Run the policy network on a single observation (serving path, B=1).
+    pub fn apply(
+        &self,
+        exe: &Executable,
+        params: &[f32],
+        obs: &[f32],
+    ) -> Result<PolicyOutput> {
+        anyhow::ensure!(obs.len() == self.n_obs, "obs len {}", obs.len());
+        let args = [
+            literal_f32(params, &[params.len() as i64])?,
+            literal_f32(obs, &[1, self.n_obs as i64])?,
+        ];
+        let outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == 3, "policy_apply returned {}", outs.len());
+        let mu = to_vec_f32(&outs[0])?[0] as f64;
+        let logstd = to_vec_f32(&outs[1])?[0] as f64;
+        let value = to_vec_f32(&outs[2])?[0] as f64;
+        Ok(PolicyOutput { mu, logstd, value })
+    }
+
+    /// Sample a ~ N(mu, std); returns (action, logp).
+    pub fn sample(&self, out: &PolicyOutput, rng: &mut Rng) -> (f64, f64) {
+        let std = out.logstd.exp();
+        let z = rng.normal();
+        let a = out.mu + std * z;
+        let logp = -0.5 * z * z - out.logstd - 0.5 * LOG_2PI;
+        (a, logp)
+    }
+
+    /// Log density of an arbitrary action under (mu, logstd).
+    pub fn logp(&self, action: f64, out: &PolicyOutput) -> f64 {
+        let std = out.logstd.exp();
+        let z = (action - out.mu) / std;
+        -0.5 * z * z - out.logstd - 0.5 * LOG_2PI
+    }
+}
+
+/// Device-resident serving session: the policy parameters are uploaded
+/// once per episode and reused for every actuation period (perf: the
+/// parameters are 1.4 MB, the observation 600 B — see EXPERIMENTS.md
+/// section Perf).
+pub struct PolicySession {
+    params_buf: xla::PjRtBuffer,
+    n_obs: usize,
+}
+
+impl PolicySession {
+    pub fn new(rt: &Runtime, params: &[f32], n_obs: usize) -> Result<Self> {
+        Ok(PolicySession {
+            params_buf: rt.upload_f32(params, &[params.len()])?,
+            n_obs,
+        })
+    }
+
+    pub fn apply(&self, rt: &Runtime, exe: &Executable, obs: &[f32]) -> Result<PolicyOutput> {
+        anyhow::ensure!(obs.len() == self.n_obs, "obs len {}", obs.len());
+        let obs_buf = rt.upload_f32(obs, &[1, self.n_obs])?;
+        let outs = exe.run_b(&[&self.params_buf, &obs_buf])?;
+        anyhow::ensure!(outs.len() == 3, "policy_apply returned {}", outs.len());
+        Ok(PolicyOutput {
+            mu: to_vec_f32(&outs[0])?[0] as f64,
+            logstd: to_vec_f32(&outs[1])?[0] as f64,
+            value: to_vec_f32(&outs[2])?[0] as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_logp_consistent() {
+        let p = Policy::new(4);
+        let out = PolicyOutput {
+            mu: 0.3,
+            logstd: -0.5,
+            value: 0.0,
+        };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let (a, lp) = p.sample(&out, &mut rng);
+            let lp2 = p.logp(a, &out);
+            assert!((lp - lp2).abs() < 1e-12, "{lp} vs {lp2}");
+        }
+    }
+
+    #[test]
+    fn sample_distribution_moments() {
+        let p = Policy::new(1);
+        let out = PolicyOutput {
+            mu: 1.0,
+            logstd: 0.0,
+            value: 0.0,
+        };
+        let mut rng = Rng::new(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.sample(&out, &mut rng).0).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "{mean}");
+    }
+}

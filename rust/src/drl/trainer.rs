@@ -1,0 +1,180 @@
+//! PPO trainer: owns the flat parameter/Adam-state buffers and drives the
+//! `ppo_update` artifact over shuffled minibatches for K epochs.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::drl::buffer::Batch;
+use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, DrlManifest, Executable};
+use crate::util::rng::Rng;
+
+/// Aggregated statistics over one iteration's update epochs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+    pub clip_frac: f64,
+    pub grad_norm: f64,
+    pub minibatches: usize,
+    pub wall_s: f64,
+}
+
+pub struct PpoTrainer {
+    pub params: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    /// device-resident copies fed back between minibatches (perf: saves
+    /// ~8 MB of host memcpy per minibatch, EXPERIMENTS.md section Perf)
+    lits: Option<[xla::Literal; 3]>,
+    /// 1-based Adam step counter (bias correction).
+    step: u64,
+    minibatch: usize,
+    epochs: usize,
+}
+
+impl PpoTrainer {
+    pub fn new(drl: &DrlManifest, params: Vec<f32>, epochs: usize) -> Self {
+        let n = params.len();
+        assert_eq!(n, drl.n_params);
+        PpoTrainer {
+            params,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            lits: None,
+            step: 0,
+            minibatch: drl.minibatch,
+            epochs,
+        }
+    }
+
+    pub fn adam_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Run `epochs` passes of shuffled minibatch updates over the batch.
+    pub fn update(&mut self, exe: &Executable, batch: &Batch, rng: &mut Rng) -> Result<UpdateStats> {
+        let t0 = Instant::now();
+        let mut agg = UpdateStats::default();
+        let np = self.params.len() as i64;
+        let b = self.minibatch as i64;
+        let n_obs = batch.n_obs as i64;
+
+        // upload the optimizer state once; between minibatches the output
+        // literals are fed straight back as inputs
+        if self.lits.is_none() {
+            self.lits = Some([
+                literal_f32(&self.params, &[np])?,
+                literal_f32(&self.adam_m, &[np])?,
+                literal_f32(&self.adam_v, &[np])?,
+            ]);
+        }
+
+        for _ in 0..self.epochs {
+            for idx in batch.minibatch_indices(self.minibatch, rng) {
+                let (obs, act, logp, adv, ret) = batch.gather(&idx);
+                self.step += 1;
+                let lits = self.lits.as_ref().unwrap();
+                let args = [
+                    lits[0].clone(),
+                    lits[1].clone(),
+                    lits[2].clone(),
+                    scalar_f32(self.step as f32),
+                    literal_f32(&obs, &[b, n_obs])?,
+                    literal_f32(&act, &[b, 1])?,
+                    literal_f32(&logp, &[b])?,
+                    literal_f32(&adv, &[b])?,
+                    literal_f32(&ret, &[b])?,
+                ];
+                let mut outs = exe.run(&args)?;
+                anyhow::ensure!(outs.len() == 4, "ppo_update returned {}", outs.len());
+                let stats = to_vec_f32(&outs[3])?;
+                let v_lit = outs.remove(2);
+                let m_lit = outs.remove(1);
+                let p_lit = outs.remove(0);
+                self.lits = Some([p_lit, m_lit, v_lit]);
+                agg.pi_loss += stats[0] as f64;
+                agg.v_loss += stats[1] as f64;
+                agg.entropy += stats[2] as f64;
+                agg.approx_kl += stats[3] as f64;
+                agg.clip_frac += stats[4] as f64;
+                agg.grad_norm += stats[5] as f64;
+                agg.minibatches += 1;
+            }
+        }
+        // materialise the host mirrors once per update() call (the params
+        // are broadcast to workers at iteration boundaries)
+        if let Some(l) = &self.lits {
+            self.params = to_vec_f32(&l[0])?;
+            self.adam_m = to_vec_f32(&l[1])?;
+            self.adam_v = to_vec_f32(&l[2])?;
+        }
+        let k = agg.minibatches.max(1) as f64;
+        agg.pi_loss /= k;
+        agg.v_loss /= k;
+        agg.entropy /= k;
+        agg.approx_kl /= k;
+        agg.clip_frac /= k;
+        agg.grad_norm /= k;
+        agg.wall_s = t0.elapsed().as_secs_f64();
+        Ok(agg)
+    }
+
+    /// Serialize (params | m | v) for checkpointing.
+    pub fn checkpoint(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(3 * self.params.len());
+        out.extend_from_slice(&self.params);
+        out.extend_from_slice(&self.adam_m);
+        out.extend_from_slice(&self.adam_v);
+        out
+    }
+
+    pub fn restore(&mut self, data: &[f32]) -> Result<()> {
+        let n = self.params.len();
+        anyhow::ensure!(data.len() == 3 * n, "checkpoint size {}", data.len());
+        self.params.copy_from_slice(&data[..n]);
+        self.adam_m.copy_from_slice(&data[n..2 * n]);
+        self.adam_v.copy_from_slice(&data[2 * n..]);
+        self.lits = None; // invalidate device copies
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_drl(n_params: usize) -> DrlManifest {
+        DrlManifest {
+            n_obs: 4,
+            n_act: 1,
+            hidden: 8,
+            n_params,
+            minibatch: 16,
+            lr: 3e-4,
+            clip_eps: 0.2,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            action_smoothing_beta: 0.4,
+            reward_lift_penalty: 0.1,
+            init_logstd: -0.5,
+            param_layout: vec![],
+            policy_apply_file: String::new(),
+            ppo_update_file: String::new(),
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let drl = dummy_drl(10);
+        let mut t = PpoTrainer::new(&drl, vec![1.0; 10], 2);
+        let ck = t.checkpoint();
+        assert_eq!(ck.len(), 30);
+        let mut t2 = PpoTrainer::new(&drl, vec![0.0; 10], 2);
+        t2.restore(&ck).unwrap();
+        assert_eq!(t2.params, vec![1.0; 10]);
+        assert!(t.restore(&[0.0; 7]).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! *Baseline* exchange: OpenFOAM-style multi-file ASCII + regex parsing.
+//!
+//! Faithful to DRLinFluids' data path: per actuation period the solver
+//! writes a time directory with `U` and `p` field files (full flow field,
+//! FoamFile headers, one value per line), a `probes.dat` postProcessing
+//! file and a `forces.dat` history; the DRL side then *regex-parses* the
+//! probe/force files, and actions travel back through a regex substitution
+//! into a `jetVelocity` boundary-condition dict. This is where the paper's
+//! 5.0 MB-per-exchange baseline cost comes from.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
+use regex::Regex;
+
+use super::{CfdOutput, ExchangeInterface, FlowSnapshot, IoMode, IoStats};
+
+static PROBE_RE: Lazy<Regex> =
+    Lazy::new(|| Regex::new(r"(?m)^\s*(\d+)\s+(-?[0-9.eE+-]+)\s*$").unwrap());
+static FORCES_RE: Lazy<Regex> = Lazy::new(|| {
+    Regex::new(r"(?m)^\s*[0-9.eE+-]+\s+\(?(-?[0-9.eE+-]+)\s+(-?[0-9.eE+-]+)\)?\s*$").unwrap()
+});
+static JET_RE: Lazy<Regex> =
+    Lazy::new(|| Regex::new(r"jetValue\s+uniform\s+(-?[0-9.eE+-]+);").unwrap());
+
+const JET_DICT_TEMPLATE: &str = r#"/*--------------------------------*- C++ -*----------------------------------*\
+| =========                 |                                                 |
+| \\      /  F ield         | drlfoam-rs synthetic-jet boundary dict          |
+\*---------------------------------------------------------------------------*/
+boundaryField
+{
+    jet1
+    {
+        type            jetParabolicVelocity;
+        jetValue        uniform 0.0;
+    }
+    jet2
+    {
+        type            jetParabolicVelocity;
+        jetValue        uniform 0.0;
+    }
+}
+"#;
+
+pub struct AsciiFoam {
+    dir: PathBuf,
+}
+
+impl AsciiFoam {
+    pub fn new(work_dir: &std::path::Path, env_id: usize) -> Result<Self> {
+        let dir = work_dir.join(format!("env{env_id:03}"));
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(AsciiFoam { dir })
+    }
+
+    fn write_field(&self, step: usize, name: &str, class: &str, data: &[&[f32]]) -> Result<u64> {
+        // OpenFOAM-flavoured field file: FoamFile header + internalField list
+        let n = data[0].len();
+        let mut s = String::with_capacity(n * 14 * data.len() + 256);
+        let _ = write!(
+            s,
+            "FoamFile\n{{\n    version 2.0;\n    format ascii;\n    class {class};\n    object {name};\n}}\n\ndimensions [0 1 -1 0 0 0 0];\n\ninternalField   nonuniform List<{}>\n{n}\n(\n",
+            if data.len() > 1 { "vector" } else { "scalar" }
+        );
+        for i in 0..n {
+            if data.len() > 1 {
+                let _ = writeln!(s, "({} {} 0)", data[0][i], data[1][i]);
+            } else {
+                let _ = writeln!(s, "{}", data[0][i]);
+            }
+        }
+        s.push_str(")\n;\n");
+        let path = self.dir.join(format!("{step}.{name}"));
+        fs::write(&path, &s)?;
+        Ok(s.len() as u64)
+    }
+}
+
+impl ExchangeInterface for AsciiFoam {
+    fn mode(&self) -> IoMode {
+        IoMode::Baseline
+    }
+
+    fn exchange(
+        &mut self,
+        step: usize,
+        out: &CfdOutput,
+        flow: &FlowSnapshot,
+    ) -> Result<(CfdOutput, IoStats)> {
+        let mut st = IoStats::default();
+
+        // ---- write path (what OpenFOAM's write() + functionObjects do)
+        let t0 = Instant::now();
+        st.bytes_written += self.write_field(step, "U", "volVectorField", &[flow.u, flow.v])?;
+        st.bytes_written += self.write_field(step, "p", "volScalarField", &[flow.p])?;
+
+        let mut probes = String::with_capacity(out.probes.len() * 16 + 64);
+        probes.push_str("# Probe pressure samples\n# id   p\n");
+        for (i, p) in out.probes.iter().enumerate() {
+            let _ = writeln!(probes, "{i}  {p}");
+        }
+        let probes_path = self.dir.join(format!("{step}.probes.dat"));
+        fs::write(&probes_path, &probes)?;
+        st.bytes_written += probes.len() as u64;
+
+        let mut forces = String::with_capacity(out.cd_hist.len() * 32 + 64);
+        forces.push_str("# time  (Cd Cl)\n");
+        for (k, (cd, cl)) in out.cd_hist.iter().zip(&out.cl_hist).enumerate() {
+            let _ = writeln!(forces, "{k} ({cd} {cl})");
+        }
+        let forces_path = self.dir.join(format!("{step}.forces.dat"));
+        fs::write(&forces_path, &forces)?;
+        st.bytes_written += forces.len() as u64;
+        st.files += 4;
+        st.write_s = t0.elapsed().as_secs_f64();
+
+        // ---- read path (what DRLinFluids' regex parsers do)
+        let t1 = Instant::now();
+        let ptext = fs::read_to_string(&probes_path)?;
+        st.bytes_read += ptext.len() as u64;
+        let mut parsed_probes = vec![0f32; out.probes.len()];
+        for cap in PROBE_RE.captures_iter(&ptext) {
+            let idx: usize = cap[1].parse()?;
+            parsed_probes[idx] = cap[2].parse()?;
+        }
+        let ftext = fs::read_to_string(&forces_path)?;
+        st.bytes_read += ftext.len() as u64;
+        let mut cd = Vec::with_capacity(out.cd_hist.len());
+        let mut cl = Vec::with_capacity(out.cl_hist.len());
+        for cap in FORCES_RE.captures_iter(&ftext) {
+            cd.push(cap[1].parse()?);
+            cl.push(cap[2].parse()?);
+        }
+        st.read_s = t1.elapsed().as_secs_f64();
+
+        // previous period's files are no longer needed (OpenFOAM's
+        // purgeWrite); keep the directory from growing unboundedly.
+        if step > 0 {
+            for name in ["U", "p", "probes.dat", "forces.dat"] {
+                let _ = fs::remove_file(self.dir.join(format!("{}.{name}", step - 1)));
+            }
+        }
+
+        Ok((
+            CfdOutput {
+                probes: parsed_probes,
+                cd_hist: cd,
+                cl_hist: cl,
+            },
+            st,
+        ))
+    }
+
+    fn inject_action(&mut self, step: usize, action: f64) -> Result<(f64, IoStats)> {
+        let mut st = IoStats::default();
+        let t0 = Instant::now();
+        // regex substitution into the jet BC dict (both jets; V_G2 = -V_G1)
+        let mut first = true;
+        let dict = JET_RE.replace_all(JET_DICT_TEMPLATE, |_: &regex::Captures| {
+            let v = if first { action } else { -action };
+            first = false;
+            format!("jetValue        uniform {v:.9e};")
+        });
+        let path = self.dir.join(format!("{step}.jetDict"));
+        fs::write(&path, dict.as_bytes())?;
+        st.bytes_written += dict.len() as u64;
+        st.files += 1;
+        st.write_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let text = fs::read_to_string(&path)?;
+        st.bytes_read += text.len() as u64;
+        let caps = JET_RE
+            .captures(&text)
+            .context("jetValue not found in dict")?;
+        let parsed: f64 = caps[1].parse()?;
+        st.read_s = t1.elapsed().as_secs_f64();
+        if step > 0 {
+            let _ = fs::remove_file(self.dir.join(format!("{}.jetDict", step - 1)));
+        }
+        Ok((parsed, st))
+    }
+}

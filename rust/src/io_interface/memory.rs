@@ -1,0 +1,45 @@
+//! *I/O-Disabled* exchange: pure in-memory pass-through.
+//!
+//! The paper's theoretical-upper-bound configuration: all file I/O is
+//! suspended and data moves by reference. Unlike the paper's variant
+//! (which broke the data path and produced unusable control results, as
+//! they note), ours is a real zero-copy interface, so training through it
+//! is *both* the upper bound and correct — this is the mode the quickstart
+//! and training examples default to.
+
+use anyhow::Result;
+
+use super::{CfdOutput, ExchangeInterface, FlowSnapshot, IoMode, IoStats};
+
+pub struct InMemory;
+
+impl InMemory {
+    pub fn new() -> Self {
+        InMemory
+    }
+}
+
+impl Default for InMemory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExchangeInterface for InMemory {
+    fn mode(&self) -> IoMode {
+        IoMode::InMemory
+    }
+
+    fn exchange(
+        &mut self,
+        _step: usize,
+        out: &CfdOutput,
+        _flow: &FlowSnapshot,
+    ) -> Result<(CfdOutput, IoStats)> {
+        Ok((out.clone(), IoStats::default()))
+    }
+
+    fn inject_action(&mut self, _step: usize, action: f64) -> Result<(f64, IoStats)> {
+        Ok((action, IoStats::default()))
+    }
+}

@@ -1,0 +1,124 @@
+//! CFD <-> DRL exchange interfaces (the paper's section III D subject).
+//!
+//! DRLinFluids couples OpenFOAM and TensorForce through the filesystem: at
+//! the end of each actuation period the solver writes probe/force/flow
+//! files, Python regex-parses them, and the next action is injected back
+//! into OpenFOAM config files with regex substitution. The paper shows
+//! this I/O becomes the scaling bottleneck past ~30 environments and
+//! evaluates three strategies (Table II):
+//!
+//! * `Baseline`   — multi-file ASCII + regex parsing, full flow field
+//!                  written every period ([`ascii::AsciiFoam`]).
+//! * `Optimized`  — single binary file, flow field reduced to the restart
+//!                  essentials ([`binary::BinaryExchange`]).
+//! * `InMemory`   — no I/O at all; the paper's *I/O-Disabled* upper bound
+//!                  ([`memory::InMemory`]).
+//!
+//! The interfaces are *load-bearing*: the environment consumes the values
+//! that travelled through the interface (not the originals), so the
+//! round-trip tests in rust/tests/io_roundtrip.rs guarantee the benchmark
+//! is measuring a working data path.
+
+pub mod ascii;
+pub mod binary;
+pub mod memory;
+
+use anyhow::Result;
+
+/// Which exchange strategy an environment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    Baseline,
+    Optimized,
+    InMemory,
+}
+
+impl IoMode {
+    pub fn parse(s: &str) -> Result<IoMode> {
+        match s {
+            "baseline" | "ascii" => Ok(IoMode::Baseline),
+            "optimized" | "binary" => Ok(IoMode::Optimized),
+            "memory" | "disabled" | "in-memory" => Ok(IoMode::InMemory),
+            _ => anyhow::bail!("unknown io mode {s:?} (baseline|optimized|memory)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoMode::Baseline => "baseline",
+            IoMode::Optimized => "optimized",
+            IoMode::InMemory => "in-memory",
+        }
+    }
+}
+
+/// What the CFD side produces at the end of an actuation period.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CfdOutput {
+    pub probes: Vec<f32>,
+    pub cd_hist: Vec<f32>,
+    pub cl_hist: Vec<f32>,
+}
+
+/// Borrowed view of the flow state for snapshot writing.
+pub struct FlowSnapshot<'a> {
+    pub u: &'a [f32],
+    pub v: &'a [f32],
+    pub p: &'a [f32],
+    pub ny: usize,
+    pub nx: usize,
+}
+
+/// Cost accounting for one exchange (consumed by metrics + DES calibration).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoStats {
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub files: u32,
+    pub write_s: f64,
+    pub read_s: f64,
+}
+
+impl IoStats {
+    pub fn total_s(&self) -> f64 {
+        self.write_s + self.read_s
+    }
+
+    pub fn accumulate(&mut self, other: &IoStats) {
+        self.bytes_written += other.bytes_written;
+        self.bytes_read += other.bytes_read;
+        self.files += other.files;
+        self.write_s += other.write_s;
+        self.read_s += other.read_s;
+    }
+}
+
+/// The CFD<->DRL data path for one environment.
+pub trait ExchangeInterface: Send {
+    fn mode(&self) -> IoMode;
+
+    /// CFD -> DRL: persist the period outputs the way the coupled
+    /// framework would, read them back, and return the parsed copy.
+    fn exchange(
+        &mut self,
+        step: usize,
+        out: &CfdOutput,
+        flow: &FlowSnapshot,
+    ) -> Result<(CfdOutput, IoStats)>;
+
+    /// DRL -> CFD: inject the next jet amplitude into the solver's
+    /// configuration; returns the value as the solver would read it.
+    fn inject_action(&mut self, step: usize, action: f64) -> Result<(f64, IoStats)>;
+}
+
+pub fn make_interface(
+    mode: IoMode,
+    work_dir: &std::path::Path,
+    env_id: usize,
+) -> Result<Box<dyn ExchangeInterface>> {
+    Ok(match mode {
+        IoMode::Baseline => Box::new(ascii::AsciiFoam::new(work_dir, env_id)?),
+        IoMode::Optimized => Box::new(binary::BinaryExchange::new(work_dir, env_id)?),
+        IoMode::InMemory => Box::new(memory::InMemory::new()),
+    })
+}

@@ -1,0 +1,27 @@
+//! # drlfoam-rs
+//!
+//! Rust + JAX + Pallas reproduction of *"Optimal Parallelization Strategies
+//! for Active Flow Control in Deep Reinforcement Learning-Based
+//! Computational Fluid Dynamics"* (Jia & Xu, 2024).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** Pallas kernels (red-black SOR, advection-diffusion stencil, MXU
+//!   dense) — `python/compile/kernels/`, build-time only.
+//! * **L2** JAX CFD solver + PPO — `python/compile/{cfd,model}.py`, lowered
+//!   once to HLO-text artifacts by `python/compile/aot.py`.
+//! * **L3** this crate: PJRT runtime, CFD environment, PPO trainer,
+//!   multi-environment coordinator, the three CFD<->DRL exchange
+//!   interfaces, the cluster discrete-event simulator that regenerates the
+//!   paper's tables/figures, and the CLI.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod drl;
+pub mod env;
+pub mod io_interface;
+pub mod metrics;
+pub mod reproduce;
+pub mod runtime;
+pub mod util;
+pub mod viz;

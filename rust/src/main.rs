@@ -1,0 +1,462 @@
+//! drlfoam CLI: leader entrypoint.
+//!
+//! Subcommands:
+//!   train       — multi-environment PPO training on the AFC problem
+//!   episode     — roll out a single episode and print per-period stats
+//!   calibrate   — measure per-component costs, write out/calib.json
+//!   reproduce   — regenerate a paper table/figure (table1, table2, fig7,
+//!                 fig8, fig9, fig10, summary, all)
+//!   simulate    — run one cluster-DES configuration
+//!   info        — print manifest/artifact info
+//!
+//! Hand-rolled argument parsing (see rust/src/config) because clap is not
+//! vendored in this offline environment.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
+use drlfoam::config::{artifact_dir, Args};
+use drlfoam::coordinator::{train, TrainConfig};
+use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::{drl, env, reproduce};
+
+const USAGE: &str = "usage: drlfoam <train|episode|calibrate|reproduce|simulate|info> [options]
+  common options: --artifacts DIR  --out DIR  --variant small  --seed N
+  train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory [--async] [--quiet]
+  episode:   --horizon N --io MODE [--policy out/policy_final.bin]
+  evaluate:  --policy FILE --horizon N  (deterministic rollout + vorticity PPMs)
+  calibrate: --periods N (measurement repetitions)
+  reproduce: <table1|table2|fig6|fig7|fig8|fig9|fig10|summary|ablation|all> [--calib out/calib.json]
+  simulate:  --envs N --ranks N --episodes N --io MODE [--async]";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let value_opts = [
+        "artifacts", "out", "variant", "seed", "envs", "ranks", "horizon",
+        "iterations", "epochs", "io", "episodes", "periods", "calib",
+        "policy", "work-dir", "log-every",
+    ];
+    let args = Args::parse(argv, &value_opts)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "train" => cmd_train(&args),
+        "episode" => cmd_episode(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(&args),
+        _ => bail!("{USAGE}"),
+    }
+}
+
+fn out_dir(args: &Args) -> std::path::PathBuf {
+    args.get_or("out", "out").into()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        artifact_dir: artifact_dir(args),
+        work_dir: args.get_or("work-dir", "out/work").into(),
+        out_dir: out_dir(args),
+        variant: args.get_or("variant", "small"),
+        n_envs: args.usize_or("envs", 1)?,
+        io_mode: IoMode::parse(&args.get_or("io", "memory"))?,
+        horizon: args.usize_or("horizon", 100)?,
+        iterations: args.usize_or("iterations", 100)?,
+        epochs: args.usize_or("epochs", 4)?,
+        seed: args.u64_or("seed", 0)?,
+        log_every: args.usize_or("log-every", 1)?,
+        quiet: args.has_flag("quiet"),
+    };
+    println!(
+        "training: variant={} envs={} horizon={} iterations={} io={}",
+        cfg.variant,
+        cfg.n_envs,
+        cfg.horizon,
+        cfg.iterations,
+        cfg.io_mode.name()
+    );
+    if args.has_flag("async") {
+        let s = drlfoam::coordinator::train_async(&cfg)?;
+        let k = (s.log.len() / 3).max(1);
+        let head: f64 = s.log[..k].iter().map(|r| r.reward).sum::<f64>() / k as f64;
+        let tail: f64 = s.log[s.log.len() - k..].iter().map(|r| r.reward).sum::<f64>() / k as f64;
+        println!(
+            "async done in {:.1}s: reward {head:.3} -> {tail:.3} over {} episodes",
+            s.total_s,
+            s.log.len()
+        );
+        return Ok(());
+    }
+    let summary = train(&cfg)?;
+    let first = summary.log.first().context("no iterations")?;
+    let last = summary.log.last().context("no iterations")?;
+    println!(
+        "done in {:.1}s: reward {:.3} -> {:.3}, Cd {:.3} -> {:.3}  (exchange {:.1} KB/episode)",
+        summary.total_s,
+        first.mean_reward,
+        last.mean_reward,
+        first.mean_cd,
+        last.mean_cd,
+        summary.io_bytes_per_episode / 1024.0
+    );
+    println!("learning curve: {}/train_log.csv", cfg.out_dir.display());
+    Ok(())
+}
+
+fn cmd_episode(args: &Args) -> Result<()> {
+    let adir = artifact_dir(args);
+    let variant = args.get_or("variant", "small");
+    let horizon = args.usize_or("horizon", 20)?;
+    let io_mode = IoMode::parse(&args.get_or("io", "memory"))?;
+    let manifest = Manifest::load(&adir)?;
+    let mut rt = Runtime::new(&adir)?;
+    let vm = manifest.variant(&variant)?.clone();
+    rt.load(&vm.cfd_period_file)?;
+    rt.load(&manifest.drl.policy_apply_file)?;
+
+    let params = match args.get("policy") {
+        Some(p) => drlfoam::runtime::read_f32_bin(p)?,
+        None => manifest.load_params_init()?,
+    };
+    let work = out_dir(args).join("work");
+    std::fs::create_dir_all(&work)?;
+    let exchange = make_interface(io_mode, &work, 0)?;
+    let mut e = env::CfdEnv::new(
+        vm.clone(),
+        manifest.load_state0(&variant)?,
+        manifest.drl.action_smoothing_beta,
+        manifest.drl.reward_lift_penalty,
+        exchange,
+    );
+    let policy = drl::Policy::new(manifest.drl.n_obs);
+    let mut rng = drlfoam::util::rng::Rng::new(args.u64_or("seed", 0)?);
+
+    let cfd = rt.get(&vm.cfd_period_file)?;
+    let pol = rt.get(&manifest.drl.policy_apply_file)?;
+    let mut obs = e.reset(cfd)?;
+    println!("period      jet   action     Cd       Cl     reward   cfd(ms)  io(ms)");
+    let mut total_r = 0.0;
+    for t in 0..horizon {
+        let pout = policy.apply(pol, &params, &obs)?;
+        let (a, _logp) = policy.sample(&pout, &mut rng);
+        let sr = e.step(cfd, a)?;
+        total_r += sr.reward;
+        println!(
+            "{t:>6} {:>8.4} {:>8.4} {:>8.4} {:>8.4} {:>9.5} {:>8.2} {:>7.2}",
+            sr.jet,
+            a,
+            sr.cd_mean,
+            sr.cl_mean,
+            sr.reward,
+            sr.timings.cfd_s * 1e3,
+            sr.timings.io_s * 1e3
+        );
+        obs = sr.obs;
+    }
+    println!("episode reward: {total_r:.4}  (Cd0 = {:.4})", vm.cd0);
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let adir = artifact_dir(args);
+    let variant = args.get_or("variant", "small");
+    let horizon = args.usize_or("horizon", 60)?;
+    let odir = out_dir(args).join("eval");
+    std::fs::create_dir_all(&odir)?;
+    let manifest = Manifest::load(&adir)?;
+    let mut rt = Runtime::new(&adir)?;
+    let vm = manifest.variant(&variant)?.clone();
+    rt.load(&vm.cfd_period_file)?;
+    rt.load(&manifest.drl.policy_apply_file)?;
+    let params = match args.get("policy") {
+        Some(p) => drlfoam::runtime::read_f32_bin(p)?,
+        None => manifest.load_params_init()?,
+    };
+    anyhow::ensure!(params.len() == manifest.drl.n_params, "policy size mismatch");
+    let work = odir.join("work");
+    std::fs::create_dir_all(&work)?;
+    let mut e = env::CfdEnv::new(
+        vm.clone(),
+        manifest.load_state0(&variant)?,
+        manifest.drl.action_smoothing_beta,
+        manifest.drl.reward_lift_penalty,
+        make_interface(IoMode::InMemory, &work, 0)?,
+    );
+    let policy = drl::Policy::new(manifest.drl.n_obs);
+    let cfd = rt.get(&vm.cfd_period_file)?;
+    let pol = rt.get(&manifest.drl.policy_apply_file)?;
+
+    // vorticity snapshot of the uncontrolled base flow (Fig 5e analogue)
+    let (u0, v0, _) = manifest.load_state0(&variant)?;
+    drlfoam::viz::vorticity_snapshot(
+        odir.join("vorticity_uncontrolled.ppm"),
+        &u0, &v0, vm.ny, vm.nx, vm.h, 2.0, -2.0, 0.5,
+    )?;
+
+    let mut obs = e.reset(cfd)?;
+    let mut csv = String::from("step,jet,cd,cl,reward\n");
+    let (mut cd_acc, mut r_acc) = (0.0, 0.0);
+    for t in 0..horizon {
+        // deterministic policy: action = mu (no exploration noise)
+        let pout = policy.apply(pol, &params, &obs)?;
+        let sr = e.step(cfd, pout.mu)?;
+        csv.push_str(&format!(
+            "{t},{:.6},{:.6},{:.6},{:.6}\n",
+            sr.jet, sr.cd_mean, sr.cl_mean, sr.reward
+        ));
+        cd_acc += sr.cd_mean;
+        r_acc += sr.reward;
+        obs = sr.obs;
+    }
+    std::fs::write(odir.join("eval_history.csv"), &csv)?;
+    let (uf, vf, _) = e.flow_ref()?;
+    drlfoam::viz::vorticity_snapshot(
+        odir.join("vorticity_controlled.ppm"),
+        uf, vf, vm.ny, vm.nx, vm.h, 2.0, -2.0, 0.5,
+    )?;
+    let cd_mean = cd_acc / horizon as f64;
+    println!(
+        "deterministic eval over {horizon} periods: mean Cd {cd_mean:.4} (Cd0 {:.4}, reduction {:+.2}%), total reward {r_acc:.3}",
+        vm.cd0,
+        100.0 * (vm.cd0 - cd_mean) / vm.cd0
+    );
+    println!("history: {}/eval_history.csv; vorticity PPMs alongside", odir.display());
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let adir = artifact_dir(args);
+    let variant = args.get_or("variant", "small");
+    let reps = args.usize_or("periods", 15)?;
+    let odir = out_dir(args);
+    std::fs::create_dir_all(&odir)?;
+    let manifest = Manifest::load(&adir)?;
+    let mut rt = Runtime::new(&adir)?;
+    let vm = manifest.variant(&variant)?.clone();
+    rt.load(&vm.cfd_period_file)?;
+    rt.load(&manifest.drl.policy_apply_file)?;
+    rt.load(&manifest.drl.ppo_update_file)?;
+    let params = manifest.load_params_init()?;
+
+    // --- CFD period cost
+    let work = odir.join("calib-work");
+    std::fs::create_dir_all(&work)?;
+    let mut e = env::CfdEnv::new(
+        vm.clone(),
+        manifest.load_state0(&variant)?,
+        manifest.drl.action_smoothing_beta,
+        manifest.drl.reward_lift_penalty,
+        make_interface(IoMode::InMemory, &work, 0)?,
+    );
+    let cfd = rt.get(&vm.cfd_period_file)?;
+    e.reset(cfd)?;
+    let mut t_cfd = Vec::new();
+    for _ in 0..reps {
+        let sr = e.step(cfd, 0.1)?;
+        t_cfd.push(sr.timings.cfd_s);
+    }
+    let t_period = drlfoam::util::stats::mean(&t_cfd);
+
+    // --- policy apply cost (the session fast path the workers use)
+    let pol = rt.get(&manifest.drl.policy_apply_file)?;
+    let session = drl::policy::PolicySession::new(&rt, &params, manifest.drl.n_obs)?;
+    let obs = vec![0.1f32; manifest.drl.n_obs];
+    let t0 = std::time::Instant::now();
+    for _ in 0..50 {
+        session.apply(&rt, pol, &obs)?;
+    }
+    let t_policy = t0.elapsed().as_secs_f64() / 50.0;
+
+    // --- ppo update cost
+    let mut trainer = drl::PpoTrainer::new(&manifest.drl, params.clone(), 1);
+    let traj = synth_traj(manifest.drl.n_obs, manifest.drl.minibatch);
+    let batch = drl::Batch::assemble(&[traj], manifest.drl.n_obs, 0.99, 0.95);
+    let mut rng = drlfoam::util::rng::Rng::new(7);
+    let upd_exe = rt.get(&manifest.drl.ppo_update_file)?;
+    let t0 = std::time::Instant::now();
+    let mut mbs = 0usize;
+    for _ in 0..10 {
+        let st = trainer.update(upd_exe, &batch, &mut rng)?;
+        mbs += st.minibatches;
+    }
+    let t_update_mb = t0.elapsed().as_secs_f64() / mbs as f64;
+
+    // --- exchange costs per mode (real bytes + cpu time on this disk)
+    let (u, v, p) = e.flow_ref()?;
+    let flow = FlowSnapshot {
+        u,
+        v,
+        p,
+        ny: vm.ny,
+        nx: vm.nx,
+    };
+    let probes = vec![0.5f32; manifest.drl.n_obs];
+    let outp = CfdOutput {
+        probes,
+        cd_hist: vec![3.0; vm.substeps],
+        cl_hist: vec![0.1; vm.substeps],
+    };
+    let measure = |mode: IoMode| -> Result<(f64, f64)> {
+        let mut iface = make_interface(mode, &work, 9)?;
+        let mut bytes = 0.0;
+        let mut cpu = 0.0;
+        for k in 0..10 {
+            let (_, st) = iface.exchange(k, &outp, &flow)?;
+            let (_, st2) = iface.inject_action(k, 0.5)?;
+            bytes += (st.bytes_written + st.bytes_read + st2.bytes_written + st2.bytes_read) as f64;
+            cpu += st.total_s() + st2.total_s();
+        }
+        Ok((bytes / 10.0, cpu / 10.0))
+    };
+    let (bytes_b, cpu_b) = measure(IoMode::Baseline)?;
+    let (bytes_o, cpu_o) = measure(IoMode::Optimized)?;
+
+    let calib = Calibration::from_measured(
+        t_period,
+        t_policy,
+        t_update_mb,
+        bytes_b,
+        bytes_o,
+        cpu_b,
+        cpu_o,
+        args.usize_or("horizon", 100)?,
+    );
+    let path = odir.join("calib.json");
+    calib.save(&path)?;
+    println!("measured on this machine ({variant} variant):");
+    println!("  t_period        {:>10.2} ms", t_period * 1e3);
+    println!("  t_policy        {:>10.3} ms", t_policy * 1e3);
+    println!("  t_update_mb     {:>10.3} ms", t_update_mb * 1e3);
+    println!("  exchange bytes  {:>10.0} (baseline) vs {:>8.0} (optimized)  ratio {:.1}x",
+        bytes_b, bytes_o, bytes_b / bytes_o.max(1.0));
+    println!("  exchange cpu    {:>10.3} ms vs {:>8.3} ms", cpu_b * 1e3, cpu_o * 1e3);
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn synth_traj(n_obs: usize, n: usize) -> drl::Trajectory {
+    let mut rng = drlfoam::util::rng::Rng::new(3);
+    drl::Trajectory {
+        transitions: (0..n)
+            .map(|_| drl::Transition {
+                obs: (0..n_obs).map(|_| rng.normal() as f32).collect(),
+                action: rng.normal() * 0.1,
+                logp: -1.0,
+                reward: rng.normal() * 0.1,
+                value: 0.0,
+            })
+            .collect(),
+        last_value: 0.0,
+        env_id: 0,
+    }
+}
+
+fn load_calib(args: &Args) -> Result<Calibration> {
+    match args.get("calib") {
+        Some(p) => Calibration::load(std::path::Path::new(p))
+            .with_context(|| format!("loading calibration {p}")),
+        None => Ok(Calibration::paper_scale()),
+    }
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let calib = load_calib(args)?;
+    let odir = out_dir(args);
+    std::fs::create_dir_all(&odir)?;
+    let run = |name: &str| -> Result<String> {
+        match name {
+            "table1" => reproduce::table1(&calib, &odir),
+            "table2" | "fig11" | "fig12" => reproduce::table2(&calib, &odir),
+            "fig7" => reproduce::fig7(&calib, &odir),
+            "fig8" => reproduce::fig8(&calib, &odir),
+            "fig9" => reproduce::fig9(&calib, &odir),
+            "fig10" => reproduce::fig10(&calib, &odir),
+            "fig6" => reproduce::fig6(&artifact_dir(args), &odir, 24, 10),
+            "ablation" => reproduce::ablation_async(&calib, &odir),
+            "summary" => reproduce::summary(&calib, &odir),
+            _ => bail!("unknown experiment {name:?}"),
+        }
+    };
+    if what == "all" {
+        for name in ["fig7", "table1", "fig8", "fig9", "fig10", "table2", "ablation", "summary"] {
+            println!("{}", run(name)?);
+        }
+    } else {
+        println!("{}", run(what)?);
+    }
+    println!("CSV series written under {}", odir.display());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let calib = load_calib(args)?;
+    let cfg = SimConfig {
+        n_envs: args.usize_or("envs", 1)?,
+        n_ranks: args.usize_or("ranks", 1)?,
+        episodes_total: args.usize_or("episodes", 3000)?,
+        io_mode: IoMode::parse(&args.get_or("io", "baseline"))?,
+        seed: args.u64_or("seed", 1)?,
+    };
+    let r = if args.has_flag("async") {
+        drlfoam::cluster::simulate_training_async(&calib, &cfg)
+    } else {
+        simulate_training(&calib, &cfg)
+    };
+    println!(
+        "envs={} ranks={} cpus={} io={} -> {:.2} h  (per-episode: cfd {:.1}s io {:.1}s policy {:.2}s; update+barrier {:.1}s/iter; disk {:.0}%)",
+        r.cfg_envs,
+        r.cfg_ranks,
+        r.total_cpus,
+        cfg.io_mode.name(),
+        r.total_hours(),
+        r.breakdown.cfd_s,
+        r.breakdown.io_s,
+        r.breakdown.policy_s,
+        r.breakdown.update_barrier_s,
+        100.0 * r.disk_utilisation
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let adir = artifact_dir(args);
+    let m = Manifest::load(&adir)?;
+    println!("artifacts: {} (kernels: {})", adir.display(), m.kernel_impl);
+    println!(
+        "policy: {} obs -> {}x{} -> {} act ({} params), minibatch {}",
+        m.drl.n_obs, m.drl.hidden, m.drl.hidden, m.drl.n_act, m.drl.n_params, m.drl.minibatch
+    );
+    for (name, v) in &m.variants {
+        println!(
+            "variant {name}: {}x{} grid (h={:.4}), dt={}, {} substeps/period, {} SOR sweeps, cd0={:.3}",
+            v.ny, v.nx, v.h, v.dt, v.substeps, v.n_sweeps, v.cd0
+        );
+    }
+    // sanity: load everything once
+    let mut rt = Runtime::new(&adir)?;
+    for (_, v) in &m.variants {
+        rt.load(&v.cfd_period_file)?;
+    }
+    rt.load(&m.drl.policy_apply_file)?;
+    rt.load(&m.drl.ppo_update_file)?;
+    let _ = Arc::new(m);
+    println!("all artifacts compile OK");
+    Ok(())
+}

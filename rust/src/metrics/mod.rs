@@ -1,0 +1,7 @@
+//! Speedup/efficiency math, paper-style table rendering, CSV output.
+
+pub mod scaling;
+pub mod tables;
+
+pub use scaling::{efficiency, speedup, ScalingRow};
+pub use tables::{render_table, write_csv};

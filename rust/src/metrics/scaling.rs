@@ -1,0 +1,66 @@
+//! Speedup / parallel-efficiency bookkeeping (paper's Eq.-less metrics).
+//!
+//! Conventions follow the paper exactly:
+//! * Table I / Fig 8: reference = the single-env run *of the same rank
+//!   set* (per-set reference).
+//! * Fig 9: reference = the {ranks=1, envs=1} run for *all* points
+//!   (global reference).
+//! * Figs 11/12: per-strategy single-env reference.
+
+/// speedup = T_ref / T
+pub fn speedup(t_ref: f64, t: f64) -> f64 {
+    t_ref / t
+}
+
+/// efficiency (%) = speedup / resource_ratio x 100, where resource ratio
+/// is the factor of additional CPUs relative to the reference.
+pub fn efficiency(t_ref: f64, t: f64, cpus_ref: usize, cpus: usize) -> f64 {
+    100.0 * speedup(t_ref, t) / (cpus as f64 / cpus_ref as f64)
+}
+
+/// One row of a scaling table (Table I / II superset).
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub episodes: usize,
+    pub n_envs: usize,
+    pub n_ranks: usize,
+    pub total_cpus: usize,
+    pub duration_h: f64,
+    pub speedup: f64,
+    pub efficiency_pct: f64,
+}
+
+impl ScalingRow {
+    pub fn csv_header() -> &'static str {
+        "episodes,n_envs,n_ranks,total_cpus,duration_h,speedup,efficiency_pct"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{:.4},{:.2},{:.1}",
+            self.episodes,
+            self.n_envs,
+            self.n_ranks,
+            self.total_cpus,
+            self.duration_h,
+            self.speedup,
+            self.efficiency_pct
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_efficiency() {
+        assert_eq!(speedup(100.0, 50.0), 2.0);
+        // double the CPUs, double the speed -> 100%
+        assert!((efficiency(100.0, 50.0, 1, 2) - 100.0).abs() < 1e-12);
+        // double the CPUs, 1.6x speed -> 80%
+        assert!((efficiency(100.0, 62.5, 1, 2) - 80.0).abs() < 1e-12);
+        // per-set reference with 5 ranks: envs 1 -> 2 means cpus 5 -> 10
+        assert!((efficiency(305.8, 170.8, 5, 10) - 89.52).abs() < 0.05);
+    }
+}

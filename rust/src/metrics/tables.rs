@@ -1,0 +1,86 @@
+//! Plain-text table rendering (paper-style) + CSV writing.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Render an aligned text table. `rows` are pre-formatted cells.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let line = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    line(&mut out);
+    out.push('|');
+    for (h, w) in header.iter().zip(&widths) {
+        out.push_str(&format!(" {h:>w$} |", w = w));
+    }
+    out.push('\n');
+    line(&mut out);
+    for row in rows {
+        out.push('|');
+        for (c, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {c:>w$} |", w = w));
+        }
+        out.push('\n');
+    }
+    line(&mut out);
+    out
+}
+
+/// Write rows (first row = header) to a CSV file.
+pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            "T",
+            &["a", "bb"],
+            &[vec!["1".into(), "22".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("| 333 |"));
+        assert!(t.lines().count() >= 6);
+        // all data lines same width
+        let widths: Vec<usize> = t.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn csv_write() {
+        let dir = std::env::temp_dir().join(format!("drlfoam-csv-{}", std::process::id()));
+        let p = dir.join("t.csv");
+        write_csv(&p, "a,b", &["1,2".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,397 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md section 6 maps each to its module and bench target).
+//!
+//! Each function returns the rendered text (also printed by the CLI) and
+//! writes a CSV under `out/` so the series can be plotted.
+
+use anyhow::Result;
+
+use crate::cluster::{simulate_training, Calibration, MpiScaling, SimConfig};
+use crate::io_interface::IoMode;
+use crate::metrics::scaling::{efficiency, speedup, ScalingRow};
+use crate::metrics::tables::{render_table, write_csv};
+
+pub const TABLE1_ENV_SETS: [(usize, &[usize]); 3] = [
+    (5, &[1, 2, 4, 6, 8, 10, 12]),
+    (2, &[1, 2, 4, 6, 8, 10, 20, 30]),
+    (1, &[1, 2, 4, 6, 8, 10, 20, 30, 40, 50, 60]),
+];
+
+pub const EPISODES: usize = 3000;
+
+fn run(calib: &Calibration, envs: usize, ranks: usize, mode: IoMode, seed: u64) -> f64 {
+    simulate_training(
+        calib,
+        &SimConfig {
+            n_envs: envs,
+            n_ranks: ranks,
+            episodes_total: EPISODES,
+            io_mode: mode,
+            seed,
+        },
+    )
+    .total_s
+        / 3600.0
+}
+
+/// Table I: multi-environment training statistics for ranks 1, 2, 5,
+/// per-set reference. Baseline I/O (the paper's original framework).
+pub fn table1(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    for (ranks, env_counts) in TABLE1_ENV_SETS {
+        let t_ref = run(calib, 1, ranks, IoMode::Baseline, 1);
+        for &envs in env_counts {
+            let t = if envs == 1 {
+                t_ref
+            } else {
+                run(calib, envs, ranks, IoMode::Baseline, 1)
+            };
+            let row = ScalingRow {
+                episodes: EPISODES,
+                n_envs: envs,
+                n_ranks: ranks,
+                total_cpus: envs * ranks,
+                duration_h: t,
+                speedup: speedup(t_ref, t),
+                efficiency_pct: efficiency(t_ref, t, ranks, envs * ranks),
+            };
+            rows_txt.push(vec![
+                row.episodes.to_string(),
+                row.n_envs.to_string(),
+                row.n_ranks.to_string(),
+                row.total_cpus.to_string(),
+                format!("{:.1}", row.duration_h),
+                format!("{:.1}", row.speedup),
+                format!("{:.1}", row.efficiency_pct),
+            ]);
+            rows_csv.push(row.to_csv());
+        }
+    }
+    write_csv(out_dir.join("table1.csv"), ScalingRow::csv_header(), &rows_csv)?;
+    Ok(render_table(
+        "Table I: parallel multi-environment training (simulated cluster, baseline I/O)",
+        &["episodes", "N_envs", "N_ranks", "N_cpus", "duration (h)", "speedup", "eff (%)"],
+        &rows_txt,
+    ))
+}
+
+/// Fig 7: CFD strong scaling, speedup + efficiency vs N_ranks; the T_1
+/// (solver only) and T_100 (episode with exchange) series.
+pub fn fig7(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let solver = MpiScaling::default();
+    let ranks = [1usize, 2, 4, 8, 16];
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    // T_100: per-episode cost at n ranks including exchange, relative.
+    let ep_io = calib.t_io_cpu_baseline + calib.bytes_baseline / calib.disk_bw;
+    let t100_1 = calib.t_period_1rank + ep_io;
+    for &n in &ranks {
+        let s1 = solver.speedup(n);
+        let e1 = 100.0 * solver.efficiency(n);
+        let t100_n = calib.t_period_1rank * solver.runtime_frac(n) + ep_io;
+        let s100 = t100_1 / t100_n;
+        let e100 = 100.0 * s100 / n as f64;
+        rows_txt.push(vec![
+            n.to_string(),
+            format!("{s1:.2}"),
+            format!("{e1:.1}"),
+            format!("{s100:.2}"),
+            format!("{e100:.1}"),
+        ]);
+        rows_csv.push(format!("{n},{s1:.4},{e1:.2},{s100:.4},{e100:.2}"));
+    }
+    write_csv(
+        out_dir.join("fig7.csv"),
+        "n_ranks,speedup_T1,eff_T1_pct,speedup_T100,eff_T100_pct",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Fig 7: CFD strong scaling (T_1 = single solver instance, T_100 = full episode)",
+        &["N_ranks", "speedup T1", "eff T1 %", "speedup T100", "eff T100 %"],
+        &rows_txt,
+    ))
+}
+
+/// Fig 8: multi-env speedup with per-set reference (same data as Table I).
+pub fn fig8(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    for (ranks, env_counts) in TABLE1_ENV_SETS {
+        let t_ref = run(calib, 1, ranks, IoMode::Baseline, 1);
+        for &envs in env_counts {
+            let t = run(calib, envs, ranks, IoMode::Baseline, 1);
+            let s = speedup(t_ref, t);
+            rows_txt.push(vec![
+                ranks.to_string(),
+                envs.to_string(),
+                format!("{s:.2}"),
+            ]);
+            rows_csv.push(format!("{ranks},{envs},{s:.4}"));
+        }
+    }
+    write_csv(out_dir.join("fig8.csv"), "n_ranks,n_envs,speedup", &rows_csv)?;
+    Ok(render_table(
+        "Fig 8: multi-environment speedup (per-rank-set reference)",
+        &["N_ranks", "N_envs", "speedup"],
+        &rows_txt,
+    ))
+}
+
+/// Fig 9: hybrid scaling against total CPUs, global {1,1} reference.
+pub fn fig9(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let t_ref = run(calib, 1, 1, IoMode::Baseline, 1);
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    for (ranks, env_counts) in TABLE1_ENV_SETS {
+        for &envs in env_counts {
+            let t = run(calib, envs, ranks, IoMode::Baseline, 1);
+            let cpus = envs * ranks;
+            let s = speedup(t_ref, t);
+            let e = efficiency(t_ref, t, 1, cpus);
+            rows_txt.push(vec![
+                ranks.to_string(),
+                envs.to_string(),
+                cpus.to_string(),
+                format!("{s:.2}"),
+                format!("{e:.1}"),
+            ]);
+            rows_csv.push(format!("{ranks},{envs},{cpus},{s:.4},{e:.2}"));
+        }
+    }
+    write_csv(
+        out_dir.join("fig9.csv"),
+        "n_ranks,n_envs,total_cpus,speedup,efficiency_pct",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Fig 9: hybrid parallelization vs total CPUs (global {ranks=1, envs=1} reference)",
+        &["N_ranks", "N_envs", "CPUs", "speedup", "eff (%)"],
+        &rows_txt,
+    ))
+}
+
+/// Fig 10: per-episode time breakdown vs N_envs (single-rank CFD).
+pub fn fig10(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    for envs in [1usize, 10, 20, 30, 40, 50, 60] {
+        let r = simulate_training(
+            calib,
+            &SimConfig {
+                n_envs: envs,
+                n_ranks: 1,
+                episodes_total: EPISODES.min(600 * envs),
+                io_mode: IoMode::Baseline,
+                seed: 1,
+            },
+        );
+        let b = r.breakdown;
+        // the paper's instrumentation folds the exchange stall into "CFD
+        // simulation time"; we report both views
+        rows_txt.push(vec![
+            envs.to_string(),
+            format!("{:.1}", b.cfd_s),
+            format!("{:.1}", b.io_s),
+            format!("{:.1}", b.cfd_s + b.io_s),
+            format!("{:.2}", b.policy_s),
+            format!("{:.1}", b.update_barrier_s),
+            format!("{:.0}", 100.0 * r.disk_utilisation),
+        ]);
+        rows_csv.push(format!(
+            "{envs},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}",
+            b.cfd_s, b.io_s, b.cfd_s + b.io_s, b.policy_s, b.update_barrier_s, r.disk_utilisation
+        ));
+    }
+    write_csv(
+        out_dir.join("fig10.csv"),
+        "n_envs,cfd_s,io_s,cfd_as_measured_s,policy_s,update_barrier_s,disk_util",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Fig 10: per-episode time breakdown (ranks=1, baseline I/O)",
+        &["N_envs", "CFD (s)", "I/O (s)", "CFD+I/O (s)", "policy (s)", "update+barrier (s)", "disk %"],
+        &rows_txt,
+    ))
+}
+
+/// Table II + Figs 11/12: the three I/O strategies at ranks=1.
+pub fn table2(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let env_counts = [1usize, 2, 4, 6, 8, 10, 20, 30, 40, 50, 60];
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    let mut refs = std::collections::BTreeMap::new();
+    for mode in [IoMode::Baseline, IoMode::InMemory, IoMode::Optimized] {
+        refs.insert(mode.name(), run(calib, 1, 1, mode, 1));
+    }
+    for &envs in &env_counts {
+        let tb = run(calib, envs, 1, IoMode::Baseline, 1);
+        let td = run(calib, envs, 1, IoMode::InMemory, 1);
+        let to = run(calib, envs, 1, IoMode::Optimized, 1);
+        let pd = 100.0 * (tb - td) / tb;
+        let po = 100.0 * (tb - to) / tb;
+        rows_txt.push(vec![
+            EPISODES.to_string(),
+            envs.to_string(),
+            format!("{tb:.1}"),
+            format!("{td:.1} ({pd:.0}%)"),
+            format!("{to:.1} ({po:.0}%)"),
+        ]);
+        // per-strategy speedup/efficiency (Figs 11/12 use per-strategy refs)
+        let sb = refs["baseline"] / tb;
+        let sd = refs["in-memory"] / td;
+        let so = refs["optimized"] / to;
+        rows_csv.push(format!(
+            "{envs},{tb:.4},{td:.4},{to:.4},{sb:.4},{sd:.4},{so:.4},{:.2},{:.2},{:.2}",
+            100.0 * sb / envs as f64,
+            100.0 * sd / envs as f64,
+            100.0 * so / envs as f64
+        ));
+    }
+    write_csv(
+        out_dir.join("table2_fig11_fig12.csv"),
+        "n_envs,t_baseline_h,t_io_disabled_h,t_optimized_h,speedup_baseline,speedup_disabled,speedup_optimized,eff_baseline_pct,eff_disabled_pct,eff_optimized_pct",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Table II: I/O strategies, ranks=1 (relative speedup vs baseline in parens)",
+        &["episodes", "N_envs", "T_baseline (h)", "T_io-disabled (h)", "T_optimized (h)"],
+        &rows_txt,
+    ))
+}
+
+/// Headline summary: the paper's conclusion numbers.
+pub fn summary(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let t11 = run(calib, 1, 1, IoMode::Baseline, 1);
+    let t60_base = run(calib, 60, 1, IoMode::Baseline, 1);
+    let t60_opt = run(calib, 60, 1, IoMode::Optimized, 1);
+    let eff_base = efficiency(t11, t60_base, 1, 60);
+    let eff_opt = efficiency(t11, t60_opt, 1, 60);
+    let txt = format!(
+        "Headline (paper -> simulated):\n\
+         baseline  60 cores: {:.1} h, speedup {:.1}x, eff {:.1}%   (paper: 7.6 h, 29.6x, 49.3%)\n\
+         optimized 60 cores: {:.1} h, speedup {:.1}x, eff {:.1}%   (paper: 4.8 h, ~47x, ~78%)\n\
+         single-core baseline: {:.1} h                              (paper: 225.2 h)\n",
+        t60_base,
+        speedup(t11, t60_base),
+        eff_base,
+        t60_opt,
+        speedup(t11, t60_opt),
+        eff_opt,
+        t11
+    );
+    write_csv(
+        out_dir.join("summary.csv"),
+        "metric,simulated,paper",
+        &[
+            format!("t_1core_h,{t11:.2},225.2"),
+            format!("t_60core_baseline_h,{t60_base:.2},7.6"),
+            format!("t_60core_optimized_h,{t60_opt:.2},4.8"),
+            format!("speedup_baseline,{:.2},29.6", speedup(t11, t60_base)),
+            format!("speedup_optimized,{:.2},47.0", speedup(t11, t60_opt)),
+            format!("eff_baseline_pct,{eff_base:.2},49.3"),
+            format!("eff_optimized_pct,{eff_opt:.2},78.0"),
+        ],
+    )?;
+    Ok(txt)
+}
+
+/// Fig 6: reward-convergence invariance to N_envs — REAL training runs on
+/// this machine (not DES): same total episode budget split across 1/2/4
+/// environments; the curves should overlap when plotted vs episodes.
+pub fn fig6(
+    artifact_dir: &std::path::Path,
+    out_dir: &std::path::Path,
+    budget_episodes: usize,
+    horizon: usize,
+) -> Result<String> {
+    use crate::coordinator::{train, TrainConfig};
+    let mut rows_csv = Vec::new();
+    let mut rows_txt = Vec::new();
+    for n_envs in [1usize, 2, 4] {
+        let iterations = (budget_episodes / n_envs).max(1);
+        let root = out_dir.join(format!("fig6/envs{n_envs}"));
+        let cfg = TrainConfig {
+            artifact_dir: artifact_dir.to_path_buf(),
+            work_dir: root.join("work"),
+            out_dir: root,
+            variant: "small".into(),
+            n_envs,
+            io_mode: IoMode::InMemory,
+            horizon,
+            iterations,
+            epochs: 4,
+            seed: 11,
+            log_every: 10_000,
+            quiet: true,
+        };
+        let s = train(&cfg)?;
+        for r in &s.log {
+            rows_csv.push(format!(
+                "{n_envs},{},{},{:.6},{:.6}",
+                r.iteration, r.episodes_done, r.mean_reward, r.mean_cd
+            ));
+        }
+        let k = (s.log.len() / 3).max(1);
+        let head: f64 = s.log[..k].iter().map(|r| r.mean_reward).sum::<f64>() / k as f64;
+        let tail: f64 =
+            s.log[s.log.len() - k..].iter().map(|r| r.mean_reward).sum::<f64>() / k as f64;
+        rows_txt.push(vec![
+            n_envs.to_string(),
+            iterations.to_string(),
+            format!("{head:+.4}"),
+            format!("{tail:+.4}"),
+            format!("{:+.4}", tail - head),
+        ]);
+    }
+    write_csv(
+        out_dir.join("fig6.csv"),
+        "n_envs,iteration,episodes,mean_reward,mean_cd",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Fig 6: reward convergence vs N_envs (REAL training, same episode budget)",
+        &["N_envs", "iters", "reward (early)", "reward (late)", "delta"],
+        &rows_txt,
+    ))
+}
+
+/// Extension ablation: synchronous (barrier) vs asynchronous (barrier-free)
+/// training at cluster scale — the paper's future-work direction, DES.
+pub fn ablation_async(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    use crate::cluster::simulate_training_async;
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    for mode in [IoMode::Baseline, IoMode::Optimized] {
+        for envs in [1usize, 10, 20, 30, 40, 50, 60] {
+            let cfg = SimConfig {
+                n_envs: envs,
+                n_ranks: 1,
+                episodes_total: EPISODES,
+                io_mode: mode,
+                seed: 1,
+            };
+            let ts = simulate_training(calib, &cfg).total_s / 3600.0;
+            let ta = simulate_training_async(calib, &cfg).total_s / 3600.0;
+            let gain = 100.0 * (ts - ta) / ts;
+            rows_txt.push(vec![
+                mode.name().to_string(),
+                envs.to_string(),
+                format!("{ts:.1}"),
+                format!("{ta:.1}"),
+                format!("{gain:+.1}%"),
+            ]);
+            rows_csv.push(format!("{},{envs},{ts:.4},{ta:.4},{gain:.2}", mode.name()));
+        }
+    }
+    write_csv(
+        out_dir.join("ablation_async.csv"),
+        "io_mode,n_envs,t_sync_h,t_async_h,gain_pct",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Extension: synchronous vs asynchronous training (DES, ranks=1)",
+        &["I/O", "N_envs", "sync (h)", "async (h)", "async gain"],
+        &rows_txt,
+    ))
+}

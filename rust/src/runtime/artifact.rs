@@ -1,0 +1,224 @@
+//! Manifest loading: the contract between `python/compile/aot.py` and the
+//! Rust coordinator. See DESIGN.md section 4 for the artifact table.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamSlot {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+/// DRL hyper-parameters recorded by the AOT pipeline (single source of
+/// truth: python/compile/configs.py).
+#[derive(Clone, Debug)]
+pub struct DrlManifest {
+    pub n_obs: usize,
+    pub n_act: usize,
+    pub hidden: usize,
+    pub n_params: usize,
+    pub minibatch: usize,
+    pub lr: f64,
+    pub clip_eps: f64,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+    pub action_smoothing_beta: f64,
+    pub reward_lift_penalty: f64,
+    pub init_logstd: f64,
+    pub param_layout: Vec<ParamSlot>,
+    pub policy_apply_file: String,
+    pub ppo_update_file: String,
+}
+
+/// Per-variant CFD metadata (grid, physics constants, file names).
+#[derive(Clone, Debug)]
+pub struct VariantManifest {
+    pub name: String,
+    pub cfd_period_file: String,
+    pub state0_file: String,
+    pub ny: usize,
+    pub nx: usize,
+    pub h: f64,
+    pub dt: f64,
+    pub substeps: usize,
+    pub period: f64,
+    pub re: f64,
+    pub n_sweeps: usize,
+    pub jet_max: f64,
+    pub cd0: f64,
+    pub cl0_amplitude: f64,
+    pub probe_mean: Vec<f32>,
+    pub probe_std: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub kernel_impl: String,
+    pub drl: DrlManifest,
+    pub variants: BTreeMap<String, VariantManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let d = j.get("drl")?;
+        let layout = d
+            .get("param_layout")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(ParamSlot {
+                    name: s.get("name")?.as_str()?.to_string(),
+                    offset: s.get("offset")?.as_usize()?,
+                    shape: s
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let arts = j.get("artifacts")?;
+        let drl = DrlManifest {
+            n_obs: d.get("n_obs")?.as_usize()?,
+            n_act: d.get("n_act")?.as_usize()?,
+            hidden: d.get("hidden")?.as_usize()?,
+            n_params: d.get("n_params")?.as_usize()?,
+            minibatch: d.get("minibatch")?.as_usize()?,
+            lr: d.get("lr")?.as_f64()?,
+            clip_eps: d.get("clip_eps")?.as_f64()?,
+            gamma: d.get("gamma")?.as_f64()?,
+            gae_lambda: d.get("gae_lambda")?.as_f64()?,
+            action_smoothing_beta: d.get("action_smoothing_beta")?.as_f64()?,
+            reward_lift_penalty: d.get("reward_lift_penalty")?.as_f64()?,
+            init_logstd: d.get("init_logstd")?.as_f64()?,
+            param_layout: layout,
+            policy_apply_file: arts.get("policy_apply")?.get("file")?.as_str()?.to_string(),
+            ppo_update_file: arts.get("ppo_update")?.get("file")?.as_str()?.to_string(),
+        };
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            variants.insert(
+                name.clone(),
+                VariantManifest {
+                    name: name.clone(),
+                    cfd_period_file: v.get("cfd_period")?.as_str()?.to_string(),
+                    state0_file: v.get("state0")?.as_str()?.to_string(),
+                    ny: v.get("ny")?.as_usize()?,
+                    nx: v.get("nx")?.as_usize()?,
+                    h: v.get("h")?.as_f64()?,
+                    dt: v.get("dt")?.as_f64()?,
+                    substeps: v.get("substeps")?.as_usize()?,
+                    period: v.get("period")?.as_f64()?,
+                    re: v.get("re")?.as_f64()?,
+                    n_sweeps: v.get("n_sweeps")?.as_usize()?,
+                    jet_max: v.get("jet_max")?.as_f64()?,
+                    cd0: v.get("cd0")?.as_f64()?,
+                    cl0_amplitude: v.get("cl0_amplitude")?.as_f64()?,
+                    probe_mean: v.get("probe_mean")?.f32_vec()?,
+                    probe_std: v.get("probe_std")?.f32_vec()?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            kernel_impl: j.get("kernel_impl")?.as_str()?.to_string(),
+            drl,
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantManifest> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant {name:?} not in manifest (built: {:?})",
+                self.variants.keys().collect::<Vec<_>>()))
+    }
+
+    /// Initial flat policy parameters shipped by the AOT pipeline.
+    pub fn load_params_init(&self) -> Result<Vec<f32>> {
+        let v = super::read_f32_bin(self.dir.join("params_init.bin"))?;
+        anyhow::ensure!(
+            v.len() == self.drl.n_params,
+            "params_init.bin has {} f32s, manifest says {}",
+            v.len(),
+            self.drl.n_params
+        );
+        Ok(v)
+    }
+
+    /// Developed base-flow state (u|v|p) for a variant.
+    pub fn load_state0(&self, variant: &str) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let v = self.variant(variant)?;
+        let all = super::read_f32_bin(self.dir.join(&v.state0_file))?;
+        let n = v.ny * v.nx;
+        anyhow::ensure!(all.len() == 3 * n, "state0 size mismatch");
+        Ok((
+            all[..n].to_vec(),
+            all[n..2 * n].to_vec(),
+            all[2 * n..].to_vec(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let m = Manifest::load(artifacts_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.drl.n_obs, 149);
+        // layout covers the flat vector contiguously
+        let mut off = 0;
+        for s in &m.drl.param_layout {
+            assert_eq!(s.offset, off, "slot {} not contiguous", s.name);
+            off += s.shape.iter().product::<usize>();
+        }
+        assert_eq!(off, m.drl.n_params);
+        let v = m.variant("small").unwrap();
+        assert_eq!(v.probe_mean.len(), 149);
+        assert!(v.cd0 > 1.0 && v.cd0 < 10.0);
+    }
+
+    #[test]
+    fn state0_and_params_load() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let p = m.load_params_init().unwrap();
+        assert_eq!(p.len(), m.drl.n_params);
+        let (u, v, pr) = m.load_state0("small").unwrap();
+        let n = m.variant("small").unwrap().ny * m.variant("small").unwrap().nx;
+        assert_eq!(u.len(), n);
+        assert_eq!(v.len(), n);
+        assert_eq!(pr.len(), n);
+        // developed flow should be non-trivial
+        let umax = u.iter().cloned().fold(0.0f32, f32::max);
+        assert!(umax > 1.0, "u max {umax}");
+    }
+
+    #[test]
+    fn unknown_variant_is_error() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.variant("nope").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! PJRT CPU client wrapper + executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled HLO module plus its human name (for error reporting).
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the single tuple output that
+    /// `return_tuple=True` lowering produces into its elements.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+
+    /// Execute with device-resident buffer inputs (perf fast path: skips
+    /// the per-call host->device literal copy for large constant-ish
+    /// arguments like policy parameters).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+}
+
+/// Per-thread PJRT CPU client with a named executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, Executable>,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            exes: HashMap::new(),
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Compile (and cache) an HLO-text artifact by file name.
+    pub fn load(&mut self, file: &str) -> Result<&Executable> {
+        if !self.exes.contains_key(file) {
+            let path = self.artifact_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.exes.insert(
+                file.to_string(),
+                Executable {
+                    name: file.to_string(),
+                    exe,
+                },
+            );
+        }
+        Ok(&self.exes[file])
+    }
+
+    pub fn get(&self, file: &str) -> Result<&Executable> {
+        self.exes
+            .get(file)
+            .with_context(|| format!("executable {file} not loaded"))
+    }
+
+    /// Upload an f32 array to a device-resident buffer (perf fast path).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading buffer")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host helpers
+// ---------------------------------------------------------------------------
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} != data len {}", dims, data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        Ok(lit.reshape(dims)?)
+    }
+}
+
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Copy a literal out to a host Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+// ---------------------------------------------------------------------------
+// Raw f32 binary files (params_init.bin, state0_*.bin, checkpoints)
+// ---------------------------------------------------------------------------
+
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: size not a multiple of 4", path.as_ref().display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn write_f32_bin(path: impl AsRef<Path>, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("drlfoam-bin-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = vec![1.0f32, -2.5, 3.25e-3, f32::MAX];
+        write_f32_bin(&path, &data).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs on
+//! the request path: `make artifacts` lowers the JAX/Pallas model once,
+//! and everything here is plain `HLO text -> compile -> execute`.
+//!
+//! Threading model: `xla::PjRtClient` wraps a raw pointer without Send/Sync
+//! impls, so each worker thread builds its own [`Runtime`] (one PJRT CPU
+//! client + its compiled executables). Compilation is ~10-100 ms per
+//! artifact and happens once per thread at pool startup, never in the
+//! episode loop.
+
+mod artifact;
+mod client;
+
+pub use artifact::{DrlManifest, Manifest, ParamSlot, VariantManifest};
+pub use client::{literal_f32, read_f32_bin, scalar_f32, to_vec_f32, write_f32_bin, Executable, Runtime};

@@ -1,0 +1,97 @@
+//! Tiny benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` binaries use this: warmup, N timed iterations, mean/std/
+//! p50/p95 reporting, and machine-readable JSON lines appended to
+//! `out/bench/<name>.json` so the reproduce pipeline can consume results.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use crate::util::{json, stats};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10.4} ms ± {:>8.4}  (p50 {:.4}, p95 {:.4}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.iters
+        );
+    }
+
+    pub fn to_json(&self) -> json::Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_s", json::num(self.mean_s)),
+            ("std_s", json::num(self.std_s)),
+            ("p50_s", json::num(self.p50_s)),
+            ("p95_s", json::num(self.p95_s)),
+        ])
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&times),
+        std_s: stats::std_dev(&times),
+        p50_s: stats::percentile(&times, 50.0),
+        p95_s: stats::percentile(&times, 95.0),
+    };
+    r.report();
+    r
+}
+
+/// Append results as JSON lines under out/bench/.
+pub fn save(group: &str, results: &[BenchResult]) {
+    let dir = std::path::Path::new("out/bench");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{group}.json"));
+    if let Ok(mut f) = std::fs::File::create(&path) {
+        for r in results {
+            let _ = writeln!(f, "{}", r.to_json().to_string());
+        }
+        println!("saved {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(r.iters, 5);
+        assert!(r.p95_s >= r.p50_s);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small in-tree utilities.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure (no serde / rand / criterion / proptest), so deterministic RNG,
+//! JSON, statistics, a bench harness and a property-test driver live here.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,57 @@
+//! Minimal property-testing driver (proptest is not vendored offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded RNGs;
+//! on panic or `Err`, it reports the failing seed so the case can be
+//! replayed deterministically with `check_seed`.
+
+use crate::util::rng::Rng;
+
+/// Run `f` for `cases` deterministic seeds; panic with the failing seed.
+pub fn check<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+            f(&mut rng)
+        });
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!("property {name:?} failed at seed {seed}: {msg}"),
+            Err(_) => panic!("property {name:?} panicked at seed {seed}"),
+        }
+    }
+}
+
+/// Replay a single failing seed (debugging helper).
+pub fn check_seed<F>(f: F, seed: u64) -> Result<(), String>
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    f(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("uniform in range", 50, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn reports_failing_seed() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,145 @@
+//! Flow-field visualisation: vorticity contours as PPM images
+//! (reproduces the paper's Fig 5(e)-(j) panels without any plotting
+//! dependency — PPM is plain bytes; `convert out/*.ppm out/*.png` if
+//! ImageMagick is around).
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// z-vorticity omega = dv/dx - du/dy on the uniform grid (central
+/// differences; boundary ring copied from the first interior ring).
+pub fn vorticity(u: &[f32], v: &[f32], ny: usize, nx: usize, h: f64) -> Vec<f32> {
+    assert_eq!(u.len(), ny * nx);
+    assert_eq!(v.len(), ny * nx);
+    let mut w = vec![0f32; ny * nx];
+    let inv2h = (1.0 / (2.0 * h)) as f32;
+    for j in 1..ny - 1 {
+        for i in 1..nx - 1 {
+            let dvdx = (v[j * nx + i + 1] - v[j * nx + i - 1]) * inv2h;
+            let dudy = (u[(j + 1) * nx + i] - u[(j - 1) * nx + i]) * inv2h;
+            w[j * nx + i] = dvdx - dudy;
+        }
+    }
+    // copy edges for a clean image
+    for i in 0..nx {
+        w[i] = w[nx + i];
+        w[(ny - 1) * nx + i] = w[(ny - 2) * nx + i];
+    }
+    for j in 0..ny {
+        w[j * nx] = w[j * nx + 1];
+        w[j * nx + nx - 1] = w[j * nx + nx - 2];
+    }
+    w
+}
+
+/// Blue-white-red diverging colormap over [-scale, +scale].
+fn bwr(x: f32, scale: f32) -> [u8; 3] {
+    let t = (x / scale).clamp(-1.0, 1.0);
+    if t >= 0.0 {
+        // white -> red
+        let k = t;
+        [255, (255.0 * (1.0 - k)) as u8, (255.0 * (1.0 - k)) as u8]
+    } else {
+        // blue <- white
+        let k = -t;
+        [(255.0 * (1.0 - k)) as u8, (255.0 * (1.0 - k)) as u8, 255]
+    }
+}
+
+/// Render a scalar field to a binary PPM (P6). Row 0 of the field is the
+/// channel bottom, so the image is flipped vertically for display.
+pub fn write_ppm(
+    path: impl AsRef<Path>,
+    field: &[f32],
+    ny: usize,
+    nx: usize,
+    scale: f32,
+    solid: Option<&dyn Fn(usize, usize) -> bool>,
+) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut buf = Vec::with_capacity(nx * ny * 3 + 32);
+    write!(buf, "P6\n{nx} {ny}\n255\n")?;
+    for j in (0..ny).rev() {
+        for i in 0..nx {
+            let px = if solid.map(|f| f(j, i)).unwrap_or(false) {
+                [40u8, 40, 40]
+            } else {
+                bwr(field[j * nx + i], scale)
+            };
+            buf.extend_from_slice(&px);
+        }
+    }
+    std::fs::write(path.as_ref(), buf)?;
+    Ok(())
+}
+
+/// Convenience: vorticity snapshot of a flow state, cylinder blacked out.
+pub fn vorticity_snapshot(
+    path: impl AsRef<Path>,
+    u: &[f32],
+    v: &[f32],
+    ny: usize,
+    nx: usize,
+    h: f64,
+    x_up: f64,
+    y_lo: f64,
+    radius: f64,
+) -> Result<()> {
+    let w = vorticity(u, v, ny, nx, h);
+    let solid = move |j: usize, i: usize| {
+        let x = -x_up + (i as f64 + 0.5) * h;
+        let y = y_lo + (j as f64 + 0.5) * h;
+        (x * x + y * y).sqrt() < radius
+    };
+    write_ppm(path, &w, ny, nx, 5.0, Some(&solid))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vorticity_of_solid_rotation() {
+        // u = -y, v = x -> omega = 2 everywhere
+        let (ny, nx, h) = (16usize, 20usize, 0.5);
+        let mut u = vec![0f32; ny * nx];
+        let mut v = vec![0f32; ny * nx];
+        for j in 0..ny {
+            for i in 0..nx {
+                let x = i as f64 * h;
+                let y = j as f64 * h;
+                u[j * nx + i] = -y as f32;
+                v[j * nx + i] = x as f32;
+            }
+        }
+        let w = vorticity(&u, &v, ny, nx, h);
+        for j in 2..ny - 2 {
+            for i in 2..nx - 2 {
+                assert!((w[j * nx + i] - 2.0).abs() < 1e-4, "w = {}", w[j * nx + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn ppm_dimensions_and_header() {
+        let dir = std::env::temp_dir().join(format!("drlfoam-viz-{}", std::process::id()));
+        let p = dir.join("t.ppm");
+        let field = vec![0f32; 6 * 4];
+        write_ppm(&p, &field, 6, 4, 1.0, None).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n4 6\n255\n"));
+        assert_eq!(bytes.len(), 11 + 4 * 6 * 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn colormap_endpoints() {
+        assert_eq!(bwr(1.0, 1.0), [255, 0, 0]);
+        assert_eq!(bwr(-1.0, 1.0), [0, 0, 255]);
+        assert_eq!(bwr(0.0, 1.0), [255, 255, 255]);
+    }
+}

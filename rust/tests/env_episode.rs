@@ -1,0 +1,130 @@
+//! Integration: CfdEnv episode lifecycle over the real artifacts.
+
+use drlfoam::drl::Policy;
+use drlfoam::env::CfdEnv;
+use drlfoam::io_interface::{make_interface, IoMode};
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::util::rng::Rng;
+
+fn mk_env(mode: IoMode, tag: &str) -> (Manifest, Runtime, CfdEnv) {
+    let m = Manifest::load("artifacts").expect("run `make artifacts`");
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let vm = m.variant("small").unwrap().clone();
+    rt.load(&vm.cfd_period_file).unwrap();
+    rt.load(&m.drl.policy_apply_file).unwrap();
+    let work = std::env::temp_dir().join(format!("drlfoam-env-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&work).unwrap();
+    let env = CfdEnv::new(
+        vm,
+        m.load_state0("small").unwrap(),
+        m.drl.action_smoothing_beta,
+        m.drl.reward_lift_penalty,
+        make_interface(mode, &work, 0).unwrap(),
+    );
+    (m, rt, env)
+}
+
+#[test]
+fn reset_gives_normalised_observation() {
+    let (m, rt, mut env) = mk_env(IoMode::InMemory, "reset");
+    let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
+    let obs = env.reset(cfd).unwrap();
+    assert_eq!(obs.len(), m.drl.n_obs);
+    assert!(obs.iter().all(|x| x.is_finite()));
+    // base-flow probes are normalised by base-flow statistics: z-scores
+    // should be O(1), not O(100)
+    let max = obs.iter().cloned().fold(0f32, |a, b| a.max(b.abs()));
+    assert!(max < 25.0, "obs z-scores too large: {max}");
+}
+
+#[test]
+fn uncontrolled_reward_near_zero() {
+    // r = cd0 - <cd> - 0.1 |<cl>|; with jet ~ 0 the drag term vanishes and
+    // the remaining bias is the base-flow lift asymmetry (documented).
+    let (_m, rt, mut env) = mk_env(IoMode::InMemory, "r0");
+    let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
+    env.reset(cfd).unwrap();
+    let sr = env.step(cfd, 0.0).unwrap();
+    let lift_bias = 0.1 * sr.cl_mean.abs();
+    assert!(
+        (sr.reward + lift_bias).abs() < 0.15,
+        "reward {} lift bias {lift_bias}",
+        sr.reward
+    );
+}
+
+#[test]
+fn action_smoothing_follows_eq11() {
+    let (_m, rt, mut env) = mk_env(IoMode::InMemory, "smooth");
+    let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
+    env.reset(cfd).unwrap();
+    let beta = 0.4;
+    let a = 1.0;
+    let s1 = env.step(cfd, a).unwrap();
+    assert!((s1.jet - beta * a).abs() < 1e-9, "jet {}", s1.jet);
+    let s2 = env.step(cfd, a).unwrap();
+    let want = s1.jet + beta * (a - s1.jet);
+    assert!((s2.jet - want).abs() < 1e-9);
+}
+
+#[test]
+fn jet_cap_enforced() {
+    let (_m, rt, mut env) = mk_env(IoMode::InMemory, "cap");
+    let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
+    env.reset(cfd).unwrap();
+    let cap = env.variant.jet_max;
+    for _ in 0..30 {
+        let sr = env.step(cfd, 100.0).unwrap();
+        assert!(sr.jet <= cap + 1e-9, "jet {} cap {cap}", sr.jet);
+    }
+}
+
+#[test]
+fn episode_through_all_io_modes_agrees() {
+    // the exchange interface must be value-preserving: same episode, same
+    // rewards (ASCII mode to parse precision).
+    let mut rewards = Vec::new();
+    for (mode, tag) in [
+        (IoMode::InMemory, "m1"),
+        (IoMode::Optimized, "m2"),
+        (IoMode::Baseline, "m3"),
+    ] {
+        let (m, rt, mut env) = mk_env(mode, tag);
+        let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
+        let pol = rt.get(&m.drl.policy_apply_file).unwrap();
+        let params = m.load_params_init().unwrap();
+        let policy = Policy::new(m.drl.n_obs);
+        let mut rng = Rng::new(77);
+        let mut obs = env.reset(cfd).unwrap();
+        let mut total = 0.0;
+        for _ in 0..3 {
+            let pout = policy.apply(pol, &params, &obs).unwrap();
+            let (a, _) = policy.sample(&pout, &mut rng);
+            let sr = env.step(cfd, a).unwrap();
+            total += sr.reward;
+            obs = sr.obs;
+        }
+        rewards.push(total);
+    }
+    assert!(
+        (rewards[0] - rewards[1]).abs() < 1e-9,
+        "in-memory vs binary: {rewards:?}"
+    );
+    assert!(
+        (rewards[0] - rewards[2]).abs() < 1e-3,
+        "in-memory vs ascii: {rewards:?}"
+    );
+}
+
+#[test]
+fn reset_is_reproducible() {
+    let (_m, rt, mut env) = mk_env(IoMode::InMemory, "repro");
+    let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
+    let o1 = env.reset(cfd).unwrap();
+    let s1 = env.step(cfd, 0.5).unwrap();
+    let o2 = env.reset(cfd).unwrap();
+    let s2 = env.step(cfd, 0.5).unwrap();
+    assert_eq!(o1, o2);
+    assert_eq!(s1.obs, s2.obs);
+    assert_eq!(s1.reward, s2.reward);
+}

@@ -1,0 +1,112 @@
+//! Failure injection: broken artifacts and malformed inputs must produce
+//! clean, contextual errors — never panics or silent garbage.
+
+use drlfoam::runtime::{read_f32_bin, write_f32_bin, Manifest, Runtime};
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("drlfoam-fail-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_contextual_error() {
+    let d = scratch("nomanifest");
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("manifest.json"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let d = scratch("badjson");
+    std::fs::write(d.join("manifest.json"), "{ not json !!!").unwrap();
+    assert!(Manifest::load(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn manifest_missing_keys_rejected() {
+    let d = scratch("missingkeys");
+    std::fs::write(d.join("manifest.json"), r#"{"format_version": 1}"#).unwrap();
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("drl"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn truncated_state0_rejected() {
+    // copy the real manifest but truncate the state file
+    let m = Manifest::load("artifacts").expect("make artifacts");
+    let d = scratch("truncstate");
+    std::fs::copy("artifacts/manifest.json", d.join("manifest.json")).unwrap();
+    let v = m.variant("small").unwrap();
+    write_f32_bin(d.join(&v.state0_file), &vec![0f32; 7]).unwrap();
+    std::fs::copy(
+        std::path::Path::new("artifacts").join("params_init.bin"),
+        d.join("params_init.bin"),
+    )
+    .unwrap();
+    let m2 = Manifest::load(&d).unwrap();
+    let err = m2.load_state0("small").unwrap_err().to_string();
+    assert!(err.contains("state0"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn wrong_sized_params_rejected() {
+    let d = scratch("badparams");
+    std::fs::copy("artifacts/manifest.json", d.join("manifest.json")).unwrap();
+    write_f32_bin(d.join("params_init.bin"), &[1.0, 2.0]).unwrap();
+    let m = Manifest::load(&d).unwrap();
+    let err = m.load_params_init().unwrap_err().to_string();
+    assert!(err.contains("params_init"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn non_multiple_of_four_bin_rejected() {
+    let d = scratch("oddbin");
+    std::fs::write(d.join("x.bin"), [1u8, 2, 3]).unwrap();
+    assert!(read_f32_bin(d.join("x.bin")).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn garbage_hlo_text_fails_at_load() {
+    let d = scratch("badhlo");
+    std::fs::write(d.join("bad.hlo.txt"), "this is not hlo").unwrap();
+    let mut rt = Runtime::new(&d).unwrap();
+    let msg = match rt.load("bad.hlo.txt") {
+        Ok(_) => panic!("garbage HLO text compiled?!"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("bad.hlo.txt"), "{msg}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn missing_artifact_file_contextual() {
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let err = match rt.load("nope.hlo.txt") {
+        Ok(_) => panic!("missing artifact loaded?!"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("nope.hlo.txt"), "{err}");
+}
+
+#[test]
+fn executable_wrong_arity_is_error_not_crash() {
+    let m = Manifest::load("artifacts").unwrap();
+    let mut rt = Runtime::new("artifacts").unwrap();
+    rt.load(&m.drl.policy_apply_file).unwrap();
+    let exe = rt.get(&m.drl.policy_apply_file).unwrap();
+    // policy_apply wants (params, obs); give it one arg
+    let one = drlfoam::runtime::literal_f32(&[0.0f32; 4], &[4]).unwrap();
+    assert!(exe.run(&[one]).is_err());
+}
+
+#[test]
+fn unknown_io_mode_rejected() {
+    assert!(drlfoam::io_interface::IoMode::parse("carrier-pigeon").is_err());
+}

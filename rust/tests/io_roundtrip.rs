@@ -1,0 +1,117 @@
+//! Integration: the three exchange interfaces are lossless (to parsing
+//! precision) and their cost ordering matches the paper's premise
+//! (baseline writes several times more bytes than optimized).
+
+use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
+use drlfoam::util::prop;
+use drlfoam::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("drlfoam-io-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn random_payload(rng: &mut Rng, n_probes: usize, substeps: usize, cells: usize) -> (CfdOutput, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let out = CfdOutput {
+        probes: (0..n_probes).map(|_| rng.normal() as f32).collect(),
+        cd_hist: (0..substeps).map(|_| 3.0 + 0.2 * rng.normal() as f32).collect(),
+        cl_hist: (0..substeps).map(|_| rng.normal() as f32).collect(),
+    };
+    let u: Vec<f32> = (0..cells).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..cells).map(|_| rng.normal() as f32).collect();
+    let p: Vec<f32> = (0..cells).map(|_| rng.normal() as f32).collect();
+    (out, u, v, p)
+}
+
+fn roundtrip(mode: IoMode, tol: f32) {
+    let dir = tmp_dir(mode.name());
+    prop::check(&format!("{} roundtrip", mode.name()), 10, |rng| {
+        let (ny, nx) = (8, 12);
+        let (out, u, v, p) = random_payload(rng, 16, 5, ny * nx);
+        let mut iface = make_interface(mode, &dir, 0).unwrap();
+        let flow = FlowSnapshot { u: &u, v: &v, p: &p, ny, nx };
+        let (parsed, stats) = iface.exchange(0, &out, &flow).map_err(|e| e.to_string())?;
+        for (a, b) in out.probes.iter().zip(&parsed.probes) {
+            if (a - b).abs() > tol {
+                return Err(format!("probe {a} vs {b}"));
+            }
+        }
+        if parsed.cd_hist.len() != out.cd_hist.len() {
+            return Err("cd history length changed".into());
+        }
+        for (a, b) in out.cd_hist.iter().zip(&parsed.cd_hist) {
+            if (a - b).abs() > tol {
+                return Err(format!("cd {a} vs {b}"));
+            }
+        }
+        if mode != IoMode::InMemory && stats.bytes_written == 0 {
+            return Err("no bytes written".into());
+        }
+        // action round-trip
+        let a0 = rng.normal();
+        let (a1, _) = iface.inject_action(0, a0).map_err(|e| e.to_string())?;
+        if (a0 - a1).abs() > 1e-8 {
+            return Err(format!("action {a0} vs {a1}"));
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ascii_roundtrip_lossless() {
+    roundtrip(IoMode::Baseline, 1e-5);
+}
+
+#[test]
+fn binary_roundtrip_exact() {
+    roundtrip(IoMode::Optimized, 0.0);
+}
+
+#[test]
+fn memory_roundtrip_exact() {
+    roundtrip(IoMode::InMemory, 0.0);
+}
+
+#[test]
+fn byte_volumes_ordered_like_the_paper() {
+    // baseline (ASCII, full flow) must cost several times the optimized
+    // (binary, restart-only) volume; in-memory costs nothing. Paper ratio:
+    // 5.0 MB / 1.2 MB ~ 4.2x.
+    let dir = tmp_dir("volumes");
+    let mut rng = Rng::new(9);
+    let (ny, nx) = (48, 258); // the `small` grid
+    let (out, u, v, p) = random_payload(&mut rng, 149, 10, ny * nx);
+    let flow = FlowSnapshot { u: &u, v: &v, p: &p, ny, nx };
+
+    let mut bytes = std::collections::BTreeMap::new();
+    for mode in [IoMode::Baseline, IoMode::Optimized, IoMode::InMemory] {
+        let mut iface = make_interface(mode, &dir, 1).unwrap();
+        let (_, st) = iface.exchange(0, &out, &flow).unwrap();
+        bytes.insert(mode.name(), st.bytes_written);
+    }
+    assert_eq!(bytes["in-memory"], 0);
+    assert!(bytes["optimized"] > 0);
+    let ratio = bytes["baseline"] as f64 / bytes["optimized"] as f64;
+    assert!(
+        ratio > 2.0,
+        "baseline/optimized byte ratio {ratio:.2} too small (paper ~4.2)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ascii_files_are_openfoam_flavoured() {
+    let dir = tmp_dir("foamcheck");
+    let mut rng = Rng::new(1);
+    let (out, u, v, p) = random_payload(&mut rng, 8, 3, 24);
+    let mut iface = make_interface(IoMode::Baseline, &dir, 2).unwrap();
+    let flow = FlowSnapshot { u: &u, v: &v, p: &p, ny: 4, nx: 6 };
+    iface.exchange(0, &out, &flow).unwrap();
+    let udir = dir.join("env002").join("0.U");
+    let text = std::fs::read_to_string(udir).unwrap();
+    assert!(text.contains("FoamFile"));
+    assert!(text.contains("internalField"));
+    std::fs::remove_dir_all(&dir).ok();
+}

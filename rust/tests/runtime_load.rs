@@ -1,0 +1,163 @@
+//! Integration: artifact loading + numeric round-trip through the PJRT
+//! runtime (the Rust half of the AOT contract; the Python half is
+//! python/tests/test_aot.py).
+
+use drlfoam::runtime::{literal_f32, scalar_f32, to_vec_f32, Manifest, Runtime};
+
+fn setup() -> (Manifest, Runtime) {
+    let m = Manifest::load("artifacts").expect("run `make artifacts`");
+    let rt = Runtime::new("artifacts").unwrap();
+    (m, rt)
+}
+
+#[test]
+fn cfd_period_runs_and_produces_physical_values() {
+    let (m, mut rt) = setup();
+    let v = m.variant("small").unwrap().clone();
+    rt.load(&v.cfd_period_file).unwrap();
+    let (u, vv, p) = m.load_state0("small").unwrap();
+    let dims = [v.ny as i64, v.nx as i64];
+    let args = [
+        literal_f32(&u, &dims).unwrap(),
+        literal_f32(&vv, &dims).unwrap(),
+        literal_f32(&p, &dims).unwrap(),
+        scalar_f32(0.0),
+    ];
+    let outs = rt.get(&v.cfd_period_file).unwrap().run(&args).unwrap();
+    assert_eq!(outs.len(), 6);
+    let u2 = to_vec_f32(&outs[0]).unwrap();
+    let probes = to_vec_f32(&outs[3]).unwrap();
+    let cd = to_vec_f32(&outs[4]).unwrap();
+    let cl = to_vec_f32(&outs[5]).unwrap();
+    assert_eq!(u2.len(), v.ny * v.nx);
+    assert_eq!(probes.len(), 149);
+    assert_eq!(cd.len(), v.substeps);
+    // every value finite
+    assert!(u2.iter().all(|x| x.is_finite()), "u has non-finite values");
+    assert!(probes.iter().all(|x| x.is_finite()));
+    assert!(cd.iter().all(|x| x.is_finite()), "cd {cd:?}");
+    assert!(cl.iter().all(|x| x.is_finite()));
+    // uncontrolled drag continues the manifest's base-flow value
+    let cd_mean = cd.iter().sum::<f32>() as f64 / cd.len() as f64;
+    assert!(
+        (cd_mean - v.cd0).abs() < 0.5,
+        "cd {cd_mean} vs cd0 {}",
+        v.cd0
+    );
+}
+
+#[test]
+fn cfd_period_is_deterministic() {
+    let (m, mut rt) = setup();
+    let v = m.variant("small").unwrap().clone();
+    rt.load(&v.cfd_period_file).unwrap();
+    let (u, vv, p) = m.load_state0("small").unwrap();
+    let dims = [v.ny as i64, v.nx as i64];
+    let mk = || {
+        [
+            literal_f32(&u, &dims).unwrap(),
+            literal_f32(&vv, &dims).unwrap(),
+            literal_f32(&p, &dims).unwrap(),
+            scalar_f32(0.7),
+        ]
+    };
+    let exe = rt.get(&v.cfd_period_file).unwrap();
+    let a = to_vec_f32(&exe.run(&mk()).unwrap()[0]).unwrap();
+    let b = to_vec_f32(&exe.run(&mk()).unwrap()[0]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn jet_action_changes_the_flow() {
+    let (m, mut rt) = setup();
+    let v = m.variant("small").unwrap().clone();
+    rt.load(&v.cfd_period_file).unwrap();
+    let (u, vv, p) = m.load_state0("small").unwrap();
+    let dims = [v.ny as i64, v.nx as i64];
+    let run = |jet: f32| {
+        let args = [
+            literal_f32(&u, &dims).unwrap(),
+            literal_f32(&vv, &dims).unwrap(),
+            literal_f32(&p, &dims).unwrap(),
+            scalar_f32(jet),
+        ];
+        let outs = rt.get(&v.cfd_period_file).unwrap().run(&args).unwrap();
+        to_vec_f32(&outs[5]).unwrap() // cl history
+    };
+    let cl0 = run(0.0);
+    let cl1 = run(1.0);
+    let diff: f32 = cl0
+        .iter()
+        .zip(&cl1)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>();
+    assert!(diff > 1e-3, "jet had no effect on lift: {diff}");
+}
+
+#[test]
+fn policy_apply_matches_manifest_shapes() {
+    let (m, mut rt) = setup();
+    rt.load(&m.drl.policy_apply_file).unwrap();
+    let params = m.load_params_init().unwrap();
+    let obs = vec![0.25f32; m.drl.n_obs];
+    let args = [
+        literal_f32(&params, &[params.len() as i64]).unwrap(),
+        literal_f32(&obs, &[1, m.drl.n_obs as i64]).unwrap(),
+    ];
+    let outs = rt.get(&m.drl.policy_apply_file).unwrap().run(&args).unwrap();
+    assert_eq!(outs.len(), 3);
+    let mu = to_vec_f32(&outs[0]).unwrap();
+    let logstd = to_vec_f32(&outs[1]).unwrap();
+    let value = to_vec_f32(&outs[2]).unwrap();
+    assert_eq!(mu.len(), 1);
+    assert_eq!(logstd.len(), 1);
+    assert_eq!(value.len(), 1);
+    // init: tiny mu head, logstd as configured
+    assert!(mu[0].abs() < 0.5, "mu {mu:?}");
+    assert!((logstd[0] as f64 - m.drl.init_logstd).abs() < 1e-5);
+}
+
+#[test]
+fn ppo_update_changes_params_within_adam_bound() {
+    let (m, mut rt) = setup();
+    rt.load(&m.drl.ppo_update_file).unwrap();
+    let n = m.drl.n_params;
+    let b = m.drl.minibatch;
+    let params = m.load_params_init().unwrap();
+    let zeros = vec![0f32; n];
+    let obs = vec![0.1f32; b * m.drl.n_obs];
+    let act = vec![0.05f32; b];
+    let logp = vec![-1.0f32; b];
+    let adv: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let ret = vec![0.5f32; b];
+    let args = [
+        literal_f32(&params, &[n as i64]).unwrap(),
+        literal_f32(&zeros, &[n as i64]).unwrap(),
+        literal_f32(&zeros, &[n as i64]).unwrap(),
+        scalar_f32(1.0),
+        literal_f32(&obs, &[b as i64, m.drl.n_obs as i64]).unwrap(),
+        literal_f32(&act, &[b as i64, 1]).unwrap(),
+        literal_f32(&logp, &[b as i64]).unwrap(),
+        literal_f32(&adv, &[b as i64]).unwrap(),
+        literal_f32(&ret, &[b as i64]).unwrap(),
+    ];
+    let outs = rt.get(&m.drl.ppo_update_file).unwrap().run(&args).unwrap();
+    assert_eq!(outs.len(), 4);
+    let new_params = to_vec_f32(&outs[0]).unwrap();
+    let stats = to_vec_f32(&outs[3]).unwrap();
+    assert_eq!(new_params.len(), n);
+    assert_eq!(stats.len(), 6);
+    assert!(stats.iter().all(|x| x.is_finite()), "stats {stats:?}");
+    let max_delta = params
+        .iter()
+        .zip(&new_params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_delta > 0.0, "update was a no-op");
+    // first Adam step is bounded by lr
+    assert!(
+        (max_delta as f64) <= m.drl.lr * 1.01,
+        "delta {max_delta} > lr {}",
+        m.drl.lr
+    );
+}

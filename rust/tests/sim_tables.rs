@@ -1,0 +1,146 @@
+//! Integration: the cluster DES reproduces the *shape* of the paper's
+//! Tables I/II and Figs 7-12 (who wins, where the cliffs fall, rough
+//! factors). Tolerances are generous on absolute numbers, tight on
+//! orderings and trends.
+
+use drlfoam::cluster::{simulate_training, Calibration, MpiScaling, SimConfig};
+use drlfoam::io_interface::IoMode;
+
+fn hours(c: &Calibration, envs: usize, ranks: usize, mode: IoMode) -> f64 {
+    simulate_training(
+        c,
+        &SimConfig {
+            n_envs: envs,
+            n_ranks: ranks,
+            episodes_total: 3000,
+            io_mode: mode,
+            seed: 1,
+        },
+    )
+    .total_s
+        / 3600.0
+}
+
+#[test]
+fn table1_absolute_durations_close_to_paper() {
+    let c = Calibration::paper_scale();
+    // paper column: (envs, ranks, hours)
+    let rows = [
+        (1, 1, 225.2),
+        (10, 1, 26.3),
+        (30, 1, 9.6),
+        (60, 1, 7.6),
+        (1, 2, 289.6),
+        (10, 2, 33.2),
+        (30, 2, 12.4),
+        (1, 5, 305.8),
+        (12, 5, 32.4),
+    ];
+    for (envs, ranks, want) in rows {
+        let got = hours(&c, envs, ranks, IoMode::Baseline);
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel < 0.25,
+            "envs={envs} ranks={ranks}: {got:.1} h vs paper {want} (rel {rel:.2})"
+        );
+    }
+}
+
+#[test]
+fn single_core_multi_env_is_the_best_hybrid() {
+    // the paper's core finding: for fixed total CPUs, ranks=1 wins
+    let c = Calibration::paper_scale();
+    for cpus in [10usize, 20, 60] {
+        let t1 = hours(&c, cpus, 1, IoMode::Baseline);
+        let t2 = hours(&c, cpus / 2, 2, IoMode::Baseline);
+        let t5 = hours(&c, cpus / 5, 5, IoMode::Baseline);
+        assert!(t1 < t2, "cpus={cpus}: ranks1 {t1:.1} !< ranks2 {t2:.1}");
+        assert!(t2 < t5, "cpus={cpus}: ranks2 {t2:.1} !< ranks5 {t5:.1}");
+    }
+}
+
+#[test]
+fn efficiency_cliff_past_30_envs_baseline_only() {
+    let c = Calibration::paper_scale();
+    let eff = |envs: usize, mode| {
+        let t1 = hours(&c, 1, 1, mode);
+        let t = hours(&c, envs, 1, mode);
+        100.0 * t1 / t / envs as f64
+    };
+    // paper Table I: 30 envs 78.4%, 60 envs 49.3%
+    let e30 = eff(30, IoMode::Baseline);
+    let e60 = eff(60, IoMode::Baseline);
+    assert!(e30 > 65.0 && e30 < 90.0, "eff(30) = {e30:.1}");
+    assert!(e60 > 40.0 && e60 < 62.0, "eff(60) = {e60:.1}");
+    assert!(e30 - e60 > 15.0, "no cliff: {e30:.1} -> {e60:.1}");
+    // optimized I/O removes the cliff (paper: ~78% at 60)
+    let o60 = eff(60, IoMode::Optimized);
+    assert!(o60 > 68.0, "optimized eff(60) = {o60:.1}");
+}
+
+#[test]
+fn table2_io_speedup_grows_with_envs() {
+    let c = Calibration::paper_scale();
+    // paper: disabling I/O buys 14% at 1 env, 37% at 60 envs
+    let gain = |envs: usize| {
+        let tb = hours(&c, envs, 1, IoMode::Baseline);
+        let td = hours(&c, envs, 1, IoMode::InMemory);
+        100.0 * (tb - td) / tb
+    };
+    let g1 = gain(1);
+    let g60 = gain(60);
+    assert!(g1 > 2.0 && g1 < 25.0, "gain(1) = {g1:.1}%");
+    assert!(g60 > 25.0 && g60 < 50.0, "gain(60) = {g60:.1}%");
+    assert!(g60 > g1 + 10.0, "gain must grow: {g1:.1} -> {g60:.1}");
+}
+
+#[test]
+fn optimized_tracks_io_disabled() {
+    // paper: T_optimized ~ T_io-disabled across the sweep
+    let c = Calibration::paper_scale();
+    for envs in [1usize, 10, 30, 60] {
+        let td = hours(&c, envs, 1, IoMode::InMemory);
+        let to = hours(&c, envs, 1, IoMode::Optimized);
+        assert!(
+            (to - td) / td < 0.12,
+            "envs={envs}: optimized {to:.1} vs disabled {td:.1}"
+        );
+    }
+}
+
+#[test]
+fn fig7_cfd_scaling_shape() {
+    let m = MpiScaling::default();
+    assert!(m.efficiency(2) > 0.85, "eff(2) = {}", m.efficiency(2));
+    assert!(m.efficiency(16) < 0.2, "eff(16) = {}", m.efficiency(16));
+    // monotone decreasing efficiency
+    let mut prev = f64::INFINITY;
+    for n in [1, 2, 4, 8, 16] {
+        let e = m.efficiency(n);
+        assert!(e <= prev + 1e-12, "eff not monotone at {n}");
+        prev = e;
+    }
+}
+
+#[test]
+fn headline_speedups() {
+    let c = Calibration::paper_scale();
+    let t11 = hours(&c, 1, 1, IoMode::Baseline);
+    let s_base = t11 / hours(&c, 60, 1, IoMode::Baseline);
+    let s_opt = t11 / hours(&c, 60, 1, IoMode::Optimized);
+    // paper: ~30x baseline, ~47x optimized on 60 cores
+    assert!(s_base > 24.0 && s_base < 38.0, "baseline speedup {s_base:.1}");
+    assert!(s_opt > 38.0 && s_opt < 56.0, "optimized speedup {s_opt:.1}");
+    assert!(s_opt > s_base * 1.25);
+}
+
+#[test]
+fn des_scales_to_any_env_count_deterministically() {
+    let c = Calibration::paper_scale();
+    for envs in [3usize, 7, 24, 48] {
+        let a = hours(&c, envs, 1, IoMode::Baseline);
+        let b = hours(&c, envs, 1, IoMode::Baseline);
+        assert_eq!(a, b);
+        assert!(a.is_finite() && a > 0.0);
+    }
+}
