@@ -1,0 +1,19 @@
+# Build-time entry points. Python runs ONLY here (AOT lowering); the Rust
+# side consumes the resulting artifacts/ directory at run time.
+
+PY ?= python3
+
+.PHONY: artifacts artifacts-paper ci
+
+# Standard artifact set: training/demo variant + the second-Reynolds
+# scenario, plus the B=8 batched-serving executable.
+artifacts:
+	cd python && $(PY) -m compile.aot --out ../artifacts --variants small,re200
+
+# Paper-fidelity grid (slow: long base-flow development).
+artifacts-paper:
+	cd python && $(PY) -m compile.aot --out ../artifacts --variants paper
+
+# Tier-1 gate (fmt, clippy, release build, tests).
+ci:
+	./ci.sh

@@ -1,0 +1,141 @@
+//! Bench: per-env vs central batched policy inference across environment
+//! counts — the hybrid-parallelization axis this repo's batched mode
+//! implements (paper section III).
+//!
+//! The scaling sweep runs on the `surrogate` scenario with the native
+//! policy twin, so it needs NO artifacts and isolates coordination cost
+//! (channel ping-pong + per-env dispatch vs one batched forward pass per
+//! actuation period). When AOT artifacts are present, a second section
+//! times the real XLA serving paths on the cylinder scenario.
+//!
+//! Run: `cargo bench --bench batched_inference`
+
+use std::sync::Arc;
+
+use drlfoam::coordinator::{EnvPool, PolicyServer, PoolConfig};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::io_interface::IoMode;
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::util::bench;
+
+fn surrogate_cfg(tag: &str, n_envs: usize) -> PoolConfig {
+    let work = std::env::temp_dir().join(format!("drlfoam-binf-{tag}{n_envs}"));
+    std::fs::create_dir_all(&work).unwrap();
+    PoolConfig {
+        artifact_dir: "artifacts".into(),
+        work_dir: work,
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        n_envs,
+        io_mode: IoMode::InMemory,
+        seed: 0,
+    }
+}
+
+fn main() {
+    let horizon = 50;
+    let mut results = Vec::new();
+
+    println!("== surrogate scenario, native policy (no artifacts) ==");
+    println!("{:<12} {:>5} {:>12} {:>12} {:>8}", "mode", "envs", "wall ms", "ms/period", "speedup");
+    for envs in [1usize, 2, 4, 8] {
+        let params =
+            Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(3));
+
+        let mut pool = EnvPool::standalone(&surrogate_cfg("pe", envs)).unwrap();
+        let r_per = bench::bench(
+            &format!("surrogate per-env inference x{envs}"),
+            1,
+            5,
+            || {
+                pool.rollout(&params, horizon, 0).unwrap();
+            },
+        );
+
+        let mut pool_b = EnvPool::standalone(&surrogate_cfg("ba", envs)).unwrap();
+        let mut server = PolicyServer::native(SURROGATE_N_OBS, SURROGATE_HIDDEN);
+        let r_bat = bench::bench(
+            &format!("surrogate batched inference x{envs}"),
+            1,
+            5,
+            || {
+                pool_b
+                    .rollout_batched(None, &mut server, &params, horizon, 0)
+                    .unwrap();
+            },
+        );
+
+        for (name, r) in [("per-env", &r_per), ("batched", &r_bat)] {
+            println!(
+                "{:<12} {:>5} {:>12.3} {:>12.4} {:>8}",
+                name,
+                envs,
+                r.mean_s * 1e3,
+                r.mean_s * 1e3 / horizon as f64,
+                if name == "batched" {
+                    format!("{:.2}x", r_per.mean_s / r_bat.mean_s)
+                } else {
+                    String::new()
+                }
+            );
+        }
+        results.push(r_per);
+        results.push(r_bat);
+    }
+
+    // --- real XLA serving paths, if artifacts are available
+    match Manifest::load("artifacts") {
+        Err(_) => println!("\n(no artifacts — skipping the XLA cylinder section)"),
+        Ok(m) => {
+            println!("\n== cylinder scenario, XLA policy serving ==");
+            let m = Arc::new(m);
+            let params = Arc::new(m.load_params_init().unwrap());
+            let envs = 4;
+            let horizon = 5;
+
+            let mut cfg = surrogate_cfg("xla-pe", envs);
+            cfg.scenario = "cylinder".into();
+            cfg.backend = PolicyBackendKind::Xla;
+            let mut pool = EnvPool::new(&cfg, &m).unwrap();
+            let r_per = bench::bench(
+                &format!("cylinder per-env XLA x{envs}"),
+                1,
+                3,
+                || {
+                    pool.rollout(&params, horizon, 0).unwrap();
+                },
+            );
+
+            let mut cfg_b = surrogate_cfg("xla-ba", envs);
+            cfg_b.scenario = "cylinder".into();
+            cfg_b.backend = PolicyBackendKind::Native; // workers don't serve
+            let mut pool_b = EnvPool::new(&cfg_b, &m).unwrap();
+            let mut rt = Runtime::new("artifacts").unwrap();
+            let mut server = PolicyServer::xla(&m.drl);
+            server.load_into(&mut rt).unwrap();
+            println!("server: {}", server.describe());
+            let r_bat = bench::bench(
+                &format!("cylinder batched XLA x{envs}"),
+                1,
+                3,
+                || {
+                    pool_b
+                        .rollout_batched(Some(&rt), &mut server, &params, horizon, 0)
+                        .unwrap();
+                },
+            );
+            println!(
+                "per-env {:.1} ms vs batched {:.1} ms per episode-set ({:.2}x)",
+                r_per.mean_s * 1e3,
+                r_bat.mean_s * 1e3,
+                r_per.mean_s / r_bat.mean_s
+            );
+            results.push(r_per);
+            results.push(r_bat);
+        }
+    }
+
+    bench::save("batched_inference", &results);
+}

@@ -36,6 +36,8 @@ fn main() {
                 artifact_dir: "artifacts".into(),
                 work_dir: work,
                 variant: "small".into(),
+                scenario: "cylinder".into(),
+                backend: drlfoam::drl::PolicyBackendKind::Xla,
                 n_envs: envs,
                 io_mode: IoMode::InMemory,
                 seed: 0,

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate for drlfoam-rs (run from the repo root).
+#
+# Mirrors ROADMAP.md's verify line plus the hygiene checks this project
+# holds PRs to:
+#   1. formatting            cargo fmt --check
+#   2. lints                 cargo clippy (changed modules; -D warnings)
+#   3. release build         cargo build --release
+#   4. tests                 cargo test -q
+#
+# Integration tests that execute AOT artifacts skip themselves gracefully
+# when `make artifacts` has not been run; the scenario-registry and
+# batched-inference tests (rust/tests/scenario_registry.rs) run on the
+# artifact-free surrogate path and must always pass.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "CI OK"

@@ -31,6 +31,7 @@ fn main() -> Result<()> {
             seed: 3,
             log_every: 1,
             quiet: true,
+            ..TrainConfig::default()
         };
         let s = train(&cfg)?;
         let last = s.log.last().unwrap();

@@ -31,6 +31,7 @@ fn main() -> Result<()> {
         seed: 0,
         log_every: 5,
         quiet: false,
+        ..TrainConfig::default()
     };
     println!(
         "training {} iterations x {} envs x {} periods (fast={fast})\n",

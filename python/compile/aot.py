@@ -118,7 +118,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--variants", default="small",
-                    help="comma-separated subset of: small,paper,tiny")
+                    help="comma-separated subset of: small,paper,tiny,re200")
+    ap.add_argument("--policy-batch", type=int, default=8,
+                    help="static batch of the batched-serving artifact "
+                         "(coordinator central inference); 1 disables it")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--base-flow-time", type=float, default=None,
                     help="override development time (t.u.) for all variants")
@@ -160,6 +163,15 @@ def main(argv=None):
     print("== lowering DRL executables ==", flush=True)
     with open(os.path.join(out, "policy_apply_b1.hlo.txt"), "w") as f:
         f.write(lower_policy_apply(1, use_pallas))
+    if args.policy_batch > 1:
+        # static-batch serving artifact for the coordinator's central
+        # batched-inference mode (rust/src/coordinator/policy_server.rs)
+        bfile = f"policy_apply_b{args.policy_batch}.hlo.txt"
+        manifest["artifacts"]["policy_apply_batch"] = {
+            "file": bfile, "batch": args.policy_batch,
+        }
+        with open(os.path.join(out, bfile), "w") as f:
+            f.write(lower_policy_apply(args.policy_batch, use_pallas))
     with open(os.path.join(out, manifest["artifacts"]["ppo_update"]["file"]),
               "w") as f:
         f.write(lower_ppo_update())

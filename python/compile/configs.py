@@ -120,9 +120,17 @@ PAPER = GridConfig(name="paper", ny=96, dt=0.002, substeps=20,
 TINY = GridConfig(name="tiny", ny=24, dt=0.008, substeps=4,
                   n_sweeps=30, base_flow_time=2.0, jet_width_deg=45.0)
 
-VARIANTS = {c.name: c for c in (SMALL, PAPER, TINY)}
+# Second-Reynolds-number scenario (`cylinder-re200` in the Rust scenario
+# registry): same geometry and grid as ``small`` but Re=200 — stronger,
+# less regular shedding, a harder control target. Halved viscosity only
+# *relaxes* the diffusion limit, so dt=5e-3 remains explicit-stable; the
+# wake needs a little longer to develop.
+RE200 = GridConfig(name="re200", ny=48, re=200.0, dt=0.005, substeps=10,
+                   n_sweeps=30, base_flow_time=80.0, jet_width_deg=34.0)
+
+VARIANTS = {c.name: c for c in (SMALL, PAPER, TINY, RE200)}
 
 DRL = DrlConfig()
 
-for _c in (SMALL, PAPER, TINY):
+for _c in (SMALL, PAPER, TINY, RE200):
     _c.check_stability()

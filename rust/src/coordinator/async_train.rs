@@ -54,11 +54,15 @@ pub fn train_async(cfg: &TrainConfig) -> Result<AsyncTrainSummary> {
     let mut rt = Runtime::new(&cfg.artifact_dir)?;
     rt.load(&manifest.drl.ppo_update_file)?;
 
+    // async mode has no common sync point to batch inference at, so the
+    // workers always serve their own policy (cfg.inference is ignored)
     let pool = EnvPool::new(
         &PoolConfig {
             artifact_dir: cfg.artifact_dir.clone(),
             work_dir: cfg.work_dir.clone(),
             variant: cfg.variant.clone(),
+            scenario: cfg.scenario.clone(),
+            backend: cfg.backend,
             n_envs: cfg.n_envs,
             io_mode: cfg.io_mode,
             seed: cfg.seed,

@@ -1,18 +1,26 @@
 //! L3 coordination: the paper's multi-environment parallel DRL training
 //! framework (Fig 4), in Rust.
 //!
-//! * [`pool`]  — N environment workers on OS threads, each owning a full
-//!   PJRT runtime + CFD environment + exchange interface; the agent
-//!   broadcasts parameters at iteration start and the workers roll out
-//!   episodes independently ("embarrassingly parallel" data collection).
+//! * [`pool`]  — N scenario workers on OS threads, each owning a full
+//!   environment instance (for CFD scenarios: a private PJRT runtime +
+//!   exchange interface); supports per-env serving and the lockstep
+//!   protocol behind the batched mode.
+//! * [`policy_server`] — central batched inference: one forward pass over
+//!   the whole `[N_envs, n_obs]` observation batch per actuation period
+//!   (the paper's hybrid-parallelization axis).
 //! * [`train`] — the synchronous PPO training loop: broadcast -> rollout
 //!   barrier -> GAE -> minibatch updates -> log, exactly the structure
-//!   whose scaling the paper studies.
+//!   whose scaling the paper studies; rollouts run in either inference
+//!   mode.
+//! * [`async_train`] — the barrier-free A3C-style variant (per-env
+//!   inference only: there is no common sync point to batch at).
 
 pub mod async_train;
+pub mod policy_server;
 pub mod pool;
 pub mod train;
 
-pub use pool::{EnvPool, EpisodeOut, EpisodeStats, PoolConfig};
 pub use async_train::{train_async, AsyncTrainSummary};
-pub use train::{train, TrainConfig, TrainSummary};
+pub use policy_server::PolicyServer;
+pub use pool::{EnvPool, EpisodeOut, EpisodeStats, LocalPolicy, PoolConfig};
+pub use train::{train, InferenceMode, TrainConfig, TrainSummary};

@@ -1,0 +1,200 @@
+//! Central batched policy server: the paper's hybrid-parallelization axis.
+//!
+//! The per-env mode gives every worker thread its own serving session and
+//! pays one XLA dispatch per environment per actuation period. This server
+//! instead collects the observations of *all* environments at the
+//! coordinator's sync barrier and runs ONE forward pass over the whole
+//! `[N_envs, n_obs]` batch per period:
+//!
+//! * **XLA backend** — uses the `policy_apply_b<B>` artifact when the
+//!   manifest ships one (observations padded up to the static batch B,
+//!   parameters device-resident between calls); falls back to per-row
+//!   B=1 calls against the same device-resident parameters otherwise.
+//! * **Native backend** — [`NativePolicy`] batched forward, used by
+//!   artifact-free scenarios (surrogate) and by the mode-equivalence test:
+//!   its per-row arithmetic is bitwise identical to the per-env path.
+//!
+//! Action *sampling* stays outside the server (the coordinator owns one
+//! RNG stream per environment, seeded exactly like the per-env workers, so
+//! the two inference modes emit identical actions for the same seed).
+
+use anyhow::{Context, Result};
+
+use crate::drl::policy::{NativePolicy, PolicyOutput};
+use crate::runtime::{to_vec_f32, DrlManifest, Runtime};
+
+enum ServerKind {
+    Xla {
+        /// B=1 artifact (fallback path)
+        b1_file: String,
+        /// static-batch artifact, when the manifest ships one
+        batch_file: Option<String>,
+        /// static batch dimension of `batch_file`
+        batch: usize,
+        /// device-resident parameters (refreshed by [`PolicyServer::set_params`])
+        params_buf: Option<xla::PjRtBuffer>,
+    },
+    Native {
+        net: NativePolicy,
+    },
+}
+
+/// Batched inference engine owned by the coordinator (see module docs).
+pub struct PolicyServer {
+    kind: ServerKind,
+    n_obs: usize,
+}
+
+impl PolicyServer {
+    /// XLA server over the manifest's policy artifacts. Call
+    /// [`PolicyServer::load_into`] once on the coordinator runtime before
+    /// serving.
+    pub fn xla(drl: &DrlManifest) -> PolicyServer {
+        PolicyServer {
+            kind: ServerKind::Xla {
+                b1_file: drl.policy_apply_file.clone(),
+                batch_file: drl.policy_apply_batch_file.clone(),
+                batch: drl.policy_batch.max(1),
+                params_buf: None,
+            },
+            n_obs: drl.n_obs,
+        }
+    }
+
+    /// Pure-Rust server (no artifacts, no runtime needed).
+    pub fn native(n_obs: usize, hidden: usize) -> PolicyServer {
+        PolicyServer {
+            kind: ServerKind::Native {
+                net: NativePolicy::new(n_obs, hidden),
+            },
+            n_obs,
+        }
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.n_obs
+    }
+
+    /// Human-readable serving-path description for logs and benches.
+    pub fn describe(&self) -> String {
+        match &self.kind {
+            ServerKind::Xla {
+                batch_file: Some(_),
+                batch,
+                ..
+            } => format!("xla batched (B={batch})"),
+            ServerKind::Xla { .. } => "xla per-row (no batch artifact)".to_string(),
+            ServerKind::Native { .. } => "native batched".to_string(),
+        }
+    }
+
+    /// Compile the artifacts this server will execute (XLA backend only).
+    pub fn load_into(&self, rt: &mut Runtime) -> Result<()> {
+        if let ServerKind::Xla {
+            b1_file,
+            batch_file,
+            ..
+        } = &self.kind
+        {
+            rt.load(b1_file)?;
+            if let Some(bf) = batch_file {
+                rt.load(bf)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Refresh the served parameters (uploads once per training iteration
+    /// on the XLA backend; the batch loop then reuses the device buffer).
+    pub fn set_params(&mut self, rt: Option<&Runtime>, params: &[f32]) -> Result<()> {
+        if let ServerKind::Xla { params_buf, .. } = &mut self.kind {
+            let rt = rt.context("XLA policy server needs the coordinator runtime")?;
+            *params_buf = Some(rt.upload_f32(params, &[params.len()])?);
+        }
+        Ok(())
+    }
+
+    /// One inference pass over the whole environment batch; `out[e]` is the
+    /// policy output for `obs[e]`.
+    pub fn infer_batch(
+        &self,
+        rt: Option<&Runtime>,
+        params: &[f32],
+        obs: &[Vec<f32>],
+    ) -> Result<Vec<PolicyOutput>> {
+        match &self.kind {
+            ServerKind::Native { net } => net.apply_batch(params, obs),
+            ServerKind::Xla {
+                b1_file,
+                batch_file,
+                batch,
+                params_buf,
+            } => {
+                let rt = rt.context("XLA policy server needs the coordinator runtime")?;
+                let pbuf = params_buf
+                    .as_ref()
+                    .context("PolicyServer::set_params not called")?;
+                let mut out = Vec::with_capacity(obs.len());
+                if let Some(bf) = batch_file {
+                    let exe = rt.get(bf)?;
+                    for chunk in obs.chunks(*batch) {
+                        // pad up to the static batch dimension
+                        let mut flat = vec![0.0f32; batch * self.n_obs];
+                        for (r, row) in chunk.iter().enumerate() {
+                            anyhow::ensure!(row.len() == self.n_obs, "obs len {}", row.len());
+                            flat[r * self.n_obs..(r + 1) * self.n_obs].copy_from_slice(row);
+                        }
+                        let obuf = rt.upload_f32(&flat, &[*batch, self.n_obs])?;
+                        let outs = exe.run_b(&[pbuf, &obuf])?;
+                        anyhow::ensure!(outs.len() == 3, "policy_apply returned {}", outs.len());
+                        let mu = to_vec_f32(&outs[0])?;
+                        let logstd = to_vec_f32(&outs[1])?[0] as f64;
+                        let value = to_vec_f32(&outs[2])?;
+                        for r in 0..chunk.len() {
+                            out.push(PolicyOutput {
+                                mu: mu[r] as f64,
+                                logstd,
+                                value: value[r] as f64,
+                            });
+                        }
+                    }
+                } else {
+                    // fallback: per-row B=1 calls, parameters still resident
+                    let exe = rt.get(b1_file)?;
+                    for row in obs {
+                        anyhow::ensure!(row.len() == self.n_obs, "obs len {}", row.len());
+                        let obuf = rt.upload_f32(row, &[1, self.n_obs])?;
+                        let outs = exe.run_b(&[pbuf, &obuf])?;
+                        anyhow::ensure!(outs.len() == 3, "policy_apply returned {}", outs.len());
+                        out.push(PolicyOutput {
+                            mu: to_vec_f32(&outs[0])?[0] as f64,
+                            logstd: to_vec_f32(&outs[1])?[0] as f64,
+                            value: to_vec_f32(&outs[2])?[0] as f64,
+                        });
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_server_matches_native_policy() {
+        let net = NativePolicy::new(5, 8);
+        let params = net.init_params(2);
+        let server = PolicyServer::native(5, 8);
+        let obs: Vec<Vec<f32>> = vec![vec![0.1; 5], vec![-0.3; 5]];
+        let outs = server.infer_batch(None, &params, &obs).unwrap();
+        for (row, o) in obs.iter().zip(&outs) {
+            let single = net.apply(&params, row).unwrap();
+            assert_eq!(single.mu, o.mu);
+            assert_eq!(single.value, o.value);
+        }
+        assert!(server.describe().contains("native"));
+    }
+}

@@ -1,31 +1,50 @@
 //! Multi-environment worker pool.
 //!
 //! Mirrors the paper's resource model: each environment is an independent
-//! CFD instance (here: an OS thread owning its own PJRT client, compiled
-//! executables, flow state and exchange interface). Parameters are
-//! broadcast at episode boundaries; trajectories flow back over channels.
+//! instance of the configured *scenario* (an OS thread owning its own
+//! [`Environment`] — for cylinder scenarios that means a private PJRT
+//! client, compiled executables, flow state and exchange interface).
 //! On this 1-core testbed threads interleave rather than truly parallelise
 //! — the *structure* is the paper's, and the cluster DES (rust/src/cluster)
 //! projects the measured per-component costs onto 60 cores.
+//!
+//! Two rollout modes (the paper's hybrid-parallelization axis):
+//! * [`EnvPool::rollout`] — *per-env inference*: parameters are broadcast
+//!   at episode boundaries and each worker serves its own policy
+//!   ([`LocalPolicy`]); whole trajectories flow back over channels.
+//! * [`EnvPool::rollout_batched`] — *central batched inference*: workers
+//!   only advance the CFD; at every actuation period the coordinator
+//!   gathers all observations at a sync barrier and a
+//!   [`PolicyServer`](super::policy_server::PolicyServer) runs one batched
+//!   forward pass for the whole environment set.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::drl::policy::PolicySession;
+use crate::coordinator::policy_server::PolicyServer;
+use crate::drl::policy::{NativePolicy, PolicyBackendKind, PolicyOutput, PolicySession};
 use crate::drl::{Policy, Trajectory, Transition};
-use crate::env::CfdEnv;
-use crate::io_interface::{make_interface, IoMode, IoStats};
+use crate::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use crate::env::{Environment, StepResult};
+use crate::io_interface::{IoMode, IoStats};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
 
+/// Static configuration shared by every worker of one pool.
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
     pub artifact_dir: std::path::PathBuf,
     pub work_dir: std::path::PathBuf,
+    /// Manifest variant for scenarios that do not pin one (e.g. `cylinder`).
     pub variant: String,
+    /// Scenario registry name (see [`crate::env::scenario::SCENARIOS`]).
+    pub scenario: String,
+    /// Per-env serving engine for [`EnvPool::rollout`] (ignored by the
+    /// batched mode, where the coordinator's server does the inference).
+    pub backend: PolicyBackendKind,
     pub n_envs: usize,
     pub io_mode: IoMode,
     pub seed: u64,
@@ -45,6 +64,7 @@ pub struct EpisodeStats {
     pub io: IoStats,
 }
 
+/// One finished episode: who produced it, the trajectory, and its costs.
 pub struct EpisodeOut {
     pub env_id: usize,
     pub traj: Trajectory,
@@ -52,36 +72,85 @@ pub struct EpisodeOut {
 }
 
 enum Job {
+    /// Per-env mode: roll a whole episode locally.
     Rollout {
         params: Arc<Vec<f32>>,
         horizon: usize,
         /// decorrelates exploration across envs and iterations
         episode_seed: u64,
     },
+    /// Batched mode: reset the environment, reply with the initial obs.
+    Reset,
+    /// Batched mode: advance one actuation period with this action.
+    Step { action: f64 },
     Shutdown,
 }
 
+/// Worker -> coordinator message for the lockstep (batched) protocol.
+enum LockstepReply {
+    Obs { env_id: usize, obs: Vec<f32> },
+    Step { env_id: usize, result: StepResult },
+}
+
+/// Deterministic per-(iteration, env) exploration seed; shared by the
+/// per-env dispatch path and the batched coordinator so the two inference
+/// modes sample identical action sequences.
+fn episode_seed(episode_index: u64, env_id: usize) -> u64 {
+    episode_index
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(env_id as u64)
+}
+
+/// N scenario workers plus the channels to drive them (see module docs).
 pub struct EnvPool {
     job_txs: Vec<Sender<Job>>,
     results: Receiver<Result<EpisodeOut>>,
+    lockstep: Receiver<Result<LockstepReply>>,
     joins: Vec<Option<JoinHandle<()>>>,
+    seed: u64,
+    /// (n_obs, hidden) the workers' environments/policies are sized to
+    dims: (usize, usize),
 }
 
 impl EnvPool {
+    /// Pool over AOT artifacts (cylinder scenarios, XLA policy serving).
     pub fn new(cfg: &PoolConfig, manifest: &Arc<Manifest>) -> Result<Self> {
+        Self::spawn(cfg, Some(Arc::clone(manifest)))
+    }
+
+    /// Artifact-free pool: surrogate scenario + native policy only (CI and
+    /// scaling studies with nothing compiled).
+    pub fn standalone(cfg: &PoolConfig) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.backend == PolicyBackendKind::Native,
+            "standalone pools cannot serve an XLA policy (use PolicyBackendKind::Native)"
+        );
+        Self::spawn(cfg, None)
+    }
+
+    fn spawn(cfg: &PoolConfig, manifest: Option<Arc<Manifest>>) -> Result<Self> {
+        // reject unknown scenario names here, in the caller's thread, so
+        // the error is immediate instead of a dead worker
+        scenario::spec(&cfg.scenario)?;
+        let dims = match &manifest {
+            Some(m) => (m.drl.n_obs, m.drl.hidden),
+            None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
+        };
         let mut job_txs = Vec::with_capacity(cfg.n_envs);
         let mut joins = Vec::with_capacity(cfg.n_envs);
         // one shared result channel: both the synchronous barrier and the
         // asynchronous trainer consume from it
         let (tx_out, rx_out) = channel::<Result<EpisodeOut>>();
+        let (tx_step, rx_step) = channel::<Result<LockstepReply>>();
         for env_id in 0..cfg.n_envs {
             let (tx_job, rx_job) = channel::<Job>();
-            let m = Arc::clone(manifest);
+            let m = manifest.clone();
             let cfg = cfg.clone();
             let tx = tx_out.clone();
+            let txs = tx_step.clone();
             let join = std::thread::Builder::new()
                 .name(format!("env-{env_id}"))
-                .spawn(move || worker_main(env_id, cfg, m, rx_job, tx))
+                .spawn(move || worker_main(env_id, cfg, m, rx_job, tx, txs))
                 .context("spawning env worker")?;
             job_txs.push(tx_job);
             joins.push(Some(join));
@@ -89,12 +158,25 @@ impl EnvPool {
         Ok(EnvPool {
             job_txs,
             results: rx_out,
+            lockstep: rx_step,
             joins,
+            seed: cfg.seed,
+            dims,
         })
     }
 
     pub fn n_envs(&self) -> usize {
         self.job_txs.len()
+    }
+
+    /// Observation width of the workers' environments.
+    pub fn n_obs(&self) -> usize {
+        self.dims.0
+    }
+
+    /// Hidden width the standalone native policy is sized to.
+    pub fn hidden(&self) -> usize {
+        self.dims.1
     }
 
     /// Dispatch one episode to a specific environment (async mode).
@@ -109,9 +191,7 @@ impl EnvPool {
             .send(Job::Rollout {
                 params: Arc::clone(params),
                 horizon,
-                episode_seed: episode_index
-                    .wrapping_mul(0x9E3779B97F4A7C15)
-                    .wrapping_add(env_id as u64),
+                episode_seed: episode_seed(episode_index, env_id),
             })
             .context("worker channel closed")
     }
@@ -121,8 +201,9 @@ impl EnvPool {
         self.results.recv().context("all workers died")?
     }
 
-    /// Roll out one episode on every environment (the paper's synchronous
-    /// iteration); blocks until all trajectories arrive (episode barrier).
+    /// Roll out one episode on every environment with per-env inference
+    /// (the paper's synchronous iteration); blocks until all trajectories
+    /// arrive (episode barrier).
     pub fn rollout(
         &mut self,
         params: &Arc<Vec<f32>>,
@@ -139,6 +220,140 @@ impl EnvPool {
         outs.sort_by_key(|o| o.env_id);
         Ok(outs)
     }
+
+    /// Best-effort root cause when a worker goes away mid-lockstep: a
+    /// worker that fails setup reports on the results channel and exits,
+    /// which the lockstep path would otherwise only see as a dead channel.
+    fn closed_reason(&self) -> anyhow::Error {
+        match self.results.try_recv() {
+            Ok(Err(e)) => e.context("env worker failed"),
+            _ => anyhow::anyhow!("worker channel closed"),
+        }
+    }
+
+    fn recv_lockstep(&self) -> Result<LockstepReply> {
+        match self.lockstep.recv() {
+            Ok(r) => r,
+            Err(_) => Err(self.closed_reason()),
+        }
+    }
+
+    /// Roll out one episode on every environment with CENTRAL batched
+    /// inference: per actuation period the coordinator gathers all
+    /// observations (sync barrier), `server` runs one batched forward
+    /// pass, and the sampled actions are scattered back to the workers.
+    ///
+    /// Exploration uses the same per-(iteration, env) seed derivation as
+    /// [`EnvPool::rollout`], so with a bitwise-matching server (native
+    /// backend both sides) the two modes produce identical actions.
+    ///
+    /// `rt` is the coordinator runtime holding the server's compiled
+    /// artifacts (`None` for native servers).
+    pub fn rollout_batched(
+        &mut self,
+        rt: Option<&Runtime>,
+        server: &mut PolicyServer,
+        params: &Arc<Vec<f32>>,
+        horizon: usize,
+        iteration: u64,
+    ) -> Result<Vec<EpisodeOut>> {
+        let n = self.job_txs.len();
+        anyhow::ensure!(
+            server.n_obs() == self.dims.0,
+            "server n_obs {} != pool n_obs {}",
+            server.n_obs(),
+            self.dims.0
+        );
+        let t_wall = std::time::Instant::now();
+        server.set_params(rt, params)?;
+        let policy = Policy::new(server.n_obs());
+        let mut rngs: Vec<Rng> = (0..n)
+            .map(|e| Rng::new(self.seed ^ episode_seed(iteration, e)))
+            .collect();
+
+        for tx in &self.job_txs {
+            tx.send(Job::Reset).map_err(|_| self.closed_reason())?;
+        }
+        let mut obs_all: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for _ in 0..n {
+            match self.recv_lockstep()? {
+                LockstepReply::Obs { env_id, obs } => obs_all[env_id] = obs,
+                LockstepReply::Step { .. } => bail!("unexpected step reply during reset"),
+            }
+        }
+
+        let mut trajs: Vec<Trajectory> = (0..n)
+            .map(|e| Trajectory {
+                env_id: e,
+                ..Default::default()
+            })
+            .collect();
+        let mut stats = vec![EpisodeStats::default(); n];
+        let mut policy_total = 0.0f64;
+
+        for _t in 0..horizon {
+            let tp = std::time::Instant::now();
+            let pouts = server.infer_batch(rt, params, &obs_all)?;
+            policy_total += tp.elapsed().as_secs_f64();
+
+            let mut actions: Vec<(f64, f64)> = Vec::with_capacity(n);
+            for e in 0..n {
+                let (a, logp) = policy.sample(&pouts[e], &mut rngs[e]);
+                actions.push((a, logp));
+                self.job_txs[e]
+                    .send(Job::Step { action: a })
+                    .map_err(|_| self.closed_reason())?;
+            }
+            for _ in 0..n {
+                match self.recv_lockstep()? {
+                    LockstepReply::Step { env_id, result: sr } => {
+                        let (a, logp) = actions[env_id];
+                        let st = &mut stats[env_id];
+                        st.cfd_s += sr.timings.cfd_s;
+                        st.io_s += sr.timings.io_s;
+                        st.io.accumulate(&sr.io);
+                        st.reward_sum += sr.reward;
+                        st.cd_mean += sr.cd_mean / horizon as f64;
+                        st.cl_abs_mean += sr.cl_mean.abs() / horizon as f64;
+                        st.jet_final = sr.jet;
+                        trajs[env_id].transitions.push(Transition {
+                            obs: std::mem::take(&mut obs_all[env_id]),
+                            action: a,
+                            logp,
+                            reward: sr.reward,
+                            value: pouts[env_id].value,
+                        });
+                        obs_all[env_id] = sr.obs;
+                    }
+                    LockstepReply::Obs { .. } => bail!("unexpected reset reply during step"),
+                }
+            }
+        }
+
+        // bootstrap values for the truncated horizon, one last batch pass
+        let tp = std::time::Instant::now();
+        let pouts = server.infer_batch(rt, params, &obs_all)?;
+        policy_total += tp.elapsed().as_secs_f64();
+        let wall = t_wall.elapsed().as_secs_f64();
+
+        Ok(trajs
+            .into_iter()
+            .zip(stats)
+            .enumerate()
+            .map(|(e, (mut traj, mut st))| {
+                traj.last_value = pouts[e].value;
+                // the batched pass serves all envs at once; attribute an
+                // equal share so per-episode stats stay comparable
+                st.policy_s = policy_total / n as f64;
+                st.wall_s = wall;
+                EpisodeOut {
+                    env_id: e,
+                    traj,
+                    stats: st,
+                }
+            })
+            .collect())
+    }
 }
 
 impl Drop for EnvPool {
@@ -154,35 +369,126 @@ impl Drop for EnvPool {
     }
 }
 
+/// The per-env serving engine (one per worker; also reused by the CLI's
+/// one-shot `episode` command). XLA serving compiles into and executes on
+/// the *environment's* runtime, so a worker runs exactly one PJRT client.
+pub enum LocalPolicy {
+    /// The `policy_apply` artifact on the environment's runtime;
+    /// parameters uploaded once per episode ([`PolicySession`]).
+    Xla {
+        file: String,
+        n_obs: usize,
+        session: Option<PolicySession>,
+    },
+    /// Pure-Rust forward pass; no runtime at all.
+    Native(NativePolicy),
+}
+
+impl LocalPolicy {
+    /// XLA serving over the manifest's policy artifact (lazily compiled
+    /// into the environment's runtime at the first episode).
+    pub fn xla(drl: &crate::runtime::DrlManifest) -> Self {
+        LocalPolicy::Xla {
+            file: drl.policy_apply_file.clone(),
+            n_obs: drl.n_obs,
+            session: None,
+        }
+    }
+
+    /// Native serving sized to (n_obs, hidden).
+    pub fn native(n_obs: usize, hidden: usize) -> Self {
+        LocalPolicy::Native(NativePolicy::new(n_obs, hidden))
+    }
+
+    /// Params are constant for a whole episode: upload once (perf fast
+    /// path, 3.1x on serving latency — EXPERIMENTS.md section Perf).
+    pub fn begin_episode(&mut self, env: &mut dyn Environment, params: &[f32]) -> Result<()> {
+        if let LocalPolicy::Xla {
+            file,
+            n_obs,
+            session,
+        } = self
+        {
+            let rt = env.runtime_mut().context(
+                "the xla policy backend needs an XLA-backed scenario (try --backend native)",
+            )?;
+            rt.load(file)?;
+            *session = Some(PolicySession::new(rt, params, *n_obs)?);
+        }
+        Ok(())
+    }
+
+    /// Evaluate the policy on one observation.
+    pub fn apply(
+        &self,
+        env: &mut dyn Environment,
+        params: &[f32],
+        obs: &[f32],
+    ) -> Result<PolicyOutput> {
+        match self {
+            LocalPolicy::Xla { file, session, .. } => {
+                let rt = env
+                    .runtime_mut()
+                    .context("the xla policy backend needs an XLA-backed scenario")?;
+                let exe = rt.get(file)?;
+                session
+                    .as_ref()
+                    .context("begin_episode not called")?
+                    .apply(rt, exe, obs)
+            }
+            LocalPolicy::Native(net) => net.apply(params, obs),
+        }
+    }
+}
+
 fn worker_main(
     env_id: usize,
     cfg: PoolConfig,
-    manifest: Arc<Manifest>,
+    manifest: Option<Arc<Manifest>>,
     rx: Receiver<Job>,
     tx: Sender<Result<EpisodeOut>>,
+    tx_step: Sender<Result<LockstepReply>>,
 ) {
-    // Each worker owns a full runtime: PJRT clients are not Send/Sync.
-    let setup = (|| -> Result<(Runtime, CfdEnv, Policy)> {
-        let mut rt = Runtime::new(&cfg.artifact_dir)?;
-        let variant = manifest.variant(&cfg.variant)?.clone();
-        rt.load(&variant.cfd_period_file)?;
-        rt.load(&manifest.drl.policy_apply_file)?;
-        let state0 = manifest.load_state0(&cfg.variant)?;
-        let exchange = make_interface(cfg.io_mode, &cfg.work_dir, env_id)?;
-        let env = CfdEnv::new(
-            variant,
-            state0,
-            manifest.drl.action_smoothing_beta,
-            manifest.drl.reward_lift_penalty,
-            exchange,
-        );
-        let policy = Policy::new(manifest.drl.n_obs);
-        Ok((rt, env, policy))
+    // Environments and PJRT clients are built *inside* the thread: neither
+    // is Send. Only the scenario name + config ingredients crossed over.
+    let setup = (|| -> Result<(Box<dyn Environment>, LocalPolicy, Policy)> {
+        let ctx = ScenarioContext {
+            artifact_dir: &cfg.artifact_dir,
+            work_dir: &cfg.work_dir,
+            env_id,
+            io_mode: cfg.io_mode,
+            manifest: manifest.as_deref(),
+            variant: &cfg.variant,
+            seed: cfg.seed,
+        };
+        let env = scenario::build(&cfg.scenario, &ctx)?;
+        let lp = match cfg.backend {
+            PolicyBackendKind::Xla => {
+                let m = manifest
+                    .as_ref()
+                    .context("XLA policy backend requires AOT artifacts")?;
+                LocalPolicy::xla(&m.drl)
+            }
+            PolicyBackendKind::Native => {
+                let (n_obs, hidden) = match &manifest {
+                    Some(m) => (m.drl.n_obs, m.drl.hidden),
+                    None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
+                };
+                LocalPolicy::native(n_obs, hidden)
+            }
+        };
+        let policy = Policy::new(env.n_obs());
+        Ok((env, lp, policy))
     })();
 
-    let (rt, mut env, policy) = match setup {
+    let (mut env, mut lp, policy) = match setup {
         Ok(x) => x,
         Err(e) => {
+            // the lockstep coordinator waits on the step channel, the
+            // episode coordinator on the results channel: report the
+            // setup failure on BOTH so neither rollout mode can hang
+            // waiting for a worker that will never reply
+            let _ = tx_step.send(Err(anyhow::anyhow!("env worker setup failed: {e:#}")));
             let _ = tx.send(Err(e));
             return;
         }
@@ -198,10 +504,9 @@ fn worker_main(
             } => {
                 let out = run_episode(
                     env_id,
-                    &rt,
-                    &mut env,
+                    env.as_mut(),
+                    &mut lp,
                     &policy,
-                    &manifest,
                     &params,
                     horizon,
                     cfg.seed ^ episode_seed,
@@ -210,27 +515,35 @@ fn worker_main(
                     break;
                 }
             }
+            Job::Reset => {
+                let r = env.reset().map(|obs| LockstepReply::Obs { env_id, obs });
+                if tx_step.send(r).is_err() {
+                    break;
+                }
+            }
+            Job::Step { action } => {
+                let r = env
+                    .step(action)
+                    .map(|result| LockstepReply::Step { env_id, result });
+                if tx_step.send(r).is_err() {
+                    break;
+                }
+            }
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_episode(
     env_id: usize,
-    rt: &Runtime,
-    env: &mut CfdEnv,
+    env: &mut dyn Environment,
+    lp: &mut LocalPolicy,
     policy: &Policy,
-    manifest: &Manifest,
-    params: &[f32],
+    params: &Arc<Vec<f32>>,
     horizon: usize,
     seed: u64,
 ) -> Result<EpisodeOut> {
     let t_wall = std::time::Instant::now();
-    let cfd_exe = rt.get(&env.variant.cfd_period_file)?;
-    let pol_exe = rt.get(&manifest.drl.policy_apply_file)?;
-    // params are constant for the whole episode: upload once (perf fast
-    // path, 3.1x on serving latency — EXPERIMENTS.md section Perf)
-    let session = PolicySession::new(rt, params, manifest.drl.n_obs)?;
+    lp.begin_episode(env, params)?;
     let mut rng = Rng::new(seed);
 
     let mut stats = EpisodeStats::default();
@@ -239,14 +552,14 @@ fn run_episode(
         ..Default::default()
     };
 
-    let mut obs = env.reset(cfd_exe)?;
+    let mut obs = env.reset()?;
     for _t in 0..horizon {
         let tp = std::time::Instant::now();
-        let pout = session.apply(rt, pol_exe, &obs)?;
+        let pout = lp.apply(env, params, &obs)?;
         let (action, logp) = policy.sample(&pout, &mut rng);
         stats.policy_s += tp.elapsed().as_secs_f64();
 
-        let sr = env.step(cfd_exe, action)?;
+        let sr = env.step(action)?;
         stats.cfd_s += sr.timings.cfd_s;
         stats.io_s += sr.timings.io_s;
         stats.io.accumulate(&sr.io);
@@ -266,7 +579,7 @@ fn run_episode(
     }
     // bootstrap value for the truncated horizon
     let tp = std::time::Instant::now();
-    traj.last_value = session.apply(rt, pol_exe, &obs)?.value;
+    traj.last_value = lp.apply(env, params, &obs)?.value;
     stats.policy_s += tp.elapsed().as_secs_f64();
     stats.wall_s = t_wall.elapsed().as_secs_f64();
 

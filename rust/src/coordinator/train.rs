@@ -6,11 +6,43 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::policy_server::PolicyServer;
 use crate::coordinator::pool::{EnvPool, PoolConfig};
+use crate::drl::policy::PolicyBackendKind;
 use crate::drl::{Batch, PpoTrainer};
 use crate::io_interface::IoMode;
 use crate::runtime::{write_f32_bin, Manifest, Runtime};
 use crate::util::rng::Rng;
+
+/// Where policy inference runs during rollouts (the paper's
+/// hybrid-parallelization axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferenceMode {
+    /// Each env worker serves its own policy (the validated baseline).
+    PerEnv,
+    /// The coordinator batches all envs' observations at a sync barrier
+    /// and runs one forward pass per actuation period.
+    Batched,
+}
+
+impl InferenceMode {
+    /// Parse a CLI/config string; the error lists the accepted values.
+    pub fn parse(s: &str) -> Result<InferenceMode> {
+        match s {
+            "per-env" | "perenv" | "local" => Ok(InferenceMode::PerEnv),
+            "batched" | "central" => Ok(InferenceMode::Batched),
+            _ => anyhow::bail!("unknown inference mode {s:?} (accepted: per-env, batched)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`InferenceMode::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferenceMode::PerEnv => "per-env",
+            InferenceMode::Batched => "batched",
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -18,8 +50,14 @@ pub struct TrainConfig {
     pub work_dir: std::path::PathBuf,
     pub out_dir: std::path::PathBuf,
     pub variant: String,
+    /// Scenario registry name (cylinder, cylinder-re200, surrogate, ...).
+    pub scenario: String,
     pub n_envs: usize,
     pub io_mode: IoMode,
+    /// Per-env vs central batched policy serving during rollouts.
+    pub inference: InferenceMode,
+    /// Serving engine for per-env mode (XLA artifact or native twin).
+    pub backend: PolicyBackendKind,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
     /// training iterations == episodes per environment
@@ -38,8 +76,11 @@ impl Default for TrainConfig {
             work_dir: "out/work".into(),
             out_dir: "out".into(),
             variant: "small".into(),
+            scenario: "cylinder".into(),
             n_envs: 1,
             io_mode: IoMode::InMemory,
+            inference: InferenceMode::PerEnv,
+            backend: PolicyBackendKind::Xla,
             horizon: 100,
             iterations: 100,
             epochs: 4,
@@ -83,15 +124,39 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     std::fs::create_dir_all(&cfg.work_dir)?;
     let manifest = Arc::new(Manifest::load(&cfg.artifact_dir)?);
 
-    // master-side runtime for ppo_update
+    // master-side runtime for ppo_update (and, in batched mode, for the
+    // central policy server's artifacts)
     let mut rt = Runtime::new(&cfg.artifact_dir)?;
     rt.load(&manifest.drl.ppo_update_file)?;
+    let mut server = match cfg.inference {
+        InferenceMode::PerEnv => None,
+        InferenceMode::Batched => {
+            let s = match cfg.backend {
+                PolicyBackendKind::Xla => {
+                    let s = PolicyServer::xla(&manifest.drl);
+                    s.load_into(&mut rt)?;
+                    s
+                }
+                PolicyBackendKind::Native => {
+                    PolicyServer::native(manifest.drl.n_obs, manifest.drl.hidden)
+                }
+            };
+            if !cfg.quiet {
+                println!("batched inference: {}", s.describe());
+            }
+            Some(s)
+        }
+    };
 
     let mut pool = EnvPool::new(
         &PoolConfig {
             artifact_dir: cfg.artifact_dir.clone(),
             work_dir: cfg.work_dir.clone(),
             variant: cfg.variant.clone(),
+            scenario: cfg.scenario.clone(),
+            // in batched mode the workers never serve the policy; the
+            // LocalPolicy is lazy, so passing the backend through is free
+            backend: cfg.backend,
             n_envs: cfg.n_envs,
             io_mode: cfg.io_mode,
             seed: cfg.seed,
@@ -115,7 +180,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     for it in 0..cfg.iterations {
         let t0 = Instant::now();
         let params = Arc::new(trainer.params.clone());
-        let outs = pool.rollout(&params, cfg.horizon, it as u64)?;
+        let outs = match &mut server {
+            None => pool.rollout(&params, cfg.horizon, it as u64)?,
+            Some(s) => pool.rollout_batched(Some(&rt), s, &params, cfg.horizon, it as u64)?,
+        };
         let rollout_s = t0.elapsed().as_secs_f64();
         episodes_done += outs.len();
 

@@ -23,6 +23,7 @@ pub struct Trajectory {
 }
 
 impl Trajectory {
+    /// Number of transitions (actuation periods) collected.
     pub fn len(&self) -> usize {
         self.transitions.len()
     }
@@ -31,6 +32,7 @@ impl Trajectory {
         self.transitions.is_empty()
     }
 
+    /// Undiscounted episode return.
     pub fn total_reward(&self) -> f64 {
         self.transitions.iter().map(|t| t.reward).sum()
     }
@@ -88,6 +90,7 @@ impl Batch {
         b
     }
 
+    /// Number of samples (transitions across all trajectories).
     pub fn len(&self) -> usize {
         self.act.len()
     }

@@ -8,5 +8,5 @@ pub mod policy;
 pub mod trainer;
 
 pub use buffer::{Batch, Trajectory, Transition};
-pub use policy::{Policy, PolicyOutput};
+pub use policy::{NativePolicy, Policy, PolicyBackendKind, PolicyOutput, PolicySession};
 pub use trainer::{PpoTrainer, UpdateStats};

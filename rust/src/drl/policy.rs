@@ -1,12 +1,25 @@
-//! Policy serving: wrap the `policy_apply` artifact + Gaussian sampling.
+//! Policy serving: the `policy_apply` XLA artifact, a pure-Rust twin of
+//! the same MLP for artifact-free scenarios, and Gaussian sampling.
+//!
+//! Three serving paths, slowest to fastest on the multi-env hot loop:
+//! * [`Policy::apply`] — one XLA call per observation, parameters uploaded
+//!   every call (simple; used by one-shot CLI commands).
+//! * [`PolicySession::apply`] — one XLA call per observation with the
+//!   parameters resident on device for the whole episode (the per-env
+//!   worker fast path).
+//! * [`NativePolicy`] / the coordinator's `PolicyServer` — centralised
+//!   inference over the *whole environment batch* per actuation period
+//!   (the paper's hybrid-parallelization axis; one forward pass instead of
+//!   `N_envs` dispatches).
 
 use anyhow::Result;
 
-use crate::runtime::{literal_f32, to_vec_f32, Executable, Runtime};
+use crate::runtime::{literal_f32, to_vec_f32, DrlManifest, Executable, Runtime};
 use crate::util::rng::Rng;
 
 const LOG_2PI: f64 = 1.8378770664093453;
 
+/// One policy evaluation: Gaussian head mean/log-std plus the value head.
 #[derive(Clone, Debug)]
 pub struct PolicyOutput {
     pub mu: f64,
@@ -14,11 +27,42 @@ pub struct PolicyOutput {
     pub value: f64,
 }
 
+/// Which engine evaluates the policy network inside an env worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyBackendKind {
+    /// The AOT-compiled `policy_apply` artifact on a PJRT runtime.
+    Xla,
+    /// The pure-Rust [`NativePolicy`] twin (no artifacts required).
+    Native,
+}
+
+impl PolicyBackendKind {
+    /// Parse a CLI/config string; the error lists the accepted values.
+    pub fn parse(s: &str) -> Result<PolicyBackendKind> {
+        match s {
+            "xla" => Ok(PolicyBackendKind::Xla),
+            "native" => Ok(PolicyBackendKind::Native),
+            _ => anyhow::bail!("unknown policy backend {s:?} (accepted: xla, native)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`PolicyBackendKind::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyBackendKind::Xla => "xla",
+            PolicyBackendKind::Native => "native",
+        }
+    }
+}
+
+/// Stateless helper around the XLA serving path: shape checks, sampling,
+/// and log-density math shared by every serving engine.
 pub struct Policy {
     n_obs: usize,
 }
 
 impl Policy {
+    /// `n_obs` is the observation width the policy artifact was lowered at.
     pub fn new(n_obs: usize) -> Self {
         Policy { n_obs }
     }
@@ -70,6 +114,7 @@ pub struct PolicySession {
 }
 
 impl PolicySession {
+    /// Upload `params` once; `n_obs` must match the lowered artifact.
     pub fn new(rt: &Runtime, params: &[f32], n_obs: usize) -> Result<Self> {
         Ok(PolicySession {
             params_buf: rt.upload_f32(params, &[params.len()])?,
@@ -77,6 +122,7 @@ impl PolicySession {
         })
     }
 
+    /// One B=1 forward pass against the device-resident parameters.
     pub fn apply(&self, rt: &Runtime, exe: &Executable, obs: &[f32]) -> Result<PolicyOutput> {
         anyhow::ensure!(obs.len() == self.n_obs, "obs len {}", obs.len());
         let obs_buf = rt.upload_f32(obs, &[1, self.n_obs])?;
@@ -87,6 +133,152 @@ impl PolicySession {
             logstd: to_vec_f32(&outs[1])?[0] as f64,
             value: to_vec_f32(&outs[2])?[0] as f64,
         })
+    }
+}
+
+/// Pure-Rust twin of the `policy_apply` MLP: tanh(W1) -> tanh(W2) ->
+/// {mu, logstd, value} heads over the *same flat parameter vector* the XLA
+/// artifact consumes (layout: `python/compile/model.py::param_layout`).
+///
+/// Two jobs:
+/// * serve artifact-free scenarios (the surrogate env in CI and scaling
+///   studies) — no PJRT client, no HLO compile;
+/// * provide the batched central-inference path with a forward pass whose
+///   per-row arithmetic is *bitwise identical* to its single-row path, so
+///   per-env and batched modes produce identical actions for a fixed seed
+///   (asserted in rust/tests/scenario_registry.rs).
+///
+/// Only `n_act == 1` is supported, matching every artifact this repo lowers.
+#[derive(Clone, Debug)]
+pub struct NativePolicy {
+    n_obs: usize,
+    hidden: usize,
+}
+
+impl NativePolicy {
+    pub fn new(n_obs: usize, hidden: usize) -> Self {
+        NativePolicy { n_obs, hidden }
+    }
+
+    /// Dimensions from the AOT manifest (single source of truth).
+    pub fn from_manifest(drl: &DrlManifest) -> Self {
+        NativePolicy::new(drl.n_obs, drl.hidden)
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.n_obs
+    }
+
+    /// Flat-vector length: w1,b1,w2,b2,wmu,bmu,logstd,wv,bv (n_act = 1).
+    pub fn n_params(&self) -> usize {
+        let (o, h) = (self.n_obs, self.hidden);
+        (o * h + h) + (h * h + h) + (h + 1) + 1 + (h + 1)
+    }
+
+    /// Glorot-scaled random parameters for artifact-free runs: zero biases,
+    /// a tiny `wmu` head (actions start near zero, like the paper's agent)
+    /// and `logstd = -0.5`. Deterministic in `seed`; NOT bit-identical to
+    /// `python/compile/model.py::init_params` (different RNG), only
+    /// statistically equivalent.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let (o, h) = (self.n_obs, self.hidden);
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0.0f32; self.n_params()];
+        let mut off = 0usize;
+        let mut fill = |flat: &mut [f32], off: &mut usize, n: usize, scale: f64| {
+            for x in flat[*off..*off + n].iter_mut() {
+                *x = (rng.normal() * scale) as f32;
+            }
+            *off += n;
+        };
+        fill(&mut flat, &mut off, o * h, (2.0 / (o + h) as f64).sqrt()); // w1
+        off += h; // b1 = 0
+        fill(&mut flat, &mut off, h * h, (2.0 / (2 * h) as f64).sqrt()); // w2
+        off += h; // b2 = 0
+        fill(&mut flat, &mut off, h, 0.01); // wmu
+        off += 1; // bmu = 0
+        flat[off] = -0.5; // logstd
+        off += 1;
+        fill(&mut flat, &mut off, h, (2.0 / (h + 1) as f64).sqrt()); // wv
+        off += 1; // bv = 0
+        debug_assert_eq!(off, self.n_params());
+        flat
+    }
+
+    /// Forward one observation. f32 accumulation in the layout's natural
+    /// order; the batched path reuses this row kernel unchanged.
+    pub fn apply(&self, params: &[f32], obs: &[f32]) -> Result<PolicyOutput> {
+        anyhow::ensure!(obs.len() == self.n_obs, "obs len {}", obs.len());
+        anyhow::ensure!(
+            params.len() == self.n_params(),
+            "params len {} != {} for a {}x{} net",
+            params.len(),
+            self.n_params(),
+            self.n_obs,
+            self.hidden
+        );
+        Ok(self.forward_row(params, obs))
+    }
+
+    /// One batched forward pass: every observation of the environment batch
+    /// evaluated in a single call (the coordinator's sync-barrier path).
+    pub fn apply_batch(&self, params: &[f32], obs: &[Vec<f32>]) -> Result<Vec<PolicyOutput>> {
+        anyhow::ensure!(
+            params.len() == self.n_params(),
+            "params len {} != {}",
+            params.len(),
+            self.n_params()
+        );
+        let mut out = Vec::with_capacity(obs.len());
+        for row in obs {
+            anyhow::ensure!(row.len() == self.n_obs, "obs len {}", row.len());
+            out.push(self.forward_row(params, row));
+        }
+        Ok(out)
+    }
+
+    fn forward_row(&self, params: &[f32], obs: &[f32]) -> PolicyOutput {
+        let (o, h) = (self.n_obs, self.hidden);
+        let off_w1 = 0;
+        let off_b1 = off_w1 + o * h;
+        let off_w2 = off_b1 + h;
+        let off_b2 = off_w2 + h * h;
+        let off_wmu = off_b2 + h;
+        let off_bmu = off_wmu + h;
+        let off_logstd = off_bmu + 1;
+        let off_wv = off_logstd + 1;
+        let off_bv = off_wv + h;
+
+        // h1 = tanh(obs @ W1 + b1); W1 is (o, h) row-major
+        let mut h1 = vec![0.0f32; h];
+        for (j, h1j) in h1.iter_mut().enumerate() {
+            let mut acc = params[off_b1 + j];
+            for (i, &x) in obs.iter().enumerate() {
+                acc += x * params[off_w1 + i * h + j];
+            }
+            *h1j = acc.tanh();
+        }
+        // h2 = tanh(h1 @ W2 + b2)
+        let mut h2 = vec![0.0f32; h];
+        for (j, h2j) in h2.iter_mut().enumerate() {
+            let mut acc = params[off_b2 + j];
+            for (k, &x) in h1.iter().enumerate() {
+                acc += x * params[off_w2 + k * h + j];
+            }
+            *h2j = acc.tanh();
+        }
+        // heads
+        let mut mu = params[off_bmu];
+        let mut value = params[off_bv];
+        for (j, &x) in h2.iter().enumerate() {
+            mu += x * params[off_wmu + j];
+            value += x * params[off_wv + j];
+        }
+        PolicyOutput {
+            mu: mu as f64,
+            logstd: params[off_logstd] as f64,
+            value: value as f64,
+        }
     }
 }
 
@@ -123,5 +315,49 @@ mod tests {
         let xs: Vec<f64> = (0..n).map(|_| p.sample(&out, &mut rng).0).collect();
         let mean = xs.iter().sum::<f64>() / n as f64;
         assert!((mean - 1.0).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn native_init_deterministic_and_sized() {
+        let net = NativePolicy::new(8, 16);
+        let a = net.init_params(3);
+        let b = net.init_params(3);
+        assert_eq!(a.len(), net.n_params());
+        assert_eq!(a, b);
+        assert_ne!(a, net.init_params(4));
+    }
+
+    #[test]
+    fn native_batch_matches_single_bitwise() {
+        let net = NativePolicy::new(6, 12);
+        let params = net.init_params(11);
+        let mut rng = Rng::new(5);
+        let obs: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..6).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let batch = net.apply_batch(&params, &obs).unwrap();
+        for (row, out) in obs.iter().zip(&batch) {
+            let single = net.apply(&params, row).unwrap();
+            assert_eq!(single.mu, out.mu);
+            assert_eq!(single.logstd, out.logstd);
+            assert_eq!(single.value, out.value);
+        }
+    }
+
+    #[test]
+    fn native_rejects_bad_shapes() {
+        let net = NativePolicy::new(4, 8);
+        let params = net.init_params(0);
+        assert!(net.apply(&params, &[0.0; 3]).is_err());
+        assert!(net.apply(&params[..10], &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for k in [PolicyBackendKind::Xla, PolicyBackendKind::Native] {
+            assert_eq!(PolicyBackendKind::parse(k.name()).unwrap(), k);
+        }
+        let err = PolicyBackendKind::parse("tpu").unwrap_err().to_string();
+        assert!(err.contains("xla") && err.contains("native"), "{err}");
     }
 }

@@ -22,6 +22,8 @@ pub struct UpdateStats {
     pub wall_s: f64,
 }
 
+/// Master-side PPO optimizer state: the flat parameter vector, the Adam
+/// moments, and their device-resident mirrors between minibatches.
 pub struct PpoTrainer {
     pub params: Vec<f32>,
     adam_m: Vec<f32>,
@@ -36,6 +38,7 @@ pub struct PpoTrainer {
 }
 
 impl PpoTrainer {
+    /// Fresh optimizer over `params` (zero Adam moments, step 0).
     pub fn new(drl: &DrlManifest, params: Vec<f32>, epochs: usize) -> Self {
         let n = params.len();
         assert_eq!(n, drl.n_params);
@@ -50,6 +53,7 @@ impl PpoTrainer {
         }
     }
 
+    /// 1-based Adam step counter (bias correction state).
     pub fn adam_step(&self) -> u64 {
         self.step
     }
@@ -131,6 +135,7 @@ impl PpoTrainer {
         out
     }
 
+    /// Restore (params | m | v) from a [`PpoTrainer::checkpoint`] blob.
     pub fn restore(&mut self, data: &[f32]) -> Result<()> {
         let n = self.params.len();
         anyhow::ensure!(data.len() == 3 * n, "checkpoint size {}", data.len());
@@ -162,6 +167,8 @@ mod tests {
             init_logstd: -0.5,
             param_layout: vec![],
             policy_apply_file: String::new(),
+            policy_apply_batch_file: None,
+            policy_batch: 1,
             ppo_update_file: String::new(),
         }
     }

@@ -1,10 +1,23 @@
-//! The AFC environment: one cylinder-flow CFD instance seen as an MDP.
+//! The AFC environments: CFD and surrogate workloads seen as MDPs.
 //!
-//! Owns the flow state between actuation periods, invokes the AOT-compiled
-//! `cfd_period` executable (L2/L1), applies the paper's action smoothing
-//! (Eq. 11) and reward (Eq. 12), normalises probe observations, and pushes
-//! every period's outputs through the configured exchange interface so the
-//! I/O cost of the coupled framework is physically incurred and measured.
+//! [`CfdEnv`] owns the flow state between actuation periods, invokes the
+//! AOT-compiled `cfd_period` executable (L2/L1), applies the paper's action
+//! smoothing (Eq. 11) and reward (Eq. 12), normalises probe observations,
+//! and pushes every period's outputs through the configured exchange
+//! interface so the I/O cost of the coupled framework is physically
+//! incurred and measured.
+//!
+//! [`scenario`] generalises this into a registry of named workloads behind
+//! the [`Environment`] trait (cylinder at two Reynolds numbers plus an
+//! analytic surrogate), which is what the coordinator drives.
+
+pub mod scenario;
+
+pub use scenario::{
+    build as build_scenario, spec as scenario_spec, CylinderEnv, Environment, ScenarioContext,
+    ScenarioKind, ScenarioSpec, SurrogateConfig, SurrogateEnv, SCENARIOS, SURROGATE_HIDDEN,
+    SURROGATE_N_OBS,
+};
 
 use std::time::Instant;
 

@@ -46,11 +46,14 @@ boundaryField
 }
 "#;
 
+/// The *Baseline* exchange strategy: OpenFOAM-style ASCII field/probe/
+/// force files plus regex parsing (see module docs).
 pub struct AsciiFoam {
     dir: PathBuf,
 }
 
 impl AsciiFoam {
+    /// Exchange files live in `work_dir/env<NNN>/`, one dir per env.
     pub fn new(work_dir: &std::path::Path, env_id: usize) -> Result<Self> {
         let dir = work_dir.join(format!("env{env_id:03}"));
         fs::create_dir_all(&dir)

@@ -24,11 +24,14 @@ const MAGIC: u32 = 0x44524C46; // "DRLF"
 /// checkpoint every K periods bounds replay cost after a crash.
 const FLOW_SNAPSHOT_EVERY: usize = 10;
 
+/// The *Optimized* exchange strategy: one packed binary record per period
+/// with periodic flow-restart snapshots (see module docs).
 pub struct BinaryExchange {
     dir: PathBuf,
 }
 
 impl BinaryExchange {
+    /// Exchange files live in `work_dir/env<NNN>/`, one dir per env.
     pub fn new(work_dir: &std::path::Path, env_id: usize) -> Result<Self> {
         let dir = work_dir.join(format!("env{env_id:03}"));
         fs::create_dir_all(&dir)?;

@@ -11,6 +11,8 @@ use anyhow::Result;
 
 use super::{CfdOutput, ExchangeInterface, FlowSnapshot, IoMode, IoStats};
 
+/// The *I/O-Disabled* exchange strategy: zero-copy pass-through with zero
+/// recorded cost (see module docs).
 pub struct InMemory;
 
 impl InMemory {

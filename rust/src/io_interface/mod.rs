@@ -28,21 +28,30 @@ use anyhow::Result;
 /// Which exchange strategy an environment uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IoMode {
+    /// Multi-file ASCII + regex parsing (Table II "Baseline").
     Baseline,
+    /// Single packed binary record per period (Table II "Optimized").
     Optimized,
+    /// No files at all; the I/O-Disabled upper bound.
     InMemory,
 }
 
 impl IoMode {
+    /// Parse a CLI/config string. Accepts the canonical names and their
+    /// aliases; the error lists every accepted spelling.
     pub fn parse(s: &str) -> Result<IoMode> {
         match s {
             "baseline" | "ascii" => Ok(IoMode::Baseline),
             "optimized" | "binary" => Ok(IoMode::Optimized),
             "memory" | "disabled" | "in-memory" => Ok(IoMode::InMemory),
-            _ => anyhow::bail!("unknown io mode {s:?} (baseline|optimized|memory)"),
+            _ => anyhow::bail!(
+                "unknown io mode {s:?} (accepted: baseline|ascii, \
+                 optimized|binary, memory|in-memory|disabled)"
+            ),
         }
     }
 
+    /// Display name used in logs and result tables.
     pub fn name(&self) -> &'static str {
         match self {
             IoMode::Baseline => "baseline",
@@ -55,8 +64,11 @@ impl IoMode {
 /// What the CFD side produces at the end of an actuation period.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CfdOutput {
+    /// Pressure probe samples (one per probe, unnormalised).
     pub probes: Vec<f32>,
+    /// Per-substep drag-coefficient history for the period.
     pub cd_hist: Vec<f32>,
+    /// Per-substep lift-coefficient history for the period.
     pub cl_hist: Vec<f32>,
 }
 
@@ -74,16 +86,19 @@ pub struct FlowSnapshot<'a> {
 pub struct IoStats {
     pub bytes_written: u64,
     pub bytes_read: u64,
+    /// Files touched (created or rewritten) during the exchange.
     pub files: u32,
     pub write_s: f64,
     pub read_s: f64,
 }
 
 impl IoStats {
+    /// Total CPU time spent in the exchange (write + read paths).
     pub fn total_s(&self) -> f64 {
         self.write_s + self.read_s
     }
 
+    /// Element-wise accumulation (episode and iteration roll-ups).
     pub fn accumulate(&mut self, other: &IoStats) {
         self.bytes_written += other.bytes_written;
         self.bytes_read += other.bytes_read;
@@ -111,6 +126,8 @@ pub trait ExchangeInterface: Send {
     fn inject_action(&mut self, step: usize, action: f64) -> Result<(f64, IoStats)>;
 }
 
+/// Construct the exchange implementation for `mode`; file-based modes get
+/// a private `env<NNN>` directory under `work_dir`.
 pub fn make_interface(
     mode: IoMode,
     work_dir: &std::path::Path,
@@ -121,4 +138,61 @@ pub fn make_interface(
         IoMode::Optimized => Box::new(binary::BinaryExchange::new(work_dir, env_id)?),
         IoMode::InMemory => Box::new(memory::InMemory::new()),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_aliases() {
+        for (s, want) in [
+            ("baseline", IoMode::Baseline),
+            ("ascii", IoMode::Baseline),
+            ("optimized", IoMode::Optimized),
+            ("binary", IoMode::Optimized),
+            ("memory", IoMode::InMemory),
+            ("in-memory", IoMode::InMemory),
+            ("disabled", IoMode::InMemory),
+        ] {
+            assert_eq!(IoMode::parse(s).unwrap(), want, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_canonical_names() {
+        for m in [IoMode::Baseline, IoMode::Optimized, IoMode::InMemory] {
+            assert_eq!(IoMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_and_lists_accepted() {
+        for bad in ["", "Baseline", "ramdisk", "memory "] {
+            let err = IoMode::parse(bad).unwrap_err().to_string();
+            // the message must teach the accepted spellings
+            for accepted in [
+                "baseline", "ascii", "optimized", "binary", "memory", "in-memory", "disabled",
+            ] {
+                assert!(err.contains(accepted), "{bad:?} -> {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn iostats_accumulate_sums_fields() {
+        let mut a = IoStats {
+            bytes_written: 10,
+            bytes_read: 20,
+            files: 1,
+            write_s: 0.5,
+            read_s: 0.25,
+        };
+        let b = a;
+        a.accumulate(&b);
+        assert_eq!(a.bytes_written, 20);
+        assert_eq!(a.bytes_read, 40);
+        assert_eq!(a.files, 2);
+        assert!((a.total_s() - 1.5).abs() < 1e-12);
+    }
 }

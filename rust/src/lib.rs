@@ -9,10 +9,15 @@
 //!   dense) — `python/compile/kernels/`, build-time only.
 //! * **L2** JAX CFD solver + PPO — `python/compile/{cfd,model}.py`, lowered
 //!   once to HLO-text artifacts by `python/compile/aot.py`.
-//! * **L3** this crate: PJRT runtime, CFD environment, PPO trainer,
-//!   multi-environment coordinator, the three CFD<->DRL exchange
+//! * **L3** this crate: PJRT runtime, the scenario registry of
+//!   environments (cylinder CFD at two Reynolds numbers + an analytic
+//!   surrogate), PPO trainer, multi-environment coordinator with per-env
+//!   or central batched policy inference, the three CFD<->DRL exchange
 //!   interfaces, the cluster discrete-event simulator that regenerates the
 //!   paper's tables/figures, and the CLI.
+//!
+//! README.md covers the quickstart; ARCHITECTURE.md maps every module to
+//! the paper section it implements.
 
 pub mod cluster;
 pub mod config;

@@ -1,8 +1,9 @@
 //! drlfoam CLI: leader entrypoint.
 //!
 //! Subcommands:
-//!   train       — multi-environment PPO training on the AFC problem
+//!   train       — multi-environment PPO training on a selected scenario
 //!   episode     — roll out a single episode and print per-period stats
+//!   scenarios   — list the scenario registry
 //!   calibrate   — measure per-component costs, write out/calib.json
 //!   reproduce   — regenerate a paper table/figure (table1, table2, fig7,
 //!                 fig8, fig9, fig10, summary, all)
@@ -18,15 +19,21 @@ use anyhow::{bail, Context, Result};
 
 use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
-use drlfoam::coordinator::{train, TrainConfig};
+use drlfoam::coordinator::{train, InferenceMode, LocalPolicy, TrainConfig};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind};
+use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN};
+use drlfoam::env::Environment;
 use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
 
-const USAGE: &str = "usage: drlfoam <train|episode|calibrate|reproduce|simulate|info> [options]
-  common options: --artifacts DIR  --out DIR  --variant small  --seed N
-  train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory [--async] [--quiet]
+const USAGE: &str = "usage: drlfoam <train|episode|scenarios|calibrate|reproduce|simulate|info> [options]
+  common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
+  train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
+             --inference per-env|batched --backend xla|native [--async] [--quiet]
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
+             (--scenario surrogate runs without artifacts)
+  scenarios: list selectable scenarios
   evaluate:  --policy FILE --horizon N  (deterministic rollout + vorticity PPMs)
   calibrate: --periods N (measurement repetitions)
   reproduce: <table1|table2|fig6|fig7|fig8|fig9|fig10|summary|ablation|all> [--calib out/calib.json]
@@ -42,15 +49,16 @@ fn main() {
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let value_opts = [
-        "artifacts", "out", "variant", "seed", "envs", "ranks", "horizon",
-        "iterations", "epochs", "io", "episodes", "periods", "calib",
-        "policy", "work-dir", "log-every",
+        "artifacts", "out", "variant", "scenario", "seed", "envs", "ranks",
+        "horizon", "iterations", "epochs", "io", "inference", "backend",
+        "episodes", "periods", "calib", "policy", "work-dir", "log-every",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
         "episode" => cmd_episode(&args),
+        "scenarios" => cmd_scenarios(),
         "evaluate" => cmd_evaluate(&args),
         "calibrate" => cmd_calibrate(&args),
         "reproduce" => cmd_reproduce(&args),
@@ -70,8 +78,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         work_dir: args.get_or("work-dir", "out/work").into(),
         out_dir: out_dir(args),
         variant: args.get_or("variant", "small"),
+        scenario: args.get_or("scenario", "cylinder"),
         n_envs: args.usize_or("envs", 1)?,
         io_mode: IoMode::parse(&args.get_or("io", "memory"))?,
+        inference: InferenceMode::parse(&args.get_or("inference", "per-env"))?,
+        backend: PolicyBackendKind::parse(&args.get_or("backend", "xla"))?,
         horizon: args.usize_or("horizon", 100)?,
         iterations: args.usize_or("iterations", 100)?,
         epochs: args.usize_or("epochs", 4)?,
@@ -80,12 +91,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         quiet: args.has_flag("quiet"),
     };
     println!(
-        "training: variant={} envs={} horizon={} iterations={} io={}",
+        "training: scenario={} variant={} envs={} horizon={} iterations={} io={} inference={}",
+        cfg.scenario,
         cfg.variant,
         cfg.n_envs,
         cfg.horizon,
         cfg.iterations,
-        cfg.io_mode.name()
+        cfg.io_mode.name(),
+        cfg.inference.name()
     );
     if args.has_flag("async") {
         let s = drlfoam::coordinator::train_async(&cfg)?;
@@ -118,40 +131,72 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_episode(args: &Args) -> Result<()> {
     let adir = artifact_dir(args);
     let variant = args.get_or("variant", "small");
+    let scenario_name = args.get_or("scenario", "cylinder");
     let horizon = args.usize_or("horizon", 20)?;
+    let seed = args.u64_or("seed", 0)?;
     let io_mode = IoMode::parse(&args.get_or("io", "memory"))?;
-    let manifest = Manifest::load(&adir)?;
-    let mut rt = Runtime::new(&adir)?;
-    let vm = manifest.variant(&variant)?.clone();
-    rt.load(&vm.cfd_period_file)?;
-    rt.load(&manifest.drl.policy_apply_file)?;
-
-    let params = match args.get("policy") {
-        Some(p) => drlfoam::runtime::read_f32_bin(p)?,
-        None => manifest.load_params_init()?,
+    // the surrogate scenario runs without any artifacts, so a *missing*
+    // manifest is fine — but a present-and-broken one is a real error,
+    // not something to silently fall back from
+    let manifest = match Manifest::load(&adir) {
+        Ok(m) => Some(m),
+        Err(_) if !adir.join("manifest.json").exists() => None,
+        Err(e) => return Err(e.context("artifacts present but unreadable")),
     };
     let work = out_dir(args).join("work");
     std::fs::create_dir_all(&work)?;
-    let exchange = make_interface(io_mode, &work, 0)?;
-    let mut e = env::CfdEnv::new(
-        vm.clone(),
-        manifest.load_state0(&variant)?,
-        manifest.drl.action_smoothing_beta,
-        manifest.drl.reward_lift_penalty,
-        exchange,
-    );
-    let policy = drl::Policy::new(manifest.drl.n_obs);
-    let mut rng = drlfoam::util::rng::Rng::new(args.u64_or("seed", 0)?);
 
-    let cfd = rt.get(&vm.cfd_period_file)?;
-    let pol = rt.get(&manifest.drl.policy_apply_file)?;
-    let mut obs = e.reset(cfd)?;
+    let ctx = ScenarioContext {
+        artifact_dir: &adir,
+        work_dir: &work,
+        env_id: 0,
+        io_mode,
+        manifest: manifest.as_ref(),
+        variant: &variant,
+        seed,
+    };
+    let mut e = scenario::build(&scenario_name, &ctx)?;
+
+    // XLA serving when the scenario brings a runtime and artifacts exist;
+    // the native twin otherwise (surrogate and artifact-free runs)
+    let (mut lp, params) = match &manifest {
+        Some(m) if e.runtime_mut().is_some() => {
+            let params = match args.get("policy") {
+                Some(p) => drlfoam::runtime::read_f32_bin(p)?,
+                None => m.load_params_init()?,
+            };
+            (LocalPolicy::xla(&m.drl), params)
+        }
+        Some(m) => {
+            // e.g. surrogate with artifacts: same params, native forward
+            let params = match args.get("policy") {
+                Some(p) => drlfoam::runtime::read_f32_bin(p)?,
+                None => m.load_params_init()?,
+            };
+            (LocalPolicy::native(m.drl.n_obs, m.drl.hidden), params)
+        }
+        None => {
+            let net = NativePolicy::new(e.n_obs(), SURROGATE_HIDDEN);
+            let params = match args.get("policy") {
+                Some(p) => drlfoam::runtime::read_f32_bin(p)?,
+                None => net.init_params(seed),
+            };
+            println!("no artifacts at {} — native policy backend", adir.display());
+            (LocalPolicy::native(e.n_obs(), SURROGATE_HIDDEN), params)
+        }
+    };
+    lp.begin_episode(e.as_mut(), &params)?;
+    let sampler = drl::Policy::new(e.n_obs());
+    let mut rng = drlfoam::util::rng::Rng::new(seed);
+
+    let mut obs = e.reset()?;
+    println!("scenario: {scenario_name}");
     println!("period      jet   action     Cd       Cl     reward   cfd(ms)  io(ms)");
     let mut total_r = 0.0;
     for t in 0..horizon {
-        let pout = policy.apply(pol, &params, &obs)?;
-        let (a, _logp) = policy.sample(&pout, &mut rng);
-        let sr = e.step(cfd, a)?;
+        let pout = lp.apply(e.as_mut(), &params, &obs)?;
+        let (a, _logp) = sampler.sample(&pout, &mut rng);
+        let sr = e.step(a)?;
         total_r += sr.reward;
         println!(
             "{t:>6} {:>8.4} {:>8.4} {:>8.4} {:>8.4} {:>9.5} {:>8.2} {:>7.2}",
@@ -165,7 +210,20 @@ fn cmd_episode(args: &Args) -> Result<()> {
         );
         obs = sr.obs;
     }
-    println!("episode reward: {total_r:.4}  (Cd0 = {:.4})", vm.cd0);
+    println!("episode reward: {total_r:.4}");
+    Ok(())
+}
+
+fn cmd_scenarios() -> Result<()> {
+    println!("{:<16} {:<10} summary", "name", "artifacts");
+    for s in env::scenario::SCENARIOS {
+        let needs = match s.kind {
+            env::ScenarioKind::Cylinder { .. } => "required",
+            env::ScenarioKind::Surrogate => "none",
+        };
+        println!("{:<16} {:<10} {}", s.name, needs, s.summary);
+    }
+    println!("\nselect with --scenario NAME (train, episode); see ARCHITECTURE.md");
     Ok(())
 }
 

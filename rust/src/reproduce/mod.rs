@@ -324,6 +324,7 @@ pub fn fig6(
             seed: 11,
             log_every: 10_000,
             quiet: true,
+            ..TrainConfig::default()
         };
         let s = train(&cfg)?;
         for r in &s.log {

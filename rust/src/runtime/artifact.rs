@@ -33,6 +33,12 @@ pub struct DrlManifest {
     pub init_logstd: f64,
     pub param_layout: Vec<ParamSlot>,
     pub policy_apply_file: String,
+    /// Static-batch serving artifact (`policy_apply_b<B>` with B > 1) for
+    /// the coordinator's batched inference mode; absent in older artifact
+    /// sets, in which case the server falls back to per-row B=1 calls.
+    pub policy_apply_batch_file: Option<String>,
+    /// Static batch dimension of `policy_apply_batch_file` (1 when absent).
+    pub policy_batch: usize,
     pub ppo_update_file: String,
 }
 
@@ -93,6 +99,15 @@ impl Manifest {
             .collect::<Result<Vec<_>>>()?;
 
         let arts = j.get("artifacts")?;
+        // optional: artifact sets built before the batched-inference mode
+        // simply lack this entry
+        let (policy_apply_batch_file, policy_batch) = match arts.get("policy_apply_batch") {
+            Ok(e) => (
+                Some(e.get("file")?.as_str()?.to_string()),
+                e.get("batch")?.as_usize()?,
+            ),
+            Err(_) => (None, 1),
+        };
         let drl = DrlManifest {
             n_obs: d.get("n_obs")?.as_usize()?,
             n_act: d.get("n_act")?.as_usize()?,
@@ -108,6 +123,8 @@ impl Manifest {
             init_logstd: d.get("init_logstd")?.as_f64()?,
             param_layout: layout,
             policy_apply_file: arts.get("policy_apply")?.get("file")?.as_str()?.to_string(),
+            policy_apply_batch_file,
+            policy_batch,
             ppo_update_file: arts.get("ppo_update")?.get("file")?.as_str()?.to_string(),
         };
 

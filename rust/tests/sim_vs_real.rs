@@ -38,6 +38,7 @@ fn real_train(mode: IoMode, tag: &str, horizon: usize, iterations: usize) -> Rea
         seed: 5,
         log_every: 10_000,
         quiet: true,
+        ..TrainConfig::default()
     };
     let s = train(&cfg).unwrap();
     let run = RealRun {

@@ -19,6 +19,7 @@ fn base_cfg(tag: &str) -> TrainConfig {
         seed: 1,
         log_every: 1,
         quiet: true,
+        ..TrainConfig::default()
     }
 }
 
