@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts artifacts-paper ci
+.PHONY: artifacts artifacts-paper ci train-smoke
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -14,6 +14,15 @@ artifacts:
 artifacts-paper:
 	cd python && $(PY) -m compile.aot --out ../artifacts --variants paper
 
-# Tier-1 gate (fmt, clippy, release build, tests).
+# Tier-1 gate (fmt, clippy, release build, tests, artifact-free smoke).
 ci:
 	./ci.sh
+
+# Artifact-free end-to-end training smoke: surrogate scenario + native
+# policy/update backends; runs in seconds without `make artifacts`.
+train-smoke:
+	cargo run --release -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --artifacts out/train-smoke/no-artifacts \
+	    --out out/train-smoke --work-dir out/train-smoke/work \
+	    --envs 2 --horizon 10 --iterations 3

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench hot_path`
 
-use drlfoam::drl::{Batch, Policy, PpoTrainer, Trajectory, Transition};
+use drlfoam::drl::{Batch, Policy, PpoTrainer, TrainerBackend, Trajectory, Transition};
 use drlfoam::runtime::{literal_f32, Manifest, Runtime};
 use drlfoam::util::bench;
 use drlfoam::util::rng::Rng;
@@ -72,7 +72,7 @@ fn main() {
     let mut trainer = PpoTrainer::new(&m.drl, params.clone(), 1);
     let upd = rt.get(&m.drl.ppo_update_file).unwrap();
     results.push(bench::bench("ppo_update 1 minibatch (64)", 3, 30, || {
-        trainer.update(upd, &batch, &mut rng).unwrap();
+        trainer.update(TrainerBackend::Xla(upd), &batch, &mut rng).unwrap();
     }));
 
     // --- GAE + batch assembly (pure rust part of the loop)

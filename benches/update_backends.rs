@@ -1,0 +1,103 @@
+//! Bench: the PPO update component in isolation — native pure-Rust step
+//! vs the AOT `ppo_update` artifact. The paper's §III deconstruction
+//! makes the update an independently measurable component; this prints
+//! its per-minibatch cost per backend.
+//!
+//! The first section runs with zero artifacts (surrogate-sized 32x32
+//! net); when `make artifacts` has been run, a second section times both
+//! backends on the real manifest-sized network (149 obs, 2x512 hidden).
+//!
+//! Run: `cargo bench --bench update_backends`
+
+use drlfoam::drl::{
+    Batch, NativePolicy, NativeUpdater, PpoHyperParams, PpoTrainer, TrainerBackend, Trajectory,
+    Transition,
+};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::runtime::{Manifest, Runtime};
+use drlfoam::util::bench;
+use drlfoam::util::rng::Rng;
+
+fn synth_batch(n_obs: usize, n: usize) -> Batch {
+    let mut rng = Rng::new(3);
+    let traj = Trajectory {
+        transitions: (0..n)
+            .map(|_| Transition {
+                obs: (0..n_obs).map(|_| rng.normal() as f32).collect(),
+                action: rng.normal() * 0.1,
+                logp: -0.6,
+                reward: rng.normal() * 0.1,
+                value: 0.0,
+            })
+            .collect(),
+        last_value: 0.0,
+        env_id: 0,
+    };
+    Batch::assemble(&[traj], n_obs, 0.99, 0.95)
+}
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(1);
+
+    println!("== native update backend, surrogate-sized net (no artifacts) ==");
+    let (o, h) = (SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let minibatch = 64;
+    let nu = NativeUpdater::new(o, h, PpoHyperParams::default());
+    let batch = synth_batch(o, minibatch);
+    let mut trainer =
+        PpoTrainer::with_minibatch(NativePolicy::new(o, h).init_params(3), minibatch, 1);
+    results.push(bench::bench(
+        &format!("native update {o}x{h} mb{minibatch}"),
+        5,
+        50,
+        || {
+            trainer
+                .update(TrainerBackend::Native(&nu), &batch, &mut rng)
+                .unwrap();
+        },
+    ));
+
+    match Manifest::load("artifacts") {
+        Err(_) => println!("(no artifacts — skipping the manifest-sized native-vs-XLA section)"),
+        Ok(m) => {
+            println!("\n== manifest-sized net ({}x{}): native vs XLA ==", m.drl.n_obs, m.drl.hidden);
+            let params = m.load_params_init().unwrap();
+            let batch = synth_batch(m.drl.n_obs, m.drl.minibatch);
+            let nu = NativeUpdater::from_manifest(&m.drl);
+            let mut tn = PpoTrainer::new(&m.drl, params.clone(), 1);
+            let r_nat = bench::bench(
+                &format!("native update {}x{} mb{}", m.drl.n_obs, m.drl.hidden, m.drl.minibatch),
+                2,
+                20,
+                || {
+                    tn.update(TrainerBackend::Native(&nu), &batch, &mut rng)
+                        .unwrap();
+                },
+            );
+
+            let mut rt = Runtime::new("artifacts").unwrap();
+            rt.load(&m.drl.ppo_update_file).unwrap();
+            let exe = rt.get(&m.drl.ppo_update_file).unwrap();
+            let mut tx = PpoTrainer::new(&m.drl, params, 1);
+            let r_xla = bench::bench(
+                &format!("xla ppo_update mb{}", m.drl.minibatch),
+                2,
+                20,
+                || {
+                    tx.update(TrainerBackend::Xla(exe), &batch, &mut rng).unwrap();
+                },
+            );
+            println!(
+                "native {:.2} ms vs xla {:.2} ms per minibatch epoch ({:.2}x)",
+                r_nat.mean_s * 1e3,
+                r_xla.mean_s * 1e3,
+                r_nat.mean_s / r_xla.mean_s
+            );
+            results.push(r_nat);
+            results.push(r_xla);
+        }
+    }
+
+    bench::save("update_backends", &results);
+}

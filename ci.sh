@@ -7,6 +7,8 @@
 #   2. lints                 cargo clippy (changed modules; -D warnings)
 #   3. release build         cargo build --release
 #   4. tests                 cargo test -q
+#   5. artifact-free smoke   drlfoam train on the surrogate scenario with
+#                            the native update backend (no artifacts)
 #
 # Integration tests that execute AOT artifacts skip themselves gracefully
 # when `make artifacts` has not been run; the scenario-registry and
@@ -26,5 +28,22 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+# 5. artifact-free training smoke: the full loop (surrogate scenario,
+#    native policy serving + native PPO update) must run end-to-end in a
+#    checkout with nothing compiled. --artifacts points at a directory
+#    that cannot exist so this exercises the zero-artifact path even when
+#    `make artifacts` has been run.
+echo "== artifact-free training smoke (surrogate scenario, native update)"
+SMOKE_OUT=out/ci-train-smoke
+rm -rf "$SMOKE_OUT"
+cargo run --release --quiet -- train \
+    --scenario surrogate --backend native --update-backend native \
+    --artifacts "$SMOKE_OUT/no-artifacts" \
+    --out "$SMOKE_OUT" --work-dir "$SMOKE_OUT/work" \
+    --envs 2 --horizon 5 --iterations 2 --quiet
+test -f "$SMOKE_OUT/train_log.csv"
+test -f "$SMOKE_OUT/policy_final.bin"
+test -f "$SMOKE_OUT/trainer_ckpt.bin"
 
 echo "CI OK"

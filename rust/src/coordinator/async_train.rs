@@ -11,6 +11,13 @@
 //! * the barrier idle time — the dominant multi-env efficiency loss in
 //!   Table I once I/O is optimized — disappears entirely.
 //!
+//! Like the synchronous loop, the PPO update runs on either backend
+//! (`--update-backend xla|native`), and with no manifest present the
+//! whole loop falls back to the artifact-free path (surrogate scenario +
+//! native everything). Batched central inference, however, has no sync
+//! barrier to batch at in async mode: `cfg.inference` is ignored with a
+//! visible warning and the workers always serve their own policy.
+//!
 //! The DES twin (`cluster::des` with `sync = false` via
 //! [`crate::cluster::SimConfig`]... see `simulate_training_async`) projects
 //! the same policy onto the 60-core cluster; `drlfoam reproduce ablation`
@@ -22,10 +29,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::pool::{EnvPool, PoolConfig};
-use crate::coordinator::train::TrainConfig;
-use crate::drl::{Batch, PpoTrainer};
-use crate::runtime::{write_f32_bin, Manifest, Runtime};
+use crate::coordinator::train::{setup, update_engine, InferenceMode, TrainConfig, TrainSetup};
+use crate::drl::Batch;
+use crate::runtime::write_f32_bin;
 use crate::util::rng::Rng;
 
 /// One row of the async learning curve.
@@ -50,27 +56,29 @@ pub struct AsyncTrainSummary {
 pub fn train_async(cfg: &TrainConfig) -> Result<AsyncTrainSummary> {
     std::fs::create_dir_all(&cfg.out_dir)?;
     std::fs::create_dir_all(&cfg.work_dir)?;
-    let manifest = Arc::new(Manifest::load(&cfg.artifact_dir)?);
-    let mut rt = Runtime::new(&cfg.artifact_dir)?;
-    rt.load(&manifest.drl.ppo_update_file)?;
 
     // async mode has no common sync point to batch inference at, so the
-    // workers always serve their own policy (cfg.inference is ignored)
-    let pool = EnvPool::new(
-        &PoolConfig {
-            artifact_dir: cfg.artifact_dir.clone(),
-            work_dir: cfg.work_dir.clone(),
-            variant: cfg.variant.clone(),
-            scenario: cfg.scenario.clone(),
-            backend: cfg.backend,
-            n_envs: cfg.n_envs,
-            io_mode: cfg.io_mode,
-            seed: cfg.seed,
-        },
-        &manifest,
-    )?;
+    // workers always serve their own policy; say so out loud instead of
+    // silently ignoring the flag
+    if cfg.inference == InferenceMode::Batched && !cfg.quiet {
+        eprintln!(
+            "warning: --inference batched has no effect with --async (no sync \
+             barrier to batch at); environments serve their own policy"
+        );
+    }
 
-    let mut trainer = PpoTrainer::new(&manifest.drl, manifest.load_params_init()?, cfg.epochs);
+    let TrainSetup {
+        pool,
+        mut trainer,
+        rt,
+        updater,
+        update_file,
+        n_obs,
+        gamma,
+        gae_lambda,
+        ..
+    } = setup(cfg, false)?;
+
     let mut rng = Rng::new(cfg.seed ^ 0xA5A5);
     let total_episodes = cfg.iterations * cfg.n_envs;
     let t0 = Instant::now();
@@ -94,13 +102,8 @@ pub fn train_async(cfg: &TrainConfig) -> Result<AsyncTrainSummary> {
         let staleness = version - env_version[out.env_id];
 
         // immediate update on this single trajectory
-        let batch = Batch::assemble(
-            std::slice::from_ref(&out.traj),
-            manifest.drl.n_obs,
-            manifest.drl.gamma,
-            manifest.drl.gae_lambda,
-        );
-        let upd = trainer.update(rt.get(&manifest.drl.ppo_update_file)?, &batch, &mut rng)?;
+        let batch = Batch::assemble(std::slice::from_ref(&out.traj), n_obs, gamma, gae_lambda);
+        let upd = trainer.update(update_engine(&updater, &rt, &update_file)?, &batch, &mut rng)?;
         version += 1;
 
         // re-dispatch the same env with fresh parameters (unless draining)

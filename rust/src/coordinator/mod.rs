@@ -11,9 +11,13 @@
 //! * [`train`] — the synchronous PPO training loop: broadcast -> rollout
 //!   barrier -> GAE -> minibatch updates -> log, exactly the structure
 //!   whose scaling the paper studies; rollouts run in either inference
-//!   mode.
+//!   mode and the update on either backend (XLA artifact or the native
+//!   pure-Rust step). With no manifest present, both loops fall back to
+//!   the fully artifact-free path (surrogate scenario, native backends).
 //! * [`async_train`] — the barrier-free A3C-style variant (per-env
-//!   inference only: there is no common sync point to batch at).
+//!   inference only: there is no common sync point to batch at; the
+//!   ignored `--inference batched` flag warns instead of silently
+//!   no-opping).
 
 pub mod async_train;
 pub mod policy_server;

@@ -1,4 +1,17 @@
 //! Synchronous multi-environment PPO training loop (the paper's Fig 4).
+//!
+//! Runs on two orthogonal backend axes (the paper's §III deconstruction
+//! of the framework into independently parallelizable components):
+//!
+//! * policy serving — per-env or central batched, XLA artifact or native
+//!   twin (`--inference`, `--backend`);
+//! * PPO update — the AOT `ppo_update` artifact or the pure-Rust
+//!   [`NativeUpdater`] (`--update-backend`).
+//!
+//! When no AOT manifest is present at `artifact_dir`, both loops fall
+//! back to the fully artifact-free path: `EnvPool::standalone` (surrogate
+//! scenario), native policy serving and the native update backend — the
+//! same fallback `main.rs::cmd_episode` applies to rollouts.
 
 use std::io::Write as _;
 use std::sync::Arc;
@@ -8,8 +21,10 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::policy_server::PolicyServer;
 use crate::coordinator::pool::{EnvPool, PoolConfig};
-use crate::drl::policy::PolicyBackendKind;
-use crate::drl::{Batch, PpoTrainer};
+use crate::drl::native_update::{NativeUpdater, PpoHyperParams, DEFAULT_GAE_LAMBDA, DEFAULT_GAMMA};
+use crate::drl::policy::{NativePolicy, PolicyBackendKind};
+use crate::drl::{Batch, PpoTrainer, TrainerBackend, UpdateBackendKind};
+use crate::env::scenario::{self, ScenarioKind, SURROGATE_HIDDEN, SURROGATE_N_OBS};
 use crate::io_interface::IoMode;
 use crate::runtime::{write_f32_bin, Manifest, Runtime};
 use crate::util::rng::Rng;
@@ -26,9 +41,10 @@ pub enum InferenceMode {
 }
 
 impl InferenceMode {
-    /// Parse a CLI/config string; the error lists the accepted values.
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
     pub fn parse(s: &str) -> Result<InferenceMode> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "per-env" | "perenv" | "local" => Ok(InferenceMode::PerEnv),
             "batched" | "central" => Ok(InferenceMode::Batched),
             _ => anyhow::bail!("unknown inference mode {s:?} (accepted: per-env, batched)"),
@@ -58,6 +74,8 @@ pub struct TrainConfig {
     pub inference: InferenceMode,
     /// Serving engine for per-env mode (XLA artifact or native twin).
     pub backend: PolicyBackendKind,
+    /// Engine for the PPO minibatch update (XLA artifact or native step).
+    pub update_backend: UpdateBackendKind,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
     /// training iterations == episodes per environment
@@ -81,6 +99,7 @@ impl Default for TrainConfig {
             io_mode: IoMode::InMemory,
             inference: InferenceMode::PerEnv,
             backend: PolicyBackendKind::Xla,
+            update_backend: UpdateBackendKind::Xla,
             horizon: 100,
             iterations: 100,
             epochs: 4,
@@ -88,6 +107,170 @@ impl Default for TrainConfig {
             log_every: 1,
             quiet: false,
         }
+    }
+}
+
+/// Minibatch size of artifact-free runs (matches the static `minibatch`
+/// the AOT pipeline bakes into `ppo_update`, configs.py::DrlConfig, so
+/// learning dynamics stay comparable across the two paths).
+pub(crate) const STANDALONE_MINIBATCH: usize = 64;
+
+/// Everything both training loops derive from the (optional) manifest:
+/// worker pool, trainer, the resolved update engine, and the GAE
+/// constants. Built by [`setup`].
+pub(crate) struct TrainSetup {
+    pub manifest: Option<Arc<Manifest>>,
+    pub pool: EnvPool,
+    pub trainer: PpoTrainer,
+    /// Master-side runtime holding `ppo_update` (and, for batched XLA
+    /// inference, the serving artifacts); `None` on the fully native path.
+    pub rt: Option<Runtime>,
+    /// The native update engine, when the resolved backend is native.
+    pub updater: Option<NativeUpdater>,
+    /// The `ppo_update` artifact file, when the resolved backend is XLA.
+    pub update_file: Option<String>,
+    /// Policy-serving backend after the artifact-free fallback resolved it.
+    pub backend: PolicyBackendKind,
+    pub n_obs: usize,
+    pub hidden: usize,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+}
+
+/// Resolve backends against the (optional) manifest and build the shared
+/// training ingredients. `serve_batched` is true when the caller will run
+/// central batched inference (the async loop has no barrier to batch at).
+pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup> {
+    let manifest = Manifest::load_optional(&cfg.artifact_dir)?.map(Arc::new);
+
+    // with no artifacts anywhere, everything runs native (the same
+    // fallback the CLI's `episode` command applies to rollouts)
+    let (backend, update_backend) = match &manifest {
+        Some(_) => (cfg.backend, cfg.update_backend),
+        None => {
+            let sp = scenario::spec(&cfg.scenario)?;
+            anyhow::ensure!(
+                matches!(sp.kind, ScenarioKind::Surrogate),
+                "scenario {:?} needs AOT artifacts at {} (run `make artifacts`, or use --scenario surrogate)",
+                cfg.scenario,
+                cfg.artifact_dir.display()
+            );
+            if cfg.backend != PolicyBackendKind::Native
+                || cfg.update_backend != UpdateBackendKind::Native
+            {
+                // a requested XLA engine is being downgraded: warn even
+                // under --quiet, so benchmark labels can't silently lie
+                // about which backend produced the numbers
+                eprintln!(
+                    "warning: no artifacts at {} — falling back to native policy + native update backends",
+                    cfg.artifact_dir.display()
+                );
+            }
+            (PolicyBackendKind::Native, UpdateBackendKind::Native)
+        }
+    };
+
+    let (n_obs, hidden) = match &manifest {
+        Some(m) => (m.drl.n_obs, m.drl.hidden),
+        None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
+    };
+
+    let mut rt = None;
+    let mut update_file = None;
+    let mut updater = None;
+    match update_backend {
+        UpdateBackendKind::Xla => {
+            // the fallback above already resolved Xla away when no
+            // manifest exists (with a warning), so this cannot fail
+            let m = manifest
+                .as_ref()
+                .expect("resolved xla update backend implies a manifest");
+            let mut r = Runtime::new(&cfg.artifact_dir)?;
+            r.load(&m.drl.ppo_update_file)?;
+            update_file = Some(m.drl.ppo_update_file.clone());
+            rt = Some(r);
+        }
+        UpdateBackendKind::Native => {
+            updater = Some(match &manifest {
+                Some(m) => NativeUpdater::from_manifest(&m.drl),
+                None => NativeUpdater::new(n_obs, hidden, PpoHyperParams::default()),
+            });
+        }
+    }
+    // batched XLA serving shares the master runtime with the update path
+    if serve_batched && backend == PolicyBackendKind::Xla && rt.is_none() {
+        rt = Some(Runtime::new(&cfg.artifact_dir)?);
+    }
+
+    let pool_cfg = PoolConfig {
+        artifact_dir: cfg.artifact_dir.clone(),
+        work_dir: cfg.work_dir.clone(),
+        variant: cfg.variant.clone(),
+        scenario: cfg.scenario.clone(),
+        // in batched mode the workers never serve the policy; the
+        // LocalPolicy is lazy, so passing the backend through is free
+        backend,
+        n_envs: cfg.n_envs,
+        io_mode: cfg.io_mode,
+        seed: cfg.seed,
+    };
+    let pool = match &manifest {
+        Some(m) => EnvPool::new(&pool_cfg, m)?,
+        None => EnvPool::standalone(&pool_cfg)?,
+    };
+
+    let (params0, minibatch, gamma, gae_lambda) = match &manifest {
+        Some(m) => (
+            m.load_params_init()?,
+            m.drl.minibatch,
+            m.drl.gamma,
+            m.drl.gae_lambda,
+        ),
+        None => (
+            NativePolicy::new(n_obs, hidden).init_params(cfg.seed),
+            STANDALONE_MINIBATCH,
+            DEFAULT_GAMMA,
+            DEFAULT_GAE_LAMBDA,
+        ),
+    };
+    let trainer = PpoTrainer::with_minibatch(params0, minibatch, cfg.epochs);
+
+    // authoritative report of the *resolved* engine (the CLI banner only
+    // knows what was requested)
+    if !cfg.quiet {
+        println!("ppo update backend: {}", update_backend.name());
+    }
+
+    Ok(TrainSetup {
+        manifest,
+        pool,
+        trainer,
+        rt,
+        updater,
+        update_file,
+        backend,
+        n_obs,
+        hidden,
+        gamma,
+        gae_lambda,
+    })
+}
+
+/// The update engine for one `PpoTrainer::update` call, from the state
+/// [`setup`] resolved (shared by the sync and async loops so the dispatch
+/// logic cannot drift between them).
+pub(crate) fn update_engine<'a>(
+    updater: &'a Option<NativeUpdater>,
+    rt: &'a Option<Runtime>,
+    update_file: &Option<String>,
+) -> Result<TrainerBackend<'a>> {
+    match (updater, update_file) {
+        (Some(nu), _) => Ok(TrainerBackend::Native(nu)),
+        (None, Some(f)) => {
+            let r = rt.as_ref().context("xla update runtime missing")?;
+            Ok(TrainerBackend::Xla(r.get(f)?))
+        }
+        (None, None) => unreachable!("setup always picks an update engine"),
     }
 }
 
@@ -122,24 +305,32 @@ pub struct TrainSummary {
 pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     std::fs::create_dir_all(&cfg.out_dir)?;
     std::fs::create_dir_all(&cfg.work_dir)?;
-    let manifest = Arc::new(Manifest::load(&cfg.artifact_dir)?);
+    let TrainSetup {
+        manifest,
+        mut pool,
+        mut trainer,
+        mut rt,
+        updater,
+        update_file,
+        backend,
+        n_obs,
+        hidden,
+        gamma,
+        gae_lambda,
+    } = setup(cfg, cfg.inference == InferenceMode::Batched)?;
 
-    // master-side runtime for ppo_update (and, in batched mode, for the
-    // central policy server's artifacts)
-    let mut rt = Runtime::new(&cfg.artifact_dir)?;
-    rt.load(&manifest.drl.ppo_update_file)?;
     let mut server = match cfg.inference {
         InferenceMode::PerEnv => None,
         InferenceMode::Batched => {
-            let s = match cfg.backend {
+            let s = match backend {
                 PolicyBackendKind::Xla => {
-                    let s = PolicyServer::xla(&manifest.drl);
-                    s.load_into(&mut rt)?;
+                    // setup guarantees manifest + runtime on this path
+                    let m = manifest.as_ref().context("xla serving needs a manifest")?;
+                    let s = PolicyServer::xla(&m.drl);
+                    s.load_into(rt.as_mut().context("serving runtime missing")?)?;
                     s
                 }
-                PolicyBackendKind::Native => {
-                    PolicyServer::native(manifest.drl.n_obs, manifest.drl.hidden)
-                }
+                PolicyBackendKind::Native => PolicyServer::native(n_obs, hidden),
             };
             if !cfg.quiet {
                 println!("batched inference: {}", s.describe());
@@ -148,23 +339,6 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         }
     };
 
-    let mut pool = EnvPool::new(
-        &PoolConfig {
-            artifact_dir: cfg.artifact_dir.clone(),
-            work_dir: cfg.work_dir.clone(),
-            variant: cfg.variant.clone(),
-            scenario: cfg.scenario.clone(),
-            // in batched mode the workers never serve the policy; the
-            // LocalPolicy is lazy, so passing the backend through is free
-            backend: cfg.backend,
-            n_envs: cfg.n_envs,
-            io_mode: cfg.io_mode,
-            seed: cfg.seed,
-        },
-        &manifest,
-    )?;
-
-    let mut trainer = PpoTrainer::new(&manifest.drl, manifest.load_params_init()?, cfg.epochs);
     let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
     let mut log = Vec::with_capacity(cfg.iterations);
     let mut io_bytes_acc = 0u64;
@@ -182,7 +356,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         let params = Arc::new(trainer.params.clone());
         let outs = match &mut server {
             None => pool.rollout(&params, cfg.horizon, it as u64)?,
-            Some(s) => pool.rollout_batched(Some(&rt), s, &params, cfg.horizon, it as u64)?,
+            Some(s) => pool.rollout_batched(rt.as_ref(), s, &params, cfg.horizon, it as u64)?,
         };
         let rollout_s = t0.elapsed().as_secs_f64();
         episodes_done += outs.len();
@@ -201,13 +375,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             .sum::<u64>();
 
         let trajs: Vec<_> = outs.into_iter().map(|o| o.traj).collect();
-        let batch = Batch::assemble(
-            &trajs,
-            manifest.drl.n_obs,
-            manifest.drl.gamma,
-            manifest.drl.gae_lambda,
-        );
-        let upd = trainer.update(rt.get(&manifest.drl.ppo_update_file)?, &batch, &mut rng)?;
+        let batch = Batch::assemble(&trajs, n_obs, gamma, gae_lambda);
+        let upd = trainer.update(update_engine(&updater, &rt, &update_file)?, &batch, &mut rng)?;
 
         let row = IterationLog {
             iteration: it,
@@ -263,4 +432,21 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         final_params,
         total_s: t_total.elapsed().as_secs_f64(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_parse_is_lenient_and_lists_accepted() {
+        assert_eq!(InferenceMode::parse(" Batched ").unwrap(), InferenceMode::Batched);
+        assert_eq!(InferenceMode::parse("PER-ENV").unwrap(), InferenceMode::PerEnv);
+        assert_eq!(InferenceMode::parse("central").unwrap(), InferenceMode::Batched);
+        for m in [InferenceMode::PerEnv, InferenceMode::Batched] {
+            assert_eq!(InferenceMode::parse(m.name()).unwrap(), m);
+        }
+        let err = InferenceMode::parse("remote").unwrap_err().to_string();
+        assert!(err.contains("per-env") && err.contains("batched"), "{err}");
+    }
 }

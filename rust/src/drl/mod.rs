@@ -1,12 +1,16 @@
 //! The DRL side of the framework: policy serving, trajectory buffers,
-//! GAE, and the PPO update loop (all orchestration in Rust; the numeric
-//! kernels are the AOT-compiled `policy_apply` / `ppo_update` artifacts).
+//! GAE, and the PPO update loop. Orchestration lives in Rust; the numeric
+//! kernels come in matched pairs — the AOT-compiled `policy_apply` /
+//! `ppo_update` artifacts and their pure-Rust twins ([`NativePolicy`],
+//! [`NativeUpdater`]) for artifact-free runs.
 
 pub mod buffer;
 pub mod gae;
+pub mod native_update;
 pub mod policy;
 pub mod trainer;
 
 pub use buffer::{Batch, Trajectory, Transition};
+pub use native_update::{NativeUpdater, PpoHyperParams, DEFAULT_GAE_LAMBDA, DEFAULT_GAMMA};
 pub use policy::{NativePolicy, Policy, PolicyBackendKind, PolicyOutput, PolicySession};
-pub use trainer::{PpoTrainer, UpdateStats};
+pub use trainer::{PpoTrainer, TrainerBackend, UpdateBackendKind, UpdateStats};

@@ -1,0 +1,560 @@
+//! Native PPO update backend: the pure-Rust half of the trainer's
+//! `TrainerBackend` axis (the artifact-free training path's tentpole).
+//!
+//! One Adam minibatch step of the clipped-surrogate PPO loss — forward plus
+//! a hand-derived backward pass through the 2-layer tanh Gaussian MLP — over
+//! the *same flat parameter vector* and layout
+//! (`python/compile/model.py::param_layout`) that the AOT `ppo_update`
+//! artifact consumes. The XLA artifact stays the performance reference;
+//! this backend makes `train()` / `train_async()` runnable, testable and
+//! benchmarkable with zero compiled artifacts, and
+//! `rust/tests/train_smoke.rs::native_vs_xla_update_equivalence` asserts
+//! gradient-level agreement between the two whenever artifacts exist.
+//!
+//! Loss (mirrors `python/compile/model.py::ppo_loss` term by term):
+//!
+//! ```text
+//! total = pg_loss + vf_coef * v_loss - ent_coef * entropy
+//! ```
+//!
+//! with the Eq. 10 clipped surrogate, a squared-error value loss and the
+//! closed-form Gaussian entropy. The stats layout matches the artifact:
+//! `[pg_loss, v_loss, entropy, approx_kl, clip_frac, grad_norm]`
+//! (`grad_norm` is the pre-clipping global norm, exactly like the artifact,
+//! which records the norm but never clips).
+//!
+//! Only `n_act == 1` is supported, like every artifact this repo lowers.
+
+use anyhow::Result;
+
+use crate::runtime::DrlManifest;
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+/// GAE discount used by artifact-free runs (the manifest records it when
+/// artifacts are present; single source: python/compile/configs.py).
+pub const DEFAULT_GAMMA: f64 = 0.99;
+/// GAE lambda used by artifact-free runs (see [`DEFAULT_GAMMA`]).
+pub const DEFAULT_GAE_LAMBDA: f64 = 0.95;
+
+/// PPO/Adam hyper-parameters of the native update step.
+///
+/// `lr` and `clip_eps` travel in the manifest; the remaining constants are
+/// baked into the lowered artifact, so their defaults here mirror
+/// `python/compile/configs.py::DrlConfig` (the single source of truth).
+#[derive(Clone, Copy, Debug)]
+pub struct PpoHyperParams {
+    pub lr: f64,
+    pub clip_eps: f64,
+    pub vf_coef: f64,
+    pub ent_coef: f64,
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    /// Global-norm gradient clipping threshold; `None` disables clipping,
+    /// matching the XLA artifact (which reports the norm but never clips).
+    pub max_grad_norm: Option<f64>,
+}
+
+impl Default for PpoHyperParams {
+    fn default() -> Self {
+        PpoHyperParams {
+            lr: 3e-4,
+            clip_eps: 0.2,
+            vf_coef: 0.5,
+            ent_coef: 0.01,
+            adam_b1: 0.9,
+            adam_b2: 0.999,
+            adam_eps: 1e-8,
+            max_grad_norm: None,
+        }
+    }
+}
+
+impl PpoHyperParams {
+    /// Adopt what the manifest records (lr, clip_eps); everything else is
+    /// baked into the artifact and mirrored from configs.py by `default()`.
+    pub fn from_manifest(drl: &DrlManifest) -> Self {
+        PpoHyperParams {
+            lr: drl.lr,
+            clip_eps: drl.clip_eps,
+            ..PpoHyperParams::default()
+        }
+    }
+}
+
+/// Flat-vector offsets of the 2x`hidden` tanh MLP (n_act = 1), shared by
+/// the forward and backward passes. Must stay in lockstep with
+/// `NativePolicy::forward_row` and `model.py::param_layout`.
+struct Layout {
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+    wmu: usize,
+    bmu: usize,
+    logstd: usize,
+    wv: usize,
+    bv: usize,
+    n_params: usize,
+}
+
+impl Layout {
+    fn new(o: usize, h: usize) -> Layout {
+        let w1 = 0;
+        let b1 = w1 + o * h;
+        let w2 = b1 + h;
+        let b2 = w2 + h * h;
+        let wmu = b2 + h;
+        let bmu = wmu + h;
+        let logstd = bmu + 1;
+        let wv = logstd + 1;
+        let bv = wv + h;
+        Layout {
+            w1,
+            b1,
+            w2,
+            b2,
+            wmu,
+            bmu,
+            logstd,
+            wv,
+            bv,
+            n_params: bv + 1,
+        }
+    }
+}
+
+/// Scale `g` in place so its global L2 norm is at most `max_norm`; returns
+/// the pre-clipping norm.
+pub fn clip_global_norm(g: &mut [f32], max_norm: f64) -> f64 {
+    let norm = g.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = (max_norm / norm) as f32;
+        for x in g.iter_mut() {
+            *x *= scale;
+        }
+    }
+    norm
+}
+
+/// One Adam minibatch step of PPO in pure Rust (see module docs).
+pub struct NativeUpdater {
+    n_obs: usize,
+    hidden: usize,
+    hp: PpoHyperParams,
+}
+
+impl NativeUpdater {
+    pub fn new(n_obs: usize, hidden: usize, hp: PpoHyperParams) -> Self {
+        NativeUpdater { n_obs, hidden, hp }
+    }
+
+    /// Dimensions + recorded hyper-parameters from the AOT manifest.
+    pub fn from_manifest(drl: &DrlManifest) -> Self {
+        NativeUpdater::new(drl.n_obs, drl.hidden, PpoHyperParams::from_manifest(drl))
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.n_obs
+    }
+
+    pub fn hp(&self) -> &PpoHyperParams {
+        &self.hp
+    }
+
+    /// Flat parameter-vector length (same formula as `NativePolicy`).
+    pub fn n_params(&self) -> usize {
+        Layout::new(self.n_obs, self.hidden).n_params
+    }
+
+    /// Gradient of the PPO loss over one minibatch of `act.len()` rows.
+    /// Returns `(grad, stats)` with the artifact's stats layout
+    /// `[pg_loss, v_loss, entropy, approx_kl, clip_frac, grad_norm]`.
+    pub fn grad(
+        &self,
+        params: &[f32],
+        obs: &[f32],
+        act: &[f32],
+        logp_old: &[f32],
+        adv: &[f32],
+        ret: &[f32],
+    ) -> Result<(Vec<f32>, [f32; 6])> {
+        let (o, h) = (self.n_obs, self.hidden);
+        let lay = Layout::new(o, h);
+        let b = act.len();
+        anyhow::ensure!(b > 0, "empty minibatch");
+        anyhow::ensure!(
+            params.len() == lay.n_params,
+            "params len {} != {} for a {o}x{h} net",
+            params.len(),
+            lay.n_params
+        );
+        anyhow::ensure!(obs.len() == b * o, "obs len {} != {b}x{o}", obs.len());
+        anyhow::ensure!(
+            logp_old.len() == b && adv.len() == b && ret.len() == b,
+            "ragged minibatch"
+        );
+
+        let clip = self.hp.clip_eps as f32;
+        let vf_coef = self.hp.vf_coef as f32;
+        let bf = b as f32;
+        let log2pi = LOG_2PI as f32;
+        let logstd = params[lay.logstd];
+        let std = logstd.exp();
+
+        let mut g = vec![0.0f32; lay.n_params];
+        let mut h1 = vec![0.0f32; h];
+        let mut h2 = vec![0.0f32; h];
+        let mut dh1 = vec![0.0f32; h];
+        let mut dh2 = vec![0.0f32; h];
+
+        let mut pg_acc = 0.0f32;
+        let mut v_acc = 0.0f32;
+        let mut kl_acc = 0.0f32;
+        let mut clip_acc = 0.0f32;
+        let mut g_logstd = 0.0f32;
+
+        for r in 0..b {
+            let row = &obs[r * o..(r + 1) * o];
+
+            // ---- forward (identical arithmetic to NativePolicy::forward_row)
+            for (j, h1j) in h1.iter_mut().enumerate() {
+                let mut acc = params[lay.b1 + j];
+                for (i, &x) in row.iter().enumerate() {
+                    acc += x * params[lay.w1 + i * h + j];
+                }
+                *h1j = acc.tanh();
+            }
+            for (j, h2j) in h2.iter_mut().enumerate() {
+                let mut acc = params[lay.b2 + j];
+                for (k, &x) in h1.iter().enumerate() {
+                    acc += x * params[lay.w2 + k * h + j];
+                }
+                *h2j = acc.tanh();
+            }
+            let mut mu = params[lay.bmu];
+            let mut val = params[lay.bv];
+            for (j, &x) in h2.iter().enumerate() {
+                mu += x * params[lay.wmu + j];
+                val += x * params[lay.wv + j];
+            }
+
+            // ---- loss terms (model.py::ppo_loss, n_act = 1)
+            let z = (act[r] - mu) / std;
+            let logp = -0.5 * z * z - logstd - 0.5 * log2pi;
+            let ratio = (logp - logp_old[r]).exp();
+            let unclipped = ratio * adv[r];
+            let clipped = ratio.clamp(1.0 - clip, 1.0 + clip) * adv[r];
+            pg_acc += unclipped.min(clipped);
+            let v_err = val - ret[r];
+            v_acc += v_err * v_err;
+            kl_acc += logp_old[r] - logp;
+            if (ratio - 1.0).abs() > clip {
+                clip_acc += 1.0;
+            }
+
+            // ---- d(total)/d(mu, val, logstd) for this row. The surrogate
+            // min() propagates through the active branch; inside the clip
+            // interval both branches coincide (clamp is the identity), so
+            // only the truly-clipped case gates the gradient to zero.
+            let d_ratio = if unclipped <= clipped { -adv[r] / bf } else { 0.0 };
+            let d_logp = d_ratio * ratio;
+            let g_mu = d_logp * (z / std);
+            g_logstd += d_logp * (z * z - 1.0);
+            let g_val = vf_coef * 2.0 * v_err / bf;
+
+            // ---- backprop through the heads and both tanh layers
+            g[lay.bmu] += g_mu;
+            g[lay.bv] += g_val;
+            for (j, &h2j) in h2.iter().enumerate() {
+                g[lay.wmu + j] += g_mu * h2j;
+                g[lay.wv + j] += g_val * h2j;
+                dh2[j] = (g_mu * params[lay.wmu + j] + g_val * params[lay.wv + j])
+                    * (1.0 - h2j * h2j);
+            }
+            for (j, &d) in dh2.iter().enumerate() {
+                g[lay.b2 + j] += d;
+            }
+            for (k, &h1k) in h1.iter().enumerate() {
+                let wrow = lay.w2 + k * h;
+                let mut acc = 0.0f32;
+                for (j, &d) in dh2.iter().enumerate() {
+                    g[wrow + j] += h1k * d;
+                    acc += params[wrow + j] * d;
+                }
+                dh1[k] = acc * (1.0 - h1k * h1k);
+            }
+            for (k, &d) in dh1.iter().enumerate() {
+                g[lay.b1 + k] += d;
+            }
+            for (i, &x) in row.iter().enumerate() {
+                let wrow = lay.w1 + i * h;
+                for (k, &d) in dh1.iter().enumerate() {
+                    g[wrow + k] += x * d;
+                }
+            }
+        }
+
+        // entropy = logstd + 0.5*(ln(2*pi) + 1) for the 1-D Gaussian; its
+        // gradient is the only term besides the surrogate touching logstd
+        let entropy = logstd + 0.5 * (log2pi + 1.0);
+        g[lay.logstd] = g_logstd - self.hp.ent_coef as f32;
+
+        let norm2: f64 = g.iter().map(|&x| x as f64 * x as f64).sum();
+        let stats = [
+            -pg_acc / bf,
+            v_acc / bf,
+            entropy,
+            kl_acc / bf,
+            clip_acc / bf,
+            norm2.sqrt() as f32,
+        ];
+        Ok((g, stats))
+    }
+
+    /// One Adam step in place over `(params, m, v)`; `t` is the 1-based
+    /// step counter (bias correction), exactly like the artifact's scalar
+    /// input. Returns the minibatch stats (see [`NativeUpdater::grad`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        t: u64,
+        params: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        obs: &[f32],
+        act: &[f32],
+        logp_old: &[f32],
+        adv: &[f32],
+        ret: &[f32],
+    ) -> Result<[f32; 6]> {
+        anyhow::ensure!(
+            m.len() == params.len() && v.len() == params.len(),
+            "optimizer state size mismatch"
+        );
+        anyhow::ensure!(t >= 1, "Adam step counter is 1-based");
+        let (mut g, stats) = self.grad(params, obs, act, logp_old, adv, ret)?;
+        if let Some(maxn) = self.hp.max_grad_norm {
+            clip_global_norm(&mut g, maxn);
+        }
+        let b1 = self.hp.adam_b1 as f32;
+        let b2 = self.hp.adam_b2 as f32;
+        let eps = self.hp.adam_eps as f32;
+        let lr = self.hp.lr as f32;
+        let bc1 = 1.0 - b1.powf(t as f32);
+        let bc2 = 1.0 - b2.powf(t as f32);
+        for i in 0..params.len() {
+            let gi = g[i];
+            m[i] = b1 * m[i] + (1.0 - b1) * gi;
+            v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drl::{NativePolicy, Policy};
+    use crate::util::rng::Rng;
+
+    /// Synthetic minibatch whose `logp_old` sit close to the current
+    /// policy's log-densities, keeping every ratio well inside the clip
+    /// interval (where the surrogate is smooth, so finite differences and
+    /// the analytic gradient must agree).
+    fn synth(
+        params: &[f32],
+        o: usize,
+        h: usize,
+        b: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let net = NativePolicy::new(o, h);
+        let pol = Policy::new(o);
+        let mut rng = Rng::new(seed);
+        let obs: Vec<f32> = (0..b * o).map(|_| rng.normal() as f32).collect();
+        let mut act = Vec::with_capacity(b);
+        let mut logp_old = Vec::with_capacity(b);
+        for r in 0..b {
+            let out = net.apply(params, &obs[r * o..(r + 1) * o]).unwrap();
+            let a = out.mu + 0.3 * rng.normal();
+            act.push(a as f32);
+            // small offset keeps every ratio = exp(logp - logp_old) well
+            // inside [1-clip, 1+clip], away from the surrogate's kink
+            logp_old.push((pol.logp(a, &out) + 0.02 * rng.normal()) as f32);
+        }
+        let adv: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+        let ret: Vec<f32> = (0..b).map(|_| (rng.normal() * 0.5) as f32).collect();
+        (obs, act, logp_old, adv, ret)
+    }
+
+    fn jittered_params(o: usize, h: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut params = NativePolicy::new(o, h).init_params(seed);
+        for x in params.iter_mut() {
+            *x += (0.05 * rng.normal()) as f32;
+        }
+        params
+    }
+
+    fn loss_of(stats: &[f32; 6], hp: &PpoHyperParams) -> f64 {
+        stats[0] as f64 + hp.vf_coef * stats[1] as f64 - hp.ent_coef * stats[2] as f64
+    }
+
+    #[test]
+    fn n_params_matches_native_policy() {
+        for (o, h) in [(3, 4), (32, 32), (149, 512)] {
+            assert_eq!(
+                NativeUpdater::new(o, h, PpoHyperParams::default()).n_params(),
+                NativePolicy::new(o, h).n_params(),
+                "{o}x{h}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (o, h, b) = (3, 4, 8);
+        let nu = NativeUpdater::new(o, h, PpoHyperParams::default());
+        let params = jittered_params(o, h, 7);
+        let (obs, act, logp_old, adv, ret) = synth(&params, o, h, b, 3);
+        let (g, _) = nu.grad(&params, &obs, &act, &logp_old, &adv, &ret).unwrap();
+
+        let eps = 1e-2f32;
+        for i in 0..params.len() {
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let (_, sp) = nu.grad(&pp, &obs, &act, &logp_old, &adv, &ret).unwrap();
+            pp[i] -= 2.0 * eps;
+            let (_, sm) = nu.grad(&pp, &obs, &act, &logp_old, &adv, &ret).unwrap();
+            let fd = (loss_of(&sp, nu.hp()) - loss_of(&sm, nu.hp())) / (2.0 * eps as f64);
+            let gi = g[i] as f64;
+            assert!(
+                (fd - gi).abs() < 1e-3 + 0.05 * gi.abs().max(fd.abs()),
+                "param {i}: analytic {gi} vs finite-difference {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_matches_native_policy_layout() {
+        // guards against the Layout offsets drifting from the offsets
+        // NativePolicy::forward_row hard-codes: recover (value, logp) from
+        // a B=1 minibatch's stats and pin them to the policy-side forward
+        let (o, h) = (5, 7);
+        let nu = NativeUpdater::new(o, h, PpoHyperParams::default());
+        let net = NativePolicy::new(o, h);
+        let pol = Policy::new(o);
+        let params = jittered_params(o, h, 13);
+        let mut rng = Rng::new(4);
+        let obs: Vec<f32> = (0..o).map(|_| rng.normal() as f32).collect();
+        let out = net.apply(&params, &obs).unwrap();
+        let act = [(out.mu + 0.2) as f32];
+        // logp_old = 0 makes stats[3] = -logp; ret = 0 makes stats[1] = v^2
+        let (_, stats) = nu
+            .grad(&params, &obs, &act, &[0.0], &[0.3], &[0.0])
+            .unwrap();
+        let logp = pol.logp(act[0] as f64, &out);
+        assert!(
+            (stats[3] as f64 + logp).abs() < 1e-5,
+            "updater logp {} vs policy logp {logp}",
+            -stats[3]
+        );
+        assert!(
+            (stats[1] as f64 - out.value * out.value).abs() < 1e-5 * out.value.abs().max(1.0),
+            "updater v^2 {} vs policy value {}",
+            stats[1],
+            out.value
+        );
+        assert!(
+            (stats[2] as f64 - (out.logstd + 0.5 * (LOG_2PI + 1.0))).abs() < 1e-6,
+            "entropy reads a different logstd slot"
+        );
+    }
+
+    #[test]
+    fn gradient_is_deterministic() {
+        let (o, h, b) = (4, 6, 5);
+        let nu = NativeUpdater::new(o, h, PpoHyperParams::default());
+        let params = jittered_params(o, h, 1);
+        let (obs, act, logp_old, adv, ret) = synth(&params, o, h, b, 2);
+        let (ga, sa) = nu.grad(&params, &obs, &act, &logp_old, &adv, &ret).unwrap();
+        let (gb, sb) = nu.grad(&params, &obs, &act, &logp_old, &adv, &ret).unwrap();
+        assert_eq!(ga, gb);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn repeated_steps_reduce_loss() {
+        let (o, h, b) = (4, 8, 16);
+        let nu = NativeUpdater::new(
+            o,
+            h,
+            PpoHyperParams {
+                lr: 1e-2,
+                ..PpoHyperParams::default()
+            },
+        );
+        let mut params = jittered_params(o, h, 5);
+        let (obs, act, logp_old, adv, ret) = synth(&params, o, h, b, 8);
+        let (_, s0) = nu.grad(&params, &obs, &act, &logp_old, &adv, &ret).unwrap();
+        let n = params.len();
+        let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for t in 1..=50u64 {
+            nu.step(t, &mut params, &mut m, &mut v, &obs, &act, &logp_old, &adv, &ret)
+                .unwrap();
+        }
+        let (_, s1) = nu.grad(&params, &obs, &act, &logp_old, &adv, &ret).unwrap();
+        assert!(
+            loss_of(&s1, nu.hp()) < loss_of(&s0, nu.hp()),
+            "loss did not decrease: {} -> {}",
+            loss_of(&s0, nu.hp()),
+            loss_of(&s1, nu.hp())
+        );
+    }
+
+    #[test]
+    fn global_norm_clipping_caps_the_norm() {
+        let mut g = vec![3.0f32, 4.0];
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6, "pre-clip norm {pre}");
+        let post = g.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt();
+        assert!((post - 1.0).abs() < 1e-6, "post-clip norm {post}");
+        // below the threshold the gradient is untouched
+        let mut g2 = vec![0.3f32, 0.4];
+        clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_zero_step() {
+        let nu = NativeUpdater::new(3, 4, PpoHyperParams::default());
+        let n = nu.n_params();
+        let params = vec![0.1f32; n];
+        // ragged obs
+        assert!(nu
+            .grad(&params, &[0.0; 5], &[0.0; 2], &[0.0; 2], &[0.0; 2], &[0.0; 2])
+            .is_err());
+        // wrong param count
+        assert!(nu
+            .grad(&params[..n - 1], &[0.0; 3], &[0.0; 1], &[0.0; 1], &[0.0; 1], &[0.0; 1])
+            .is_err());
+        // optimizer state size mismatch
+        let mut p = vec![0.1f32; n];
+        let mut m = vec![0.0f32; n - 1];
+        let mut v = vec![0.0f32; n];
+        assert!(nu
+            .step(1, &mut p, &mut m, &mut v, &[0.0; 3], &[0.0; 1], &[0.0; 1], &[0.0; 1], &[0.0; 1])
+            .is_err());
+        // 0-based step counter rejected (would divide by zero in the
+        // bias correction)
+        let mut m2 = vec![0.0f32; n];
+        assert!(nu
+            .step(0, &mut p, &mut m2, &mut v, &[0.0; 3], &[0.0; 1], &[0.0; 1], &[0.0; 1], &[0.0; 1])
+            .is_err());
+    }
+}

@@ -37,9 +37,10 @@ pub enum PolicyBackendKind {
 }
 
 impl PolicyBackendKind {
-    /// Parse a CLI/config string; the error lists the accepted values.
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
     pub fn parse(s: &str) -> Result<PolicyBackendKind> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "xla" => Ok(PolicyBackendKind::Xla),
             "native" => Ok(PolicyBackendKind::Native),
             _ => anyhow::bail!("unknown policy backend {s:?} (accepted: xla, native)"),
@@ -357,6 +358,11 @@ mod tests {
         for k in [PolicyBackendKind::Xla, PolicyBackendKind::Native] {
             assert_eq!(PolicyBackendKind::parse(k.name()).unwrap(), k);
         }
+        // lenient to whitespace and case, like every parse in this crate
+        assert_eq!(
+            PolicyBackendKind::parse(" Native ").unwrap(),
+            PolicyBackendKind::Native
+        );
         let err = PolicyBackendKind::parse("tpu").unwrap_err().to_string();
         assert!(err.contains("xla") && err.contains("native"), "{err}");
     }

@@ -1,13 +1,58 @@
-//! PPO trainer: owns the flat parameter/Adam-state buffers and drives the
-//! `ppo_update` artifact over shuffled minibatches for K epochs.
+//! PPO trainer: owns the flat parameter/Adam-state buffers and drives
+//! shuffled minibatch updates for K epochs through a selectable
+//! [`TrainerBackend`] — the AOT `ppo_update` artifact (XLA) or the
+//! pure-Rust [`NativeUpdater`] (no artifacts required).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::drl::buffer::Batch;
+use crate::drl::native_update::NativeUpdater;
 use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, DrlManifest, Executable};
 use crate::util::rng::Rng;
+
+/// Which engine performs the PPO minibatch update (`--update-backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateBackendKind {
+    /// The AOT-compiled `ppo_update` artifact on a PJRT runtime.
+    Xla,
+    /// The pure-Rust [`NativeUpdater`] (no artifacts required).
+    Native,
+}
+
+impl UpdateBackendKind {
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
+    pub fn parse(s: &str) -> Result<UpdateBackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "xla" => Ok(UpdateBackendKind::Xla),
+            "native" => Ok(UpdateBackendKind::Native),
+            _ => anyhow::bail!("unknown update backend {s:?} (accepted: xla, native)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`UpdateBackendKind::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdateBackendKind::Xla => "xla",
+            UpdateBackendKind::Native => "native",
+        }
+    }
+}
+
+/// The engine one [`PpoTrainer::update`] call runs its minibatches on.
+/// Both variants consume the same `(params | m | v)` state and the same
+/// shuffled minibatch schedule, so switching backends changes *where* the
+/// arithmetic runs, not what is computed (asserted, with f32-rounding
+/// tolerances, by `rust/tests/train_smoke.rs`).
+#[derive(Clone, Copy)]
+pub enum TrainerBackend<'a> {
+    /// The compiled `ppo_update` executable (on the caller's runtime).
+    Xla(&'a Executable),
+    /// The pure-Rust update step.
+    Native(&'a NativeUpdater),
+}
 
 /// Aggregated statistics over one iteration's update epochs.
 #[derive(Clone, Copy, Debug, Default)]
@@ -22,14 +67,24 @@ pub struct UpdateStats {
     pub wall_s: f64,
 }
 
+/// Checkpoint header magic for the v1 blob format ("DRL1" as a bit
+/// pattern); distinguishes versioned blobs from the legacy headerless
+/// `(params | m | v)` layout, which [`PpoTrainer::restore`] still reads.
+const CKPT_MAGIC: u32 = 0x4452_4C31;
+const CKPT_VERSION: u32 = 1;
+/// f32 slots the v1 header occupies before `(params | m | v)`:
+/// magic, version, Adam-step low bits, Adam-step high bits.
+const CKPT_HEADER: usize = 4;
+
 /// Master-side PPO optimizer state: the flat parameter vector, the Adam
 /// moments, and their device-resident mirrors between minibatches.
 pub struct PpoTrainer {
     pub params: Vec<f32>,
     adam_m: Vec<f32>,
     adam_v: Vec<f32>,
-    /// device-resident copies fed back between minibatches (perf: saves
-    /// ~8 MB of host memcpy per minibatch, EXPERIMENTS.md section Perf)
+    /// device-resident copies fed back between minibatches on the XLA
+    /// backend (perf: saves ~8 MB of host memcpy per minibatch,
+    /// EXPERIMENTS.md section Perf); always `None` on the native backend
     lits: Option<[xla::Literal; 3]>,
     /// 1-based Adam step counter (bias correction).
     step: u64,
@@ -38,17 +93,25 @@ pub struct PpoTrainer {
 }
 
 impl PpoTrainer {
-    /// Fresh optimizer over `params` (zero Adam moments, step 0).
+    /// Fresh optimizer over `params` (zero Adam moments, step 0), sized
+    /// and minibatched per the AOT manifest.
     pub fn new(drl: &DrlManifest, params: Vec<f32>, epochs: usize) -> Self {
+        assert_eq!(params.len(), drl.n_params);
+        PpoTrainer::with_minibatch(params, drl.minibatch, epochs)
+    }
+
+    /// Fresh optimizer without a manifest (artifact-free runs): the caller
+    /// picks the minibatch size instead of reading the artifact's static
+    /// batch dimension.
+    pub fn with_minibatch(params: Vec<f32>, minibatch: usize, epochs: usize) -> Self {
         let n = params.len();
-        assert_eq!(n, drl.n_params);
         PpoTrainer {
             params,
             adam_m: vec![0.0; n],
             adam_v: vec![0.0; n],
             lits: None,
             step: 0,
-            minibatch: drl.minibatch,
+            minibatch,
             epochs,
         }
     }
@@ -58,10 +121,50 @@ impl PpoTrainer {
         self.step
     }
 
-    /// Run `epochs` passes of shuffled minibatch updates over the batch.
-    pub fn update(&mut self, exe: &Executable, batch: &Batch, rng: &mut Rng) -> Result<UpdateStats> {
+    /// Run `epochs` passes of shuffled minibatch updates over the batch on
+    /// the selected backend.
+    pub fn update(
+        &mut self,
+        backend: TrainerBackend,
+        batch: &Batch,
+        rng: &mut Rng,
+    ) -> Result<UpdateStats> {
         let t0 = Instant::now();
         let mut agg = UpdateStats::default();
+        match backend {
+            TrainerBackend::Xla(exe) => self.update_xla(exe, batch, rng, &mut agg)?,
+            TrainerBackend::Native(nu) => self.update_native(nu, batch, rng, &mut agg)?,
+        }
+        let k = agg.minibatches.max(1) as f64;
+        agg.pi_loss /= k;
+        agg.v_loss /= k;
+        agg.entropy /= k;
+        agg.approx_kl /= k;
+        agg.clip_frac /= k;
+        agg.grad_norm /= k;
+        agg.wall_s = t0.elapsed().as_secs_f64();
+        Ok(agg)
+    }
+
+    /// Fold one minibatch's `[pg, v, ent, kl, clip, gnorm]` into the
+    /// iteration aggregate (means are finalized by [`PpoTrainer::update`]).
+    fn accumulate(agg: &mut UpdateStats, stats: &[f32]) {
+        agg.pi_loss += stats[0] as f64;
+        agg.v_loss += stats[1] as f64;
+        agg.entropy += stats[2] as f64;
+        agg.approx_kl += stats[3] as f64;
+        agg.clip_frac += stats[4] as f64;
+        agg.grad_norm += stats[5] as f64;
+        agg.minibatches += 1;
+    }
+
+    fn update_xla(
+        &mut self,
+        exe: &Executable,
+        batch: &Batch,
+        rng: &mut Rng,
+        agg: &mut UpdateStats,
+    ) -> Result<()> {
         let np = self.params.len() as i64;
         let b = self.minibatch as i64;
         let n_obs = batch.n_obs as i64;
@@ -99,13 +202,7 @@ impl PpoTrainer {
                 let m_lit = outs.remove(1);
                 let p_lit = outs.remove(0);
                 self.lits = Some([p_lit, m_lit, v_lit]);
-                agg.pi_loss += stats[0] as f64;
-                agg.v_loss += stats[1] as f64;
-                agg.entropy += stats[2] as f64;
-                agg.approx_kl += stats[3] as f64;
-                agg.clip_frac += stats[4] as f64;
-                agg.grad_norm += stats[5] as f64;
-                agg.minibatches += 1;
+                Self::accumulate(agg, &stats);
             }
         }
         // materialise the host mirrors once per update() call (the params
@@ -115,33 +212,87 @@ impl PpoTrainer {
             self.adam_m = to_vec_f32(&l[1])?;
             self.adam_v = to_vec_f32(&l[2])?;
         }
-        let k = agg.minibatches.max(1) as f64;
-        agg.pi_loss /= k;
-        agg.v_loss /= k;
-        agg.entropy /= k;
-        agg.approx_kl /= k;
-        agg.clip_frac /= k;
-        agg.grad_norm /= k;
-        agg.wall_s = t0.elapsed().as_secs_f64();
-        Ok(agg)
+        Ok(())
     }
 
-    /// Serialize (params | m | v) for checkpointing.
+    fn update_native(
+        &mut self,
+        nu: &NativeUpdater,
+        batch: &Batch,
+        rng: &mut Rng,
+        agg: &mut UpdateStats,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            nu.n_params() == self.params.len(),
+            "native updater sized for {} params, trainer holds {}",
+            nu.n_params(),
+            self.params.len()
+        );
+        // the host vectors are authoritative on this path; stale device
+        // mirrors from a previous XLA update must not be fed back
+        self.lits = None;
+        for _ in 0..self.epochs {
+            for idx in batch.minibatch_indices(self.minibatch, rng) {
+                let (obs, act, logp, adv, ret) = batch.gather(&idx);
+                self.step += 1;
+                let stats = nu.step(
+                    self.step,
+                    &mut self.params,
+                    &mut self.adam_m,
+                    &mut self.adam_v,
+                    &obs,
+                    &act,
+                    &logp,
+                    &adv,
+                    &ret,
+                )?;
+                Self::accumulate(agg, &stats);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize the optimizer state for checkpointing: a 4-slot v1 header
+    /// (magic, version, Adam step counter as two bit-cast f32s) followed by
+    /// `(params | m | v)`.
     pub fn checkpoint(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(3 * self.params.len());
+        let mut out = Vec::with_capacity(CKPT_HEADER + 3 * self.params.len());
+        out.push(f32::from_bits(CKPT_MAGIC));
+        out.push(f32::from_bits(CKPT_VERSION));
+        out.push(f32::from_bits(self.step as u32));
+        out.push(f32::from_bits((self.step >> 32) as u32));
         out.extend_from_slice(&self.params);
         out.extend_from_slice(&self.adam_m);
         out.extend_from_slice(&self.adam_v);
         out
     }
 
-    /// Restore (params | m | v) from a [`PpoTrainer::checkpoint`] blob.
+    /// Restore from a [`PpoTrainer::checkpoint`] blob. Reads the v1
+    /// headered format and the legacy headerless `(params | m | v)` one;
+    /// legacy blobs predate the step counter, so a resume from them starts
+    /// at step 0 (maximal bias correction) like the seed always did.
     pub fn restore(&mut self, data: &[f32]) -> Result<()> {
         let n = self.params.len();
-        anyhow::ensure!(data.len() == 3 * n, "checkpoint size {}", data.len());
-        self.params.copy_from_slice(&data[..n]);
-        self.adam_m.copy_from_slice(&data[n..2 * n]);
-        self.adam_v.copy_from_slice(&data[2 * n..]);
+        let (step, body) = if data.len() == CKPT_HEADER + 3 * n && data[0].to_bits() == CKPT_MAGIC
+        {
+            let version = data[1].to_bits();
+            anyhow::ensure!(version == CKPT_VERSION, "unsupported checkpoint version {version}");
+            let step = data[2].to_bits() as u64 | ((data[3].to_bits() as u64) << 32);
+            (step, &data[CKPT_HEADER..])
+        } else if data.len() == 3 * n {
+            (0, data)
+        } else {
+            anyhow::bail!(
+                "checkpoint size {} (expected {} for v1 or {} legacy)",
+                data.len(),
+                CKPT_HEADER + 3 * n,
+                3 * n
+            );
+        };
+        self.step = step;
+        self.params.copy_from_slice(&body[..n]);
+        self.adam_m.copy_from_slice(&body[n..2 * n]);
+        self.adam_v.copy_from_slice(&body[2 * n..]);
         self.lits = None; // invalidate device copies
         Ok(())
     }
@@ -150,6 +301,8 @@ impl PpoTrainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::drl::native_update::PpoHyperParams;
+    use crate::drl::{NativePolicy, Trajectory, Transition};
 
     fn dummy_drl(n_params: usize) -> DrlManifest {
         DrlManifest {
@@ -174,14 +327,82 @@ mod tests {
     }
 
     #[test]
-    fn checkpoint_roundtrip() {
+    fn checkpoint_roundtrips_params_and_step() {
         let drl = dummy_drl(10);
         let mut t = PpoTrainer::new(&drl, vec![1.0; 10], 2);
+        t.step = 11;
         let ck = t.checkpoint();
-        assert_eq!(ck.len(), 30);
+        assert_eq!(ck.len(), 4 + 30);
         let mut t2 = PpoTrainer::new(&drl, vec![0.0; 10], 2);
         t2.restore(&ck).unwrap();
         assert_eq!(t2.params, vec![1.0; 10]);
+        assert_eq!(t2.adam_step(), 11, "Adam step must survive restore");
         assert!(t.restore(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn restore_reads_legacy_headerless_blob() {
+        let drl = dummy_drl(4);
+        let mut t = PpoTrainer::new(&drl, vec![0.0; 4], 1);
+        t.step = 5;
+        let mut legacy = vec![2.0f32; 4];
+        legacy.extend(vec![0.5f32; 4]);
+        legacy.extend(vec![0.25f32; 4]);
+        t.restore(&legacy).unwrap();
+        assert_eq!(t.params, vec![2.0; 4]);
+        assert_eq!(t.adam_step(), 0, "legacy blobs predate the step counter");
+    }
+
+    #[test]
+    fn large_step_counter_survives_roundtrip() {
+        let drl = dummy_drl(3);
+        let mut t = PpoTrainer::new(&drl, vec![0.0; 3], 1);
+        t.step = (1u64 << 40) + 12345; // far beyond f32's exact-integer range
+        let ck = t.checkpoint();
+        let mut t2 = PpoTrainer::new(&drl, vec![0.0; 3], 1);
+        t2.restore(&ck).unwrap();
+        assert_eq!(t2.adam_step(), (1u64 << 40) + 12345);
+    }
+
+    #[test]
+    fn update_backend_parse_is_lenient_and_lists_accepted() {
+        assert_eq!(UpdateBackendKind::parse(" XLA ").unwrap(), UpdateBackendKind::Xla);
+        assert_eq!(UpdateBackendKind::parse("Native").unwrap(), UpdateBackendKind::Native);
+        for k in [UpdateBackendKind::Xla, UpdateBackendKind::Native] {
+            assert_eq!(UpdateBackendKind::parse(k.name()).unwrap(), k);
+        }
+        let err = UpdateBackendKind::parse("tpu").unwrap_err().to_string();
+        assert!(err.contains("xla") && err.contains("native"), "{err}");
+    }
+
+    #[test]
+    fn native_update_steps_and_counts_minibatches() {
+        let (o, h) = (4, 8);
+        let net = NativePolicy::new(o, h);
+        let params = net.init_params(1);
+        let mut t = PpoTrainer::with_minibatch(params.clone(), 8, 2);
+        let nu = NativeUpdater::new(o, h, PpoHyperParams::default());
+        let mut rng = Rng::new(2);
+        let traj = Trajectory {
+            transitions: (0..12)
+                .map(|_| Transition {
+                    obs: (0..o).map(|_| rng.normal() as f32).collect(),
+                    action: rng.normal() * 0.1,
+                    logp: -0.5,
+                    reward: rng.normal() * 0.1,
+                    value: 0.0,
+                })
+                .collect(),
+            last_value: 0.0,
+            env_id: 0,
+        };
+        let batch = Batch::assemble(&[traj], o, 0.99, 0.95);
+        let s = t.update(TrainerBackend::Native(&nu), &batch, &mut rng).unwrap();
+        // 12 samples at minibatch 8 -> 2 (padded) minibatches x 2 epochs
+        assert_eq!(s.minibatches, 4);
+        assert_eq!(t.adam_step(), 4);
+        assert!(s.pi_loss.is_finite());
+        assert!(s.grad_norm > 0.0, "gradient vanished");
+        assert_ne!(t.params, params, "no parameter movement");
     }
 }

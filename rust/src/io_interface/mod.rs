@@ -38,9 +38,10 @@ pub enum IoMode {
 
 impl IoMode {
     /// Parse a CLI/config string. Accepts the canonical names and their
-    /// aliases; the error lists every accepted spelling.
+    /// aliases, trimmed and case-insensitively; the error lists every
+    /// accepted spelling.
     pub fn parse(s: &str) -> Result<IoMode> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "baseline" | "ascii" => Ok(IoMode::Baseline),
             "optimized" | "binary" => Ok(IoMode::Optimized),
             "memory" | "disabled" | "in-memory" => Ok(IoMode::InMemory),
@@ -167,8 +168,22 @@ mod tests {
     }
 
     #[test]
+    fn parse_trims_and_ignores_case() {
+        // sloppy-but-unambiguous CLI spellings must not hard-fail
+        for (s, want) in [
+            ("Baseline", IoMode::Baseline),
+            ("memory ", IoMode::InMemory),
+            ("  IN-MEMORY", IoMode::InMemory),
+            ("OPTIMIZED", IoMode::Optimized),
+            ("\tAscii\n", IoMode::Baseline),
+        ] {
+            assert_eq!(IoMode::parse(s).unwrap(), want, "{s:?}");
+        }
+    }
+
+    #[test]
     fn parse_rejects_unknown_and_lists_accepted() {
-        for bad in ["", "Baseline", "ramdisk", "memory "] {
+        for bad in ["", "ramdisk", "base line", "mem"] {
             let err = IoMode::parse(bad).unwrap_err().to_string();
             // the message must teach the accepted spellings
             for accepted in [

@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
 use drlfoam::coordinator::{train, InferenceMode, LocalPolicy, TrainConfig};
-use drlfoam::drl::{NativePolicy, PolicyBackendKind};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
 use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN};
 use drlfoam::env::Environment;
 use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
@@ -30,7 +30,11 @@ use drlfoam::{drl, env, reproduce};
 const USAGE: &str = "usage: drlfoam <train|episode|scenarios|calibrate|reproduce|simulate|info> [options]
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
-             --inference per-env|batched --backend xla|native [--async] [--quiet]
+             --inference per-env|batched --backend xla|native --update-backend xla|native
+             [--async] [--quiet]
+             (--scenario surrogate trains with no artifacts: native backends are
+              auto-selected when artifacts/ is absent. --inference batched is
+              ignored with --async: there is no sync barrier to batch at.)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
              (--scenario surrogate runs without artifacts)
   scenarios: list selectable scenarios
@@ -51,7 +55,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let value_opts = [
         "artifacts", "out", "variant", "scenario", "seed", "envs", "ranks",
         "horizon", "iterations", "epochs", "io", "inference", "backend",
-        "episodes", "periods", "calib", "policy", "work-dir", "log-every",
+        "update-backend", "episodes", "periods", "calib", "policy",
+        "work-dir", "log-every",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -83,6 +88,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         io_mode: IoMode::parse(&args.get_or("io", "memory"))?,
         inference: InferenceMode::parse(&args.get_or("inference", "per-env"))?,
         backend: PolicyBackendKind::parse(&args.get_or("backend", "xla"))?,
+        update_backend: UpdateBackendKind::parse(&args.get_or("update-backend", "xla"))?,
         horizon: args.usize_or("horizon", 100)?,
         iterations: args.usize_or("iterations", 100)?,
         epochs: args.usize_or("epochs", 4)?,
@@ -90,6 +96,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.usize_or("log-every", 1)?,
         quiet: args.has_flag("quiet"),
     };
+    // io/inference are used as requested; the policy/update backends may
+    // be downgraded by the artifact-free fallback, so the *resolved*
+    // engines are reported from inside the training setup instead
     println!(
         "training: scenario={} variant={} envs={} horizon={} iterations={} io={} inference={}",
         cfg.scenario,
@@ -138,11 +147,7 @@ fn cmd_episode(args: &Args) -> Result<()> {
     // the surrogate scenario runs without any artifacts, so a *missing*
     // manifest is fine — but a present-and-broken one is a real error,
     // not something to silently fall back from
-    let manifest = match Manifest::load(&adir) {
-        Ok(m) => Some(m),
-        Err(_) if !adir.join("manifest.json").exists() => None,
-        Err(e) => return Err(e.context("artifacts present but unreadable")),
-    };
+    let manifest = Manifest::load_optional(&adir)?;
     let work = out_dir(args).join("work");
     std::fs::create_dir_all(&work)?;
 
@@ -346,7 +351,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut mbs = 0usize;
     for _ in 0..10 {
-        let st = trainer.update(upd_exe, &batch, &mut rng)?;
+        let st = trainer.update(drl::TrainerBackend::Xla(upd_exe), &batch, &mut rng)?;
         mbs += st.minibatches;
     }
     let t_update_mb = t0.elapsed().as_secs_f64() / mbs as f64;

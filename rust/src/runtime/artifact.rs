@@ -161,6 +161,20 @@ impl Manifest {
         })
     }
 
+    /// Load the manifest when `dir` ships one. A *missing* manifest
+    /// returns `Ok(None)` — callers (the `episode` command, both training
+    /// loops) fall back to their artifact-free paths — while a
+    /// present-but-broken one is a real error, not something to silently
+    /// fall back from.
+    pub fn load_optional(dir: impl AsRef<Path>) -> Result<Option<Manifest>> {
+        let dir = dir.as_ref();
+        match Manifest::load(dir) {
+            Ok(m) => Ok(Some(m)),
+            Err(_) if !dir.join("manifest.json").exists() => Ok(None),
+            Err(e) => Err(e.context("artifacts present but unreadable")),
+        }
+    }
+
     pub fn variant(&self, name: &str) -> Result<&VariantManifest> {
         self.variants
             .get(name)
@@ -231,6 +245,20 @@ mod tests {
         // developed flow should be non-trivial
         let umax = u.iter().cloned().fold(0.0f32, f32::max);
         assert!(umax > 1.0, "u max {umax}");
+    }
+
+    #[test]
+    fn load_optional_missing_is_none_but_broken_is_error() {
+        let root = std::env::temp_dir().join(format!("drlfoam-oman-{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        // missing directory -> artifact-free path
+        assert!(Manifest::load_optional(root.join("nope")).unwrap().is_none());
+        // present but unparseable -> hard error
+        let broken = root.join("broken");
+        std::fs::create_dir_all(&broken).unwrap();
+        std::fs::write(broken.join("manifest.json"), "{not json").unwrap();
+        assert!(Manifest::load_optional(&broken).is_err());
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]
