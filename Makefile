@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts artifacts-paper ci train-smoke
+.PHONY: artifacts artifacts-paper ci train-smoke sync-smoke
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -26,3 +26,15 @@ train-smoke:
 	    --artifacts out/train-smoke/no-artifacts \
 	    --out out/train-smoke --work-dir out/train-smoke/work \
 	    --envs 2 --horizon 10 --iterations 3
+
+# Rollout-scheduler smoke: the same artifact-free loop once per sync
+# policy (full episode barrier, partial barrier, async).
+sync-smoke:
+	for s in full partial:2 async; do \
+	    cargo run --release --quiet -- train \
+	        --scenario surrogate --backend native --update-backend native \
+	        --sync $$s \
+	        --artifacts out/sync-smoke/no-artifacts \
+	        --out out/sync-smoke/$$s --work-dir out/sync-smoke/$$s/work \
+	        --envs 3 --horizon 5 --iterations 2 --quiet || exit 1; \
+	done

@@ -1,0 +1,86 @@
+//! Bench: the rollout-scheduler axis — full vs partial-barrier vs async
+//! sync policies on the live coordinator (surrogate scenario, native
+//! backends, zero artifacts). Prints per-policy wall time, measured
+//! barrier-idle seconds, and mean parameter staleness across env counts
+//! {2, 4, 8}; the DES twin of this sweep is `drlfoam reproduce sync`.
+//!
+//! Run: `cargo bench --bench sync_policies`
+
+use drlfoam::coordinator::{train, SyncPolicy, TrainConfig};
+use drlfoam::drl::{PolicyBackendKind, UpdateBackendKind};
+use drlfoam::io_interface::IoMode;
+use drlfoam::util::bench;
+
+fn cfg(tag: &str, n_envs: usize, sync: SyncPolicy) -> TrainConfig {
+    let root = std::env::temp_dir().join(format!("drlfoam-syncb-{tag}-{}", std::process::id()));
+    TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root,
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        sync,
+        n_envs,
+        io_mode: IoMode::InMemory,
+        horizon: 20,
+        iterations: 4,
+        epochs: 2,
+        seed: 3,
+        log_every: 10_000,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    println!("== sync policies, surrogate scenario (no artifacts) ==");
+    println!(
+        "{:<12} {:>5} {:>8} {:>12} {:>14} {:>10} {:>10}",
+        "sync", "envs", "updates", "wall ms", "idle ms/round", "staleness", "vs full"
+    );
+    for envs in [2usize, 4, 8] {
+        let policies = [
+            SyncPolicy::Full,
+            SyncPolicy::Partial { k: (envs / 2).max(1) },
+            SyncPolicy::Async,
+        ];
+        let mut t_full = 0.0f64;
+        for sync in policies {
+            let c = cfg(&sync.name().replace(':', "-"), envs, sync);
+            // one warmup + 3 timed runs; idle/staleness come from the last
+            // run's own accounting (they are properties of the schedule,
+            // not of the harness timer)
+            let mut last = None;
+            let r = bench::bench(
+                &format!("train sync={} x{envs}", sync.name()),
+                1,
+                3,
+                || {
+                    last = Some(train(&c).expect("training failed"));
+                },
+            );
+            let s = last.expect("bench ran");
+            if sync == SyncPolicy::Full {
+                t_full = r.mean_s;
+            }
+            // per-round idle, the unit the DES's SimBreakdown reports
+            let idle_per_round = s.barrier_idle_s / s.log.len().max(1) as f64;
+            println!(
+                "{:<12} {:>5} {:>8} {:>12.1} {:>14.3} {:>10.3} {:>9.2}x",
+                sync.name(),
+                envs,
+                s.log.len(),
+                r.mean_s * 1e3,
+                idle_per_round * 1e3,
+                s.mean_staleness,
+                t_full / r.mean_s
+            );
+            std::fs::remove_dir_all(&c.out_dir).ok();
+            results.push(r);
+        }
+    }
+    bench::save("sync_policies", &results);
+}

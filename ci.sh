@@ -9,6 +9,8 @@
 #   4. tests                 cargo test -q
 #   5. artifact-free smoke   drlfoam train on the surrogate scenario with
 #                            the native update backend (no artifacts)
+#   6. sync-policy smoke     the same loop once per rollout scheduler
+#                            policy (--sync full|partial:2|async)
 #
 # Integration tests that execute AOT artifacts skip themselves gracefully
 # when `make artifacts` has not been run; the scenario-registry and
@@ -45,5 +47,22 @@ cargo run --release --quiet -- train \
 test -f "$SMOKE_OUT/train_log.csv"
 test -f "$SMOKE_OUT/policy_final.bin"
 test -f "$SMOKE_OUT/trainer_ckpt.bin"
+
+# 6. rollout-scheduler smoke: every sync policy must complete the same
+#    artifact-free run end to end (--sync partial:k is the new axis; the
+#    staleness histogram must be written for the non-full policies).
+echo "== sync-policy smoke (full / partial:2 / async)"
+SYNC_OUT=out/ci-sync-smoke
+rm -rf "$SYNC_OUT"
+for s in full partial:2 async; do
+    cargo run --release --quiet -- train \
+        --scenario surrogate --backend native --update-backend native \
+        --sync "$s" \
+        --artifacts "$SYNC_OUT/no-artifacts" \
+        --out "$SYNC_OUT/$s" --work-dir "$SYNC_OUT/$s/work" \
+        --envs 3 --horizon 5 --iterations 2 --quiet
+    test -f "$SYNC_OUT/$s/train_log.csv"
+    test -f "$SYNC_OUT/$s/staleness.csv"
+done
 
 echo "CI OK"

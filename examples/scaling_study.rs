@@ -26,6 +26,7 @@ fn main() -> Result<()> {
     println!("{}", reproduce::fig9(&calib, out)?);
     println!("{}", reproduce::fig10(&calib, out)?);
     println!("{}", reproduce::table2(&calib, out)?);
+    println!("{}", reproduce::sync_sweep(&calib, out)?);
     println!("{}", reproduce::summary(&calib, out)?);
     println!("all series written under out/*.csv");
     Ok(())

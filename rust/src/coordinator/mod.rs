@@ -8,23 +8,28 @@
 //! * [`policy_server`] — central batched inference: one forward pass over
 //!   the whole `[N_envs, n_obs]` observation batch per actuation period
 //!   (the paper's hybrid-parallelization axis).
-//! * [`train`] — the synchronous PPO training loop: broadcast -> rollout
-//!   barrier -> GAE -> minibatch updates -> log, exactly the structure
-//!   whose scaling the paper studies; rollouts run in either inference
-//!   mode and the update on either backend (XLA artifact or the native
-//!   pure-Rust step). With no manifest present, both loops fall back to
-//!   the fully artifact-free path (surrogate scenario, native backends).
-//! * [`async_train`] — the barrier-free A3C-style variant (per-env
-//!   inference only: there is no common sync point to batch at; the
-//!   ignored `--inference batched` flag warns instead of silently
-//!   no-opping).
+//! * [`scheduler`] — the ONE training loop, parameterized by
+//!   [`SyncPolicy`]: full episode barrier (the synchronous structure
+//!   whose scaling the paper studies), partial barrier (update on any
+//!   `k` of `n` trajectories; stragglers join the next batch), or async
+//!   (A3C-style, one update per arriving trajectory — the paper's
+//!   future-work direction). Rollouts run in either inference mode and
+//!   the update on either backend (XLA artifact or the native pure-Rust
+//!   step); with no manifest present the loop falls back to the fully
+//!   artifact-free path (surrogate scenario, native backends).
+//! * [`train`] — run configuration ([`TrainConfig`]) and the shared
+//!   setup both the scheduler and the CLI resolve backends through.
+//!
+//! The cluster DES (`crate::cluster::des`) mirrors the same
+//! [`SyncPolicy`] type, so live measurements and 60-core projections
+//! describe the same schedule.
 
-pub mod async_train;
 pub mod policy_server;
 pub mod pool;
+pub mod scheduler;
 pub mod train;
 
-pub use async_train::{train_async, AsyncTrainSummary};
 pub use policy_server::PolicyServer;
 pub use pool::{EnvPool, EpisodeOut, EpisodeStats, LocalPolicy, PoolConfig};
-pub use train::{train, InferenceMode, TrainConfig, TrainSummary};
+pub use scheduler::{train, SyncPolicy};
+pub use train::{InferenceMode, IterationLog, TrainConfig, TrainSummary};

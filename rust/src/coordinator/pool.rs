@@ -18,7 +18,8 @@
 //!   [`PolicyServer`](super::policy_server::PolicyServer) runs one batched
 //!   forward pass for the whole environment set.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -69,6 +70,11 @@ pub struct EpisodeOut {
     pub env_id: usize,
     pub traj: Trajectory,
     pub stats: EpisodeStats,
+    /// When the episode actually finished (worker-side stamp). The
+    /// scheduler measures barrier idle against this, NOT against when
+    /// the coordinator got around to draining the channel — episodes
+    /// completing while an update runs must charge that wait.
+    pub completed_at: std::time::Instant,
 }
 
 enum Job {
@@ -110,6 +116,13 @@ pub struct EnvPool {
     seed: u64,
     /// (n_obs, hidden) the workers' environments/policies are sized to
     dims: (usize, usize),
+    /// per-env in-flight flag: true between [`EnvPool::dispatch`] and the
+    /// receive of that env's episode (partial-barrier scheduling needs to
+    /// know which envs can be re-dispatched)
+    busy: Vec<bool>,
+    /// finished episodes set aside while probing the results channel for
+    /// a dead-worker root cause; drained before the channel on receive
+    pending: VecDeque<EpisodeOut>,
 }
 
 impl EnvPool {
@@ -156,6 +169,8 @@ impl EnvPool {
             joins.push(Some(join));
         }
         Ok(EnvPool {
+            busy: vec![false; cfg.n_envs],
+            pending: VecDeque::new(),
             job_txs,
             results: rx_out,
             lockstep: rx_step,
@@ -179,26 +194,70 @@ impl EnvPool {
         self.dims.1
     }
 
-    /// Dispatch one episode to a specific environment (async mode).
+    /// Dispatch one episode to a specific environment (partial-barrier
+    /// and async scheduling). The env must not already have an episode in
+    /// flight — the scheduler re-dispatches only after the previous
+    /// episode was received.
     pub fn dispatch(
-        &self,
+        &mut self,
         env_id: usize,
         params: &Arc<Vec<f32>>,
         horizon: usize,
         episode_index: u64,
     ) -> Result<()> {
+        anyhow::ensure!(
+            !self.busy[env_id],
+            "env {env_id} already has an episode in flight"
+        );
         self.job_txs[env_id]
             .send(Job::Rollout {
                 params: Arc::clone(params),
                 horizon,
                 episode_seed: episode_seed(episode_index, env_id),
             })
-            .context("worker channel closed")
+            .context("worker channel closed")?;
+        self.busy[env_id] = true;
+        Ok(())
     }
 
-    /// Receive the next finished episode from ANY environment (async mode).
-    pub fn recv_one(&self) -> Result<EpisodeOut> {
-        self.results.recv().context("all workers died")?
+    /// Episodes currently in flight (dispatched, not yet received).
+    pub fn in_flight(&self) -> usize {
+        self.busy.iter().filter(|b| **b).count()
+    }
+
+    /// True while `env_id` has a dispatched episode not yet received.
+    pub fn is_busy(&self, env_id: usize) -> bool {
+        self.busy[env_id]
+    }
+
+    /// Receive the next finished episode from ANY environment, blocking
+    /// until one arrives (partial-barrier and async scheduling).
+    pub fn recv_one(&mut self) -> Result<EpisodeOut> {
+        if let Some(out) = self.pending.pop_front() {
+            return Ok(out);
+        }
+        let out = self.results.recv().context("all workers died")??;
+        self.busy[out.env_id] = false;
+        Ok(out)
+    }
+
+    /// Receive a finished episode if one is already queued, without
+    /// blocking; `Ok(None)` means every in-flight episode is still
+    /// running — lets a caller drain whatever has already arrived
+    /// before deciding whether to block or do other work.
+    pub fn try_recv_one(&mut self) -> Result<Option<EpisodeOut>> {
+        if let Some(out) = self.pending.pop_front() {
+            return Ok(Some(out));
+        }
+        match self.results.try_recv() {
+            Ok(Ok(out)) => {
+                self.busy[out.env_id] = false;
+                Ok(Some(out))
+            }
+            Ok(Err(e)) => Err(e.context("env worker failed")),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow::anyhow!("all workers died")),
+        }
     }
 
     /// Roll out one episode on every environment with per-env inference
@@ -224,14 +283,22 @@ impl EnvPool {
     /// Best-effort root cause when a worker goes away mid-lockstep: a
     /// worker that fails setup reports on the results channel and exits,
     /// which the lockstep path would otherwise only see as a dead channel.
-    fn closed_reason(&self) -> anyhow::Error {
-        match self.results.try_recv() {
-            Ok(Err(e)) => e.context("env worker failed"),
-            _ => anyhow::anyhow!("worker channel closed"),
+    /// Finished episodes encountered while probing are re-queued (onto
+    /// `pending`, drained by the next receive), never dropped.
+    fn closed_reason(&mut self) -> anyhow::Error {
+        loop {
+            match self.results.try_recv() {
+                Ok(Err(e)) => return e.context("env worker failed"),
+                Ok(Ok(out)) => {
+                    self.busy[out.env_id] = false;
+                    self.pending.push_back(out);
+                }
+                Err(_) => return anyhow::anyhow!("worker channel closed"),
+            }
         }
     }
 
-    fn recv_lockstep(&self) -> Result<LockstepReply> {
+    fn recv_lockstep(&mut self) -> Result<LockstepReply> {
         match self.lockstep.recv() {
             Ok(r) => r,
             Err(_) => Err(self.closed_reason()),
@@ -257,38 +324,80 @@ impl EnvPool {
         horizon: usize,
         iteration: u64,
     ) -> Result<Vec<EpisodeOut>> {
-        let n = self.job_txs.len();
+        let jobs: Vec<(usize, u64)> = (0..self.job_txs.len()).map(|e| (e, iteration)).collect();
+        self.rollout_batched_subset(rt, server, params, horizon, &jobs)
+    }
+
+    /// [`EnvPool::rollout_batched`] over an arbitrary SUBSET of the pool:
+    /// `jobs` lists `(env_id, episode_index)` pairs, and the lockstep
+    /// barrier (and the server's batch) spans only those environments —
+    /// this is what lets central batched inference compose with the
+    /// partial-barrier scheduler, which re-dispatches fewer than `n_envs`
+    /// environments per round. Each env draws its exploration stream from
+    /// its own `episode_index`, exactly like [`EnvPool::dispatch`].
+    pub fn rollout_batched_subset(
+        &mut self,
+        rt: Option<&Runtime>,
+        server: &mut PolicyServer,
+        params: &Arc<Vec<f32>>,
+        horizon: usize,
+        jobs: &[(usize, u64)],
+    ) -> Result<Vec<EpisodeOut>> {
+        let m = jobs.len();
+        anyhow::ensure!(m > 0, "empty lockstep dispatch set");
         anyhow::ensure!(
             server.n_obs() == self.dims.0,
             "server n_obs {} != pool n_obs {}",
             server.n_obs(),
             self.dims.0
         );
-        let t_wall = std::time::Instant::now();
+        let mut slot_of: Vec<Option<usize>> = vec![None; self.job_txs.len()];
+        for (slot, &(e, _)) in jobs.iter().enumerate() {
+            anyhow::ensure!(e < self.job_txs.len(), "env id {e} out of range");
+            anyhow::ensure!(
+                slot_of[e].is_none(),
+                "env {e} dispatched twice in one lockstep set"
+            );
+            slot_of[e] = Some(slot);
+        }
+        let t_start = std::time::Instant::now();
         server.set_params(rt, params)?;
         let policy = Policy::new(server.n_obs());
-        let mut rngs: Vec<Rng> = (0..n)
-            .map(|e| Rng::new(self.seed ^ episode_seed(iteration, e)))
+        let mut rngs: Vec<Rng> = jobs
+            .iter()
+            .map(|&(e, idx)| Rng::new(self.seed ^ episode_seed(idx, e)))
             .collect();
 
-        for tx in &self.job_txs {
-            tx.send(Job::Reset).map_err(|_| self.closed_reason())?;
+        for &(e, _) in jobs {
+            if self.job_txs[e].send(Job::Reset).is_err() {
+                return Err(self.closed_reason());
+            }
         }
-        let mut obs_all: Vec<Vec<f32>> = vec![Vec::new(); n];
-        for _ in 0..n {
+        let mut obs_all: Vec<Vec<f32>> = vec![Vec::new(); m];
+        // per-env wall clock, reset-ack to last step-ack: the envs of one
+        // lockstep set share every barrier, but their own service times
+        // still differ — DES calibration must not see uniform episodes
+        let mut t_reset_ack = vec![0.0f64; m];
+        let mut t_last_ack = vec![0.0f64; m];
+        for _ in 0..m {
             match self.recv_lockstep()? {
-                LockstepReply::Obs { env_id, obs } => obs_all[env_id] = obs,
+                LockstepReply::Obs { env_id, obs } => {
+                    let slot = slot_of[env_id].context("reset reply from an undispatched env")?;
+                    obs_all[slot] = obs;
+                    t_reset_ack[slot] = t_start.elapsed().as_secs_f64();
+                }
                 LockstepReply::Step { .. } => bail!("unexpected step reply during reset"),
             }
         }
 
-        let mut trajs: Vec<Trajectory> = (0..n)
-            .map(|e| Trajectory {
+        let mut trajs: Vec<Trajectory> = jobs
+            .iter()
+            .map(|&(e, _)| Trajectory {
                 env_id: e,
                 ..Default::default()
             })
             .collect();
-        let mut stats = vec![EpisodeStats::default(); n];
+        let mut stats = vec![EpisodeStats::default(); m];
         let mut policy_total = 0.0f64;
 
         for _t in 0..horizon {
@@ -296,19 +405,20 @@ impl EnvPool {
             let pouts = server.infer_batch(rt, params, &obs_all)?;
             policy_total += tp.elapsed().as_secs_f64();
 
-            let mut actions: Vec<(f64, f64)> = Vec::with_capacity(n);
-            for e in 0..n {
-                let (a, logp) = policy.sample(&pouts[e], &mut rngs[e]);
+            let mut actions: Vec<(f64, f64)> = Vec::with_capacity(m);
+            for slot in 0..m {
+                let (a, logp) = policy.sample(&pouts[slot], &mut rngs[slot]);
                 actions.push((a, logp));
-                self.job_txs[e]
-                    .send(Job::Step { action: a })
-                    .map_err(|_| self.closed_reason())?;
+                if self.job_txs[jobs[slot].0].send(Job::Step { action: a }).is_err() {
+                    return Err(self.closed_reason());
+                }
             }
-            for _ in 0..n {
+            for _ in 0..m {
                 match self.recv_lockstep()? {
                     LockstepReply::Step { env_id, result: sr } => {
-                        let (a, logp) = actions[env_id];
-                        let st = &mut stats[env_id];
+                        let slot = slot_of[env_id].context("step reply from an undispatched env")?;
+                        let (a, logp) = actions[slot];
+                        let st = &mut stats[slot];
                         st.cfd_s += sr.timings.cfd_s;
                         st.io_s += sr.timings.io_s;
                         st.io.accumulate(&sr.io);
@@ -316,14 +426,15 @@ impl EnvPool {
                         st.cd_mean += sr.cd_mean / horizon as f64;
                         st.cl_abs_mean += sr.cl_mean.abs() / horizon as f64;
                         st.jet_final = sr.jet;
-                        trajs[env_id].transitions.push(Transition {
-                            obs: std::mem::take(&mut obs_all[env_id]),
+                        trajs[slot].transitions.push(Transition {
+                            obs: std::mem::take(&mut obs_all[slot]),
                             action: a,
                             logp,
                             reward: sr.reward,
-                            value: pouts[env_id].value,
+                            value: pouts[slot].value,
                         });
-                        obs_all[env_id] = sr.obs;
+                        obs_all[slot] = sr.obs;
+                        t_last_ack[slot] = t_start.elapsed().as_secs_f64();
                     }
                     LockstepReply::Obs { .. } => bail!("unexpected reset reply during step"),
                 }
@@ -334,22 +445,24 @@ impl EnvPool {
         let tp = std::time::Instant::now();
         let pouts = server.infer_batch(rt, params, &obs_all)?;
         policy_total += tp.elapsed().as_secs_f64();
-        let wall = t_wall.elapsed().as_secs_f64();
+        // the lockstep set completes together at the final barrier
+        let completed_at = std::time::Instant::now();
 
         Ok(trajs
             .into_iter()
             .zip(stats)
             .enumerate()
-            .map(|(e, (mut traj, mut st))| {
-                traj.last_value = pouts[e].value;
-                // the batched pass serves all envs at once; attribute an
-                // equal share so per-episode stats stay comparable
-                st.policy_s = policy_total / n as f64;
-                st.wall_s = wall;
+            .map(|(slot, (mut traj, mut st))| {
+                traj.last_value = pouts[slot].value;
+                // the batched pass serves the whole set at once; attribute
+                // an equal share so per-episode stats stay comparable
+                st.policy_s = policy_total / m as f64;
+                st.wall_s = (t_last_ack[slot] - t_reset_ack[slot]).max(0.0);
                 EpisodeOut {
-                    env_id: e,
+                    env_id: jobs[slot].0,
                     traj,
                     stats: st,
+                    completed_at,
                 }
             })
             .collect())
@@ -587,5 +700,6 @@ fn run_episode(
         env_id,
         traj,
         stats,
+        completed_at: std::time::Instant::now(),
     })
 }

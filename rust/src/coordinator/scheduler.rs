@@ -1,0 +1,434 @@
+//! Unified rollout scheduler: ONE training loop, parameterized by a
+//! [`SyncPolicy`] instead of two near-duplicate loops at the extremes.
+//!
+//! The paper's Table I / Figs 10–12 show that once I/O is optimized the
+//! dominant multi-environment efficiency loss is **barrier idle time** —
+//! every env waiting for the slowest of `n` episode draws — and its
+//! stated future work is barrier-free training. The scheduler makes the
+//! barrier a tunable axis:
+//!
+//! * [`SyncPolicy::Full`] — the classic synchronous iteration: update on
+//!   all `n` trajectories (today's validated baseline; bitwise identical
+//!   to the pre-refactor loop, see `rust/tests/scheduler_equivalence.rs`);
+//! * [`SyncPolicy::Partial`]`{ k }` — update as soon as ANY `k` of `n`
+//!   trajectories arrive; stragglers keep running and their episodes join
+//!   the next batch, bounding both staleness and idle time;
+//! * [`SyncPolicy::Async`] — `k = 1`, the A3C-style barrier-free extreme.
+//!
+//! Every policy runs on both PPO update backends and both inference
+//! modes. Central batched inference composes with partial barriers via
+//! [`EnvPool::rollout_batched_subset`]: the policy server batches
+//! whatever observation set is currently at the barrier (the envs being
+//! re-dispatched) instead of requiring all `n`.
+//!
+//! Per-env parameter versions are tracked for every policy; the loop
+//! reports a staleness histogram (`out/staleness.csv`, summarized in
+//! [`TrainSummary`]) plus the measured barrier idle seconds (a run
+//! total; per update round it mirrors the DES's `barrier_idle_s`
+//! mean). The cluster DES
+//! (`crate::cluster::des`) consumes the same [`SyncPolicy`] type, so the
+//! measured-small/projected-big chain stays truthful for all three
+//! policies (`drlfoam reproduce sync` sweeps the k/n ratio).
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::policy_server::PolicyServer;
+use crate::coordinator::pool::EpisodeOut;
+use crate::coordinator::train::{
+    setup, update_engine, InferenceMode, IterationLog, TrainConfig, TrainSetup, TrainSummary,
+};
+use crate::drl::policy::PolicyBackendKind;
+use crate::drl::Batch;
+use crate::runtime::write_f32_bin;
+use crate::util::rng::Rng;
+
+/// When the coordinator stops collecting trajectories and updates the
+/// policy — the barrier axis shared by the live training loop and the
+/// cluster DES (`--sync full|partial:<k>|async`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// Episode barrier over all `n_envs` trajectories (synchronous PPO,
+    /// the paper's Fig 4 iteration).
+    Full,
+    /// Update as soon as any `k` trajectories arrive; stragglers'
+    /// episodes join the next batch. `k` is clamped to `[1, n_envs]`, so
+    /// `partial:1 == async` and `partial:n_envs == full`.
+    Partial { k: usize },
+    /// One update per arriving trajectory (`k = 1`, A3C-style barrier-free
+    /// training — the paper's stated future-work direction).
+    Async,
+}
+
+impl SyncPolicy {
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
+    pub fn parse(s: &str) -> Result<SyncPolicy> {
+        let t = s.trim().to_ascii_lowercase();
+        if let Some(ks) = t.strip_prefix("partial:") {
+            let k: usize = ks
+                .trim()
+                .parse()
+                .with_context(|| format!("--sync partial:<k> needs an integer, got {ks:?}"))?;
+            anyhow::ensure!(k >= 1, "--sync partial:<k> needs k >= 1");
+            return Ok(SyncPolicy::Partial { k });
+        }
+        match t.as_str() {
+            "full" | "sync" | "barrier" => Ok(SyncPolicy::Full),
+            "async" | "a3c" => Ok(SyncPolicy::Async),
+            _ => anyhow::bail!("unknown sync policy {s:?} (accepted: full, partial:<k>, async)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`SyncPolicy::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            SyncPolicy::Full => "full".to_string(),
+            SyncPolicy::Partial { k } => format!("partial:{k}"),
+            SyncPolicy::Async => "async".to_string(),
+        }
+    }
+
+    /// Trajectories per update for a pool of `n_envs` environments.
+    pub fn effective_k(&self, n_envs: usize) -> usize {
+        let n = n_envs.max(1);
+        match self {
+            SyncPolicy::Full => n,
+            SyncPolicy::Partial { k } => (*k).clamp(1, n),
+            SyncPolicy::Async => 1,
+        }
+    }
+}
+
+/// Scheduler's view of one environment.
+#[derive(Clone, Copy, PartialEq)]
+enum EnvState {
+    /// No episode dispatched; eligible for re-dispatch with fresh params.
+    Idle,
+    /// An episode is running under the params it was dispatched with.
+    InFlight,
+    /// Episode finished, waiting in the arrival queue for an update.
+    Arrived,
+}
+
+/// Run the full training loop under `cfg.sync`; returns the learning
+/// curve, final policy, and the staleness/idle accounting.
+///
+/// Episode budget is `iterations * n_envs` for every policy, consumed in
+/// `ceil(budget / k)` updates of `k` trajectories each (so `--sync full`
+/// performs exactly `iterations` updates, like the pre-refactor loop,
+/// and `--sync async` performs one update per episode).
+pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
+    anyhow::ensure!(cfg.n_envs >= 1, "need at least one environment");
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    std::fs::create_dir_all(&cfg.work_dir)?;
+    let n = cfg.n_envs;
+    let k = cfg.sync.effective_k(n);
+    let TrainSetup {
+        manifest,
+        mut pool,
+        mut trainer,
+        mut rt,
+        updater,
+        update_file,
+        backend,
+        n_obs,
+        hidden,
+        gamma,
+        gae_lambda,
+    } = setup(cfg, cfg.inference == InferenceMode::Batched)?;
+
+    let mut server = match cfg.inference {
+        InferenceMode::PerEnv => None,
+        InferenceMode::Batched => {
+            let s = match backend {
+                PolicyBackendKind::Xla => {
+                    // setup guarantees manifest + runtime on this path
+                    let m = manifest.as_ref().context("xla serving needs a manifest")?;
+                    let s = PolicyServer::xla(&m.drl);
+                    s.load_into(rt.as_mut().context("serving runtime missing")?)?;
+                    s
+                }
+                PolicyBackendKind::Native => PolicyServer::native(n_obs, hidden),
+            };
+            if !cfg.quiet {
+                println!("batched inference: {}", s.describe());
+            }
+            Some(s)
+        }
+    };
+    if !cfg.quiet && cfg.sync != SyncPolicy::Full {
+        println!("sync policy: {} ({k} of {n} trajectories per update)", cfg.sync.name());
+    }
+    if cfg.sync == SyncPolicy::Async && cfg.inference == InferenceMode::Batched && !cfg.quiet {
+        // the lockstep protocol completes its dispatch set together, so
+        // async-with-batched-serving fully serializes generation and
+        // updates — it runs correctly, but without the compute/update
+        // overlap that is the point of async; say so out loud
+        eprintln!(
+            "warning: --sync async with --inference batched has no compute/update \
+             overlap (the lockstep rollout is itself a barrier); \
+             --inference per-env is the faithful async mode"
+        );
+    }
+
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+    let total_episodes = cfg.iterations * n;
+    let total_updates = total_episodes.div_ceil(k);
+
+    // per-env scheduling state: parameter version at dispatch, episode
+    // counter (drives the exploration seed, one stream per (env, episode)
+    // like the pre-refactor loops), and the idle/in-flight/arrived phase
+    let mut state = vec![EnvState::Idle; n];
+    let mut ep_count = vec![0u64; n];
+    let mut env_version = vec![0u64; n];
+    let mut version: u64 = 0;
+    let mut dispatched = 0usize;
+    let mut consumed = 0usize;
+    // finished episodes not yet consumed by an update, in arrival order;
+    // idle time is measured from each episode's worker-side
+    // `completed_at` stamp, so episodes finishing while an update runs
+    // are charged their true wait even though the single-threaded
+    // coordinator drains them later
+    let mut arrived: VecDeque<EpisodeOut> = VecDeque::new();
+
+    let mut log = Vec::with_capacity(total_updates);
+    let mut io_bytes_acc = 0u64;
+    let mut stale_hist: Vec<usize> = Vec::new();
+    let mut stale_sum = 0u64;
+    let mut barrier_idle_s = 0.0f64;
+    let t_total = Instant::now();
+
+    let mut csv = std::fs::File::create(cfg.out_dir.join("train_log.csv"))?;
+    writeln!(
+        csv,
+        "iteration,episodes,mean_reward,mean_cd,mean_cl_abs,jet_final,pi_loss,v_loss,approx_kl,rollout_s,update_s,cfd_s,io_s,policy_s"
+    )?;
+    let mut stale_csv = std::fs::File::create(cfg.out_dir.join("staleness.csv"))?;
+    writeln!(stale_csv, "update,env_id,episode,staleness,wait_s")?;
+
+    for it in 0..total_updates {
+        let take = k.min(total_episodes - consumed);
+        let t0 = Instant::now();
+
+        match &mut server {
+            None => {
+                // per-env inference: re-dispatch every idle env with the
+                // fresh params, then block until `take` arrivals are in
+                // (recv_one drains already-finished episodes first)
+                if dispatched < total_episodes && state.contains(&EnvState::Idle) {
+                    let params = Arc::new(trainer.params.clone());
+                    for e in 0..n {
+                        if state[e] == EnvState::Idle && dispatched < total_episodes {
+                            env_version[e] = version;
+                            pool.dispatch(e, &params, cfg.horizon, ep_count[e])?;
+                            ep_count[e] += 1;
+                            state[e] = EnvState::InFlight;
+                            dispatched += 1;
+                        }
+                    }
+                }
+                while arrived.len() < take {
+                    let out = pool.recv_one()?;
+                    state[out.env_id] = EnvState::Arrived;
+                    arrived.push_back(out);
+                }
+            }
+            Some(s) => {
+                // central batched inference: the lockstep rollout spans
+                // exactly the idle envs — the observation set currently at
+                // the barrier — and completes them together; partial
+                // policies then consume the arrival queue across rounds
+                while arrived.len() < take {
+                    let mut jobs: Vec<(usize, u64)> = Vec::new();
+                    for e in 0..n {
+                        if state[e] == EnvState::Idle && dispatched + jobs.len() < total_episodes
+                        {
+                            jobs.push((e, ep_count[e]));
+                        }
+                    }
+                    for &(e, _) in &jobs {
+                        env_version[e] = version;
+                        ep_count[e] += 1;
+                        state[e] = EnvState::InFlight;
+                    }
+                    dispatched += jobs.len();
+                    let params = Arc::new(trainer.params.clone());
+                    let outs =
+                        pool.rollout_batched_subset(rt.as_ref(), s, &params, cfg.horizon, &jobs)?;
+                    for out in outs {
+                        state[out.env_id] = EnvState::Arrived;
+                        arrived.push_back(out);
+                    }
+                }
+            }
+        }
+
+        // consume the oldest `take` arrivals; sorting by env id makes the
+        // batch layout independent of wall-clock arrival order (and, under
+        // Full, reproduces the pre-refactor loop bitwise)
+        let mut batch_eps: Vec<EpisodeOut> = arrived.drain(..take).collect();
+        batch_eps.sort_by_key(|o| o.env_id);
+        let rollout_s = t0.elapsed().as_secs_f64();
+
+        let t_update_start = Instant::now();
+        for o in &batch_eps {
+            let e = o.env_id;
+            let stale = version - env_version[e];
+            stale_sum += stale;
+            let si = stale as usize;
+            if stale_hist.len() <= si {
+                stale_hist.resize(si + 1, 0);
+            }
+            stale_hist[si] += 1;
+            let wait = t_update_start
+                .saturating_duration_since(o.completed_at)
+                .as_secs_f64();
+            barrier_idle_s += wait;
+            writeln!(
+                stale_csv,
+                "{},{},{},{},{:.4}",
+                it,
+                e,
+                ep_count[e] - 1,
+                stale,
+                wait
+            )?;
+            state[e] = EnvState::Idle;
+        }
+        consumed += take;
+
+        let nf = batch_eps.len() as f64;
+        let mean_reward = batch_eps.iter().map(|o| o.stats.reward_sum).sum::<f64>() / nf;
+        let mean_cd = batch_eps.iter().map(|o| o.stats.cd_mean).sum::<f64>() / nf;
+        let mean_cl = batch_eps.iter().map(|o| o.stats.cl_abs_mean).sum::<f64>() / nf;
+        let jet_final = batch_eps.last().map(|o| o.stats.jet_final).unwrap_or(0.0);
+        let cfd_s = batch_eps.iter().map(|o| o.stats.cfd_s).sum::<f64>() / nf;
+        let io_s = batch_eps.iter().map(|o| o.stats.io_s).sum::<f64>() / nf;
+        let policy_s = batch_eps.iter().map(|o| o.stats.policy_s).sum::<f64>() / nf;
+        io_bytes_acc += batch_eps
+            .iter()
+            .map(|o| o.stats.io.bytes_written + o.stats.io.bytes_read)
+            .sum::<u64>();
+
+        let trajs: Vec<_> = batch_eps.into_iter().map(|o| o.traj).collect();
+        let batch = Batch::assemble(&trajs, n_obs, gamma, gae_lambda);
+        let upd = trainer.update(update_engine(&updater, &rt, &update_file)?, &batch, &mut rng)?;
+        version += 1;
+
+        let row = IterationLog {
+            iteration: it,
+            episodes_done: consumed,
+            mean_reward,
+            mean_cd,
+            mean_cl_abs: mean_cl,
+            jet_final,
+            pi_loss: upd.pi_loss,
+            v_loss: upd.v_loss,
+            approx_kl: upd.approx_kl,
+            rollout_s,
+            update_s: upd.wall_s,
+            cfd_s,
+            io_s,
+            policy_s,
+        };
+        writeln!(
+            csv,
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}",
+            row.iteration,
+            row.episodes_done,
+            row.mean_reward,
+            row.mean_cd,
+            row.mean_cl_abs,
+            row.jet_final,
+            row.pi_loss,
+            row.v_loss,
+            row.approx_kl,
+            row.rollout_s,
+            row.update_s,
+            row.cfd_s,
+            row.io_s,
+            row.policy_s
+        )?;
+        if !cfg.quiet && it % cfg.log_every == 0 {
+            println!(
+                "iter {:>4}  ep {:>5}  R {:>8.4}  Cd {:>6.3}  |Cl| {:>6.3}  kl {:>8.5}  rollout {:>6.2}s  update {:>5.2}s",
+                it, consumed, mean_reward, mean_cd, mean_cl, upd.approx_kl, rollout_s, upd.wall_s
+            );
+        }
+        log.push(row);
+    }
+
+    let final_params = trainer.params.clone();
+    write_f32_bin(cfg.out_dir.join("policy_final.bin"), &final_params)
+        .context("writing final policy")?;
+    write_f32_bin(cfg.out_dir.join("trainer_ckpt.bin"), &trainer.checkpoint())?;
+
+    let mean_staleness = stale_sum as f64 / consumed.max(1) as f64;
+    if !cfg.quiet && cfg.sync != SyncPolicy::Full {
+        println!(
+            "sync={}: mean staleness {:.3} (histogram {:?}), barrier idle {:.2}s total",
+            cfg.sync.name(),
+            mean_staleness,
+            stale_hist,
+            barrier_idle_s
+        );
+    }
+
+    Ok(TrainSummary {
+        io_bytes_per_episode: io_bytes_acc as f64 / consumed.max(1) as f64,
+        log,
+        final_params,
+        total_s: t_total.elapsed().as_secs_f64(),
+        mean_staleness,
+        staleness_hist: stale_hist,
+        barrier_idle_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_policy_parse_is_lenient_and_lists_accepted() {
+        assert_eq!(SyncPolicy::parse(" Full ").unwrap(), SyncPolicy::Full);
+        assert_eq!(SyncPolicy::parse("ASYNC").unwrap(), SyncPolicy::Async);
+        assert_eq!(
+            SyncPolicy::parse("partial:3").unwrap(),
+            SyncPolicy::Partial { k: 3 }
+        );
+        assert_eq!(
+            SyncPolicy::parse(" Partial:12 ").unwrap(),
+            SyncPolicy::Partial { k: 12 }
+        );
+        for p in [
+            SyncPolicy::Full,
+            SyncPolicy::Partial { k: 7 },
+            SyncPolicy::Async,
+        ] {
+            assert_eq!(SyncPolicy::parse(&p.name()).unwrap(), p);
+        }
+        assert!(SyncPolicy::parse("partial:0").is_err());
+        assert!(SyncPolicy::parse("partial:x").is_err());
+        let err = SyncPolicy::parse("lockstep").unwrap_err().to_string();
+        assert!(
+            err.contains("full") && err.contains("partial") && err.contains("async"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn effective_k_clamps_to_the_pool() {
+        assert_eq!(SyncPolicy::Full.effective_k(8), 8);
+        assert_eq!(SyncPolicy::Async.effective_k(8), 1);
+        assert_eq!(SyncPolicy::Partial { k: 3 }.effective_k(8), 3);
+        assert_eq!(SyncPolicy::Partial { k: 99 }.effective_k(8), 8);
+        assert_eq!(SyncPolicy::Partial { k: 3 }.effective_k(2), 2);
+        assert_eq!(SyncPolicy::Full.effective_k(0), 1);
+    }
+}

@@ -1,33 +1,35 @@
-//! Synchronous multi-environment PPO training loop (the paper's Fig 4).
+//! Training-run configuration and shared setup for the unified rollout
+//! scheduler ([`super::scheduler`], the paper's Fig 4 loop generalized
+//! over sync policies).
 //!
-//! Runs on two orthogonal backend axes (the paper's §III deconstruction
-//! of the framework into independently parallelizable components):
+//! Training runs on three orthogonal axes (the paper's §III
+//! deconstruction of the framework into independently parallelizable
+//! components):
 //!
 //! * policy serving — per-env or central batched, XLA artifact or native
 //!   twin (`--inference`, `--backend`);
 //! * PPO update — the AOT `ppo_update` artifact or the pure-Rust
-//!   [`NativeUpdater`] (`--update-backend`).
+//!   [`NativeUpdater`] (`--update-backend`);
+//! * sync policy — full barrier, partial barrier, or async
+//!   (`--sync`, see [`super::scheduler::SyncPolicy`]).
 //!
-//! When no AOT manifest is present at `artifact_dir`, both loops fall
+//! When no AOT manifest is present at `artifact_dir`, the loop falls
 //! back to the fully artifact-free path: `EnvPool::standalone` (surrogate
 //! scenario), native policy serving and the native update backend — the
 //! same fallback `main.rs::cmd_episode` applies to rollouts.
 
-use std::io::Write as _;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::policy_server::PolicyServer;
 use crate::coordinator::pool::{EnvPool, PoolConfig};
+use crate::coordinator::scheduler::SyncPolicy;
 use crate::drl::native_update::{NativeUpdater, PpoHyperParams, DEFAULT_GAE_LAMBDA, DEFAULT_GAMMA};
 use crate::drl::policy::{NativePolicy, PolicyBackendKind};
-use crate::drl::{Batch, PpoTrainer, TrainerBackend, UpdateBackendKind};
+use crate::drl::{PpoTrainer, TrainerBackend, UpdateBackendKind};
 use crate::env::scenario::{self, ScenarioKind, SURROGATE_HIDDEN, SURROGATE_N_OBS};
 use crate::io_interface::IoMode;
-use crate::runtime::{write_f32_bin, Manifest, Runtime};
-use crate::util::rng::Rng;
+use crate::runtime::{Manifest, Runtime};
 
 /// Where policy inference runs during rollouts (the paper's
 /// hybrid-parallelization axis).
@@ -76,9 +78,12 @@ pub struct TrainConfig {
     pub backend: PolicyBackendKind,
     /// Engine for the PPO minibatch update (XLA artifact or native step).
     pub update_backend: UpdateBackendKind,
+    /// Rollout scheduler barrier policy (full / partial:<k> / async).
+    pub sync: SyncPolicy,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
-    /// training iterations == episodes per environment
+    /// training iterations == episodes per environment (the episode
+    /// budget is `iterations * n_envs` under every sync policy)
     pub iterations: usize,
     /// PPO epochs per iteration
     pub epochs: usize,
@@ -100,6 +105,7 @@ impl Default for TrainConfig {
             inference: InferenceMode::PerEnv,
             backend: PolicyBackendKind::Xla,
             update_backend: UpdateBackendKind::Xla,
+            sync: SyncPolicy::Full,
             horizon: 100,
             iterations: 100,
             epochs: 4,
@@ -115,7 +121,7 @@ impl Default for TrainConfig {
 /// learning dynamics stay comparable across the two paths).
 pub(crate) const STANDALONE_MINIBATCH: usize = 64;
 
-/// Everything both training loops derive from the (optional) manifest:
+/// Everything the scheduler loop derives from the (optional) manifest:
 /// worker pool, trainer, the resolved update engine, and the GAE
 /// constants. Built by [`setup`].
 pub(crate) struct TrainSetup {
@@ -139,7 +145,7 @@ pub(crate) struct TrainSetup {
 
 /// Resolve backends against the (optional) manifest and build the shared
 /// training ingredients. `serve_batched` is true when the caller will run
-/// central batched inference (the async loop has no barrier to batch at).
+/// central batched inference (it pre-warms the coordinator runtime).
 pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup> {
     let manifest = Manifest::load_optional(&cfg.artifact_dir)?.map(Arc::new);
 
@@ -257,7 +263,7 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
 }
 
 /// The update engine for one `PpoTrainer::update` call, from the state
-/// [`setup`] resolved (shared by the sync and async loops so the dispatch
+/// [`setup`] resolved (one dispatch point for every sync policy, so the
 /// logic cannot drift between them).
 pub(crate) fn update_engine<'a>(
     updater: &'a Option<NativeUpdater>,
@@ -275,6 +281,8 @@ pub(crate) fn update_engine<'a>(
 }
 
 /// One row of the learning curve (written to train_log.csv; Fig 5a/6a).
+/// Under partial/async sync policies a "row" is one policy update over
+/// `k` trajectories rather than one all-envs iteration.
 #[derive(Clone, Debug)]
 pub struct IterationLog {
     pub iteration: usize,
@@ -299,139 +307,18 @@ pub struct TrainSummary {
     pub total_s: f64,
     /// exchanged bytes per environment-episode under the configured mode
     pub io_bytes_per_episode: f64,
-}
-
-/// Run the full training loop; returns the learning curve + final policy.
-pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
-    std::fs::create_dir_all(&cfg.out_dir)?;
-    std::fs::create_dir_all(&cfg.work_dir)?;
-    let TrainSetup {
-        manifest,
-        mut pool,
-        mut trainer,
-        mut rt,
-        updater,
-        update_file,
-        backend,
-        n_obs,
-        hidden,
-        gamma,
-        gae_lambda,
-    } = setup(cfg, cfg.inference == InferenceMode::Batched)?;
-
-    let mut server = match cfg.inference {
-        InferenceMode::PerEnv => None,
-        InferenceMode::Batched => {
-            let s = match backend {
-                PolicyBackendKind::Xla => {
-                    // setup guarantees manifest + runtime on this path
-                    let m = manifest.as_ref().context("xla serving needs a manifest")?;
-                    let s = PolicyServer::xla(&m.drl);
-                    s.load_into(rt.as_mut().context("serving runtime missing")?)?;
-                    s
-                }
-                PolicyBackendKind::Native => PolicyServer::native(n_obs, hidden),
-            };
-            if !cfg.quiet {
-                println!("batched inference: {}", s.describe());
-            }
-            Some(s)
-        }
-    };
-
-    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
-    let mut log = Vec::with_capacity(cfg.iterations);
-    let mut io_bytes_acc = 0u64;
-    let mut episodes_done = 0usize;
-    let t_total = Instant::now();
-
-    let mut csv = std::fs::File::create(cfg.out_dir.join("train_log.csv"))?;
-    writeln!(
-        csv,
-        "iteration,episodes,mean_reward,mean_cd,mean_cl_abs,jet_final,pi_loss,v_loss,approx_kl,rollout_s,update_s,cfd_s,io_s,policy_s"
-    )?;
-
-    for it in 0..cfg.iterations {
-        let t0 = Instant::now();
-        let params = Arc::new(trainer.params.clone());
-        let outs = match &mut server {
-            None => pool.rollout(&params, cfg.horizon, it as u64)?,
-            Some(s) => pool.rollout_batched(rt.as_ref(), s, &params, cfg.horizon, it as u64)?,
-        };
-        let rollout_s = t0.elapsed().as_secs_f64();
-        episodes_done += outs.len();
-
-        let n = outs.len() as f64;
-        let mean_reward = outs.iter().map(|o| o.stats.reward_sum).sum::<f64>() / n;
-        let mean_cd = outs.iter().map(|o| o.stats.cd_mean).sum::<f64>() / n;
-        let mean_cl = outs.iter().map(|o| o.stats.cl_abs_mean).sum::<f64>() / n;
-        let jet_final = outs.last().map(|o| o.stats.jet_final).unwrap_or(0.0);
-        let cfd_s = outs.iter().map(|o| o.stats.cfd_s).sum::<f64>() / n;
-        let io_s = outs.iter().map(|o| o.stats.io_s).sum::<f64>() / n;
-        let policy_s = outs.iter().map(|o| o.stats.policy_s).sum::<f64>() / n;
-        io_bytes_acc += outs
-            .iter()
-            .map(|o| o.stats.io.bytes_written + o.stats.io.bytes_read)
-            .sum::<u64>();
-
-        let trajs: Vec<_> = outs.into_iter().map(|o| o.traj).collect();
-        let batch = Batch::assemble(&trajs, n_obs, gamma, gae_lambda);
-        let upd = trainer.update(update_engine(&updater, &rt, &update_file)?, &batch, &mut rng)?;
-
-        let row = IterationLog {
-            iteration: it,
-            episodes_done,
-            mean_reward,
-            mean_cd,
-            mean_cl_abs: mean_cl,
-            jet_final,
-            pi_loss: upd.pi_loss,
-            v_loss: upd.v_loss,
-            approx_kl: upd.approx_kl,
-            rollout_s,
-            update_s: upd.wall_s,
-            cfd_s,
-            io_s,
-            policy_s,
-        };
-        writeln!(
-            csv,
-            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}",
-            row.iteration,
-            row.episodes_done,
-            row.mean_reward,
-            row.mean_cd,
-            row.mean_cl_abs,
-            row.jet_final,
-            row.pi_loss,
-            row.v_loss,
-            row.approx_kl,
-            row.rollout_s,
-            row.update_s,
-            row.cfd_s,
-            row.io_s,
-            row.policy_s
-        )?;
-        if !cfg.quiet && it % cfg.log_every == 0 {
-            println!(
-                "iter {:>4}  ep {:>5}  R {:>8.4}  Cd {:>6.3}  |Cl| {:>6.3}  kl {:>8.5}  rollout {:>6.2}s  update {:>5.2}s",
-                it, episodes_done, mean_reward, mean_cd, mean_cl, upd.approx_kl, rollout_s, upd.wall_s
-            );
-        }
-        log.push(row);
-    }
-
-    let final_params = trainer.params.clone();
-    write_f32_bin(cfg.out_dir.join("policy_final.bin"), &final_params)
-        .context("writing final policy")?;
-    write_f32_bin(cfg.out_dir.join("trainer_ckpt.bin"), &trainer.checkpoint())?;
-
-    Ok(TrainSummary {
-        io_bytes_per_episode: io_bytes_acc as f64 / episodes_done.max(1) as f64,
-        log,
-        final_params,
-        total_s: t_total.elapsed().as_secs_f64(),
-    })
+    /// mean parameter-version staleness over all consumed episodes
+    /// (identically 0 under [`SyncPolicy::Full`])
+    pub mean_staleness: f64,
+    /// episode counts by staleness: `staleness_hist[s]` episodes acted on
+    /// parameters `s` updates old (also written to out/staleness.csv)
+    pub staleness_hist: Vec<usize>,
+    /// total seconds finished episodes waited between completion
+    /// (worker-side stamp) and the start of the update that consumed
+    /// them, summed over the WHOLE run. Divide by `log.len()` (update
+    /// rounds) to compare with the DES's per-round
+    /// `SimBreakdown::barrier_idle_s` mean.
+    pub barrier_idle_s: f64,
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@
 //! the *same flat parameter vector* and layout
 //! (`python/compile/model.py::param_layout`) that the AOT `ppo_update`
 //! artifact consumes. The XLA artifact stays the performance reference;
-//! this backend makes `train()` / `train_async()` runnable, testable and
+//! this backend makes `train()` (under every sync policy) runnable, testable and
 //! benchmarkable with zero compiled artifacts, and
 //! `rust/tests/train_smoke.rs::native_vs_xla_update_equivalence` asserts
 //! gradient-level agreement between the two whenever artifacts exist.

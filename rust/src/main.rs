@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
-use drlfoam::coordinator::{train, InferenceMode, LocalPolicy, TrainConfig};
+use drlfoam::coordinator::{train, InferenceMode, LocalPolicy, SyncPolicy, TrainConfig};
 use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
 use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN};
 use drlfoam::env::Environment;
@@ -31,17 +31,18 @@ const USAGE: &str = "usage: drlfoam <train|episode|scenarios|calibrate|reproduce
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
-             [--async] [--quiet]
+             --sync full|partial:<k>|async [--quiet]
              (--scenario surrogate trains with no artifacts: native backends are
-              auto-selected when artifacts/ is absent. --inference batched is
-              ignored with --async: there is no sync barrier to batch at.)
+              auto-selected when artifacts/ is absent. --sync partial:<k> updates
+              on any k of N trajectories; --async is a deprecated alias for
+              --sync async.)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
              (--scenario surrogate runs without artifacts)
   scenarios: list selectable scenarios
   evaluate:  --policy FILE --horizon N  (deterministic rollout + vorticity PPMs)
   calibrate: --periods N (measurement repetitions)
-  reproduce: <table1|table2|fig6|fig7|fig8|fig9|fig10|summary|ablation|all> [--calib out/calib.json]
-  simulate:  --envs N --ranks N --episodes N --io MODE [--async]";
+  reproduce: <table1|table2|fig6|fig7|fig8|fig9|fig10|summary|ablation|sync|all> [--calib out/calib.json]
+  simulate:  --envs N --ranks N --episodes N --io MODE --sync full|partial:<k>|async";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -55,7 +56,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let value_opts = [
         "artifacts", "out", "variant", "scenario", "seed", "envs", "ranks",
         "horizon", "iterations", "epochs", "io", "inference", "backend",
-        "update-backend", "episodes", "periods", "calib", "policy",
+        "update-backend", "sync", "episodes", "periods", "calib", "policy",
         "work-dir", "log-every",
     ];
     let args = Args::parse(argv, &value_opts)?;
@@ -77,6 +78,22 @@ fn out_dir(args: &Args) -> std::path::PathBuf {
     args.get_or("out", "out").into()
 }
 
+/// `--sync full|partial:<k>|async`, honouring the deprecated `--async`
+/// flag as an alias (train and simulate share the axis).
+fn sync_policy(args: &Args) -> Result<SyncPolicy> {
+    let sync = SyncPolicy::parse(&args.get_or("sync", "full"))?;
+    if args.has_flag("async") {
+        eprintln!("warning: --async is deprecated; use --sync async");
+        anyhow::ensure!(
+            args.get("sync").is_none() || sync == SyncPolicy::Async,
+            "--async conflicts with --sync {}",
+            sync.name()
+        );
+        return Ok(SyncPolicy::Async);
+    }
+    Ok(sync)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig {
         artifact_dir: artifact_dir(args),
@@ -89,6 +106,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         inference: InferenceMode::parse(&args.get_or("inference", "per-env"))?,
         backend: PolicyBackendKind::parse(&args.get_or("backend", "xla"))?,
         update_backend: UpdateBackendKind::parse(&args.get_or("update-backend", "xla"))?,
+        sync: sync_policy(args)?,
         horizon: args.usize_or("horizon", 100)?,
         iterations: args.usize_or("iterations", 100)?,
         epochs: args.usize_or("epochs", 4)?,
@@ -100,27 +118,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     // be downgraded by the artifact-free fallback, so the *resolved*
     // engines are reported from inside the training setup instead
     println!(
-        "training: scenario={} variant={} envs={} horizon={} iterations={} io={} inference={}",
+        "training: scenario={} variant={} envs={} horizon={} iterations={} io={} inference={} sync={}",
         cfg.scenario,
         cfg.variant,
         cfg.n_envs,
         cfg.horizon,
         cfg.iterations,
         cfg.io_mode.name(),
-        cfg.inference.name()
+        cfg.inference.name(),
+        cfg.sync.name()
     );
-    if args.has_flag("async") {
-        let s = drlfoam::coordinator::train_async(&cfg)?;
-        let k = (s.log.len() / 3).max(1);
-        let head: f64 = s.log[..k].iter().map(|r| r.reward).sum::<f64>() / k as f64;
-        let tail: f64 = s.log[s.log.len() - k..].iter().map(|r| r.reward).sum::<f64>() / k as f64;
-        println!(
-            "async done in {:.1}s: reward {head:.3} -> {tail:.3} over {} episodes",
-            s.total_s,
-            s.log.len()
-        );
-        return Ok(());
-    }
     let summary = train(&cfg)?;
     let first = summary.log.first().context("no iterations")?;
     let last = summary.log.last().context("no iterations")?;
@@ -133,6 +140,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         last.mean_cd,
         summary.io_bytes_per_episode / 1024.0
     );
+    if cfg.sync != SyncPolicy::Full {
+        println!(
+            "staleness: mean {:.3} over {} episodes (histogram in {}/staleness.csv)",
+            summary.mean_staleness,
+            last.episodes_done,
+            cfg.out_dir.display()
+        );
+    }
     println!("learning curve: {}/train_log.csv", cfg.out_dir.display());
     Ok(())
 }
@@ -453,12 +468,13 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
             "fig10" => reproduce::fig10(&calib, &odir),
             "fig6" => reproduce::fig6(&artifact_dir(args), &odir, 24, 10),
             "ablation" => reproduce::ablation_async(&calib, &odir),
+            "sync" => reproduce::sync_sweep(&calib, &odir),
             "summary" => reproduce::summary(&calib, &odir),
             _ => bail!("unknown experiment {name:?}"),
         }
     };
     if what == "all" {
-        for name in ["fig7", "table1", "fig8", "fig9", "fig10", "table2", "ablation", "summary"] {
+        for name in ["fig7", "table1", "fig8", "fig9", "fig10", "table2", "ablation", "sync", "summary"] {
             println!("{}", run(name)?);
         }
     } else {
@@ -475,24 +491,23 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         n_ranks: args.usize_or("ranks", 1)?,
         episodes_total: args.usize_or("episodes", 3000)?,
         io_mode: IoMode::parse(&args.get_or("io", "baseline"))?,
+        sync: sync_policy(args)?,
         seed: args.u64_or("seed", 1)?,
     };
-    let r = if args.has_flag("async") {
-        drlfoam::cluster::simulate_training_async(&calib, &cfg)
-    } else {
-        simulate_training(&calib, &cfg)
-    };
+    let r = simulate_training(&calib, &cfg);
     println!(
-        "envs={} ranks={} cpus={} io={} -> {:.2} h  (per-episode: cfd {:.1}s io {:.1}s policy {:.2}s; update+barrier {:.1}s/iter; disk {:.0}%)",
+        "envs={} ranks={} cpus={} io={} sync={} -> {:.2} h  (per-episode: cfd {:.1}s io {:.1}s policy {:.2}s; update+barrier {:.1}s/round, idle {:.1}s; disk {:.0}%)",
         r.cfg_envs,
         r.cfg_ranks,
         r.total_cpus,
         cfg.io_mode.name(),
+        cfg.sync.name(),
         r.total_hours(),
         r.breakdown.cfd_s,
         r.breakdown.io_s,
         r.breakdown.policy_s,
         r.breakdown.update_barrier_s,
+        r.breakdown.barrier_idle_s,
         100.0 * r.disk_utilisation
     );
     Ok(())

@@ -7,6 +7,7 @@
 use anyhow::Result;
 
 use crate::cluster::{simulate_training, Calibration, MpiScaling, SimConfig};
+use crate::coordinator::SyncPolicy;
 use crate::io_interface::IoMode;
 use crate::metrics::scaling::{efficiency, speedup, ScalingRow};
 use crate::metrics::tables::{render_table, write_csv};
@@ -27,6 +28,7 @@ fn run(calib: &Calibration, envs: usize, ranks: usize, mode: IoMode, seed: u64) 
             n_ranks: ranks,
             episodes_total: EPISODES,
             io_mode: mode,
+            sync: SyncPolicy::Full,
             seed,
         },
     )
@@ -183,6 +185,7 @@ pub fn fig10(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
                 n_ranks: 1,
                 episodes_total: EPISODES.min(600 * envs),
                 io_mode: IoMode::Baseline,
+                sync: SyncPolicy::Full,
                 seed: 1,
             },
         );
@@ -370,6 +373,7 @@ pub fn ablation_async(calib: &Calibration, out_dir: &std::path::Path) -> Result<
                 n_ranks: 1,
                 episodes_total: EPISODES,
                 io_mode: mode,
+                sync: SyncPolicy::Full,
                 seed: 1,
             };
             let ts = simulate_training(calib, &cfg).total_s / 3600.0;
@@ -393,6 +397,78 @@ pub fn ablation_async(calib: &Calibration, out_dir: &std::path::Path) -> Result<
     Ok(render_table(
         "Extension: synchronous vs asynchronous training (DES, ranks=1)",
         &["I/O", "N_envs", "sync (h)", "async (h)", "async gain"],
+        &rows_txt,
+    ))
+}
+
+/// Extension sweep: the full / partial-barrier / async scheduler axis at
+/// cluster scale. Reproduces the Table-I barrier-idle trend as the k/n
+/// ratio drops: with I/O optimized, idle time is the dominant remaining
+/// loss under the full barrier and shrinks monotonically with k.
+pub fn sync_sweep(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let envs = 60usize;
+    let policies = [
+        SyncPolicy::Full,
+        SyncPolicy::Partial { k: 45 },
+        SyncPolicy::Partial { k: 30 },
+        SyncPolicy::Partial { k: 15 },
+        SyncPolicy::Partial { k: 8 },
+        SyncPolicy::Partial { k: 4 },
+        SyncPolicy::Partial { k: 2 },
+        SyncPolicy::Async,
+    ];
+    let mut rows_txt = Vec::new();
+    let mut rows_csv = Vec::new();
+    for mode in [IoMode::Baseline, IoMode::Optimized] {
+        // Full is the first policy in the sweep; its run doubles as the
+        // gain baseline (the DES is deterministic, no need to rerun it)
+        let mut t_full = f64::NAN;
+        for sync in policies {
+            let r = simulate_training(
+                calib,
+                &SimConfig {
+                    n_envs: envs,
+                    n_ranks: 1,
+                    episodes_total: EPISODES,
+                    io_mode: mode,
+                    sync,
+                    seed: 1,
+                },
+            );
+            let k = sync.effective_k(envs);
+            let t = r.total_s / 3600.0;
+            if sync == SyncPolicy::Full {
+                t_full = t;
+            }
+            let gain = 100.0 * (t_full - t) / t_full;
+            rows_txt.push(vec![
+                mode.name().to_string(),
+                sync.name(),
+                format!("{:.2}", k as f64 / envs as f64),
+                format!("{t:.1}"),
+                format!("{:.1}", r.breakdown.barrier_idle_s),
+                format!("{:.1}", r.breakdown.update_barrier_s),
+                format!("{gain:+.1}%"),
+            ]);
+            rows_csv.push(format!(
+                "{},{},{},{:.4},{t:.4},{:.3},{:.3},{gain:.2}",
+                mode.name(),
+                sync.name(),
+                k,
+                k as f64 / envs as f64,
+                r.breakdown.barrier_idle_s,
+                r.breakdown.update_barrier_s,
+            ));
+        }
+    }
+    write_csv(
+        out_dir.join("sync_sweep.csv"),
+        "io_mode,sync,k,k_over_n,total_h,barrier_idle_s,update_barrier_s,gain_vs_full_pct",
+        &rows_csv,
+    )?;
+    Ok(render_table(
+        "Extension: rollout scheduler sweep (DES, 60 envs, ranks=1)",
+        &["I/O", "sync", "k/n", "total (h)", "idle (s/round)", "update+idle (s/round)", "gain vs full"],
         &rows_txt,
     ))
 }

@@ -1,0 +1,190 @@
+//! Scheduler equivalence: the unified rollout scheduler must not change
+//! the learning dynamics of the synchronous baseline.
+//!
+//! * `--sync full` reproduces the PRE-REFACTOR synchronous loop bitwise:
+//!   the old loop body (broadcast -> `EnvPool::rollout` episode barrier ->
+//!   GAE -> minibatch update) is reimplemented here verbatim over public
+//!   APIs, and its learning-curve rows must equal the scheduler's
+//!   `train_log.csv` exactly (timing columns excluded — wall clock is not
+//!   reproducible).
+//! * `--sync partial:n_envs` is a full barrier and must match `--sync
+//!   full` bitwise, final parameters included.
+//!
+//! Everything runs artifact-free (surrogate scenario, native backends).
+
+use std::sync::Arc;
+
+use drlfoam::coordinator::{train, EnvPool, PoolConfig, SyncPolicy, TrainConfig};
+use drlfoam::drl::{
+    Batch, NativePolicy, NativeUpdater, PolicyBackendKind, PpoHyperParams, PpoTrainer,
+    TrainerBackend, UpdateBackendKind, DEFAULT_GAE_LAMBDA, DEFAULT_GAMMA,
+};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::io_interface::IoMode;
+use drlfoam::util::rng::Rng;
+
+fn base_cfg(tag: &str) -> TrainConfig {
+    let root = std::env::temp_dir().join(format!("drlfoam-sched-{tag}-{}", std::process::id()));
+    TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root.clone(),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        n_envs: 3,
+        io_mode: IoMode::InMemory,
+        horizon: 5,
+        iterations: 3,
+        epochs: 2,
+        seed: 7,
+        log_every: 1,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+/// The learning-curve columns of train_log.csv: everything before the
+/// wall-clock fields (iteration..approx_kl, the first 9 of 14).
+fn learning_rows(out_dir: &std::path::Path) -> Vec<String> {
+    let csv = std::fs::read_to_string(out_dir.join("train_log.csv")).unwrap();
+    csv.lines()
+        .skip(1)
+        .map(|l| l.splitn(15, ',').take(9).collect::<Vec<_>>().join(","))
+        .collect()
+}
+
+/// The pre-refactor synchronous training loop (the PR-2
+/// `coordinator::train` body on the artifact-free path), reimplemented
+/// over public APIs: same pool, same episode seeds, same trainer RNG
+/// stream (`seed ^ 0xDA7A`), same 64-wide standalone minibatch, same row
+/// formatting. This is the golden reference `--sync full` must match.
+fn reference_sync_rows(cfg: &TrainConfig) -> (Vec<String>, Vec<f32>) {
+    let pool_cfg = PoolConfig {
+        artifact_dir: cfg.artifact_dir.clone(),
+        work_dir: cfg.work_dir.clone(),
+        variant: cfg.variant.clone(),
+        scenario: cfg.scenario.clone(),
+        backend: PolicyBackendKind::Native,
+        n_envs: cfg.n_envs,
+        io_mode: cfg.io_mode,
+        seed: cfg.seed,
+    };
+    std::fs::create_dir_all(&cfg.work_dir).unwrap();
+    let mut pool = EnvPool::standalone(&pool_cfg).unwrap();
+    let (n_obs, hidden) = (SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let params0 = NativePolicy::new(n_obs, hidden).init_params(cfg.seed);
+    // 64 = the artifact-free standalone minibatch width
+    let mut trainer = PpoTrainer::with_minibatch(params0, 64, cfg.epochs);
+    let nu = NativeUpdater::new(n_obs, hidden, PpoHyperParams::default());
+    let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+
+    let mut rows = Vec::new();
+    let mut episodes_done = 0usize;
+    for it in 0..cfg.iterations {
+        let params = Arc::new(trainer.params.clone());
+        let outs = pool.rollout(&params, cfg.horizon, it as u64).unwrap();
+        episodes_done += outs.len();
+        let n = outs.len() as f64;
+        let mean_reward = outs.iter().map(|o| o.stats.reward_sum).sum::<f64>() / n;
+        let mean_cd = outs.iter().map(|o| o.stats.cd_mean).sum::<f64>() / n;
+        let mean_cl = outs.iter().map(|o| o.stats.cl_abs_mean).sum::<f64>() / n;
+        let jet_final = outs.last().map(|o| o.stats.jet_final).unwrap_or(0.0);
+        let trajs: Vec<_> = outs.into_iter().map(|o| o.traj).collect();
+        let batch = Batch::assemble(&trajs, n_obs, DEFAULT_GAMMA, DEFAULT_GAE_LAMBDA);
+        let upd = trainer
+            .update(TrainerBackend::Native(&nu), &batch, &mut rng)
+            .unwrap();
+        rows.push(format!(
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
+            it, episodes_done, mean_reward, mean_cd, mean_cl, jet_final, upd.pi_loss,
+            upd.v_loss, upd.approx_kl
+        ));
+    }
+    (rows, trainer.params.clone())
+}
+
+#[test]
+fn sync_full_matches_pre_refactor_loop_bitwise() {
+    let cfg_ref = base_cfg("ref");
+    let (want_rows, want_params) = reference_sync_rows(&cfg_ref);
+    std::fs::remove_dir_all(&cfg_ref.out_dir).ok();
+
+    let cfg = base_cfg("full");
+    assert_eq!(cfg.sync, SyncPolicy::Full, "full is the default");
+    let s = train(&cfg).expect("training failed");
+    let got_rows = learning_rows(&cfg.out_dir);
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+
+    assert_eq!(got_rows, want_rows, "learning-curve CSV diverged");
+    assert_eq!(s.final_params, want_params, "final parameters diverged");
+    assert_eq!(s.mean_staleness, 0.0);
+}
+
+#[test]
+fn sync_partial_n_envs_equals_full() {
+    let cfg_full = base_cfg("pf-full");
+    let a = train(&cfg_full).unwrap();
+    let rows_full = learning_rows(&cfg_full.out_dir);
+    std::fs::remove_dir_all(&cfg_full.out_dir).ok();
+
+    let mut cfg_part = base_cfg("pf-part");
+    cfg_part.sync = SyncPolicy::Partial { k: cfg_part.n_envs };
+    let b = train(&cfg_part).unwrap();
+    let rows_part = learning_rows(&cfg_part.out_dir);
+    std::fs::remove_dir_all(&cfg_part.out_dir).ok();
+
+    assert_eq!(rows_full, rows_part, "partial:n_envs must be a full barrier");
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(b.mean_staleness, 0.0, "a full barrier is on-policy");
+}
+
+#[test]
+fn sync_partial_k_above_pool_clamps_to_full() {
+    let cfg_full = base_cfg("cl-full");
+    let a = train(&cfg_full).unwrap();
+    std::fs::remove_dir_all(&cfg_full.out_dir).ok();
+
+    let mut cfg_big = base_cfg("cl-big");
+    cfg_big.sync = SyncPolicy::Partial { k: 99 };
+    let b = train(&cfg_big).unwrap();
+    std::fs::remove_dir_all(&cfg_big.out_dir).ok();
+
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.log.len(), b.log.len());
+}
+
+#[test]
+fn sync_full_batched_inference_still_matches_per_env() {
+    // the refactor routes batched serving through the subset rollout;
+    // the per-env vs batched bitwise equivalence must survive it
+    let cfg_pe = base_cfg("bi-pe");
+    let a = train(&cfg_pe).unwrap();
+    std::fs::remove_dir_all(&cfg_pe.out_dir).ok();
+
+    let mut cfg_ba = base_cfg("bi-ba");
+    cfg_ba.inference = drlfoam::coordinator::InferenceMode::Batched;
+    let b = train(&cfg_ba).unwrap();
+    std::fs::remove_dir_all(&cfg_ba.out_dir).ok();
+
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.log[0].mean_reward, b.log[0].mean_reward);
+}
+
+#[test]
+fn partial_with_batched_inference_composes() {
+    // the policy server batches whatever observation set is at the
+    // barrier (the re-dispatched subset), not all n — the run must
+    // complete the full episode budget with bounded staleness
+    let mut cfg = base_cfg("bi-part");
+    cfg.inference = drlfoam::coordinator::InferenceMode::Batched;
+    cfg.sync = SyncPolicy::Partial { k: 2 };
+    let s = train(&cfg).expect("partial + batched failed");
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+    // 9 episodes at k=2 -> 5 updates (last one short)
+    assert_eq!(s.log.len(), 5);
+    assert_eq!(s.log.last().unwrap().episodes_done, 9);
+    assert_eq!(s.staleness_hist.iter().sum::<usize>(), 9);
+    assert!(s.log.iter().all(|r| r.mean_reward.is_finite()));
+}

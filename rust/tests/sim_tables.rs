@@ -4,6 +4,7 @@
 //! orderings and trends.
 
 use drlfoam::cluster::{simulate_training, Calibration, MpiScaling, SimConfig};
+use drlfoam::coordinator::SyncPolicy;
 use drlfoam::io_interface::IoMode;
 
 fn hours(c: &Calibration, envs: usize, ranks: usize, mode: IoMode) -> f64 {
@@ -14,6 +15,7 @@ fn hours(c: &Calibration, envs: usize, ranks: usize, mode: IoMode) -> f64 {
             n_ranks: ranks,
             episodes_total: 3000,
             io_mode: mode,
+            sync: SyncPolicy::Full,
             seed: 1,
         },
     )

@@ -10,7 +10,7 @@
 use std::sync::Mutex;
 
 use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
-use drlfoam::coordinator::{train, TrainConfig};
+use drlfoam::coordinator::{train, SyncPolicy, TrainConfig};
 use drlfoam::io_interface::IoMode;
 
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -122,6 +122,7 @@ fn des_with_measured_calibration_predicts_real_components() {
             n_ranks: 1,
             episodes_total: iterations,
             io_mode: IoMode::InMemory,
+            sync: SyncPolicy::Full,
             seed: 3,
         },
     );

@@ -5,7 +5,7 @@
 //! cross-checks the native update against the XLA `ppo_update` artifact
 //! and skips itself when no artifacts are present.
 
-use drlfoam::coordinator::{train, InferenceMode, TrainConfig};
+use drlfoam::coordinator::{train, InferenceMode, SyncPolicy, TrainConfig};
 use drlfoam::drl::{
     Batch, NativePolicy, NativeUpdater, PolicyBackendKind, PpoTrainer, TrainerBackend,
     Trajectory, Transition, UpdateBackendKind,
@@ -50,6 +50,9 @@ fn train_loop_runs_and_logs() {
         assert!(row.mean_cd > 1.0 && row.mean_cd < 10.0, "cd {}", row.mean_cd);
         assert!(row.approx_kl.is_finite());
     }
+    // the full barrier is on-policy: no staleness anywhere
+    assert_eq!(s.mean_staleness, 0.0);
+    assert_eq!(s.staleness_hist.iter().sum::<usize>(), 6);
     // outputs written
     assert!(cfg.out_dir.join("train_log.csv").exists());
     assert!(cfg.out_dir.join("policy_final.bin").exists());
@@ -134,17 +137,41 @@ fn async_training_runs_and_learns_shape() {
     let mut cfg = base_cfg("async");
     cfg.n_envs = 2;
     cfg.iterations = 2; // 4 episodes total
-    let s = drlfoam::coordinator::train_async(&cfg).expect("async training failed");
-    assert_eq!(s.log.len(), 4);
+    cfg.sync = SyncPolicy::Async;
+    let s = train(&cfg).expect("async training failed");
+    assert_eq!(s.log.len(), 4, "async = one update per episode");
+    assert_eq!(s.log.last().unwrap().episodes_done, 4);
     for row in &s.log {
-        assert!(row.reward.is_finite());
-        assert!(row.cd_mean > 1.0 && row.cd_mean < 10.0);
-        // bounded staleness: at most n_envs - 1 updates behind... plus the
-        // updates that happened while this episode was in flight
-        assert!(row.staleness <= 4, "staleness {}", row.staleness);
+        assert!(row.mean_reward.is_finite());
+        assert!(row.mean_cd > 1.0 && row.mean_cd < 10.0);
     }
-    assert!(cfg.out_dir.join("train_async_log.csv").exists());
-    assert!(cfg.out_dir.join("policy_final_async.bin").exists());
+    // the staleness accounting covers every consumed episode, and the
+    // A3C-style bound holds loosely on this tiny run
+    assert_eq!(s.staleness_hist.iter().sum::<usize>(), 4);
+    assert!(s.mean_staleness <= 4.0, "mean staleness {}", s.mean_staleness);
+    assert!(s.barrier_idle_s >= 0.0);
+    assert!(cfg.out_dir.join("train_log.csv").exists());
+    assert!(cfg.out_dir.join("staleness.csv").exists());
+    assert!(cfg.out_dir.join("policy_final.bin").exists());
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn partial_sync_runs_and_bounds_staleness() {
+    let mut cfg = base_cfg("partial");
+    cfg.n_envs = 3;
+    cfg.iterations = 2; // 6 episodes total, k=2 -> 3 updates
+    cfg.sync = SyncPolicy::Partial { k: 2 };
+    let s = train(&cfg).expect("partial training failed");
+    assert_eq!(s.log.len(), 3, "ceil(6 / 2) updates");
+    assert_eq!(s.log.last().unwrap().episodes_done, 6);
+    assert_eq!(s.staleness_hist.iter().sum::<usize>(), 6);
+    // an episode can at most miss the updates fired while it ran
+    assert!(s.mean_staleness < 3.0, "mean staleness {}", s.mean_staleness);
+    for row in &s.log {
+        assert!(row.mean_reward.is_finite());
+        assert!(row.approx_kl.is_finite());
+    }
     std::fs::remove_dir_all(&cfg.out_dir).ok();
 }
 
