@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts artifacts-paper ci train-smoke sync-smoke
+.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -14,9 +14,14 @@ artifacts:
 artifacts-paper:
 	cd python && $(PY) -m compile.aot --out ../artifacts --variants paper
 
-# Tier-1 gate (fmt, clippy, release build, tests, artifact-free smoke).
+# Tier-1 gate (fmt, clippy, release build, docs, tests, smokes).
 ci:
 	./ci.sh
+
+# Rustdoc gate: warning-free docs + runnable doctests (same as ci.sh).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test --doc
 
 # Artifact-free end-to-end training smoke: surrogate scenario + native
 # policy/update backends; runs in seconds without `make artifacts`.
@@ -26,6 +31,17 @@ train-smoke:
 	    --artifacts out/train-smoke/no-artifacts \
 	    --out out/train-smoke --work-dir out/train-smoke/work \
 	    --envs 2 --horizon 10 --iterations 3
+
+# Planner smoke: rank a small core budget, then let --layout auto pick
+# and train the winning (envs, sync, io) layout artifact-free.
+plan-smoke:
+	cargo run --release -- plan --cores 12 --episodes 240 --out out/plan-smoke
+	cargo run --release -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --layout auto --cores 4 \
+	    --artifacts out/plan-smoke/no-artifacts \
+	    --out out/plan-smoke/auto --work-dir out/plan-smoke/auto/work \
+	    --horizon 5 --iterations 2
 
 # Rollout-scheduler smoke: the same artifact-free loop once per sync
 # policy (full episode barrier, partial barrier, async).

@@ -1,0 +1,36 @@
+//! Bench: the allocation planner's exhaustive DES-backed sweep — cost of
+//! `drlfoam plan` per core budget, and how the layout count grows. The
+//! planner is an offline tool, but `train --layout auto` runs it before
+//! every auto-planned job, so its latency budget matters.
+//!
+//! Run: `cargo bench --bench planner_search`
+
+use drlfoam::cluster::planner::{search, PlannerConfig};
+use drlfoam::cluster::Calibration;
+use drlfoam::util::bench;
+
+fn main() {
+    let calib = Calibration::paper_scale();
+    let mut results = Vec::new();
+    println!("== allocation planner sweep (DES-scored, paper calibration) ==");
+    println!("{:<10} {:>9} {:>12} {:>14}", "cores", "layouts", "episodes", "sweep ms");
+    for cores in [8usize, 20, 60] {
+        let mut pc = PlannerConfig::new(cores);
+        // reduced budget: bench the search machinery, not 3000-episode DES
+        pc.episodes_total = 120;
+        let mut layouts = 0usize;
+        let r = bench::bench(&format!("plan cores={cores}"), 1, 3, || {
+            let set = search(&calib, &pc).expect("planner failed");
+            layouts = set.plans.len();
+        });
+        println!(
+            "{:<10} {:>9} {:>12} {:>14.1}",
+            cores,
+            layouts,
+            pc.episodes_total,
+            r.mean_s * 1e3
+        );
+        results.push(r);
+    }
+    bench::save("planner_search", &results);
+}

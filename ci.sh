@@ -6,11 +6,15 @@
 #   1. formatting            cargo fmt --check
 #   2. lints                 cargo clippy (changed modules; -D warnings)
 #   3. release build         cargo build --release
-#   4. tests                 cargo test -q
-#   5. artifact-free smoke   drlfoam train on the surrogate scenario with
+#   4. docs                  cargo doc --no-deps with rustdoc -D warnings,
+#                            plus the runnable doctests (cargo test --doc)
+#   5. tests                 cargo test -q
+#   6. artifact-free smoke   drlfoam train on the surrogate scenario with
 #                            the native update backend (no artifacts)
-#   6. sync-policy smoke     the same loop once per rollout scheduler
+#   7. sync-policy smoke     the same loop once per rollout scheduler
 #                            policy (--sync full|partial:2|async)
+#   8. planner smoke         drlfoam plan sweep + train --layout auto,
+#                            both artifact-free
 #
 # Integration tests that execute AOT artifacts skip themselves gracefully
 # when `make artifacts` has not been run; the scenario-registry and
@@ -27,6 +31,12 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo build --release"
 cargo build --release
+
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== cargo test --doc"
+cargo test --doc -q
 
 echo "== cargo test -q"
 cargo test -q
@@ -64,5 +74,28 @@ for s in full partial:2 async; do
     test -f "$SYNC_OUT/$s/train_log.csv"
     test -f "$SYNC_OUT/$s/staleness.csv"
 done
+
+# 8a. planner smoke: the exhaustive layout sweep must rank a small budget
+#     and write the full plan.csv (reduced episode budget keeps it fast).
+echo "== planner smoke (drlfoam plan)"
+PLAN_OUT=out/ci-plan-smoke
+rm -rf "$PLAN_OUT"
+cargo run --release --quiet -- plan --cores 12 --episodes 240 --out "$PLAN_OUT"
+test -f "$PLAN_OUT/plan.csv"
+
+# 8b. layout-auto smoke: measured-small calibration -> planner -> the
+#     chosen (envs, sync, io) drives a real artifact-free training run.
+echo "== train --layout auto smoke (artifact-free)"
+AUTO_OUT=out/ci-auto-smoke
+rm -rf "$AUTO_OUT"
+cargo run --release --quiet -- train \
+    --scenario surrogate --backend native --update-backend native \
+    --layout auto --cores 4 \
+    --artifacts "$AUTO_OUT/no-artifacts" \
+    --out "$AUTO_OUT" --work-dir "$AUTO_OUT/work" \
+    --horizon 5 --iterations 2 --quiet
+test -f "$AUTO_OUT/plan.csv"
+test -f "$AUTO_OUT/train_log.csv"
+test -f "$AUTO_OUT/policy_final.bin"
 
 echo "CI OK"

@@ -5,9 +5,10 @@
 //!     cargo run --release --example scaling_study
 //!     cargo run --release --example scaling_study -- --calib out/calib.json
 //!
-//! Output: out/{fig7,table1,fig8,fig9,fig10,table2_fig11_fig12,summary}.csv
+//! Output: out/{fig7,table1,fig8,fig9,fig10,table2_fig11_fig12,sync_sweep,plan,summary}.csv
 
 use anyhow::Result;
+use drlfoam::cluster::planner::{self, PlannerConfig};
 use drlfoam::cluster::Calibration;
 use drlfoam::reproduce;
 
@@ -27,6 +28,14 @@ fn main() -> Result<()> {
     println!("{}", reproduce::fig10(&calib, out)?);
     println!("{}", reproduce::table2(&calib, out)?);
     println!("{}", reproduce::sync_sweep(&calib, out)?);
+    // the planner's 60-core sweep at a REDUCED episode budget (the
+    // paper-scale 3000-episode search is `drlfoam reproduce plan`,
+    // deliberately kept out of this every-figure driver for cost)
+    let mut pc = PlannerConfig::new(60);
+    pc.episodes_total = 300;
+    let plan_set = planner::search(&calib, &pc)?;
+    plan_set.write_csv(out.join("plan.csv"))?;
+    println!("{}", plan_set.render(10));
     println!("{}", reproduce::summary(&calib, out)?);
     println!("all series written under out/*.csv");
     Ok(())

@@ -12,6 +12,11 @@
 //! Fitted (not measured) constants, each documented at the field:
 //! episode jitter, shared-disk bandwidth, and the MPI scaling laws in
 //! [`super::mpi`].
+//!
+//! Paper artefacts these presets feed: Table I / Fig 8-10 (absolute
+//! durations + breakdown), Table II / Figs 11-12 (the exchange-volume
+//! and CPU-cost constants per [`crate::io_interface::IoMode`]), and the
+//! planner's 60-core optimum (`drlfoam reproduce plan`).
 
 use anyhow::Result;
 
@@ -53,7 +58,16 @@ pub struct Calibration {
 }
 
 impl Calibration {
-    /// Paper-scale preset (see module docs).
+    /// Paper-scale preset (see module docs): absolute costs from the
+    /// paper's own single-core measurements, so Table I/II come out in
+    /// comparable hours.
+    ///
+    /// ```
+    /// use drlfoam::cluster::Calibration;
+    /// // 225.2 h / 3000 episodes / 100 periods ≈ 2.70 s per period
+    /// let c = Calibration::paper_scale();
+    /// assert!((c.t_period_1rank - 2.7024).abs() < 1e-3);
+    /// ```
     pub fn paper_scale() -> Self {
         // 225.2 h / 3000 episodes / 100 periods = 2.7024 s per period
         let t_period = 225.2 * 3600.0 / 3000.0 / 100.0;

@@ -23,6 +23,16 @@
 //!   completion until the update finishes, stragglers keep running;
 //! * [`SyncPolicy::Async`] — one update per completion on a dedicated
 //!   master core; envs never wait (bounded-stale parameters).
+//!
+//! Besides wall time, every run reports [`SimResult::mean_staleness`]
+//! with the live scheduler's semantics (updates completed between an
+//! episode's dispatch and the update that consumes it), which is the
+//! third axis the allocation planner ([`super::planner`]) ranks on.
+//!
+//! Paper artefacts this module reproduces: Table I absolute durations
+//! and the Fig 10 per-episode breakdown (full barrier), Table II /
+//! Figs 11–12 via the three [`IoMode`]s, and the barrier-idle trend of
+//! `drlfoam reproduce sync` (partial/async).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -72,9 +82,45 @@ pub struct SimResult {
     pub breakdown: SimBreakdown,
     /// disk busy fraction over the run (diagnostic: saturation indicator)
     pub disk_utilisation: f64,
+    /// mean parameter-version staleness over all consumed episodes, with
+    /// the live scheduler's semantics: how many PPO updates completed
+    /// between an episode's dispatch and the update that consumed it.
+    /// Identically 0 under [`SyncPolicy::Full`] (on-policy); grows as
+    /// the barrier relaxes (≈ `n/k - 1` under [`SyncPolicy::Partial`],
+    /// ≈ `n - 1` under [`SyncPolicy::Async`]).
+    pub mean_staleness: f64,
+    /// Episodes actually simulated. The Full/Async loops round
+    /// `episodes_total` UP to a whole number of episodes per env, while
+    /// the Partial loop consumes exactly `episodes_total` — consumers
+    /// comparing sync policies must make sure the counts match (the
+    /// planner does so by scoring every policy of a layout on the same
+    /// whole-per-env budget; see `super::planner`).
+    pub episodes_run: usize,
 }
 
 impl SimResult {
+    /// Simulated wall-clock for the whole run, in hours — the unit of
+    /// the paper's Table I/II duration columns.
+    ///
+    /// ```
+    /// use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
+    /// use drlfoam::coordinator::SyncPolicy;
+    /// use drlfoam::io_interface::IoMode;
+    ///
+    /// let r = simulate_training(
+    ///     &Calibration::paper_scale(),
+    ///     &SimConfig {
+    ///         n_envs: 4,
+    ///         n_ranks: 1,
+    ///         episodes_total: 8,
+    ///         io_mode: IoMode::InMemory,
+    ///         sync: SyncPolicy::Full,
+    ///         seed: 1,
+    ///     },
+    /// );
+    /// assert!((r.total_hours() - r.total_s / 3600.0).abs() < 1e-12);
+    /// assert!(r.total_hours() > 0.0);
+    /// ```
     pub fn total_hours(&self) -> f64 {
         self.total_s / 3600.0
     }
@@ -254,6 +300,10 @@ fn simulate_full(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             barrier_idle_s: agg.barrier_idle_s / (iterations as f64),
         },
         disk_utilisation: disk_busy / clock.max(1e-12),
+        // the full barrier consumes every episode in the update that
+        // immediately follows it: on-policy, staleness identically 0
+        mean_staleness: 0.0,
+        episodes_run: iterations * n_envs,
     }
 }
 
@@ -392,8 +442,8 @@ mod tests {
 // ---------------------------------------------------------------------------
 
 /// Back-compat entry point for the asynchronous mode: forces
-/// [`SyncPolicy::Async`] regardless of `cfg.sync`. Prefer setting
-/// `cfg.sync` and calling [`simulate_training`].
+/// [`SyncPolicy::Async`] regardless of `cfg.sync`.
+#[deprecated(note = "use simulate_training with SimConfig.sync = SyncPolicy::Async")]
 pub fn simulate_training_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
     simulate_async(calib, cfg)
 }
@@ -436,6 +486,12 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
     let mut periods_left = vec![horizon; n_envs];
     let mut episodes_left = vec![episodes_per_env; n_envs];
     let mut ep_factor = vec![1.0f64; n_envs];
+    // staleness accounting, live-scheduler semantics: completion times of
+    // fired updates (monotone, FIFO master) + the update count each env
+    // had seen when its current episode was dispatched
+    let mut update_done: Vec<f64> = Vec::new();
+    let mut env_version = vec![0usize; n_envs];
+    let mut stale_sum = 0u64;
 
     let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64| -> f64 {
         let jit = f * (mu_corr + sigma * rng.normal()).exp();
@@ -468,9 +524,14 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
         // a period (incl. any exchange) finished at next_time
         periods_left[ev.env] -= 1;
         if periods_left[ev.env] == 0 {
-            // episode complete: enqueue the update (env does not wait)
+            // episode complete: enqueue the update (env does not wait).
+            // Its staleness is the number of updates that fired since the
+            // episode was dispatched (this one's index minus the dispatch
+            // version), exactly the live scheduler's bookkeeping.
+            stale_sum += (update_done.len() - env_version[ev.env]) as u64;
             let begin = update_free_at.max(next_time);
             update_free_at = begin + t_update;
+            update_done.push(update_free_at);
             last_update_done = last_update_done.max(update_free_at);
             agg.update_barrier_s += t_update;
             episodes_left[ev.env] -= 1;
@@ -479,6 +540,10 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             }
             periods_left[ev.env] = horizon;
             ep_factor[ev.env] = (ep_mu_corr + ep_sigma * rng.normal()).exp();
+            // the env re-dispatches immediately with whatever parameters
+            // have been published by now (its own update may still be
+            // queued): version = updates completed by next_time
+            env_version[ev.env] = update_done.partition_point(|&d| d <= next_time);
         }
         let dt = draw_period(&mut rng, &mut agg, ep_factor[ev.env]);
         heap.push(Event { time: next_time + dt, env: ev.env, kind: EventKind::ComputeDone });
@@ -499,6 +564,8 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             barrier_idle_s: 0.0,
         },
         disk_utilisation: disk_busy / makespan.max(1e-12),
+        mean_staleness: stale_sum as f64 / episodes.max(1.0),
+        episodes_run: episodes_per_env * n_envs,
     }
 }
 
@@ -544,6 +611,11 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
     let mut heap: BinaryHeap<Event> = BinaryHeap::new();
     let mut periods_left = vec![horizon; n_envs];
     let mut ep_factor = vec![1.0f64; n_envs];
+    // staleness accounting (see simulate_async): fired-update completion
+    // times + per-env dispatch versions
+    let mut update_done: Vec<f64> = Vec::new();
+    let mut env_version = vec![0usize; n_envs];
+    let mut stale_sum = 0u64;
 
     let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64| -> f64 {
         let jit = f * (mu_corr + sigma * rng.normal()).exp();
@@ -599,6 +671,13 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             let ready = batch.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
             let begin = update_free_at.max(ready);
             let done = begin + t_update;
+            // each consumed episode is `this update's index - dispatch
+            // version` updates stale (0 whenever k == n)
+            let u_idx = update_done.len();
+            for &(e, _) in &batch {
+                stale_sum += (u_idx - env_version[e]) as u64;
+            }
+            update_done.push(done);
             update_free_at = done;
             clock_end = clock_end.max(done);
             consumed += take;
@@ -608,6 +687,9 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             agg.update_barrier_s += idle + t_update;
             // the consumed envs re-dispatch with the fresh parameters
             for &(e, _) in &batch {
+                // re-dispatch happens at `done`, when every fired update
+                // (including this one) has completed
+                env_version[e] = update_done.len();
                 if started >= total_episodes {
                     continue;
                 }
@@ -635,6 +717,8 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             barrier_idle_s: agg.barrier_idle_s / rounds,
         },
         disk_utilisation: disk_busy / clock_end.max(1e-12),
+        mean_staleness: stale_sum as f64 / episodes,
+        episodes_run: consumed,
     }
 }
 
@@ -662,8 +746,9 @@ mod async_tests {
     fn async_no_slower_than_sync_without_io() {
         let c = Calibration::paper_scale();
         for envs in [4usize, 12, 30, 60] {
+            let ac = with_sync(cfg(envs, IoMode::InMemory), SyncPolicy::Async);
             let sync = simulate_training(&c, &cfg(envs, IoMode::InMemory)).total_s;
-            let asyn = simulate_training_async(&c, &cfg(envs, IoMode::InMemory)).total_s;
+            let asyn = simulate_training(&c, &ac).total_s;
             assert!(
                 asyn <= sync * 1.02,
                 "envs={envs}: async {asyn:.0}s vs sync {sync:.0}s"
@@ -675,8 +760,9 @@ mod async_tests {
     fn async_removes_barrier_loss_at_scale() {
         let c = Calibration::paper_scale();
         let envs = 60;
+        let ac = with_sync(cfg(envs, IoMode::Optimized), SyncPolicy::Async);
         let sync = simulate_training(&c, &cfg(envs, IoMode::Optimized)).total_s;
-        let asyn = simulate_training_async(&c, &cfg(envs, IoMode::Optimized)).total_s;
+        let asyn = simulate_training(&c, &ac).total_s;
         // the sync barrier costs >= 10% at 60 envs (max of 60 lognormals)
         assert!(
             asyn < sync * 0.95,
@@ -687,12 +773,53 @@ mod async_tests {
     #[test]
     fn async_deterministic() {
         let c = Calibration::paper_scale();
-        let a = simulate_training_async(&c, &cfg(8, IoMode::Baseline)).total_s;
-        let b = simulate_training_async(&c, &cfg(8, IoMode::Baseline)).total_s;
+        let ac = with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Async);
+        let a = simulate_training(&c, &ac).total_s;
+        let b = simulate_training(&c, &ac).total_s;
         assert_eq!(a, b);
     }
 
     #[test]
+    fn episodes_run_reports_the_actual_count_per_loop() {
+        // Full/Async round the budget up to whole episodes per env;
+        // Partial consumes exactly the budget. The planner relies on
+        // this field's contract to keep cross-sync comparisons fair.
+        let c = Calibration::paper_scale();
+        let envs = 7; // 600 / 7 leaves a remainder
+        let run = |sync: SyncPolicy| {
+            simulate_training(&c, &with_sync(cfg(envs, IoMode::InMemory), sync)).episodes_run
+        };
+        assert_eq!(run(SyncPolicy::Full), 602); // ceil(600/7) * 7
+        assert_eq!(run(SyncPolicy::Async), 602);
+        assert_eq!(run(SyncPolicy::Partial { k: 3 }), 600);
+    }
+
+    #[test]
+    fn staleness_tracks_the_barrier_axis() {
+        // Full is on-policy by construction; relaxing the barrier buys
+        // wall time at the price of parameter staleness, bounded by the
+        // pool size in steady state — the trade the planner ranks on.
+        let c = Calibration::paper_scale();
+        let envs = 12;
+        let stale = |sync: SyncPolicy| {
+            simulate_training(&c, &with_sync(cfg(envs, IoMode::InMemory), sync)).mean_staleness
+        };
+        assert_eq!(stale(SyncPolicy::Full), 0.0);
+        let s_partial = stale(SyncPolicy::Partial { k: 6 });
+        let s_async = stale(SyncPolicy::Async);
+        assert!(s_partial > 0.0, "partial staleness vanished");
+        assert!(
+            s_async > s_partial,
+            "async {s_async:.2} not staler than partial:6 {s_partial:.2}"
+        );
+        assert!(
+            s_async <= (envs + 1) as f64,
+            "async staleness {s_async:.2} beyond the pool-size bound"
+        );
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn partial_deterministic_and_dispatched_by_sync_field() {
         let c = Calibration::paper_scale();
         let pc = with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Partial { k: 3 });

@@ -1,4 +1,5 @@
-//! Cluster discrete-event simulator (DES).
+//! Cluster discrete-event simulator (DES) and the allocation planner
+//! built on top of it.
 //!
 //! This machine has ONE core (repro band: hardware gate), so the paper's
 //! 60-core scaling tables cannot be re-measured directly. Following the
@@ -11,12 +12,22 @@
 //!
 //! The DES reproduces the *shape* of Tables I-II and Figs 7-12: who wins,
 //! where the efficiency cliffs fall, and the crossovers between hybrid
-//! configurations.
+//! configurations. [`planner`] then closes the paper's headline loop: it
+//! sweeps every feasible `(n_envs, ranks_per_env, sync, io)` layout under
+//! a core budget, scores each with the DES, and ranks them — the search
+//! that lifts 60-core parallel efficiency from ~49% to ~78% (Table I,
+//! Figs 10-12).
 
 pub mod calib;
 pub mod des;
 pub mod mpi;
+pub mod planner;
 
 pub use calib::Calibration;
-pub use des::{simulate_training, simulate_training_async, SimBreakdown, SimConfig, SimResult};
+pub use des::{simulate_training, SimBreakdown, SimConfig, SimResult};
 pub use mpi::MpiScaling;
+pub use planner::{search, Objective, Plan, PlanSet, PlannerConfig};
+
+// deprecated alias, re-exported for back-compat (`--async` era callers)
+#[allow(deprecated)]
+pub use des::simulate_training_async;

@@ -44,10 +44,28 @@ impl MpiScaling {
         self.f + (1.0 - self.f) / n + self.c * (n - 1.0).powf(self.a)
     }
 
+    /// Solver-only strong-scaling speedup `T(1)/T(n)` — the Fig 7 T_1
+    /// curve (~1.8x at 2 ranks, saturating beyond).
+    ///
+    /// ```
+    /// use drlfoam::cluster::MpiScaling;
+    /// let m = MpiScaling::default();
+    /// assert!((m.speedup(1) - 1.0).abs() < 1e-12);
+    /// assert!(m.speedup(2) > 1.6 && m.speedup(2) < 2.0); // Fig 7: ~1.8x
+    /// ```
     pub fn speedup(&self, n_ranks: usize) -> f64 {
         1.0 / self.runtime_frac(n_ranks)
     }
 
+    /// Solver-only parallel efficiency `speedup(n)/n` (fraction, not
+    /// percent) — the Fig 7 efficiency curve, below 20% at 16 ranks.
+    ///
+    /// ```
+    /// use drlfoam::cluster::MpiScaling;
+    /// let m = MpiScaling::default();
+    /// assert!(m.efficiency(2) > 0.8);
+    /// assert!(m.efficiency(16) < 0.2); // Fig 7: the 16-rank collapse
+    /// ```
     pub fn efficiency(&self, n_ranks: usize) -> f64 {
         self.speedup(n_ranks) / n_ranks as f64
     }

@@ -1,0 +1,619 @@
+//! Hybrid-parallelization planner: the paper's headline *search*.
+//!
+//! The paper's central result is not any single mechanism but the joint
+//! optimization over hybrid configurations: deconstruct the framework,
+//! benchmark the components, then pick the `(N_envs x N_ranks x I/O)`
+//! layout that lifts 60-core parallel efficiency from ~49% to ~78%
+//! (Table I, Figs 10-12). Rabault & Kuhnle (1906.10382) showed the
+//! env-count axis alone saturates, which is exactly why the joint sweep
+//! matters. This module performs that optimization against the
+//! calibrated DES ([`super::des`]), with the rollout-scheduler barrier
+//! ([`SyncPolicy`]) as a fourth axis the paper names as future work.
+//!
+//! [`search`] exhaustively enumerates feasible layouts
+//! `(n_envs, ranks_per_env, sync, io)` with `n_envs * ranks_per_env <=
+//! cores`, scores each via [`simulate_training`], and returns a ranked
+//! [`PlanSet`] plus the Pareto front over *(wall-time, parallel
+//! efficiency, mean staleness)* — not just the argmin, because async
+//! layouts trade staleness for wall-time and that trade is the user's
+//! call, not the planner's.
+//!
+//! Conventions:
+//! * speedup/efficiency use the paper's global reference — the
+//!   `{n_envs = 1, n_ranks = 1}` run under baseline I/O and a full
+//!   barrier (the 225.2 h corner of Table I) — via
+//!   [`crate::metrics::scaling`];
+//! * every sync policy of a layout is scored on the IDENTICAL episode
+//!   count: the smallest whole-per-env budget `>= episodes_total`
+//!   (`ceil(episodes_total / n_envs) * n_envs`). The synchronous loop
+//!   can only run whole iterations — that rounding is real cost, kept
+//!   per the paper's fixed-budget methodology — but without a shared
+//!   per-layout budget the partial/async loops (which consume exactly
+//!   `episodes_total`) would beat the full barrier on phantom episodes
+//!   rather than on scheduling (see `SimResult::episodes_run`);
+//! * async layouts are charged one extra core — the DES models their
+//!   updates on a dedicated master running concurrently with the envs,
+//!   so feasibility uses `n_envs * n_ranks + 1 <= cores` and the
+//!   efficiency denominator counts it (full/partial serialize the
+//!   update on the envs' own time and get no such core);
+//! * the scalar ranking multiplies wall time by
+//!   `1 + staleness_weight * mean_staleness`
+//!   ([`PlannerConfig::staleness_weight`]). The default weight encodes
+//!   a strong on-policy preference, so the recommended layout matches
+//!   the paper's synchronous framework unless an off-policy layout buys
+//!   a large wall-time factor; weight 0 is the pure wall-clock argmin
+//!   (the relaxed-barrier end of the axis wins at scale);
+//! * `IoMode::InMemory` (the paper's I/O-*disabled* diagnostic bound)
+//!   is excluded from the default sweep because a cluster deployment
+//!   must actually move the exchange data; pass it in
+//!   [`PlannerConfig::io_options`] to include it (`drlfoam train
+//!   --layout auto` does, since the in-process loop really can skip
+//!   the filesystem).
+//!
+//! CLI surfaces: `drlfoam plan --cores N` prints the ranked table and
+//! writes `out/plan.csv`; `drlfoam train --layout auto` runs the search
+//! against a measured-small calibration and applies the winner to the
+//! live scheduler loop; `drlfoam reproduce plan` reproduces the paper's
+//! optimal-config claim at 60 cores (~47x speedup, ~78% efficiency).
+
+use anyhow::{Context, Result};
+
+use crate::cluster::calib::Calibration;
+use crate::cluster::des::{simulate_training, SimConfig};
+use crate::coordinator::scheduler::SyncPolicy;
+use crate::io_interface::IoMode;
+use crate::metrics::scaling::{efficiency, speedup};
+use crate::metrics::tables::{render_table, write_csv};
+
+/// What the scalar ranking optimizes (`drlfoam plan --objective ...`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Staleness-weighted wall time (the default; see module docs).
+    Time,
+    /// Staleness-weighted `speedup * efficiency` — the knee of the
+    /// scaling curve. Raw parallel efficiency alone would always crown
+    /// the trivial single-core corner (efficiency is sub-linear in
+    /// cores by definition); weighting by speedup rewards the largest
+    /// layout that still scales well.
+    Efficiency,
+    /// Same score as [`Objective::Time`], but Pareto-front members rank
+    /// ahead of every dominated layout.
+    Pareto,
+}
+
+impl Objective {
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "time" | "wall" | "wall-time" => Ok(Objective::Time),
+            "efficiency" | "eff" => Ok(Objective::Efficiency),
+            "pareto" => Ok(Objective::Pareto),
+            _ => anyhow::bail!("unknown objective {s:?} (accepted: time, efficiency, pareto)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`Objective::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Time => "time",
+            Objective::Efficiency => "efficiency",
+            Objective::Pareto => "pareto",
+        }
+    }
+}
+
+/// The search space and scoring knobs for one [`search`] call.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Core budget: every layout satisfies `n_envs * n_ranks <= cores`.
+    pub cores: usize,
+    /// Total episode budget each layout is scored on (paper: 3000).
+    pub episodes_total: usize,
+    pub objective: Objective,
+    /// Candidate MPI ranks per environment. Defaults to the paper's
+    /// Table-I grid `{1, 2, 5}`.
+    pub ranks_options: Vec<usize>,
+    /// Candidate environment counts; `None` sweeps every feasible count
+    /// `1..=cores/ranks`. `train --layout auto` pins this when the user
+    /// passed `--envs` explicitly.
+    pub env_options: Option<Vec<usize>>,
+    /// Candidate scheduler barriers. `Partial { k }` is clamped to the
+    /// layout's pool size; barrier options whose effective k collides
+    /// with an earlier one are skipped for that layout (e.g.
+    /// `partial:30` at 8 envs IS the full barrier). `Async` is never
+    /// merged with `partial:1` — its dedicated-master schedule differs.
+    pub sync_options: Vec<SyncPolicy>,
+    /// Candidate exchange strategies (default: baseline + optimized;
+    /// see the module docs for why in-memory is opt-in).
+    pub io_options: Vec<IoMode>,
+    /// Wall-time penalty per unit of mean parameter staleness in the
+    /// scalar score (`t * (1 + w * staleness)`). 0 = pure wall time.
+    pub staleness_weight: f64,
+    /// DES seed shared by every scored layout.
+    pub seed: u64,
+}
+
+impl PlannerConfig {
+    /// Paper-scale defaults for a given core budget (see field docs).
+    pub fn new(cores: usize) -> Self {
+        PlannerConfig {
+            cores,
+            episodes_total: 3000,
+            objective: Objective::Time,
+            ranks_options: vec![1, 2, 5],
+            env_options: None,
+            sync_options: vec![
+                SyncPolicy::Full,
+                SyncPolicy::Partial { k: 30 },
+                SyncPolicy::Partial { k: 8 },
+                SyncPolicy::Async,
+            ],
+            io_options: vec![IoMode::Baseline, IoMode::Optimized],
+            staleness_weight: 0.5,
+            seed: 1,
+        }
+    }
+}
+
+/// One scored layout: the configuration axes plus every DES-derived
+/// metric the ranking and the Pareto front use.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub n_envs: usize,
+    pub n_ranks: usize,
+    /// Cores the layout occupies: `n_envs * n_ranks`, plus one for the
+    /// dedicated update master under [`SyncPolicy::Async`] (the other
+    /// policies serialize the update on the envs' own time).
+    pub total_cpus: usize,
+    pub sync: SyncPolicy,
+    pub io_mode: IoMode,
+    /// Simulated wall time (hours) for the layout's shared budget —
+    /// `ceil(episodes_total / n_envs) * n_envs` episodes, identical
+    /// across this layout's sync policies (see module docs).
+    pub duration_h: f64,
+    /// vs the global `{1 env, 1 rank, baseline, full}` reference.
+    pub speedup: f64,
+    /// `100 * speedup / total_cpus` (global single-CPU reference).
+    pub efficiency_pct: f64,
+    /// Mean parameter-version staleness (see `SimResult::mean_staleness`).
+    pub mean_staleness: f64,
+    /// Mean barrier idle seconds per update round.
+    pub barrier_idle_s: f64,
+    /// Shared-disk busy fraction (saturation diagnostic).
+    pub disk_utilisation: f64,
+    /// Member of the Pareto front over (time, efficiency, staleness).
+    pub pareto: bool,
+    /// Scalar ranking score under the configured objective (lower wins).
+    pub score: f64,
+}
+
+/// Header of `out/plan.csv` (one [`Plan`] per row, ranked best-first).
+pub const PLAN_CSV_HEADER: &str = "n_envs,n_ranks,total_cpus,sync,io,duration_h,speedup,\
+                                   efficiency_pct,mean_staleness,barrier_idle_s,disk_util_pct,\
+                                   pareto,score";
+
+impl Plan {
+    /// One `plan.csv` row, inverse of [`Plan::from_csv`] up to the
+    /// printed precision.
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.4},{:.3},{:.2},{:.4},{:.3},{:.2},{},{:.6}",
+            self.n_envs,
+            self.n_ranks,
+            self.total_cpus,
+            self.sync.name(),
+            self.io_mode.name(),
+            self.duration_h,
+            self.speedup,
+            self.efficiency_pct,
+            self.mean_staleness,
+            self.barrier_idle_s,
+            100.0 * self.disk_utilisation,
+            self.pareto as u8,
+            self.score,
+        )
+    }
+
+    /// Parse one `plan.csv` row (as split by
+    /// [`crate::metrics::tables::parse_csv`]).
+    pub fn from_csv(fields: &[String]) -> Result<Plan> {
+        anyhow::ensure!(
+            fields.len() == 13,
+            "plan.csv row has {} fields, expected 13",
+            fields.len()
+        );
+        let num = |i: usize| -> Result<f64> {
+            fields[i]
+                .trim()
+                .parse::<f64>()
+                .with_context(|| format!("plan.csv field {i} {:?} is not a number", fields[i]))
+        };
+        let int = |i: usize| -> Result<usize> {
+            fields[i]
+                .trim()
+                .parse::<usize>()
+                .with_context(|| format!("plan.csv field {i} {:?} is not an integer", fields[i]))
+        };
+        Ok(Plan {
+            n_envs: int(0)?,
+            n_ranks: int(1)?,
+            total_cpus: int(2)?,
+            sync: SyncPolicy::parse(&fields[3])?,
+            io_mode: IoMode::parse(&fields[4])?,
+            duration_h: num(5)?,
+            speedup: num(6)?,
+            efficiency_pct: num(7)?,
+            mean_staleness: num(8)?,
+            barrier_idle_s: num(9)?,
+            disk_utilisation: num(10)? / 100.0,
+            pareto: int(11)? != 0,
+            score: num(12)?,
+        })
+    }
+}
+
+/// The ranked outcome of one [`search`] call.
+#[derive(Clone, Debug)]
+pub struct PlanSet {
+    pub cores: usize,
+    pub episodes_total: usize,
+    pub objective: Objective,
+    pub staleness_weight: f64,
+    /// Duration of the global `{1 env, 1 rank, baseline, full}`
+    /// reference run (hours) — the denominator of every speedup.
+    pub reference_h: f64,
+    /// Every feasible layout, best first.
+    pub plans: Vec<Plan>,
+}
+
+impl PlanSet {
+    /// The recommended layout (rank 1).
+    pub fn best(&self) -> Option<&Plan> {
+        self.plans.first()
+    }
+
+    /// The Pareto-front members, in ranking order.
+    pub fn pareto_front(&self) -> Vec<&Plan> {
+        self.plans.iter().filter(|p| p.pareto).collect()
+    }
+
+    /// Render the top `top` rows as a paper-style text table.
+    pub fn render(&self, top: usize) -> String {
+        let rows: Vec<Vec<String>> = self
+            .plans
+            .iter()
+            .take(top)
+            .enumerate()
+            .map(|(i, p)| {
+                vec![
+                    (i + 1).to_string(),
+                    p.n_envs.to_string(),
+                    p.n_ranks.to_string(),
+                    p.total_cpus.to_string(),
+                    p.sync.name(),
+                    p.io_mode.name().to_string(),
+                    format!("{:.1}", p.duration_h),
+                    format!("{:.1}", p.speedup),
+                    format!("{:.1}", p.efficiency_pct),
+                    format!("{:.2}", p.mean_staleness),
+                    if p.pareto { "*".to_string() } else { String::new() },
+                ]
+            })
+            .collect();
+        render_table(
+            &format!(
+                "Allocation plan: {} cores, {} episodes, objective {} \
+                 (staleness weight {}, reference {:.1} h; * = Pareto front over \
+                 time/efficiency/staleness; {} layouts swept)",
+                self.cores,
+                self.episodes_total,
+                self.objective.name(),
+                self.staleness_weight,
+                self.reference_h,
+                self.plans.len()
+            ),
+            &[
+                "#", "N_envs", "N_ranks", "N_cpus", "sync", "io", "duration (h)", "speedup",
+                "eff (%)", "staleness", "P",
+            ],
+            &rows,
+        )
+    }
+
+    /// Write every ranked layout to `path` ([`PLAN_CSV_HEADER`] schema).
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let rows: Vec<String> = self.plans.iter().map(Plan::to_csv).collect();
+        write_csv(path, PLAN_CSV_HEADER, &rows)
+    }
+}
+
+/// `a` Pareto-dominates `b` over (wall time, efficiency, staleness).
+fn dominates(a: &Plan, b: &Plan) -> bool {
+    let no_worse = a.duration_h <= b.duration_h
+        && a.efficiency_pct >= b.efficiency_pct
+        && a.mean_staleness <= b.mean_staleness;
+    let better = a.duration_h < b.duration_h
+        || a.efficiency_pct > b.efficiency_pct
+        || a.mean_staleness < b.mean_staleness;
+    no_worse && better
+}
+
+fn mark_pareto(plans: &mut [Plan]) {
+    let dominated: Vec<bool> = plans
+        .iter()
+        .map(|b| plans.iter().any(|a| dominates(a, b)))
+        .collect();
+    for (p, d) in plans.iter_mut().zip(dominated) {
+        p.pareto = !d;
+    }
+}
+
+fn scalar_score(objective: Objective, weight: f64, p: &Plan) -> f64 {
+    let penalty = 1.0 + weight * p.mean_staleness;
+    match objective {
+        Objective::Time | Objective::Pareto => p.duration_h * penalty,
+        // speedup-weighted efficiency (see Objective::Efficiency),
+        // negated so that "lower score wins" holds for every objective
+        Objective::Efficiency => -(p.speedup * p.efficiency_pct / penalty),
+    }
+}
+
+/// Exhaustively sweep every feasible layout under `cfg.cores` and rank
+/// them (see the module docs for the scoring conventions). Errors when
+/// the budget cannot host a single environment at any candidate rank
+/// count.
+pub fn search(calib: &Calibration, cfg: &PlannerConfig) -> Result<PlanSet> {
+    anyhow::ensure!(cfg.episodes_total >= 1, "need a positive episode budget");
+    anyhow::ensure!(!cfg.io_options.is_empty(), "need at least one io mode");
+    anyhow::ensure!(!cfg.sync_options.is_empty(), "need at least one sync policy");
+    let min_ranks = cfg
+        .ranks_options
+        .iter()
+        .copied()
+        .filter(|&r| r >= 1)
+        .min()
+        .context("need at least one ranks-per-env candidate")?;
+    anyhow::ensure!(
+        cfg.cores >= min_ranks,
+        "core budget {} cannot host a single environment: the smallest \
+         rank allocation among {:?} needs {} cores per env",
+        cfg.cores,
+        cfg.ranks_options,
+        min_ranks
+    );
+
+    let des = |envs: usize, ranks: usize, io_mode: IoMode, sync: SyncPolicy, episodes: usize| {
+        simulate_training(
+            calib,
+            &SimConfig {
+                n_envs: envs,
+                n_ranks: ranks,
+                episodes_total: episodes,
+                io_mode,
+                sync,
+                seed: cfg.seed,
+            },
+        )
+    };
+
+    // the paper's global reference: Table I's 225.2 h corner (reused
+    // below when the sweep enumerates the identical layout)
+    let reference = des(1, 1, IoMode::Baseline, SyncPolicy::Full, cfg.episodes_total);
+    let reference_h = reference.total_hours();
+
+    let mut ranks_options = cfg.ranks_options.clone();
+    ranks_options.retain(|&r| r >= 1);
+    ranks_options.sort_unstable();
+    ranks_options.dedup();
+
+    let mut plans = Vec::new();
+    for &ranks in &ranks_options {
+        if ranks > cfg.cores {
+            continue;
+        }
+        let env_candidates: Vec<usize> = match &cfg.env_options {
+            Some(list) => {
+                let mut v: Vec<usize> = list
+                    .iter()
+                    .copied()
+                    .filter(|&e| e >= 1 && e * ranks <= cfg.cores)
+                    .collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+            None => (1..=(cfg.cores / ranks)).collect(),
+        };
+        for envs in env_candidates {
+            // the shared per-layout budget: smallest whole-per-env count
+            // >= episodes_total, so every sync policy of this layout
+            // trains the identical number of episodes (the synchronous
+            // loop can only run whole iterations)
+            let budget = cfg.episodes_total.div_ceil(envs) * envs;
+            for &io_mode in &cfg.io_options {
+                let mut seen_k: Vec<(usize, bool)> = Vec::new();
+                for &sync in &cfg.sync_options {
+                    // the async DES runs its updates on a DEDICATED
+                    // master core, concurrent with the envs (full and
+                    // partial serialize the update on the envs' own
+                    // time); charge that core against the budget and
+                    // in the efficiency denominator
+                    let master = usize::from(sync == SyncPolicy::Async);
+                    if envs * ranks + master > cfg.cores {
+                        continue;
+                    }
+                    // dedup schedule-equivalent options for this pool
+                    // size (partial:k >= n IS the full barrier). Async
+                    // is never merged: its dedicated-master schedule
+                    // differs from partial:1/full even at equal k.
+                    let key = (sync.effective_k(envs), master == 1);
+                    if seen_k.contains(&key) {
+                        continue;
+                    }
+                    seen_k.push(key);
+                    let is_reference = envs == 1
+                        && ranks == 1
+                        && io_mode == IoMode::Baseline
+                        && sync == SyncPolicy::Full;
+                    let r = if is_reference {
+                        reference.clone()
+                    } else {
+                        des(envs, ranks, io_mode, sync, budget)
+                    };
+                    let t = r.total_hours();
+                    let cpus = r.total_cpus + master;
+                    plans.push(Plan {
+                        n_envs: envs,
+                        n_ranks: ranks,
+                        total_cpus: cpus,
+                        sync,
+                        io_mode,
+                        duration_h: t,
+                        speedup: speedup(reference_h, t),
+                        efficiency_pct: efficiency(reference_h, t, 1, cpus),
+                        mean_staleness: r.mean_staleness,
+                        barrier_idle_s: r.breakdown.barrier_idle_s,
+                        disk_utilisation: r.disk_utilisation,
+                        pareto: false,
+                        score: 0.0,
+                    });
+                }
+            }
+        }
+    }
+
+    anyhow::ensure!(
+        !plans.is_empty(),
+        "no feasible layout under {} cores (env candidates {:?}, ranks {:?})",
+        cfg.cores,
+        cfg.env_options,
+        ranks_options
+    );
+    mark_pareto(&mut plans);
+    for p in &mut plans {
+        p.score = scalar_score(cfg.objective, cfg.staleness_weight, p);
+    }
+    let pareto_first = cfg.objective == Objective::Pareto;
+    plans.sort_by(|a, b| {
+        let front = if pareto_first {
+            b.pareto.cmp(&a.pareto)
+        } else {
+            std::cmp::Ordering::Equal
+        };
+        front
+            .then(a.score.total_cmp(&b.score))
+            .then(a.total_cpus.cmp(&b.total_cpus))
+            .then(a.n_envs.cmp(&b.n_envs))
+            .then(a.n_ranks.cmp(&b.n_ranks))
+    });
+
+    Ok(PlanSet {
+        cores: cfg.cores,
+        episodes_total: cfg.episodes_total,
+        objective: cfg.objective,
+        staleness_weight: cfg.staleness_weight,
+        reference_h,
+        plans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(cores: usize) -> PlannerConfig {
+        let mut c = PlannerConfig::new(cores);
+        c.episodes_total = 48;
+        c
+    }
+
+    #[test]
+    fn objective_parse_round_trips_and_lists_accepted() {
+        for o in [Objective::Time, Objective::Efficiency, Objective::Pareto] {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o);
+        }
+        assert_eq!(Objective::parse(" Wall-Time ").unwrap(), Objective::Time);
+        let err = Objective::parse("fastest").unwrap_err().to_string();
+        assert!(
+            err.contains("time") && err.contains("efficiency") && err.contains("pareto"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn sweep_is_exhaustive_and_deduplicated() {
+        let calib = Calibration::paper_scale();
+        let set = search(&calib, &small_cfg(6)).unwrap();
+        assert!(!set.plans.is_empty());
+        for p in &set.plans {
+            // async layouts are charged their dedicated update master
+            let master = usize::from(p.sync == SyncPolicy::Async);
+            assert_eq!(p.total_cpus, p.n_envs * p.n_ranks + master);
+            assert!(p.total_cpus <= 6, "layout over budget in sweep");
+            assert!(p.duration_h.is_finite() && p.duration_h > 0.0);
+        }
+        // no two plans may describe the same effective schedule (async
+        // is a distinct schedule even at k = 1, hence the bool)
+        let mut keys: Vec<(usize, usize, &'static str, usize, bool)> = set
+            .plans
+            .iter()
+            .map(|p| {
+                (
+                    p.n_envs,
+                    p.n_ranks,
+                    p.io_mode.name(),
+                    p.sync.effective_k(p.n_envs),
+                    p.sync == SyncPolicy::Async,
+                )
+            })
+            .collect();
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate effective schedules in sweep");
+        // the async axis survives the sweep as its own schedule
+        assert!(
+            set.plans.iter().any(|p| p.sync == SyncPolicy::Async),
+            "async layouts missing from the default sweep"
+        );
+    }
+
+    #[test]
+    fn pareto_front_is_consistent() {
+        let calib = Calibration::paper_scale();
+        let set = search(&calib, &small_cfg(6)).unwrap();
+        let front = set.pareto_front();
+        assert!(!front.is_empty(), "empty Pareto front");
+        // nothing on the front is dominated; everything off it is
+        for p in &set.plans {
+            let dominated = set.plans.iter().any(|a| dominates(a, p));
+            assert_eq!(!dominated, p.pareto, "pareto flag wrong for {p:?}");
+        }
+        // the fastest layout is always on the front
+        let fastest = set
+            .plans
+            .iter()
+            .min_by(|a, b| a.duration_h.total_cmp(&b.duration_h))
+            .unwrap();
+        assert!(fastest.pareto, "fastest layout dominated?");
+    }
+
+    #[test]
+    fn ranking_is_deterministic() {
+        let calib = Calibration::paper_scale();
+        let a = search(&calib, &small_cfg(5)).unwrap();
+        let b = search(&calib, &small_cfg(5)).unwrap();
+        let key = |s: &PlanSet| -> Vec<String> { s.plans.iter().map(Plan::to_csv).collect() };
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn render_shows_the_winner_and_the_front_marker() {
+        let calib = Calibration::paper_scale();
+        let set = search(&calib, &small_cfg(4)).unwrap();
+        let txt = set.render(5);
+        assert!(txt.contains("N_envs"), "{txt}");
+        assert!(txt.contains('*'), "no Pareto marker rendered:\n{txt}");
+    }
+}

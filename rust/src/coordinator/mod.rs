@@ -17,8 +17,9 @@
 //!   the update on either backend (XLA artifact or the native pure-Rust
 //!   step); with no manifest present the loop falls back to the fully
 //!   artifact-free path (surrogate scenario, native backends).
-//! * [`train`] — run configuration ([`TrainConfig`]) and the shared
-//!   setup both the scheduler and the CLI resolve backends through.
+//! * [`train`](mod@train) — run configuration ([`TrainConfig`]) and the
+//!   shared setup both the scheduler and the CLI resolve backends
+//!   through.
 //!
 //! The cluster DES (`crate::cluster::des`) mirrors the same
 //! [`SyncPolicy`] type, so live measurements and 60-core projections

@@ -17,9 +17,10 @@
 //!
 //! Every policy runs on both PPO update backends and both inference
 //! modes. Central batched inference composes with partial barriers via
-//! [`EnvPool::rollout_batched_subset`]: the policy server batches
-//! whatever observation set is currently at the barrier (the envs being
-//! re-dispatched) instead of requiring all `n`.
+//! [`EnvPool::rollout_batched_subset`](crate::coordinator::pool::EnvPool::rollout_batched_subset):
+//! the policy server batches whatever observation set is currently at
+//! the barrier (the envs being re-dispatched) instead of requiring all
+//! `n`.
 //!
 //! Per-env parameter versions are tracked for every policy; the loop
 //! reports a staleness histogram (`out/staleness.csv`, summarized in

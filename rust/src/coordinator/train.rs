@@ -78,7 +78,7 @@ pub struct TrainConfig {
     pub backend: PolicyBackendKind,
     /// Engine for the PPO minibatch update (XLA artifact or native step).
     pub update_backend: UpdateBackendKind,
-    /// Rollout scheduler barrier policy (full / partial:<k> / async).
+    /// Rollout scheduler barrier policy (full / `partial:<k>` / async).
     pub sync: SyncPolicy,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
@@ -90,6 +90,21 @@ pub struct TrainConfig {
     pub seed: u64,
     pub log_every: usize,
     pub quiet: bool,
+}
+
+impl TrainConfig {
+    /// Apply a planner-selected layout (`drlfoam train --layout auto`)
+    /// to this run: the chosen environment count, scheduler barrier and
+    /// exchange mode drive the real scheduler loop. Ranks-per-env is
+    /// intentionally NOT applied — the in-process loop runs single-rank
+    /// environments, so auto-planning constrains its search to
+    /// `ranks = 1` (the DES keeps the rank axis for cluster
+    /// projections).
+    pub fn apply_plan(&mut self, plan: &crate::cluster::planner::Plan) {
+        self.n_envs = plan.n_envs;
+        self.sync = plan.sync;
+        self.io_mode = plan.io_mode;
+    }
 }
 
 impl Default for TrainConfig {

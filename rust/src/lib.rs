@@ -14,7 +14,8 @@
 //!   surrogate), PPO trainer, multi-environment coordinator with per-env
 //!   or central batched policy inference, the three CFD<->DRL exchange
 //!   interfaces, the cluster discrete-event simulator that regenerates the
-//!   paper's tables/figures, and the CLI.
+//!   paper's tables/figures, the allocation planner that searches the
+//!   hybrid (envs x ranks x sync x io) layout space over it, and the CLI.
 //!
 //! README.md covers the quickstart; ARCHITECTURE.md maps every module to
 //! the paper section it implements.

@@ -2,12 +2,15 @@
 //!
 //! Subcommands:
 //!   train       — multi-environment PPO training on a selected scenario
+//!                 (--layout auto plans envs/sync/io before training)
 //!   episode     — roll out a single episode and print per-period stats
 //!   scenarios   — list the scenario registry
 //!   calibrate   — measure per-component costs, write out/calib.json
 //!   reproduce   — regenerate a paper table/figure (table1, table2, fig7,
-//!                 fig8, fig9, fig10, summary, all)
+//!                 fig8, fig9, fig10, summary, plan, all)
 //!   simulate    — run one cluster-DES configuration
+//!   plan        — sweep every feasible (envs x ranks x sync x io) layout
+//!                 under a core budget and rank them (out/plan.csv)
 //!   info        — print manifest/artifact info
 //!
 //! Hand-rolled argument parsing (see rust/src/config) because clap is not
@@ -17,32 +20,43 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use drlfoam::cluster::{simulate_training, Calibration, SimConfig};
+use drlfoam::cluster::{planner, simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
 use drlfoam::coordinator::{train, InferenceMode, LocalPolicy, SyncPolicy, TrainConfig};
 use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
-use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN};
+use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
 use drlfoam::env::Environment;
 use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
 
-const USAGE: &str = "usage: drlfoam <train|episode|scenarios|calibrate|reproduce|simulate|info> [options]
+const USAGE: &str = "usage: drlfoam <train|episode|scenarios|calibrate|reproduce|simulate|plan|info> [options]
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
-             --sync full|partial:<k>|async [--quiet]
+             --sync full|partial:<k>|async --layout manual|auto [--quiet]
              (--scenario surrogate trains with no artifacts: native backends are
               auto-selected when artifacts/ is absent. --sync partial:<k> updates
               on any k of N trajectories; --async is a deprecated alias for
-              --sync async.)
+              --sync async. --layout auto measures a small calibration, plans the
+              (envs, sync, io) layout under --cores [default: this machine's
+              cores], applies the winner, and writes out/plan.csv; axes passed
+              explicitly (--envs/--sync/--io) are pinned, not searched.)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
              (--scenario surrogate runs without artifacts)
   scenarios: list selectable scenarios
   evaluate:  --policy FILE --horizon N  (deterministic rollout + vorticity PPMs)
   calibrate: --periods N (measurement repetitions)
-  reproduce: <table1|table2|fig6|fig7|fig8|fig9|fig10|summary|ablation|sync|all> [--calib out/calib.json]
-  simulate:  --envs N --ranks N --episodes N --io MODE --sync full|partial:<k>|async";
+  reproduce: <table1|table2|fig6|fig7|fig8|fig9|fig10|summary|ablation|sync|plan|all>
+             [--calib out/calib.json]   (plan = the 60-core optimal-config claim;
+             not part of `all` — it sweeps hundreds of DES runs)
+  simulate:  --envs N --ranks N --episodes N --io MODE --sync full|partial:<k>|async
+  plan:      --cores N [--objective time|efficiency|pareto] [--ranks 1,2,5]
+             [--envs N1,N2,...] [--syncs full,partial:8,async]
+             [--ios baseline,optimized,memory] [--staleness-weight W]
+             [--episodes N] [--calib out/calib.json]
+             (exhaustive DES-scored sweep of feasible layouts; ranked table on
+              stdout, every layout to out/plan.csv, Pareto front marked)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -57,7 +71,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "artifacts", "out", "variant", "scenario", "seed", "envs", "ranks",
         "horizon", "iterations", "epochs", "io", "inference", "backend",
         "update-backend", "sync", "episodes", "periods", "calib", "policy",
-        "work-dir", "log-every",
+        "work-dir", "log-every", "layout", "cores", "objective", "syncs",
+        "ios", "staleness-weight",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -69,6 +84,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "calibrate" => cmd_calibrate(&args),
         "reproduce" => cmd_reproduce(&args),
         "simulate" => cmd_simulate(&args),
+        "plan" => cmd_plan(&args),
         "info" => cmd_info(&args),
         _ => bail!("{USAGE}"),
     }
@@ -95,7 +111,7 @@ fn sync_policy(args: &Args) -> Result<SyncPolicy> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = TrainConfig {
+    let mut cfg = TrainConfig {
         artifact_dir: artifact_dir(args),
         work_dir: args.get_or("work-dir", "out/work").into(),
         out_dir: out_dir(args),
@@ -114,6 +130,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.usize_or("log-every", 1)?,
         quiet: args.has_flag("quiet"),
     };
+    match args.get_or("layout", "manual").trim().to_ascii_lowercase().as_str() {
+        "manual" => {}
+        "auto" => auto_layout(args, &mut cfg)?,
+        other => bail!("unknown layout {other:?} (accepted: manual, auto)"),
+    }
     // io/inference are used as requested; the policy/update backends may
     // be downgraded by the artifact-free fallback, so the *resolved*
     // engines are reported from inside the training setup instead
@@ -441,6 +462,187 @@ fn synth_traj(n_obs: usize, n: usize) -> drl::Trajectory {
     }
 }
 
+/// `train --layout auto`: search the (n_envs, sync, io) layout before
+/// training and apply the winner to the scheduler loop. The calibration
+/// is measured small — `--calib FILE` when given, otherwise a quick
+/// in-process measurement of the artifact-free surrogate pipeline — and
+/// the planner sweeps the `--cores` budget (default: this machine's
+/// available parallelism). Axes pinned explicitly on the command line
+/// (`--envs`, `--sync`, `--io`) are respected, not searched; the rank
+/// axis is fixed at 1 because the live loop runs single-rank envs.
+fn auto_layout(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
+    let cores = match args.get("cores") {
+        Some(_) => args.usize_or("cores", 1)?,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    let calib = match args.get("calib") {
+        Some(p) => Calibration::load(std::path::Path::new(p))
+            .with_context(|| format!("loading calibration {p}"))?,
+        None => quick_surrogate_calibration(&cfg.work_dir.join("auto-calib"), cfg.horizon, cfg.seed)?,
+    };
+    let mut pc = planner::PlannerConfig::new(cores);
+    pc.ranks_options = vec![1];
+    // fixed total budget: what the run would consume with every core
+    // hosting an environment (planning is comparative, not a promise)
+    pc.episodes_total = (cfg.iterations * cores).max(1);
+    pc.seed = cfg.seed;
+    pc.objective = planner::Objective::parse(&args.get_or("objective", "time"))?;
+    pc.staleness_weight = args.f64_or("staleness-weight", pc.staleness_weight)?;
+    // unlike `drlfoam plan`, the in-process loop can genuinely skip the
+    // filesystem, so the I/O-disabled mode is a real candidate here
+    pc.io_options = vec![IoMode::Baseline, IoMode::Optimized, IoMode::InMemory];
+    if args.get("envs").is_some() {
+        pc.env_options = Some(vec![cfg.n_envs]);
+    }
+    if args.get("sync").is_some() || args.has_flag("async") {
+        pc.sync_options = vec![cfg.sync];
+    }
+    if args.get("io").is_some() {
+        pc.io_options = vec![cfg.io_mode];
+    }
+    let set = planner::search(&calib, &pc)?;
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    set.write_csv(cfg.out_dir.join("plan.csv"))?;
+    let best = set.best().context("planner found no feasible layout")?.clone();
+    if !cfg.quiet {
+        println!("{}", set.render(8));
+    }
+    println!(
+        "layout auto: envs={} sync={} io={} ({} of {} cores; ranking in {}/plan.csv)",
+        best.n_envs,
+        best.sync.name(),
+        best.io_mode.name(),
+        best.total_cpus,
+        cores,
+        cfg.out_dir.display()
+    );
+    cfg.apply_plan(&best);
+    Ok(())
+}
+
+/// Measure the per-component costs of the artifact-free surrogate
+/// pipeline on THIS machine and scale them into a calibration
+/// (`Calibration::from_measured`), for `--layout auto` runs without an
+/// out/calib.json: a few actuation periods per exchange mode give the
+/// period time and the exchange bytes/CPU costs; the native policy and
+/// native PPO backends give the serving and minibatch costs.
+fn quick_surrogate_calibration(
+    work: &std::path::Path,
+    horizon: usize,
+    seed: u64,
+) -> Result<Calibration> {
+    std::fs::create_dir_all(work)?;
+    let reps = 12usize;
+    let no_artifacts = work.join("no-artifacts");
+    let measure = |mode: IoMode| -> Result<(f64, f64, f64)> {
+        let ctx = ScenarioContext {
+            artifact_dir: &no_artifacts,
+            work_dir: work,
+            env_id: 0,
+            io_mode: mode,
+            manifest: None,
+            variant: "small",
+            seed,
+        };
+        let mut e = scenario::build("surrogate", &ctx)?;
+        e.reset()?;
+        let (mut cfd, mut cpu, mut bytes) = (0.0f64, 0.0f64, 0.0f64);
+        for k in 0..reps {
+            let sr = e.step(0.2 * ((k % 3) as f64 - 1.0))?;
+            cfd += sr.timings.cfd_s;
+            cpu += sr.io.total_s();
+            bytes += (sr.io.bytes_written + sr.io.bytes_read) as f64;
+        }
+        let n = reps as f64;
+        Ok((cfd / n, cpu / n, bytes / n))
+    };
+    let (t_period, cpu_b, bytes_b) = measure(IoMode::Baseline)?;
+    let (_, cpu_o, bytes_o) = measure(IoMode::Optimized)?;
+
+    // native policy serving cost (the backend auto-selected artifact-free)
+    let net = NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let params = net.init_params(seed);
+    let obs = vec![0.1f32; SURROGATE_N_OBS];
+    let t0 = std::time::Instant::now();
+    for _ in 0..200 {
+        net.apply(&params, &obs)?;
+    }
+    let t_policy = t0.elapsed().as_secs_f64() / 200.0;
+
+    // native PPO minibatch cost
+    let updater = drl::NativeUpdater::new(
+        SURROGATE_N_OBS,
+        SURROGATE_HIDDEN,
+        drl::PpoHyperParams::default(),
+    );
+    let mut trainer = drl::PpoTrainer::with_minibatch(params, 64, 1);
+    let traj = synth_traj(SURROGATE_N_OBS, 64);
+    let batch = drl::Batch::assemble(&[traj], SURROGATE_N_OBS, 0.99, 0.95);
+    let mut rng = drlfoam::util::rng::Rng::new(seed ^ 0xCA11B);
+    let t0 = std::time::Instant::now();
+    let mut mbs = 0usize;
+    for _ in 0..5 {
+        let st = trainer.update(drl::TrainerBackend::Native(&updater), &batch, &mut rng)?;
+        mbs += st.minibatches;
+    }
+    let t_update_mb = t0.elapsed().as_secs_f64() / mbs.max(1) as f64;
+
+    Ok(Calibration::from_measured(
+        t_period.max(1e-7),
+        t_policy,
+        t_update_mb,
+        bytes_b.max(1.0),
+        bytes_o.max(1.0),
+        cpu_b,
+        cpu_o,
+        horizon.max(1),
+    ))
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let calib = load_calib(args)?;
+    let mut pc = planner::PlannerConfig::new(args.usize_or("cores", 60)?);
+    pc.episodes_total = args.usize_or("episodes", pc.episodes_total)?;
+    pc.objective = planner::Objective::parse(&args.get_or("objective", "time"))?;
+    pc.staleness_weight = args.f64_or("staleness-weight", pc.staleness_weight)?;
+    pc.seed = args.u64_or("seed", pc.seed)?;
+    pc.ranks_options = args.usize_list_or("ranks", &[1, 2, 5])?;
+    if args.get("envs").is_some() {
+        pc.env_options = Some(args.usize_list_or("envs", &[])?);
+    }
+    if let Some(s) = args.get("syncs") {
+        pc.sync_options = s.split(',').map(SyncPolicy::parse).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(s) = args.get("ios") {
+        pc.io_options = s.split(',').map(IoMode::parse).collect::<Result<Vec<_>>>()?;
+    }
+    let set = planner::search(&calib, &pc)?;
+    let odir = out_dir(args);
+    std::fs::create_dir_all(&odir)?;
+    set.write_csv(odir.join("plan.csv"))?;
+    println!("{}", set.render(15));
+    let best = set.best().context("planner found no feasible layout")?;
+    println!(
+        "selected: {} envs x {} ranks ({} of {} cores), sync {}, io {} -> {:.1} h, {:.1}x, {:.1}% eff, staleness {:.2}",
+        best.n_envs,
+        best.n_ranks,
+        best.total_cpus,
+        pc.cores,
+        best.sync.name(),
+        best.io_mode.name(),
+        best.duration_h,
+        best.speedup,
+        best.efficiency_pct,
+        best.mean_staleness
+    );
+    println!(
+        "full ranking ({} layouts): {}",
+        set.plans.len(),
+        odir.join("plan.csv").display()
+    );
+    Ok(())
+}
+
 fn load_calib(args: &Args) -> Result<Calibration> {
     match args.get("calib") {
         Some(p) => Calibration::load(std::path::Path::new(p))
@@ -469,6 +671,7 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
             "fig6" => reproduce::fig6(&artifact_dir(args), &odir, 24, 10),
             "ablation" => reproduce::ablation_async(&calib, &odir),
             "sync" => reproduce::sync_sweep(&calib, &odir),
+            "plan" => reproduce::plan(&calib, &odir),
             "summary" => reproduce::summary(&calib, &odir),
             _ => bail!("unknown experiment {name:?}"),
         }

@@ -1,7 +1,10 @@
-//! Speedup/efficiency math, paper-style table rendering, CSV output.
+//! Speedup/efficiency math, paper-style table rendering, CSV output —
+//! the metric conventions of Table I / Figs 8–12, reused by
+//! `reproduce` and by the allocation planner's ranking
+//! (`crate::cluster::planner`).
 
 pub mod scaling;
 pub mod tables;
 
 pub use scaling::{efficiency, speedup, ScalingRow};
-pub use tables::{render_table, write_csv};
+pub use tables::{parse_csv, render_table, write_csv};

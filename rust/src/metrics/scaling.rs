@@ -8,12 +8,24 @@
 //! * Figs 11/12: per-strategy single-env reference.
 
 /// speedup = T_ref / T
+///
+/// ```
+/// assert_eq!(drlfoam::metrics::speedup(100.0, 50.0), 2.0);
+/// ```
 pub fn speedup(t_ref: f64, t: f64) -> f64 {
     t_ref / t
 }
 
 /// efficiency (%) = speedup / resource_ratio x 100, where resource ratio
 /// is the factor of additional CPUs relative to the reference.
+///
+/// ```
+/// use drlfoam::metrics::efficiency;
+/// // double the CPUs, double the speed -> 100 %
+/// assert!((efficiency(100.0, 50.0, 1, 2) - 100.0).abs() < 1e-12);
+/// // double the CPUs, 1.6x the speed -> 80 %
+/// assert!((efficiency(100.0, 62.5, 1, 2) - 80.0).abs() < 1e-12);
+/// ```
 pub fn efficiency(t_ref: f64, t: f64, cpus_ref: usize, cpus: usize) -> f64 {
     100.0 * speedup(t_ref, t) / (cpus as f64 / cpus_ref as f64)
 }

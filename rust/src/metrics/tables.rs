@@ -3,7 +3,7 @@
 use std::io::Write as _;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// Render an aligned text table. `rows` are pre-formatted cells.
 pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
@@ -43,6 +43,34 @@ pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> Strin
     out
 }
 
+/// Parse a CSV produced by [`write_csv`] back into `(header fields,
+/// data rows)`. The format is the strict comma-separated subset this
+/// crate emits (no quoting, no embedded commas); every row must match
+/// the header's arity, so schema drift in any `out/*.csv` series fails
+/// loudly in the tests that round-trip them (e.g. `plan.csv`).
+pub fn parse_csv(text: &str) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let mut lines = text.lines();
+    let split = |l: &str| -> Vec<String> { l.split(',').map(|s| s.to_string()).collect() };
+    let header = split(lines.next().context("empty CSV")?);
+    anyhow::ensure!(!header.is_empty(), "CSV header has no fields");
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = split(line);
+        anyhow::ensure!(
+            row.len() == header.len(),
+            "CSV row {} has {} fields, header has {}",
+            i + 2,
+            row.len(),
+            header.len()
+        );
+        rows.push(row);
+    }
+    Ok((header, rows))
+}
+
 /// Write rows (first row = header) to a CSV file.
 pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[String]) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
@@ -72,6 +100,16 @@ mod tests {
         // all data lines same width
         let widths: Vec<usize> = t.lines().skip(1).map(|l| l.len()).collect();
         assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn csv_parse_round_trip_and_arity_check() {
+        let (h, rows) = parse_csv("a,b\n1,2\n\n3,4\n").unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec!["1", "2"], vec!["3", "4"]]);
+        assert!(parse_csv("").is_err());
+        let err = parse_csv("a,b\n1,2,3\n").unwrap_err().to_string();
+        assert!(err.contains("3 fields"), "{err}");
     }
 
     #[test]

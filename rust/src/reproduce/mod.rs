@@ -2,10 +2,24 @@
 //! (DESIGN.md section 6 maps each to its module and bench target).
 //!
 //! Each function returns the rendered text (also printed by the CLI) and
-//! writes a CSV under `out/` so the series can be plotted.
+//! writes a CSV under `out/` so the series can be plotted (the README's
+//! "CSV outputs" table documents every schema). Paper artefact -> entry:
+//!
+//! | entry | paper artefact | CSV |
+//! |---|---|---|
+//! | [`table1`] | Table I (env x rank grid, baseline I/O) | `table1.csv` |
+//! | [`fig7`] | Fig 7 (CFD strong scaling) | `fig7.csv` |
+//! | [`fig8`] / [`fig9`] | Figs 8-9 (multi-env / hybrid speedup) | `fig8.csv`, `fig9.csv` |
+//! | [`fig10`] | Fig 10 (per-episode breakdown) | `fig10.csv` |
+//! | [`table2`] | Table II + Figs 11-12 (I/O strategies) | `table2_fig11_fig12.csv` |
+//! | [`fig6`] | Fig 6 (reward convergence, REAL training) | `fig6.csv` |
+//! | [`summary`] | the conclusion's headline numbers | `summary.csv` |
+//! | [`ablation_async`] / [`sync_sweep`] | future-work barrier axis | `ablation_async.csv`, `sync_sweep.csv` |
+//! | [`plan`] | the optimal-config claim, via the planner | `plan.csv` |
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::cluster::planner::{search, PlannerConfig};
 use crate::cluster::{simulate_training, Calibration, MpiScaling, SimConfig};
 use crate::coordinator::SyncPolicy;
 use crate::io_interface::IoMode;
@@ -363,7 +377,6 @@ pub fn fig6(
 /// Extension ablation: synchronous (barrier) vs asynchronous (barrier-free)
 /// training at cluster scale — the paper's future-work direction, DES.
 pub fn ablation_async(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
-    use crate::cluster::simulate_training_async;
     let mut rows_txt = Vec::new();
     let mut rows_csv = Vec::new();
     for mode in [IoMode::Baseline, IoMode::Optimized] {
@@ -377,7 +390,15 @@ pub fn ablation_async(calib: &Calibration, out_dir: &std::path::Path) -> Result<
                 seed: 1,
             };
             let ts = simulate_training(calib, &cfg).total_s / 3600.0;
-            let ta = simulate_training_async(calib, &cfg).total_s / 3600.0;
+            let ta = simulate_training(
+                calib,
+                &SimConfig {
+                    sync: SyncPolicy::Async,
+                    ..cfg.clone()
+                },
+            )
+            .total_s
+                / 3600.0;
             let gain = 100.0 * (ts - ta) / ts;
             rows_txt.push(vec![
                 mode.name().to_string(),
@@ -471,4 +492,33 @@ pub fn sync_sweep(calib: &Calibration, out_dir: &std::path::Path) -> Result<Stri
         &["I/O", "sync", "k/n", "total (h)", "idle (s/round)", "update+idle (s/round)", "gain vs full"],
         &rows_txt,
     ))
+}
+
+/// The paper's optimal-config claim, rediscovered by search: the
+/// allocation planner (`crate::cluster::planner`) sweeps every feasible
+/// `(n_envs, ranks, sync, io)` layout under a 60-core budget and must
+/// select the Table-I/II optimum — 60 single-rank environments with the
+/// optimized exchange, ~47x speedup at ~78% parallel efficiency against
+/// the 225.2 h single-core baseline. Writes the full ranking to
+/// `out/plan.csv`.
+pub fn plan(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
+    let mut cfg = PlannerConfig::new(60);
+    cfg.episodes_total = EPISODES;
+    let set = search(calib, &cfg)?;
+    set.write_csv(out_dir.join("plan.csv"))?;
+    let best = set.best().context("planner returned no feasible layout")?;
+    let mut txt = set.render(12);
+    txt.push_str(&format!(
+        "\nplanner optimum @60 cores (simulated -> paper):\n\
+         layout:   {} envs x {} ranks, io {}, sync {}   (paper: 60 x 1, optimized, sync)\n\
+         duration: {:.1} h   speedup {:.1}x   eff {:.1}%          (paper: 4.8 h, ~47x, ~78%)\n",
+        best.n_envs,
+        best.n_ranks,
+        best.io_mode.name(),
+        best.sync.name(),
+        best.duration_h,
+        best.speedup,
+        best.efficiency_pct,
+    ));
+    Ok(txt)
 }

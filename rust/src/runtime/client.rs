@@ -123,7 +123,7 @@ pub fn scalar_f32(x: f32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
-/// Copy a literal out to a host Vec<f32>.
+/// Copy a literal out to a host `Vec<f32>`.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }

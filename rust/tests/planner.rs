@@ -1,0 +1,188 @@
+//! Allocation-planner integration: the joint (n_envs x ranks x sync x io)
+//! sweep must rediscover the paper's optimal 60-core layout (Table I/II:
+//! 60 single-rank envs, optimized exchange, ~47x / ~78%), fail clearly on
+//! impossible core budgets, respect the staleness weight, emit a CSV that
+//! round-trips through the shared parser, and drive an end-to-end
+//! artifact-free `--layout auto` training run.
+
+use drlfoam::cluster::planner::{search, Objective, Plan, PlannerConfig, PLAN_CSV_HEADER};
+use drlfoam::cluster::Calibration;
+use drlfoam::coordinator::{train, SyncPolicy, TrainConfig};
+use drlfoam::drl::{PolicyBackendKind, UpdateBackendKind};
+use drlfoam::io_interface::IoMode;
+use drlfoam::metrics::parse_csv;
+
+fn paper_cfg(cores: usize, episodes: usize) -> PlannerConfig {
+    let mut c = PlannerConfig::new(cores);
+    // a reduced episode budget keeps the sweep fast; speedup/efficiency
+    // are ratios of structurally identical runs, so the optimum is the
+    // same as at the paper's 3000 (reproduce::plan runs the full budget)
+    c.episodes_total = episodes;
+    c
+}
+
+#[test]
+fn planner_at_60_cores_recovers_the_paper_optimum() {
+    let calib = Calibration::paper_scale();
+    let set = search(&calib, &paper_cfg(60, 300)).unwrap();
+    let best = set.best().unwrap();
+    assert_eq!(
+        (best.n_envs, best.n_ranks),
+        (60, 1),
+        "layout {} x {} is not the paper's 60 x 1 optimum",
+        best.n_envs,
+        best.n_ranks
+    );
+    assert_eq!(best.io_mode, IoMode::Optimized, "io {}", best.io_mode.name());
+    assert_eq!(best.sync, SyncPolicy::Full, "sync {}", best.sync.name());
+    assert_eq!(best.mean_staleness, 0.0);
+    // paper: ~47x speedup at ~78% parallel efficiency on 60 cores
+    assert!(
+        best.speedup > 36.0 && best.speedup < 58.0,
+        "speedup {:.1} outside the Table-I tolerance band",
+        best.speedup
+    );
+    assert!(
+        best.efficiency_pct > 64.0 && best.efficiency_pct < 92.0,
+        "efficiency {:.1}% outside the Table-I tolerance band",
+        best.efficiency_pct
+    );
+    // the winner is Pareto-optimal, and the front also carries an
+    // off-policy layout trading staleness for wall time
+    assert!(best.pareto);
+    assert!(
+        set.pareto_front().iter().any(|p| p.mean_staleness > 0.0),
+        "no staleness/wall-time trade on the Pareto front"
+    );
+}
+
+#[test]
+fn impossible_core_budget_is_a_clear_error() {
+    let calib = Calibration::paper_scale();
+    let mut c = paper_cfg(1, 60);
+    c.ranks_options = vec![2, 5];
+    let err = search(&calib, &c).unwrap_err().to_string();
+    assert!(err.contains("core budget"), "unhelpful error: {err}");
+    assert!(err.contains('2'), "error does not name the rank minimum: {err}");
+}
+
+#[test]
+fn staleness_weight_dominance_prefers_full_sync() {
+    let calib = Calibration::paper_scale();
+    let mut c = paper_cfg(16, 160);
+    c.ranks_options = vec![1];
+    c.staleness_weight = 100.0;
+    let conservative = search(&calib, &c).unwrap();
+    let best = conservative.best().unwrap().clone();
+    assert_eq!(best.sync, SyncPolicy::Full, "weight 100 still picked {}", best.sync.name());
+    assert_eq!(best.mean_staleness, 0.0);
+    // weight 0 is the pure wall-clock argmin
+    c.staleness_weight = 0.0;
+    let fastest = search(&calib, &c).unwrap();
+    let t_min = fastest
+        .plans
+        .iter()
+        .map(|p| p.duration_h)
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(fastest.best().unwrap().duration_h, t_min);
+    assert!(fastest.best().unwrap().duration_h <= best.duration_h + 1e-12);
+}
+
+#[test]
+fn plan_csv_round_trips_through_the_shared_parser() {
+    let calib = Calibration::paper_scale();
+    let set = search(&calib, &paper_cfg(8, 80)).unwrap();
+    let dir = std::env::temp_dir().join(format!("drlfoam-plan-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.csv");
+    set.write_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let (header, rows) = parse_csv(&text).unwrap();
+    assert_eq!(header.join(","), PLAN_CSV_HEADER);
+    assert_eq!(rows.len(), set.plans.len());
+    for (row, p) in rows.iter().zip(&set.plans) {
+        let q = Plan::from_csv(row).unwrap();
+        assert_eq!((q.n_envs, q.n_ranks, q.total_cpus), (p.n_envs, p.n_ranks, p.total_cpus));
+        assert_eq!(q.sync, p.sync);
+        assert_eq!(q.io_mode, p.io_mode);
+        assert_eq!(q.pareto, p.pareto);
+        assert!((q.duration_h - p.duration_h).abs() <= 1e-3 * p.duration_h.max(1.0));
+        assert!((q.mean_staleness - p.mean_staleness).abs() < 5e-3);
+        assert!((q.efficiency_pct - p.efficiency_pct).abs() < 5e-2);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `--layout auto` pipeline, artifact-free: a measured-small
+/// calibration feeds the search, the winner is applied to the real
+/// scheduler loop via `TrainConfig::apply_plan`, and training runs end
+/// to end on the surrogate scenario.
+#[test]
+fn layout_auto_pipeline_trains_artifact_free() {
+    // stand-in for `drlfoam calibrate` / the CLI's quick measurement:
+    // per-component costs of roughly surrogate magnitude
+    let calib = Calibration::from_measured(2e-4, 5e-6, 2e-5, 6.0e5, 1.5e5, 3e-4, 5e-5, 4);
+    let mut pc = PlannerConfig::new(3);
+    pc.episodes_total = 6;
+    pc.ranks_options = vec![1];
+    // the in-process loop can skip the filesystem for real
+    pc.io_options = vec![IoMode::Baseline, IoMode::Optimized, IoMode::InMemory];
+    let set = search(&calib, &pc).unwrap();
+    let best = set.best().unwrap();
+    assert!(best.n_envs >= 1 && best.n_envs <= 3);
+
+    let root = std::env::temp_dir().join(format!("drlfoam-auto-{}", std::process::id()));
+    let mut cfg = TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root.clone(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        horizon: 4,
+        iterations: 2,
+        epochs: 1,
+        seed: 5,
+        quiet: true,
+        ..TrainConfig::default()
+    };
+    cfg.apply_plan(best);
+    assert_eq!(cfg.n_envs, best.n_envs);
+    assert_eq!(cfg.sync, best.sync);
+    assert_eq!(cfg.io_mode, best.io_mode);
+    let summary = train(&cfg).unwrap();
+    assert!(!summary.log.is_empty());
+    assert_eq!(
+        summary.log.last().unwrap().episodes_done,
+        cfg.iterations * cfg.n_envs
+    );
+    assert!(root.join("train_log.csv").exists());
+    assert!(root.join("policy_final.bin").exists());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn objective_efficiency_and_pareto_rankings_are_coherent() {
+    let calib = Calibration::paper_scale();
+    let mut c = paper_cfg(6, 60);
+    c.objective = Objective::Efficiency;
+    let by_eff = search(&calib, &c).unwrap();
+    // the efficiency objective maximizes penalized speedup*efficiency —
+    // the knee of the scaling curve, never the trivial 1-core corner
+    let best_eff = by_eff.best().unwrap();
+    let knee = |p: &drlfoam::cluster::planner::Plan| {
+        p.speedup * p.efficiency_pct / (1.0 + c.staleness_weight * p.mean_staleness)
+    };
+    let max_knee = by_eff.plans.iter().map(knee).fold(f64::NEG_INFINITY, f64::max);
+    assert!(knee(best_eff) + 1e-9 >= max_knee);
+    assert!(best_eff.total_cpus > 1, "efficiency objective picked the 1-core corner");
+    c.objective = Objective::Pareto;
+    let by_pareto = search(&calib, &c).unwrap();
+    assert!(by_pareto.best().unwrap().pareto, "pareto objective ranked a dominated layout first");
+    // every front member ranks ahead of every dominated layout
+    let first_dominated = by_pareto.plans.iter().position(|p| !p.pareto);
+    if let Some(i) = first_dominated {
+        assert!(by_pareto.plans[..i].iter().all(|p| p.pareto));
+        assert!(by_pareto.plans[i..].iter().all(|p| !p.pareto));
+    }
+}
