@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke
+.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -42,6 +42,23 @@ plan-smoke:
 	    --artifacts out/plan-smoke/no-artifacts \
 	    --out out/plan-smoke/auto --work-dir out/plan-smoke/auto/work \
 	    --horizon 5 --iterations 2
+
+# Multi-process executor smoke: the artifact-free loop on real
+# `drlfoam worker` OS processes, then once more with a chaos-injected
+# worker crash (respawn + episode re-queue must keep training green).
+exec-smoke:
+	cargo run --release -- train \
+	    --scenario analytic --backend native --update-backend native \
+	    --executor multi-process \
+	    --artifacts out/exec-smoke/no-artifacts \
+	    --out out/exec-smoke --work-dir out/exec-smoke/work \
+	    --envs 2 --horizon 10 --iterations 3
+	cargo run --release -- train \
+	    --scenario analytic --backend native --update-backend native \
+	    --executor multi-process --chaos 0:1 \
+	    --artifacts out/exec-smoke/no-artifacts \
+	    --out out/exec-smoke/chaos --work-dir out/exec-smoke/chaos/work \
+	    --envs 2 --horizon 10 --iterations 3
 
 # Rollout-scheduler smoke: the same artifact-free loop once per sync
 # policy (full episode barrier, partial barrier, async).

@@ -31,6 +31,7 @@ fn surrogate_cfg(tag: &str, n_envs: usize) -> PoolConfig {
         n_envs,
         io_mode: IoMode::InMemory,
         seed: 0,
+        ..PoolConfig::default()
     }
 }
 

@@ -1,0 +1,123 @@
+//! Bench: execution-backend transport costs — wire-protocol frame
+//! round-trip latency (encode + decode through a byte buffer) and live
+//! step/episode throughput per backend (in-process threads vs real
+//! `drlfoam worker` processes), surrogate scenario, zero artifacts.
+//!
+//! This is the price tag of closing the sim-to-real gap: how much the
+//! process boundary (pipe hops, frame packing, context switches) costs
+//! relative to the in-process channel path the DES was calibrated on.
+//!
+//! Run: `cargo bench --bench exec_transport`
+
+use std::io::Cursor;
+use std::sync::Arc;
+
+use drlfoam::coordinator::{EnvPool, PoolConfig};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::exec::wire::{read_frame, write_frame, Frame};
+use drlfoam::exec::ExecutorKind;
+use drlfoam::io_interface::IoMode;
+use drlfoam::util::bench;
+
+fn pool_cfg(tag: &str, executor: ExecutorKind, n_envs: usize) -> PoolConfig {
+    let root = std::env::temp_dir().join(format!("drlfoam-exectb-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(root.join("work")).unwrap();
+    PoolConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        n_envs,
+        io_mode: IoMode::InMemory,
+        seed: 1,
+        executor,
+        worker_bin: option_env!("CARGO_BIN_EXE_drlfoam").map(Into::into),
+        ..PoolConfig::default()
+    }
+}
+
+fn frame_roundtrip_bench(results: &mut Vec<bench::BenchResult>) {
+    println!("== wire frames: encode + decode round trip ==");
+    let frames: Vec<(&str, Frame)> = vec![
+        ("Step", Frame::Step { action: 0.25 }),
+        (
+            "Obs[32]",
+            Frame::Obs {
+                obs: vec![0.5; SURROGATE_N_OBS],
+            },
+        ),
+        (
+            "SetParams[~2k]",
+            Frame::SetParams {
+                params: NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(7),
+            },
+        ),
+    ];
+    for (name, frame) in &frames {
+        let mut encoded = Vec::new();
+        write_frame(&mut encoded, frame).unwrap();
+        let r = bench::bench(&format!("frame {name} ({} B)", encoded.len()), 1000, 20000, || {
+            let mut buf = Vec::with_capacity(encoded.len());
+            write_frame(&mut buf, frame).unwrap();
+            let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert!(got.is_some());
+        });
+        results.push(r);
+    }
+}
+
+fn throughput_bench(results: &mut Vec<bench::BenchResult>) {
+    let horizon = 50usize;
+    println!("\n== step throughput per backend (surrogate, per-env inference) ==");
+    println!(
+        "{:<16} {:>5} {:>12} {:>14} {:>12}",
+        "executor", "envs", "wall ms", "steps/s", "vs threads"
+    );
+    for envs in [2usize, 4] {
+        let mut t_inproc = 0.0f64;
+        for kind in [ExecutorKind::InProcess, ExecutorKind::MultiProcess] {
+            if kind == ExecutorKind::MultiProcess
+                && option_env!("CARGO_BIN_EXE_drlfoam").is_none()
+            {
+                println!("{:<16} {:>5} (skipped: no worker binary)", kind.name(), envs);
+                continue;
+            }
+            let cfg = pool_cfg(&format!("{}{envs}", kind.name()), kind, envs);
+            let mut pool = EnvPool::standalone(&cfg).unwrap();
+            let params =
+                Arc::new(NativePolicy::new(pool.n_obs(), pool.hidden()).init_params(3));
+            let mut iter = 0u64;
+            let r = bench::bench(
+                &format!("rollout {} x{envs} (horizon {horizon})", kind.name()),
+                1,
+                5,
+                || {
+                    pool.rollout(&params, horizon, iter).unwrap();
+                    iter += 1;
+                },
+            );
+            if kind == ExecutorKind::InProcess {
+                t_inproc = r.mean_s;
+            }
+            let steps_per_s = (envs * horizon) as f64 / r.mean_s;
+            println!(
+                "{:<16} {:>5} {:>12.2} {:>14.0} {:>11.2}x",
+                kind.name(),
+                envs,
+                r.mean_s * 1e3,
+                steps_per_s,
+                t_inproc / r.mean_s
+            );
+            results.push(r);
+        }
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    frame_roundtrip_bench(&mut results);
+    throughput_bench(&mut results);
+    bench::save("exec_transport", &results);
+}

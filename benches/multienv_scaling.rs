@@ -41,6 +41,7 @@ fn main() {
                 n_envs: envs,
                 io_mode: IoMode::InMemory,
                 seed: 0,
+                ..PoolConfig::default()
             },
             &manifest,
         )

@@ -15,6 +15,10 @@
 #                            policy (--sync full|partial:2|async)
 #   8. planner smoke         drlfoam plan sweep + train --layout auto,
 #                            both artifact-free
+#   9. multi-process smoke   the same artifact-free loop on real
+#                            `drlfoam worker` OS processes, plus a
+#                            chaos run (worker SIGKILL'd mid-training
+#                            -> respawn + episode re-queue)
 #
 # Integration tests that execute AOT artifacts skip themselves gracefully
 # when `make artifacts` has not been run; the scenario-registry and
@@ -97,5 +101,50 @@ cargo run --release --quiet -- train \
 test -f "$AUTO_OUT/plan.csv"
 test -f "$AUTO_OUT/train_log.csv"
 test -f "$AUTO_OUT/policy_final.bin"
+
+# 9a. multi-process executor smoke: the same artifact-free loop, but every
+#     environment is a real `drlfoam worker` OS process behind the wire
+#     protocol (2 envs, tiny budget).
+echo "== multi-process executor smoke (real worker processes)"
+EXEC_OUT=out/ci-exec-smoke
+rm -rf "$EXEC_OUT"
+cargo run --release --quiet -- train \
+    --scenario analytic --backend native --update-backend native \
+    --executor multi-process \
+    --artifacts "$EXEC_OUT/no-artifacts" \
+    --out "$EXEC_OUT" --work-dir "$EXEC_OUT/work" \
+    --envs 2 --horizon 5 --iterations 2 --quiet
+test -f "$EXEC_OUT/train_log.csv"
+test -f "$EXEC_OUT/workers.csv"
+test -f "$EXEC_OUT/policy_final.bin"
+
+# 9b. fault-handling smoke: --chaos kills env 0's worker on its second
+#     episode; training must still complete (respawn + re-queue) and the
+#     restart must be visible in workers.csv.
+echo "== multi-process fault-recovery smoke (--chaos 0:1)"
+CHAOS_OUT=out/ci-exec-chaos
+rm -rf "$CHAOS_OUT"
+cargo run --release --quiet -- train \
+    --scenario analytic --backend native --update-backend native \
+    --executor multi-process --chaos 0:1 \
+    --artifacts "$CHAOS_OUT/no-artifacts" \
+    --out "$CHAOS_OUT" --work-dir "$CHAOS_OUT/work" \
+    --envs 2 --horizon 5 --iterations 3 --quiet
+test -f "$CHAOS_OUT/train_log.csv"
+grep -q "^0,3,1," "$CHAOS_OUT/workers.csv"   # env 0: 3 episodes, 1 restart
+
+# 9c. layout auto through the process executor: calibration measured on
+#     real worker processes, the chosen layout trains live.
+echo "== train --layout auto --executor multi-process smoke"
+EXAUTO_OUT=out/ci-exec-auto
+rm -rf "$EXAUTO_OUT"
+cargo run --release --quiet -- train \
+    --scenario analytic --backend native --update-backend native \
+    --executor multi-process --layout auto --cores 4 \
+    --artifacts "$EXAUTO_OUT/no-artifacts" \
+    --out "$EXAUTO_OUT" --work-dir "$EXAUTO_OUT/work" \
+    --horizon 5 --iterations 2 --quiet
+test -f "$EXAUTO_OUT/plan.csv"
+test -f "$EXAUTO_OUT/train_log.csv"
 
 echo "CI OK"

@@ -441,13 +441,6 @@ mod tests {
 // Asynchronous-training variant (the paper's future-work ablation)
 // ---------------------------------------------------------------------------
 
-/// Back-compat entry point for the asynchronous mode: forces
-/// [`SyncPolicy::Async`] regardless of `cfg.sync`.
-#[deprecated(note = "use simulate_training with SimConfig.sync = SyncPolicy::Async")]
-pub fn simulate_training_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
-    simulate_async(calib, cfg)
-}
-
 /// [`SyncPolicy::Async`]: environments run episodes back-to-back, and a
 /// dedicated master core applies one PPO update per arriving episode
 /// (FIFO); environments do NOT wait for updates (bounded-stale
@@ -819,7 +812,6 @@ mod async_tests {
     }
 
     #[test]
-    #[allow(deprecated)]
     fn partial_deterministic_and_dispatched_by_sync_field() {
         let c = Calibration::paper_scale();
         let pc = with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Partial { k: 3 });
@@ -829,10 +821,10 @@ mod async_tests {
         // a different k is a genuinely different schedule
         let d = simulate_training(&c, &with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Partial { k: 6 }));
         assert_ne!(a, d.total_s);
-        // and the async policy routes through the same entry point
-        let via_field = simulate_training(&c, &with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Async));
-        let via_fn = simulate_training_async(&c, &cfg(8, IoMode::Baseline));
-        assert_eq!(via_field.total_s, via_fn.total_s);
+        // the async policy is deterministic through the same entry point
+        let e1 = simulate_training(&c, &with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Async));
+        let e2 = simulate_training(&c, &with_sync(cfg(8, IoMode::Baseline), SyncPolicy::Async));
+        assert_eq!(e1.total_s, e2.total_s);
     }
 
     #[test]

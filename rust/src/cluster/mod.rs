@@ -27,7 +27,3 @@ pub use calib::Calibration;
 pub use des::{simulate_training, SimBreakdown, SimConfig, SimResult};
 pub use mpi::MpiScaling;
 pub use planner::{search, Objective, Plan, PlanSet, PlannerConfig};
-
-// deprecated alias, re-exported for back-compat (`--async` era callers)
-#[allow(deprecated)]
-pub use des::simulate_training_async;

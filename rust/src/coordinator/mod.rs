@@ -1,10 +1,13 @@
 //! L3 coordination: the paper's multi-environment parallel DRL training
 //! framework (Fig 4), in Rust.
 //!
-//! * [`pool`]  — N scenario workers on OS threads, each owning a full
-//!   environment instance (for CFD scenarios: a private PJRT runtime +
-//!   exchange interface); supports per-env serving and the lockstep
-//!   protocol behind the batched mode.
+//! * [`pool`]  — N scenario workers, each owning a full environment
+//!   instance (for CFD scenarios: a private PJRT runtime + exchange
+//!   interface); supports per-env serving and the lockstep protocol
+//!   behind the batched mode. Workers run on either execution backend
+//!   of [`crate::exec`] — OS threads (default) or `drlfoam worker`
+//!   processes (`--executor multi-process`) — behind one `Executor`
+//!   handle.
 //! * [`policy_server`] — central batched inference: one forward pass over
 //!   the whole `[N_envs, n_obs]` observation batch per actuation period
 //!   (the paper's hybrid-parallelization axis).
@@ -31,6 +34,6 @@ pub mod scheduler;
 pub mod train;
 
 pub use policy_server::PolicyServer;
-pub use pool::{EnvPool, EpisodeOut, EpisodeStats, LocalPolicy, PoolConfig};
+pub use pool::{EnvPool, EnvTelemetry, EpisodeOut, EpisodeStats, LocalPolicy, PoolConfig};
 pub use scheduler::{train, SyncPolicy};
 pub use train::{InferenceMode, IterationLog, TrainConfig, TrainSummary};

@@ -1,27 +1,28 @@
 //! Multi-environment worker pool.
 //!
 //! Mirrors the paper's resource model: each environment is an independent
-//! instance of the configured *scenario* (an OS thread owning its own
-//! [`Environment`] — for cylinder scenarios that means a private PJRT
-//! client, compiled executables, flow state and exchange interface).
-//! On this 1-core testbed threads interleave rather than truly parallelise
-//! — the *structure* is the paper's, and the cluster DES (rust/src/cluster)
-//! projects the measured per-component costs onto 60 cores.
+//! instance of the configured *scenario* owning its own [`Environment`] —
+//! for cylinder scenarios that means a private PJRT client, compiled
+//! executables, flow state and exchange interface. *Where* those workers
+//! live is the [`crate::exec`] axis: OS threads inside this process
+//! (`ExecutorKind::InProcess`, the default) or real `drlfoam worker` OS
+//! processes in per-env rank groups (`ExecutorKind::MultiProcess`, the
+//! paper's per-rank placement). The pool drives either backend through
+//! one [`Executor`] handle, so every rollout mode and sync policy works
+//! unchanged over both.
 //!
 //! Two rollout modes (the paper's hybrid-parallelization axis):
 //! * [`EnvPool::rollout`] — *per-env inference*: parameters are broadcast
 //!   at episode boundaries and each worker serves its own policy
-//!   ([`LocalPolicy`]); whole trajectories flow back over channels.
+//!   ([`LocalPolicy`]); whole trajectories flow back.
 //! * [`EnvPool::rollout_batched`] — *central batched inference*: workers
 //!   only advance the CFD; at every actuation period the coordinator
 //!   gathers all observations at a sync barrier and a
 //!   [`PolicyServer`](super::policy_server::PolicyServer) runs one batched
 //!   forward pass for the whole environment set.
 
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::path::Path;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
@@ -29,7 +30,10 @@ use crate::coordinator::policy_server::PolicyServer;
 use crate::drl::policy::{NativePolicy, PolicyBackendKind, PolicyOutput, PolicySession};
 use crate::drl::{Policy, Trajectory, Transition};
 use crate::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
-use crate::env::{Environment, StepResult};
+use crate::env::Environment;
+use crate::exec::inprocess::InProcessExecutor;
+use crate::exec::process::ProcessExecutor;
+use crate::exec::{Executor, ExecutorKind, Job, LockstepReply};
 use crate::io_interface::{IoMode, IoStats};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
@@ -49,10 +53,43 @@ pub struct PoolConfig {
     pub n_envs: usize,
     pub io_mode: IoMode,
     pub seed: u64,
+    /// Threads in this process, or `drlfoam worker` OS processes.
+    pub executor: ExecutorKind,
+    /// Processes per environment under the multi-process executor (the
+    /// paper's `N_ranks`): rank 0 runs the episodes, ranks 1.. hold
+    /// their core as placement members. Must be 1 in-process.
+    pub ranks_per_env: usize,
+    /// Binary to self-exec for workers; `None` = `current_exe()` (tests
+    /// point this at the real `drlfoam` binary, since *their* own
+    /// executable has no `worker` subcommand).
+    pub worker_bin: Option<std::path::PathBuf>,
+    /// Chaos hook `"<env>:<episode>"`: that worker aborts once upon
+    /// receiving that episode's dispatch (multi-process only; drives the
+    /// fault-recovery tests and `train --chaos`).
+    pub fault_injection: Option<String>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            artifact_dir: "artifacts".into(),
+            work_dir: "out/work".into(),
+            variant: "small".into(),
+            scenario: "cylinder".into(),
+            backend: PolicyBackendKind::Xla,
+            n_envs: 1,
+            io_mode: IoMode::InMemory,
+            seed: 0,
+            executor: ExecutorKind::InProcess,
+            ranks_per_env: 1,
+            worker_bin: None,
+            fault_injection: None,
+        }
+    }
 }
 
 /// Per-episode summary returned alongside the trajectory.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct EpisodeStats {
     pub reward_sum: f64,
     pub cd_mean: f64,
@@ -70,32 +107,27 @@ pub struct EpisodeOut {
     pub env_id: usize,
     pub traj: Trajectory,
     pub stats: EpisodeStats,
-    /// When the episode actually finished (worker-side stamp). The
+    /// When the episode actually finished (worker-side stamp; for
+    /// process workers, the coordinator-side frame-arrival stamp). The
     /// scheduler measures barrier idle against this, NOT against when
-    /// the coordinator got around to draining the channel — episodes
+    /// the coordinator got around to draining the queue — episodes
     /// completing while an update runs must charge that wait.
     pub completed_at: std::time::Instant,
 }
 
-enum Job {
-    /// Per-env mode: roll a whole episode locally.
-    Rollout {
-        params: Arc<Vec<f32>>,
-        horizon: usize,
-        /// decorrelates exploration across envs and iterations
-        episode_seed: u64,
-    },
-    /// Batched mode: reset the environment, reply with the initial obs.
-    Reset,
-    /// Batched mode: advance one actuation period with this action.
-    Step { action: f64 },
-    Shutdown,
-}
-
-/// Worker -> coordinator message for the lockstep (batched) protocol.
-enum LockstepReply {
-    Obs { env_id: usize, obs: Vec<f32> },
-    Step { env_id: usize, result: StepResult },
+/// Per-environment wall/CPU roll-up across every episode the pool
+/// returned: feeds `out/workers.csv` and — under `--layout auto
+/// --executor multi-process` —
+/// [`Calibration::from_measured`](crate::cluster::Calibration::from_measured),
+/// so auto-planning calibrates from *real process* timings instead of
+/// the in-process surrogate.
+#[derive(Clone, Debug, Default)]
+pub struct EnvTelemetry {
+    pub episodes: usize,
+    pub wall_s: f64,
+    pub cfd_s: f64,
+    pub io_s: f64,
+    pub policy_s: f64,
 }
 
 /// Deterministic per-(iteration, env) exploration seed; shared by the
@@ -107,12 +139,11 @@ fn episode_seed(episode_index: u64, env_id: usize) -> u64 {
         .wrapping_add(env_id as u64)
 }
 
-/// N scenario workers plus the channels to drive them (see module docs).
+/// N scenario workers plus the executor handle that drives them (see
+/// module docs).
 pub struct EnvPool {
-    job_txs: Vec<Sender<Job>>,
-    results: Receiver<Result<EpisodeOut>>,
-    lockstep: Receiver<Result<LockstepReply>>,
-    joins: Vec<Option<JoinHandle<()>>>,
+    exec: Box<dyn Executor>,
+    kind: ExecutorKind,
     seed: u64,
     /// (n_obs, hidden) the workers' environments/policies are sized to
     dims: (usize, usize),
@@ -120,9 +151,7 @@ pub struct EnvPool {
     /// receive of that env's episode (partial-barrier scheduling needs to
     /// know which envs can be re-dispatched)
     busy: Vec<bool>,
-    /// finished episodes set aside while probing the results channel for
-    /// a dead-worker root cause; drained before the channel on receive
-    pending: VecDeque<EpisodeOut>,
+    telemetry: Vec<EnvTelemetry>,
 }
 
 impl EnvPool {
@@ -145,43 +174,37 @@ impl EnvPool {
         // reject unknown scenario names here, in the caller's thread, so
         // the error is immediate instead of a dead worker
         scenario::spec(&cfg.scenario)?;
+        anyhow::ensure!(cfg.n_envs >= 1, "need at least one environment");
         let dims = match &manifest {
             Some(m) => (m.drl.n_obs, m.drl.hidden),
             None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
         };
-        let mut job_txs = Vec::with_capacity(cfg.n_envs);
-        let mut joins = Vec::with_capacity(cfg.n_envs);
-        // one shared result channel: both the synchronous barrier and the
-        // asynchronous trainer consume from it
-        let (tx_out, rx_out) = channel::<Result<EpisodeOut>>();
-        let (tx_step, rx_step) = channel::<Result<LockstepReply>>();
-        for env_id in 0..cfg.n_envs {
-            let (tx_job, rx_job) = channel::<Job>();
-            let m = manifest.clone();
-            let cfg = cfg.clone();
-            let tx = tx_out.clone();
-            let txs = tx_step.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("env-{env_id}"))
-                .spawn(move || worker_main(env_id, cfg, m, rx_job, tx, txs))
-                .context("spawning env worker")?;
-            job_txs.push(tx_job);
-            joins.push(Some(join));
-        }
+        let exec: Box<dyn Executor> = match cfg.executor {
+            ExecutorKind::InProcess => {
+                anyhow::ensure!(
+                    cfg.ranks_per_env <= 1,
+                    "in-process workers are single-rank (got ranks_per_env = {}); \
+                     use --executor multi-process to spawn rank groups",
+                    cfg.ranks_per_env
+                );
+                Box::new(InProcessExecutor::spawn(cfg, manifest)?)
+            }
+            // process workers load their own manifest from artifact_dir;
+            // the coordinator's copy only sized `dims` above
+            ExecutorKind::MultiProcess => Box::new(ProcessExecutor::spawn(cfg)?),
+        };
         Ok(EnvPool {
+            exec,
+            kind: cfg.executor,
             busy: vec![false; cfg.n_envs],
-            pending: VecDeque::new(),
-            job_txs,
-            results: rx_out,
-            lockstep: rx_step,
-            joins,
+            telemetry: vec![EnvTelemetry::default(); cfg.n_envs],
             seed: cfg.seed,
             dims,
         })
     }
 
     pub fn n_envs(&self) -> usize {
-        self.job_txs.len()
+        self.busy.len()
     }
 
     /// Observation width of the workers' environments.
@@ -192,6 +215,47 @@ impl EnvPool {
     /// Hidden width the standalone native policy is sized to.
     pub fn hidden(&self) -> usize {
         self.dims.1
+    }
+
+    /// Which execution backend this pool runs on.
+    pub fn executor(&self) -> ExecutorKind {
+        self.kind
+    }
+
+    /// Workers respawned after faults (0 in-process).
+    pub fn restarts(&self) -> usize {
+        self.exec.restarts()
+    }
+
+    /// Per-env respawn counts (`workers.csv`).
+    pub fn restarts_by_env(&self) -> Vec<usize> {
+        self.exec.restarts_by_env()
+    }
+
+    /// OS pids of every live worker process (empty in-process).
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.exec.worker_pids()
+    }
+
+    /// Fault injection: SIGKILL `env_id`'s primary worker process. The
+    /// pool recovers on the next receive — respawn + episode re-queue —
+    /// which is exactly what `rust/tests/exec_backend.rs` asserts.
+    pub fn kill_worker(&mut self, env_id: usize) -> Result<()> {
+        self.exec.kill_worker(env_id)
+    }
+
+    /// Per-env cost roll-up over every episode returned so far.
+    pub fn telemetry(&self) -> &[EnvTelemetry] {
+        &self.telemetry
+    }
+
+    fn note(&mut self, out: &EpisodeOut) {
+        let t = &mut self.telemetry[out.env_id];
+        t.episodes += 1;
+        t.wall_s += out.stats.wall_s;
+        t.cfd_s += out.stats.cfd_s;
+        t.io_s += out.stats.io_s;
+        t.policy_s += out.stats.policy_s;
     }
 
     /// Dispatch one episode to a specific environment (partial-barrier
@@ -209,13 +273,17 @@ impl EnvPool {
             !self.busy[env_id],
             "env {env_id} already has an episode in flight"
         );
-        self.job_txs[env_id]
-            .send(Job::Rollout {
-                params: Arc::clone(params),
-                horizon,
-                episode_seed: episode_seed(episode_index, env_id),
-            })
-            .context("worker channel closed")?;
+        self.exec
+            .send(
+                env_id,
+                Job::Rollout {
+                    params: Arc::clone(params),
+                    horizon,
+                    episode: episode_index,
+                    episode_seed: episode_seed(episode_index, env_id),
+                },
+            )
+            .context("dispatching episode")?;
         self.busy[env_id] = true;
         Ok(())
     }
@@ -233,11 +301,9 @@ impl EnvPool {
     /// Receive the next finished episode from ANY environment, blocking
     /// until one arrives (partial-barrier and async scheduling).
     pub fn recv_one(&mut self) -> Result<EpisodeOut> {
-        if let Some(out) = self.pending.pop_front() {
-            return Ok(out);
-        }
-        let out = self.results.recv().context("all workers died")??;
+        let out = self.exec.recv_episode()?;
         self.busy[out.env_id] = false;
+        self.note(&out);
         Ok(out)
     }
 
@@ -246,17 +312,13 @@ impl EnvPool {
     /// running — lets a caller drain whatever has already arrived
     /// before deciding whether to block or do other work.
     pub fn try_recv_one(&mut self) -> Result<Option<EpisodeOut>> {
-        if let Some(out) = self.pending.pop_front() {
-            return Ok(Some(out));
-        }
-        match self.results.try_recv() {
-            Ok(Ok(out)) => {
+        match self.exec.try_recv_episode()? {
+            Some(out) => {
                 self.busy[out.env_id] = false;
+                self.note(&out);
                 Ok(Some(out))
             }
-            Ok(Err(e)) => Err(e.context("env worker failed")),
-            Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => Err(anyhow::anyhow!("all workers died")),
+            None => Ok(None),
         }
     }
 
@@ -269,40 +331,15 @@ impl EnvPool {
         horizon: usize,
         iteration: u64,
     ) -> Result<Vec<EpisodeOut>> {
-        for env_id in 0..self.job_txs.len() {
+        for env_id in 0..self.n_envs() {
             self.dispatch(env_id, params, horizon, iteration)?;
         }
-        let mut outs = Vec::with_capacity(self.job_txs.len());
-        for _ in 0..self.job_txs.len() {
+        let mut outs = Vec::with_capacity(self.n_envs());
+        for _ in 0..self.n_envs() {
             outs.push(self.recv_one()?);
         }
         outs.sort_by_key(|o| o.env_id);
         Ok(outs)
-    }
-
-    /// Best-effort root cause when a worker goes away mid-lockstep: a
-    /// worker that fails setup reports on the results channel and exits,
-    /// which the lockstep path would otherwise only see as a dead channel.
-    /// Finished episodes encountered while probing are re-queued (onto
-    /// `pending`, drained by the next receive), never dropped.
-    fn closed_reason(&mut self) -> anyhow::Error {
-        loop {
-            match self.results.try_recv() {
-                Ok(Err(e)) => return e.context("env worker failed"),
-                Ok(Ok(out)) => {
-                    self.busy[out.env_id] = false;
-                    self.pending.push_back(out);
-                }
-                Err(_) => return anyhow::anyhow!("worker channel closed"),
-            }
-        }
-    }
-
-    fn recv_lockstep(&mut self) -> Result<LockstepReply> {
-        match self.lockstep.recv() {
-            Ok(r) => r,
-            Err(_) => Err(self.closed_reason()),
-        }
     }
 
     /// Roll out one episode on every environment with CENTRAL batched
@@ -324,7 +361,7 @@ impl EnvPool {
         horizon: usize,
         iteration: u64,
     ) -> Result<Vec<EpisodeOut>> {
-        let jobs: Vec<(usize, u64)> = (0..self.job_txs.len()).map(|e| (e, iteration)).collect();
+        let jobs: Vec<(usize, u64)> = (0..self.n_envs()).map(|e| (e, iteration)).collect();
         self.rollout_batched_subset(rt, server, params, horizon, &jobs)
     }
 
@@ -351,9 +388,9 @@ impl EnvPool {
             server.n_obs(),
             self.dims.0
         );
-        let mut slot_of: Vec<Option<usize>> = vec![None; self.job_txs.len()];
+        let mut slot_of: Vec<Option<usize>> = vec![None; self.n_envs()];
         for (slot, &(e, _)) in jobs.iter().enumerate() {
-            anyhow::ensure!(e < self.job_txs.len(), "env id {e} out of range");
+            anyhow::ensure!(e < self.n_envs(), "env id {e} out of range");
             anyhow::ensure!(
                 slot_of[e].is_none(),
                 "env {e} dispatched twice in one lockstep set"
@@ -369,9 +406,7 @@ impl EnvPool {
             .collect();
 
         for &(e, _) in jobs {
-            if self.job_txs[e].send(Job::Reset).is_err() {
-                return Err(self.closed_reason());
-            }
+            self.exec.send(e, Job::Reset)?;
         }
         let mut obs_all: Vec<Vec<f32>> = vec![Vec::new(); m];
         // per-env wall clock, reset-ack to last step-ack: the envs of one
@@ -380,7 +415,7 @@ impl EnvPool {
         let mut t_reset_ack = vec![0.0f64; m];
         let mut t_last_ack = vec![0.0f64; m];
         for _ in 0..m {
-            match self.recv_lockstep()? {
+            match self.exec.recv_lockstep()? {
                 LockstepReply::Obs { env_id, obs } => {
                     let slot = slot_of[env_id].context("reset reply from an undispatched env")?;
                     obs_all[slot] = obs;
@@ -409,12 +444,10 @@ impl EnvPool {
             for slot in 0..m {
                 let (a, logp) = policy.sample(&pouts[slot], &mut rngs[slot]);
                 actions.push((a, logp));
-                if self.job_txs[jobs[slot].0].send(Job::Step { action: a }).is_err() {
-                    return Err(self.closed_reason());
-                }
+                self.exec.send(jobs[slot].0, Job::Step { action: a })?;
             }
             for _ in 0..m {
-                match self.recv_lockstep()? {
+                match self.exec.recv_lockstep()? {
                     LockstepReply::Step { env_id, result: sr } => {
                         let slot = slot_of[env_id].context("step reply from an undispatched env")?;
                         let (a, logp) = actions[slot];
@@ -448,7 +481,7 @@ impl EnvPool {
         // the lockstep set completes together at the final barrier
         let completed_at = std::time::Instant::now();
 
-        Ok(trajs
+        let outs: Vec<EpisodeOut> = trajs
             .into_iter()
             .zip(stats)
             .enumerate()
@@ -465,20 +498,11 @@ impl EnvPool {
                     completed_at,
                 }
             })
-            .collect())
-    }
-}
-
-impl Drop for EnvPool {
-    fn drop(&mut self) {
-        for tx in &self.job_txs {
-            let _ = tx.send(Job::Shutdown);
+            .collect();
+        for out in &outs {
+            self.note(out);
         }
-        for j in &mut self.joins {
-            if let Some(j) = j.take() {
-                let _ = j.join();
-            }
-        }
+        Ok(outs)
     }
 }
 
@@ -554,99 +578,52 @@ impl LocalPolicy {
     }
 }
 
-fn worker_main(
+/// Build one worker's environment + serving engine; shared by the
+/// in-process thread workers and the `drlfoam worker` process (so the
+/// two execution backends cannot drift).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn build_worker(
     env_id: usize,
-    cfg: PoolConfig,
-    manifest: Option<Arc<Manifest>>,
-    rx: Receiver<Job>,
-    tx: Sender<Result<EpisodeOut>>,
-    tx_step: Sender<Result<LockstepReply>>,
-) {
-    // Environments and PJRT clients are built *inside* the thread: neither
-    // is Send. Only the scenario name + config ingredients crossed over.
-    let setup = (|| -> Result<(Box<dyn Environment>, LocalPolicy, Policy)> {
-        let ctx = ScenarioContext {
-            artifact_dir: &cfg.artifact_dir,
-            work_dir: &cfg.work_dir,
-            env_id,
-            io_mode: cfg.io_mode,
-            manifest: manifest.as_deref(),
-            variant: &cfg.variant,
-            seed: cfg.seed,
-        };
-        let env = scenario::build(&cfg.scenario, &ctx)?;
-        let lp = match cfg.backend {
-            PolicyBackendKind::Xla => {
-                let m = manifest
-                    .as_ref()
-                    .context("XLA policy backend requires AOT artifacts")?;
-                LocalPolicy::xla(&m.drl)
-            }
-            PolicyBackendKind::Native => {
-                let (n_obs, hidden) = match &manifest {
-                    Some(m) => (m.drl.n_obs, m.drl.hidden),
-                    None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
-                };
-                LocalPolicy::native(n_obs, hidden)
-            }
-        };
-        let policy = Policy::new(env.n_obs());
-        Ok((env, lp, policy))
-    })();
-
-    let (mut env, mut lp, policy) = match setup {
-        Ok(x) => x,
-        Err(e) => {
-            // the lockstep coordinator waits on the step channel, the
-            // episode coordinator on the results channel: report the
-            // setup failure on BOTH so neither rollout mode can hang
-            // waiting for a worker that will never reply
-            let _ = tx_step.send(Err(anyhow::anyhow!("env worker setup failed: {e:#}")));
-            let _ = tx.send(Err(e));
-            return;
+    artifact_dir: &Path,
+    work_dir: &Path,
+    variant: &str,
+    scenario_name: &str,
+    io_mode: IoMode,
+    seed: u64,
+    backend: PolicyBackendKind,
+    manifest: Option<&Manifest>,
+) -> Result<(Box<dyn Environment>, LocalPolicy, Policy)> {
+    let ctx = ScenarioContext {
+        artifact_dir,
+        work_dir,
+        env_id,
+        io_mode,
+        manifest,
+        variant,
+        seed,
+    };
+    let env = scenario::build(scenario_name, &ctx)?;
+    let lp = match backend {
+        PolicyBackendKind::Xla => {
+            let m = manifest.context("XLA policy backend requires AOT artifacts")?;
+            LocalPolicy::xla(&m.drl)
+        }
+        PolicyBackendKind::Native => {
+            let (n_obs, hidden) = match manifest {
+                Some(m) => (m.drl.n_obs, m.drl.hidden),
+                None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
+            };
+            LocalPolicy::native(n_obs, hidden)
         }
     };
-
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Shutdown => break,
-            Job::Rollout {
-                params,
-                horizon,
-                episode_seed,
-            } => {
-                let out = run_episode(
-                    env_id,
-                    env.as_mut(),
-                    &mut lp,
-                    &policy,
-                    &params,
-                    horizon,
-                    cfg.seed ^ episode_seed,
-                );
-                if tx.send(out).is_err() {
-                    break;
-                }
-            }
-            Job::Reset => {
-                let r = env.reset().map(|obs| LockstepReply::Obs { env_id, obs });
-                if tx_step.send(r).is_err() {
-                    break;
-                }
-            }
-            Job::Step { action } => {
-                let r = env
-                    .step(action)
-                    .map(|result| LockstepReply::Step { env_id, result });
-                if tx_step.send(r).is_err() {
-                    break;
-                }
-            }
-        }
-    }
+    let policy = Policy::new(env.n_obs());
+    Ok((env, lp, policy))
 }
 
-fn run_episode(
+/// One full per-env episode: reset, `horizon` actuation periods served by
+/// `lp`, bootstrap value. Runs identically on a worker thread and inside
+/// a `drlfoam worker` process.
+pub(crate) fn run_episode(
     env_id: usize,
     env: &mut dyn Environment,
     lp: &mut LocalPolicy,

@@ -369,6 +369,30 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         .context("writing final policy")?;
     write_f32_bin(cfg.out_dir.join("trainer_ckpt.bin"), &trainer.checkpoint())?;
 
+    // per-worker telemetry + fault accounting (out/workers.csv): wall and
+    // component seconds per environment, plus how often its worker had to
+    // be respawned. Under the multi-process executor these are *real
+    // process* timings — the measured source `--layout auto` calibrates
+    // from.
+    let restarts_by_env = pool.restarts_by_env();
+    let worker_restarts: usize = restarts_by_env.iter().sum();
+    let mut wcsv = std::fs::File::create(cfg.out_dir.join("workers.csv"))?;
+    writeln!(wcsv, "env_id,episodes,restarts,wall_s,cfd_s,io_s,policy_s")?;
+    for (e, t) in pool.telemetry().iter().enumerate() {
+        writeln!(
+            wcsv,
+            "{},{},{},{:.4},{:.4},{:.4},{:.4}",
+            e, t.episodes, restarts_by_env[e], t.wall_s, t.cfd_s, t.io_s, t.policy_s
+        )?;
+    }
+    if worker_restarts > 0 && !cfg.quiet {
+        println!(
+            "fault handling: {worker_restarts} worker restart(s); each lost episode was \
+             re-queued and replayed (per-env counts in {}/workers.csv)",
+            cfg.out_dir.display()
+        );
+    }
+
     let mean_staleness = stale_sum as f64 / consumed.max(1) as f64;
     if !cfg.quiet && cfg.sync != SyncPolicy::Full {
         println!(
@@ -388,6 +412,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         mean_staleness,
         staleness_hist: stale_hist,
         barrier_idle_s,
+        worker_restarts,
     })
 }
 

@@ -28,6 +28,7 @@ use crate::drl::native_update::{NativeUpdater, PpoHyperParams, DEFAULT_GAE_LAMBD
 use crate::drl::policy::{NativePolicy, PolicyBackendKind};
 use crate::drl::{PpoTrainer, TrainerBackend, UpdateBackendKind};
 use crate::env::scenario::{self, ScenarioKind, SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use crate::exec::ExecutorKind;
 use crate::io_interface::IoMode;
 use crate::runtime::{Manifest, Runtime};
 
@@ -80,6 +81,19 @@ pub struct TrainConfig {
     pub update_backend: UpdateBackendKind,
     /// Rollout scheduler barrier policy (full / `partial:<k>` / async).
     pub sync: SyncPolicy,
+    /// Execution backend for the env workers: OS threads in this process
+    /// (default) or `drlfoam worker` OS processes (`--executor`).
+    pub executor: ExecutorKind,
+    /// Worker processes per environment (the paper's `N_ranks`); only
+    /// meaningful under [`ExecutorKind::MultiProcess`], must be 1
+    /// in-process.
+    pub ranks_per_env: usize,
+    /// Binary to self-exec for multi-process workers; `None` uses
+    /// `current_exe()` (integration tests override this).
+    pub worker_bin: Option<std::path::PathBuf>,
+    /// Chaos hook `"<env>:<episode>"` (`--chaos`): that worker aborts
+    /// once on receiving that episode, exercising respawn + re-queue.
+    pub fault_injection: Option<String>,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
     /// training iterations == episodes per environment (the episode
@@ -95,15 +109,21 @@ pub struct TrainConfig {
 impl TrainConfig {
     /// Apply a planner-selected layout (`drlfoam train --layout auto`)
     /// to this run: the chosen environment count, scheduler barrier and
-    /// exchange mode drive the real scheduler loop. Ranks-per-env is
-    /// intentionally NOT applied — the in-process loop runs single-rank
-    /// environments, so auto-planning constrains its search to
-    /// `ranks = 1` (the DES keeps the rank axis for cluster
-    /// projections).
+    /// exchange mode drive the real scheduler loop. The rank axis is
+    /// executor-dependent: the multi-process executor spawns real
+    /// `plan.n_ranks`-wide rank groups, while in-process workers are
+    /// single-rank threads, so there `ranks_per_env` stays 1 (and the
+    /// auto-layout search constrains itself accordingly). The executor
+    /// itself is never part of the sweep — an explicitly requested
+    /// `--executor` is pinned, not overridden.
     pub fn apply_plan(&mut self, plan: &crate::cluster::planner::Plan) {
         self.n_envs = plan.n_envs;
         self.sync = plan.sync;
         self.io_mode = plan.io_mode;
+        self.ranks_per_env = match self.executor {
+            ExecutorKind::MultiProcess => plan.n_ranks,
+            ExecutorKind::InProcess => 1,
+        };
     }
 }
 
@@ -121,6 +141,10 @@ impl Default for TrainConfig {
             backend: PolicyBackendKind::Xla,
             update_backend: UpdateBackendKind::Xla,
             sync: SyncPolicy::Full,
+            executor: ExecutorKind::InProcess,
+            ranks_per_env: 1,
+            worker_bin: None,
+            fault_injection: None,
             horizon: 100,
             iterations: 100,
             epochs: 4,
@@ -234,6 +258,10 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
         n_envs: cfg.n_envs,
         io_mode: cfg.io_mode,
         seed: cfg.seed,
+        executor: cfg.executor,
+        ranks_per_env: cfg.ranks_per_env,
+        worker_bin: cfg.worker_bin.clone(),
+        fault_injection: cfg.fault_injection.clone(),
     };
     let pool = match &manifest {
         Some(m) => EnvPool::new(&pool_cfg, m)?,
@@ -334,6 +362,11 @@ pub struct TrainSummary {
     /// rounds) to compare with the DES's per-round
     /// `SimBreakdown::barrier_idle_s` mean.
     pub barrier_idle_s: f64,
+    /// Worker processes respawned after faults during the run (always 0
+    /// under the in-process executor). Each restart re-queued the lost
+    /// episode on the fresh worker; per-env counts are in
+    /// `out/workers.csv`.
+    pub worker_restarts: usize,
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@ use crate::drl::gae::gae;
 use crate::util::rng::Rng;
 
 /// One (s, a, r) tuple plus the serving-time policy byproducts.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Transition {
     pub obs: Vec<f32>,
     pub action: f64,
@@ -14,7 +14,7 @@ pub struct Transition {
 }
 
 /// One environment episode.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Trajectory {
     pub transitions: Vec<Transition>,
     /// V(s_T) bootstrap for the truncated horizon.

@@ -27,14 +27,14 @@ use crate::io_interface::{CfdOutput, ExchangeInterface, FlowSnapshot};
 use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, Executable, VariantManifest};
 
 /// Per-step wall-clock breakdown (feeds Fig 10 and the DES calibration).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StepTimings {
     pub cfd_s: f64,
     pub io_s: f64,
 }
 
 /// What the agent sees after one actuation period.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StepResult {
     pub obs: Vec<f32>,
     pub reward: f64,

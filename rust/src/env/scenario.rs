@@ -106,11 +106,21 @@ pub const SCENARIOS: &[ScenarioSpec] = &[
 ];
 
 /// Look up a scenario by name; unknown names list what is available.
+/// `analytic` is an accepted alias for `surrogate` (the registry entry
+/// describes itself as the *analytic* surrogate, and docs/CLI examples
+/// use both spellings).
 pub fn spec(name: &str) -> Result<&'static ScenarioSpec> {
-    SCENARIOS.iter().find(|s| s.name == name).with_context(|| {
-        let known: Vec<&str> = SCENARIOS.iter().map(|s| s.name).collect();
-        format!("unknown scenario {name:?} (available: {})", known.join(", "))
-    })
+    let canonical = match name {
+        "analytic" => "surrogate",
+        n => n,
+    };
+    SCENARIOS
+        .iter()
+        .find(|s| s.name == canonical)
+        .with_context(|| {
+            let known: Vec<&str> = SCENARIOS.iter().map(|s| s.name).collect();
+            format!("unknown scenario {name:?} (available: {})", known.join(", "))
+        })
 }
 
 /// Everything a worker thread needs to build its environment instance.
@@ -483,6 +493,11 @@ mod tests {
         for s in SCENARIOS {
             assert!(spec(s.name).is_ok());
         }
+    }
+
+    #[test]
+    fn analytic_is_an_alias_for_surrogate() {
+        assert_eq!(spec("analytic").unwrap().name, "surrogate");
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! In-process execution backend: N scenario workers on OS threads.
+//!
+//! This is the seed implementation that used to live inside
+//! [`EnvPool`](crate::coordinator::pool::EnvPool), now behind the
+//! [`Executor`] trait so the pool can also run the multi-process backend
+//! ([`super::process`]). It stays the default and the golden reference:
+//! `rust/tests/exec_backend.rs` asserts the process backend reproduces
+//! its learning curves bitwise.
+//!
+//! Environments and PJRT clients are built *inside* each thread (neither
+//! is `Send`); only the scenario name + config ingredients cross over.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::pool::{build_worker, run_episode, EpisodeOut, PoolConfig};
+use crate::exec::{Executor, Job, LockstepReply};
+use crate::runtime::Manifest;
+
+/// Thread-backed worker set (see module docs).
+pub(crate) struct InProcessExecutor {
+    job_txs: Vec<Sender<Job>>,
+    results: Receiver<Result<EpisodeOut>>,
+    lockstep: Receiver<Result<LockstepReply>>,
+    joins: Vec<Option<JoinHandle<()>>>,
+    /// finished episodes set aside while probing the results channel for
+    /// a dead-worker root cause; drained before the channel on receive
+    pending: VecDeque<EpisodeOut>,
+}
+
+impl InProcessExecutor {
+    pub(crate) fn spawn(
+        cfg: &PoolConfig,
+        manifest: Option<Arc<Manifest>>,
+    ) -> Result<InProcessExecutor> {
+        let mut job_txs = Vec::with_capacity(cfg.n_envs);
+        let mut joins = Vec::with_capacity(cfg.n_envs);
+        // one shared result channel: both the synchronous barrier and the
+        // asynchronous trainer consume from it
+        let (tx_out, rx_out) = channel::<Result<EpisodeOut>>();
+        let (tx_step, rx_step) = channel::<Result<LockstepReply>>();
+        for env_id in 0..cfg.n_envs {
+            let (tx_job, rx_job) = channel::<Job>();
+            let m = manifest.clone();
+            let cfg = cfg.clone();
+            let tx = tx_out.clone();
+            let txs = tx_step.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("env-{env_id}"))
+                .spawn(move || worker_main(env_id, cfg, m, rx_job, tx, txs))
+                .context("spawning env worker")?;
+            job_txs.push(tx_job);
+            joins.push(Some(join));
+        }
+        Ok(InProcessExecutor {
+            job_txs,
+            results: rx_out,
+            lockstep: rx_step,
+            joins,
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// Best-effort root cause when a worker goes away: a worker that
+    /// fails setup reports on the results channel and exits, which the
+    /// lockstep path would otherwise only see as a dead channel.
+    /// Finished episodes encountered while probing are re-queued (onto
+    /// `pending`, drained by the next receive), never dropped.
+    fn closed_reason(&mut self) -> anyhow::Error {
+        loop {
+            match self.results.try_recv() {
+                Ok(Err(e)) => return e.context("env worker failed"),
+                Ok(Ok(out)) => self.pending.push_back(out),
+                Err(_) => return anyhow::anyhow!("worker channel closed"),
+            }
+        }
+    }
+}
+
+impl Executor for InProcessExecutor {
+    fn n_envs(&self) -> usize {
+        self.job_txs.len()
+    }
+
+    fn send(&mut self, env_id: usize, job: Job) -> Result<()> {
+        if self.job_txs[env_id].send(job).is_err() {
+            return Err(self.closed_reason());
+        }
+        Ok(())
+    }
+
+    fn recv_episode(&mut self) -> Result<EpisodeOut> {
+        if let Some(out) = self.pending.pop_front() {
+            return Ok(out);
+        }
+        self.results.recv().context("all workers died")?
+    }
+
+    fn try_recv_episode(&mut self) -> Result<Option<EpisodeOut>> {
+        if let Some(out) = self.pending.pop_front() {
+            return Ok(Some(out));
+        }
+        match self.results.try_recv() {
+            Ok(Ok(out)) => Ok(Some(out)),
+            Ok(Err(e)) => Err(e.context("env worker failed")),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow::anyhow!("all workers died")),
+        }
+    }
+
+    fn recv_lockstep(&mut self) -> Result<LockstepReply> {
+        match self.lockstep.recv() {
+            Ok(r) => r,
+            Err(_) => Err(self.closed_reason()),
+        }
+    }
+
+    fn restarts(&self) -> usize {
+        0
+    }
+
+    fn restarts_by_env(&self) -> Vec<usize> {
+        vec![0; self.job_txs.len()]
+    }
+
+    fn worker_pids(&self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    fn kill_worker(&mut self, _env_id: usize) -> Result<()> {
+        anyhow::bail!(
+            "in-process workers are threads and cannot be killed; \
+             fault injection needs --executor multi-process"
+        )
+    }
+}
+
+impl Drop for InProcessExecutor {
+    fn drop(&mut self) {
+        for tx in &self.job_txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for j in &mut self.joins {
+            if let Some(j) = j.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    env_id: usize,
+    cfg: PoolConfig,
+    manifest: Option<Arc<Manifest>>,
+    rx: Receiver<Job>,
+    tx: Sender<Result<EpisodeOut>>,
+    tx_step: Sender<Result<LockstepReply>>,
+) {
+    let setup = build_worker(
+        env_id,
+        &cfg.artifact_dir,
+        &cfg.work_dir,
+        &cfg.variant,
+        &cfg.scenario,
+        cfg.io_mode,
+        cfg.seed,
+        cfg.backend,
+        manifest.as_deref(),
+    );
+
+    let (mut env, mut lp, policy) = match setup {
+        Ok(x) => x,
+        Err(e) => {
+            // the lockstep coordinator waits on the step channel, the
+            // episode coordinator on the results channel: report the
+            // setup failure on BOTH so neither rollout mode can hang
+            // waiting for a worker that will never reply
+            let _ = tx_step.send(Err(anyhow::anyhow!("env worker setup failed: {e:#}")));
+            let _ = tx.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Rollout {
+                params,
+                horizon,
+                episode: _,
+                episode_seed,
+            } => {
+                let out = run_episode(
+                    env_id,
+                    env.as_mut(),
+                    &mut lp,
+                    &policy,
+                    &params,
+                    horizon,
+                    cfg.seed ^ episode_seed,
+                );
+                if tx.send(out).is_err() {
+                    break;
+                }
+            }
+            Job::Reset => {
+                let r = env.reset().map(|obs| LockstepReply::Obs { env_id, obs });
+                if tx_step.send(r).is_err() {
+                    break;
+                }
+            }
+            Job::Step { action } => {
+                let r = env
+                    .step(action)
+                    .map(|result| LockstepReply::Step { env_id, result });
+                if tx_step.send(r).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Execution backends: how a planner-chosen layout becomes real workers.
+//!
+//! Until this subsystem existed, every environment ran on an OS *thread*
+//! inside the coordinator process — the planner (`crate::cluster::planner`)
+//! could only ever be validated against its own DES, and `ranks_per_env`
+//! was pinned to 1 live. The paper's Sections IV–V (and the Rabault &
+//! Kuhnle multi-environment framework it builds on) assume per-rank OS
+//! *processes* with explicit placement; this module closes that
+//! sim-to-real gap.
+//!
+//! One [`Executor`] trait, two backends:
+//!
+//! * [`inprocess`] — today's threaded path, kept as the default and as
+//!   the golden reference (`rust/tests/exec_backend.rs` asserts the two
+//!   backends produce bitwise-identical learning CSVs);
+//! * [`process`] — worker processes spawned via `drlfoam worker`
+//!   self-exec, speaking the length-prefixed binary protocol of
+//!   [`wire`] over stdin/stdout. Supports `ranks_per_env > 1` by
+//!   spawning *rank groups* (rank 0 does the work; ranks 1.. are
+//!   placement/heartbeat members, since the in-repo CFD is
+//!   single-core), plus heartbeat/timeout fault handling: a dead
+//!   worker's episode is re-queued on a respawned process and the
+//!   restart is surfaced in
+//!   [`TrainSummary`](crate::coordinator::TrainSummary).
+//!
+//! Process tree of a `MultiProcess` pool (`n_envs = 2`,
+//! `ranks_per_env = 2`):
+//!
+//! ```text
+//! drlfoam train --executor multi-process
+//! ├── drlfoam worker --env-id 0 --rank 0     (episodes / lockstep)
+//! ├── drlfoam worker --env-id 0 --rank 1     (placement + heartbeat)
+//! ├── drlfoam worker --env-id 1 --rank 0
+//! └── drlfoam worker --env-id 1 --rank 1
+//! ```
+//!
+//! [`EnvPool`](crate::coordinator::pool::EnvPool) holds an executor
+//! handle, so `rollout`/`rollout_batched`/`rollout_batched_subset` and
+//! all three [`SyncPolicy`](crate::coordinator::SyncPolicy) loops work
+//! unchanged over either backend. Determinism is preserved end to end:
+//! the wire protocol round-trips every f32/f64 bit-exactly, episode
+//! seeds travel in the `Rollout` frame, and a re-queued episode replays
+//! the identical seed — so even a run that lost a worker mid-flight
+//! reproduces the fault-free learning curve (see
+//! `rust/tests/exec_backend.rs`).
+
+pub mod inprocess;
+pub mod process;
+pub mod wire;
+pub mod worker;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::pool::EpisodeOut;
+use crate::env::StepResult;
+
+/// Coordinator → worker command alphabet, shared by both backends (the
+/// in-process backend moves it over a channel; the multi-process backend
+/// encodes it as [`wire`] frames).
+pub enum Job {
+    /// Per-env mode: roll a whole episode locally under the carried
+    /// parameters. `episode` is the per-env episode index (drives the
+    /// chaos hook and observability); `episode_seed` is the derived
+    /// exploration seed — both travel so a respawned worker can replay
+    /// the identical episode.
+    Rollout {
+        params: Arc<Vec<f32>>,
+        horizon: usize,
+        episode: u64,
+        episode_seed: u64,
+    },
+    /// Batched mode: reset the environment, reply with the initial obs.
+    Reset,
+    /// Batched mode: advance one actuation period with this action.
+    Step { action: f64 },
+    Shutdown,
+}
+
+/// Worker → coordinator reply for the lockstep (batched) protocol.
+pub enum LockstepReply {
+    Obs { env_id: usize, obs: Vec<f32> },
+    Step { env_id: usize, result: StepResult },
+}
+
+/// Which execution backend realises the worker set
+/// (`--executor in-process|multi-process`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// OS threads inside the coordinator process (default; the golden
+    /// reference the multi-process backend is tested against).
+    InProcess,
+    /// One `drlfoam worker` OS process per rank, spawned by self-exec.
+    MultiProcess,
+}
+
+impl ExecutorKind {
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
+    pub fn parse(s: &str) -> Result<ExecutorKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "in-process" | "inprocess" | "threads" => Ok(ExecutorKind::InProcess),
+            "multi-process" | "multiprocess" | "processes" => Ok(ExecutorKind::MultiProcess),
+            _ => anyhow::bail!(
+                "unknown executor {s:?} (accepted: in-process|threads, \
+                 multi-process|processes)"
+            ),
+        }
+    }
+
+    /// Canonical name, inverse of [`ExecutorKind::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorKind::InProcess => "in-process",
+            ExecutorKind::MultiProcess => "multi-process",
+        }
+    }
+}
+
+/// A set of `n_envs` workers the pool can drive: send [`Job`]s to a
+/// specific worker, receive finished episodes from any, receive lockstep
+/// replies. Implementations own fault handling — [`Executor::recv_episode`]
+/// on the multi-process backend transparently respawns dead workers and
+/// replays their in-flight episode.
+pub trait Executor: Send {
+    fn n_envs(&self) -> usize;
+
+    /// Deliver one job to worker `env_id`.
+    fn send(&mut self, env_id: usize, job: Job) -> Result<()>;
+
+    /// Block until ANY worker finishes an episode.
+    fn recv_episode(&mut self) -> Result<EpisodeOut>;
+
+    /// Non-blocking variant; `Ok(None)` = nothing finished yet.
+    fn try_recv_episode(&mut self) -> Result<Option<EpisodeOut>>;
+
+    /// Block until the next lockstep (batched-mode) reply.
+    fn recv_lockstep(&mut self) -> Result<LockstepReply>;
+
+    /// Workers respawned after faults, total over the pool's lifetime.
+    fn restarts(&self) -> usize;
+
+    /// Per-env respawn counts (`workers.csv` telemetry).
+    fn restarts_by_env(&self) -> Vec<usize>;
+
+    /// OS pids of every live worker process (empty for in-process).
+    fn worker_pids(&self) -> Vec<u32>;
+
+    /// Fault injection: SIGKILL worker `env_id`'s primary rank (the
+    /// multi-process backend's recovery path is tested through this).
+    fn kill_worker(&mut self, env_id: usize) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_kind_parse_round_trips_and_lists_accepted() {
+        for k in [ExecutorKind::InProcess, ExecutorKind::MultiProcess] {
+            assert_eq!(ExecutorKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(
+            ExecutorKind::parse(" Threads ").unwrap(),
+            ExecutorKind::InProcess
+        );
+        assert_eq!(
+            ExecutorKind::parse("PROCESSES").unwrap(),
+            ExecutorKind::MultiProcess
+        );
+        let err = ExecutorKind::parse("gpu").unwrap_err().to_string();
+        assert!(
+            err.contains("in-process") && err.contains("multi-process"),
+            "{err}"
+        );
+    }
+}

@@ -1,0 +1,683 @@
+//! Multi-process execution backend: one `drlfoam worker` OS process per
+//! rank, spawned by self-exec, driven over the [`super::wire`] protocol.
+//!
+//! Per environment the executor owns a *rank group*: the rank-0 primary
+//! (runs episodes / the lockstep protocol) plus `ranks_per_env - 1`
+//! placement ranks that only hold their core and heartbeat — the
+//! process-tree shape of the paper's `N_envs × N_ranks` allocation. A
+//! reader thread per process decodes worker frames into one event
+//! channel; heartbeats stamp a shared liveness clock.
+//!
+//! Fault handling (per-env rollout mode):
+//!
+//! ```text
+//!            ┌──────────── Episode frame ────────────┐
+//!            ▼                                       │
+//!   idle ── dispatch ──► in-flight ──► done ──► (re-dispatch)
+//!            │                │ EOF / EPIPE / heartbeat timeout
+//!            │                ▼
+//!            │           respawn worker (restart counted)
+//!            │                │ replay SetParams + identical Rollout
+//!            └────────────────┘
+//! ```
+//!
+//! A re-queued episode carries the same `(episode, seed)` pair, so the
+//! replay is bitwise identical to the lost attempt and recovery does not
+//! perturb the learning curve. The lockstep (batched-inference) protocol
+//! completes its dispatch set together and has no per-episode unit to
+//! re-queue: a death mid-lockstep is a clean, contextual error instead.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::pool::{EpisodeOut, PoolConfig};
+use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
+use crate::exec::{Executor, Job, LockstepReply};
+
+/// How often a blocked receive wakes to re-check worker liveness.
+const LIVENESS_POLL: Duration = Duration::from_millis(250);
+
+/// Heartbeat period workers are spawned with (`worker --heartbeat-ms`).
+pub(crate) const HEARTBEAT_MS: u64 = 200;
+
+/// A worker silent for longer than this is declared hung and killed for
+/// respawn (override with `DRLFOAM_WORKER_TIMEOUT_S`; generous because a
+/// cylinder-scenario worker's first episode includes artifact
+/// compilation).
+const DEFAULT_TIMEOUT_S: f64 = 30.0;
+
+/// Crash-loop guard: a worker that dies this many times in a row without
+/// completing an episode is not a transient fault (e.g. setup fails
+/// identically on every respawn) — give up and surface the root cause.
+const MAX_CONSECUTIVE_RESTARTS: usize = 3;
+
+/// Reader-thread → executor event stream (one channel for all workers).
+enum Event {
+    Episode(EpisodeOut),
+    Lockstep(LockstepReply),
+    /// Terminal worker-side failure (setup or episode error).
+    WorkerError { env_id: usize, msg: String },
+    /// A worker's stdout reached EOF: the process is gone. `generation`
+    /// guards against stale reports for an already-replaced worker;
+    /// `rank` distinguishes the episode-running primary (recovered via
+    /// re-queue) from placement ranks (respawned in place).
+    Died {
+        env_id: usize,
+        rank: usize,
+        generation: u64,
+    },
+}
+
+struct ChildProc {
+    child: Child,
+    /// `None` once shutdown closed the pipe.
+    stdin: Option<ChildStdin>,
+    pid: u32,
+    generation: u64,
+    last_seen: Arc<Mutex<Instant>>,
+}
+
+struct RankGroup {
+    primary: ChildProc,
+    secondaries: Vec<ChildProc>,
+}
+
+/// Everything needed to (re)spawn one worker process.
+struct SpawnSpec {
+    bin: PathBuf,
+    artifact_dir: PathBuf,
+    work_dir: PathBuf,
+    variant: String,
+    scenario: String,
+    backend: &'static str,
+    io_mode: &'static str,
+    seed: u64,
+    fault_injection: Option<String>,
+}
+
+/// The rollout a worker currently owes us; replayed verbatim on respawn.
+#[derive(Clone)]
+struct InflightRollout {
+    params: Arc<Vec<f32>>,
+    horizon: usize,
+    episode: u64,
+    episode_seed: u64,
+}
+
+/// Process-backed worker set (see module docs).
+pub(crate) struct ProcessExecutor {
+    spec: SpawnSpec,
+    groups: Vec<RankGroup>,
+    tx: Sender<Event>,
+    rx: Receiver<Event>,
+    /// episodes that arrived while waiting for lockstep replies
+    pending: VecDeque<EpisodeOut>,
+    inflight: Vec<Option<InflightRollout>>,
+    restarts: Vec<usize>,
+    /// respawns since this env's last completed episode (crash-loop guard)
+    consecutive_restarts: Vec<usize>,
+    next_generation: u64,
+    /// true while the pool drives the lockstep (batched) protocol —
+    /// faults are then terminal instead of recoverable
+    lockstep: bool,
+    timeout: Duration,
+}
+
+impl ProcessExecutor {
+    pub(crate) fn spawn(cfg: &PoolConfig) -> Result<ProcessExecutor> {
+        anyhow::ensure!(cfg.ranks_per_env >= 1, "ranks_per_env must be >= 1");
+        let bin = match &cfg.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .context("resolving the worker binary for self-exec")?,
+        };
+        // the work dir is shared state (exchange files, chaos tombstones)
+        std::fs::create_dir_all(&cfg.work_dir)
+            .with_context(|| format!("creating {}", cfg.work_dir.display()))?;
+        // chaos tombstones are one-shot *per run*: clear leftovers from a
+        // previous run in a reused work dir, or --chaos would silently
+        // inject nothing the second time
+        if cfg.fault_injection.is_some() {
+            if let Ok(entries) = std::fs::read_dir(&cfg.work_dir) {
+                for e in entries.flatten() {
+                    let name = e.file_name();
+                    let name = name.to_string_lossy();
+                    if name.starts_with("chaos-") && name.ends_with(".tombstone") {
+                        let _ = std::fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+        let spec = SpawnSpec {
+            bin,
+            artifact_dir: cfg.artifact_dir.clone(),
+            work_dir: cfg.work_dir.clone(),
+            variant: cfg.variant.clone(),
+            scenario: cfg.scenario.clone(),
+            backend: cfg.backend.name(),
+            io_mode: cfg.io_mode.name(),
+            seed: cfg.seed,
+            fault_injection: cfg.fault_injection.clone(),
+        };
+        let timeout = std::env::var("DRLFOAM_WORKER_TIMEOUT_S")
+            .ok()
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .filter(|s| *s > 0.0)
+            .map(Duration::from_secs_f64)
+            .unwrap_or(Duration::from_secs_f64(DEFAULT_TIMEOUT_S));
+        let (tx, rx) = channel();
+        let mut groups = Vec::with_capacity(cfg.n_envs);
+        let mut next_generation = 0u64;
+        for env_id in 0..cfg.n_envs {
+            next_generation += 1;
+            let primary = spawn_child(&spec, env_id, 0, next_generation, &tx)?;
+            let mut secondaries = Vec::with_capacity(cfg.ranks_per_env - 1);
+            for rank in 1..cfg.ranks_per_env {
+                next_generation += 1;
+                secondaries.push(spawn_child(&spec, env_id, rank, next_generation, &tx)?);
+            }
+            groups.push(RankGroup {
+                primary,
+                secondaries,
+            });
+        }
+        Ok(ProcessExecutor {
+            spec,
+            groups,
+            tx,
+            rx,
+            pending: VecDeque::new(),
+            inflight: vec![None; cfg.n_envs],
+            restarts: vec![0; cfg.n_envs],
+            consecutive_restarts: vec![0; cfg.n_envs],
+            next_generation,
+            lockstep: false,
+            timeout,
+        })
+    }
+
+    fn write_plain(&mut self, env_id: usize, frame: &Frame) -> Result<()> {
+        let g = &mut self.groups[env_id].primary;
+        let w = g
+            .stdin
+            .as_mut()
+            .with_context(|| format!("env worker {env_id} stdin already closed"))?;
+        wire::write_frame(w, frame)
+            .with_context(|| format!("sending to env worker {env_id} (pid {})", g.pid))
+    }
+
+    /// SetParams followed by the Rollout frame. Params are re-sent on
+    /// every dispatch: the scheduler builds a fresh vector per update
+    /// round anyway, the bytes are negligible next to an episode, and an
+    /// unconditional send means a respawned worker needs no
+    /// cache-invalidation reasoning to replay correctly.
+    fn write_rollout(&mut self, env_id: usize, fl: &InflightRollout) -> Result<()> {
+        self.write_plain(
+            env_id,
+            &Frame::SetParams {
+                params: (*fl.params).clone(),
+            },
+        )?;
+        self.write_plain(
+            env_id,
+            &Frame::Rollout {
+                horizon: fl.horizon as u32,
+                episode: fl.episode,
+                episode_seed: fl.episode_seed,
+            },
+        )
+    }
+
+    /// Respawn `env_id`'s primary rank and replay its in-flight episode,
+    /// if any (identical `(episode, seed)` → bitwise-identical replay).
+    fn revive(&mut self, env_id: usize, why: &str) -> Result<()> {
+        anyhow::ensure!(
+            !self.lockstep,
+            "env worker {env_id} died mid-lockstep ({why}); the batched lockstep \
+             protocol has no per-episode unit to re-queue — rerun with \
+             --inference per-env for fault recovery"
+        );
+        if self.consecutive_restarts[env_id] >= MAX_CONSECUTIVE_RESTARTS {
+            // not transient: dying workers report the root cause in a
+            // terminal Error frame just before exiting — give their
+            // readers a moment to deliver it, then fail with it
+            let deadline = Instant::now() + Duration::from_secs(1);
+            while Instant::now() < deadline {
+                match self.rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(Event::WorkerError { env_id: e, msg }) => {
+                        bail!("env worker {e} failed: {msg}")
+                    }
+                    Ok(Event::Episode(out)) => {
+                        self.inflight[out.env_id] = None;
+                        self.pending.push_back(out);
+                    }
+                    Ok(_) => {}
+                    Err(_) => break,
+                }
+            }
+            bail!(
+                "env worker {env_id} died {MAX_CONSECUTIVE_RESTARTS} times without \
+                 completing an episode ({why}); giving up"
+            );
+        }
+        self.consecutive_restarts[env_id] += 1;
+        let old_pid = {
+            let g = &mut self.groups[env_id].primary;
+            let _ = g.child.kill();
+            let _ = g.child.wait(); // reap the zombie
+            g.pid
+        };
+        self.next_generation += 1;
+        let fresh = spawn_child(&self.spec, env_id, 0, self.next_generation, &self.tx)?;
+        eprintln!(
+            "warning: env worker {env_id} {why}; respawned (pid {old_pid} -> {})",
+            fresh.pid
+        );
+        self.groups[env_id].primary = fresh;
+        self.restarts[env_id] += 1;
+        if let Some(fl) = self.inflight[env_id].clone() {
+            self.write_rollout(env_id, &fl)
+                .context("re-queueing the lost episode on the respawned worker")?;
+        }
+        Ok(())
+    }
+
+    fn on_death(&mut self, env_id: usize, rank: usize, generation: u64) -> Result<()> {
+        if rank > 0 {
+            return self.revive_secondary(env_id, generation);
+        }
+        if self.groups[env_id].primary.generation != generation {
+            return Ok(()); // stale report about an already-replaced worker
+        }
+        self.revive(env_id, "exited unexpectedly")
+    }
+
+    /// Placement ranks carry no episode state: a dead one is respawned
+    /// in place so the rank group keeps holding its claimed cores. This
+    /// is never terminal (not even mid-lockstep) but IS counted — the
+    /// group's placement was briefly broken, and workers.csv should say
+    /// so.
+    fn revive_secondary(&mut self, env_id: usize, generation: u64) -> Result<()> {
+        let Some(idx) = self.groups[env_id]
+            .secondaries
+            .iter()
+            .position(|s| s.generation == generation)
+        else {
+            return Ok(()); // stale report about an already-replaced rank
+        };
+        let rank = idx + 1;
+        let old_pid = {
+            let s = &mut self.groups[env_id].secondaries[idx];
+            let _ = s.child.kill();
+            let _ = s.child.wait(); // reap the zombie
+            s.pid
+        };
+        self.next_generation += 1;
+        let fresh = spawn_child(&self.spec, env_id, rank, self.next_generation, &self.tx)?;
+        eprintln!(
+            "warning: placement rank {rank} of env {env_id} exited; \
+             respawned (pid {old_pid} -> {})",
+            fresh.pid
+        );
+        self.groups[env_id].secondaries[idx] = fresh;
+        self.restarts[env_id] += 1;
+        Ok(())
+    }
+
+    /// A failed send usually means the worker just died; its terminal
+    /// `Error` frame — the root cause — may already be in the event
+    /// channel. Prefer it over a bare broken-pipe error (the process
+    /// analogue of the in-process backend's `closed_reason`). Episodes
+    /// met while draining are kept, never dropped.
+    fn send_failure(&mut self, err: anyhow::Error) -> anyhow::Error {
+        let deadline = Instant::now() + Duration::from_millis(500);
+        while Instant::now() < deadline {
+            match self.rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Event::WorkerError { env_id, msg }) => {
+                    return anyhow::anyhow!("env worker {env_id} failed: {msg}");
+                }
+                Ok(Event::Episode(out)) => {
+                    self.inflight[out.env_id] = None;
+                    self.consecutive_restarts[out.env_id] = 0;
+                    self.pending.push_back(out);
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        err
+    }
+
+    /// Kill any primary whose heartbeat went silent past the timeout;
+    /// the reader's EOF then raises [`Event::Died`], which re-queues and
+    /// respawns through the normal path.
+    fn check_liveness(&mut self) -> Result<()> {
+        for (env_id, g) in self.groups.iter_mut().enumerate() {
+            let mut seen = g.primary.last_seen.lock().expect("liveness clock poisoned");
+            if seen.elapsed() > self.timeout {
+                eprintln!(
+                    "warning: env worker {env_id} (pid {}) silent for {:.1}s; killing for respawn",
+                    g.primary.pid,
+                    seen.elapsed().as_secs_f64()
+                );
+                *seen = Instant::now(); // don't re-kill every poll tick
+                drop(seen);
+                let _ = g.primary.child.kill();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Executor for ProcessExecutor {
+    fn n_envs(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn send(&mut self, env_id: usize, job: Job) -> Result<()> {
+        match job {
+            Job::Rollout {
+                params,
+                horizon,
+                episode,
+                episode_seed,
+            } => {
+                self.lockstep = false;
+                let fl = InflightRollout {
+                    params,
+                    horizon,
+                    episode,
+                    episode_seed,
+                };
+                self.inflight[env_id] = Some(fl.clone());
+                if let Err(e) = self.write_rollout(env_id, &fl) {
+                    // broken pipe: the worker died while idle — respawn
+                    // now; revive() replays the rollout just recorded
+                    self.revive(env_id, &format!("dispatch failed ({e:#})"))?;
+                }
+                Ok(())
+            }
+            Job::Reset => {
+                self.lockstep = true;
+                self.write_plain(env_id, &Frame::Reset)
+                    .map_err(|e| self.send_failure(e))
+            }
+            Job::Step { action } => {
+                self.lockstep = true;
+                self.write_plain(env_id, &Frame::Step { action })
+                    .map_err(|e| self.send_failure(e))
+            }
+            Job::Shutdown => {
+                let _ = self.write_plain(env_id, &Frame::Shutdown);
+                Ok(())
+            }
+        }
+    }
+
+    fn recv_episode(&mut self) -> Result<EpisodeOut> {
+        loop {
+            if let Some(out) = self.pending.pop_front() {
+                return Ok(out);
+            }
+            match self.rx.recv_timeout(LIVENESS_POLL) {
+                Ok(Event::Episode(out)) => {
+                    self.inflight[out.env_id] = None;
+                    self.consecutive_restarts[out.env_id] = 0;
+                    return Ok(out);
+                }
+                Ok(Event::Lockstep(_)) => {
+                    bail!("lockstep reply while waiting for an episode (protocol violation)")
+                }
+                Ok(Event::WorkerError { env_id, msg }) => {
+                    bail!("env worker {env_id} failed: {msg}")
+                }
+                Ok(Event::Died {
+                    env_id,
+                    rank,
+                    generation,
+                }) => self.on_death(env_id, rank, generation)?,
+                Err(RecvTimeoutError::Timeout) => self.check_liveness()?,
+                Err(RecvTimeoutError::Disconnected) => bail!("all worker processes died"),
+            }
+        }
+    }
+
+    fn try_recv_episode(&mut self) -> Result<Option<EpisodeOut>> {
+        loop {
+            if let Some(out) = self.pending.pop_front() {
+                return Ok(Some(out));
+            }
+            match self.rx.try_recv() {
+                Ok(Event::Episode(out)) => {
+                    self.inflight[out.env_id] = None;
+                    self.consecutive_restarts[out.env_id] = 0;
+                    return Ok(Some(out));
+                }
+                Ok(Event::Lockstep(_)) => {
+                    bail!("lockstep reply while waiting for an episode (protocol violation)")
+                }
+                Ok(Event::WorkerError { env_id, msg }) => {
+                    bail!("env worker {env_id} failed: {msg}")
+                }
+                Ok(Event::Died {
+                    env_id,
+                    rank,
+                    generation,
+                }) => self.on_death(env_id, rank, generation)?,
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => bail!("all worker processes died"),
+            }
+        }
+    }
+
+    fn recv_lockstep(&mut self) -> Result<LockstepReply> {
+        loop {
+            match self.rx.recv_timeout(LIVENESS_POLL) {
+                Ok(Event::Lockstep(r)) => return Ok(r),
+                // episodes can land while the scheduler switches between
+                // per-env rounds and a lockstep set; keep them
+                Ok(Event::Episode(out)) => {
+                    self.inflight[out.env_id] = None;
+                    self.consecutive_restarts[out.env_id] = 0;
+                    self.pending.push_back(out);
+                }
+                Ok(Event::WorkerError { env_id, msg }) => {
+                    bail!("env worker {env_id} failed: {msg}")
+                }
+                // lockstep is active, so this is terminal (revive() bails
+                // with the mid-lockstep explanation)
+                Ok(Event::Died {
+                    env_id,
+                    rank,
+                    generation,
+                }) => self.on_death(env_id, rank, generation)?,
+                Err(RecvTimeoutError::Timeout) => self.check_liveness()?,
+                Err(RecvTimeoutError::Disconnected) => bail!("all worker processes died"),
+            }
+        }
+    }
+
+    fn restarts(&self) -> usize {
+        self.restarts.iter().sum()
+    }
+
+    fn restarts_by_env(&self) -> Vec<usize> {
+        self.restarts.clone()
+    }
+
+    fn worker_pids(&self) -> Vec<u32> {
+        self.groups
+            .iter()
+            .flat_map(|g| {
+                std::iter::once(g.primary.pid).chain(g.secondaries.iter().map(|s| s.pid))
+            })
+            .collect()
+    }
+
+    fn kill_worker(&mut self, env_id: usize) -> Result<()> {
+        anyhow::ensure!(env_id < self.groups.len(), "env id {env_id} out of range");
+        self.groups[env_id]
+            .primary
+            .child
+            .kill()
+            .with_context(|| format!("SIGKILLing env worker {env_id}"))
+    }
+}
+
+impl Drop for ProcessExecutor {
+    fn drop(&mut self) {
+        // polite first: Shutdown frame + stdin EOF...
+        for g in &mut self.groups {
+            for c in std::iter::once(&mut g.primary).chain(g.secondaries.iter_mut()) {
+                if let Some(mut w) = c.stdin.take() {
+                    let _ = wire::write_frame(&mut w, &Frame::Shutdown);
+                } // dropping w closes the pipe
+            }
+        }
+        // ...then a bounded wait, then SIGKILL for stragglers
+        let deadline = Instant::now() + Duration::from_secs(2);
+        for g in &mut self.groups {
+            for c in std::iter::once(&mut g.primary).chain(g.secondaries.iter_mut()) {
+                loop {
+                    match c.child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10))
+                        }
+                        _ => {
+                            let _ = c.child.kill();
+                            let _ = c.child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn spawn_child(
+    spec: &SpawnSpec,
+    env_id: usize,
+    rank: usize,
+    generation: u64,
+    tx: &Sender<Event>,
+) -> Result<ChildProc> {
+    let mut cmd = Command::new(&spec.bin);
+    cmd.arg("worker")
+        .arg("--env-id")
+        .arg(env_id.to_string())
+        .arg("--rank")
+        .arg(rank.to_string())
+        .arg("--scenario")
+        .arg(&spec.scenario)
+        .arg("--variant")
+        .arg(&spec.variant)
+        .arg("--artifacts")
+        .arg(&spec.artifact_dir)
+        .arg("--work-dir")
+        .arg(&spec.work_dir)
+        .arg("--io")
+        .arg(spec.io_mode)
+        .arg("--backend")
+        .arg(spec.backend)
+        .arg("--seed")
+        .arg(spec.seed.to_string())
+        .arg("--heartbeat-ms")
+        .arg(HEARTBEAT_MS.to_string())
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if let Some(f) = &spec.fault_injection {
+        cmd.env("DRLFOAM_WORKER_CRASH", f);
+    }
+    let mut child = cmd.spawn().with_context(|| {
+        format!(
+            "spawning worker env {env_id} rank {rank} via {}",
+            spec.bin.display()
+        )
+    })?;
+    let pid = child.id();
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let last_seen = Arc::new(Mutex::new(Instant::now()));
+    let txc = tx.clone();
+    let seen = Arc::clone(&last_seen);
+    std::thread::Builder::new()
+        .name(format!("exec-read-{env_id}.{rank}"))
+        .spawn(move || reader_loop(env_id, rank, generation, stdout, txc, seen))
+        .context("spawning worker reader thread")?;
+    Ok(ChildProc {
+        child,
+        stdin: Some(stdin),
+        pid,
+        generation,
+        last_seen,
+    })
+}
+
+/// Decode worker frames into events until EOF; every frame (heartbeats
+/// included) stamps the liveness clock. The thread detaches — it exits
+/// by itself when the process dies or the executor is dropped.
+fn reader_loop(
+    env_id: usize,
+    rank: usize,
+    generation: u64,
+    mut stdout: ChildStdout,
+    tx: Sender<Event>,
+    last_seen: Arc<Mutex<Instant>>,
+) {
+    loop {
+        let frame = match wire::read_frame(&mut stdout) {
+            Ok(Some(f)) => f,
+            // clean close and a torn frame both mean the worker is gone
+            Ok(None) | Err(_) => break,
+        };
+        *last_seen.lock().expect("liveness clock poisoned") = Instant::now();
+        let ev = match frame {
+            Frame::Heartbeat => continue,
+            Frame::Hello { version, .. } => {
+                if version != PROTOCOL_VERSION {
+                    Event::WorkerError {
+                        env_id,
+                        msg: format!(
+                            "wire protocol version {version} != coordinator {PROTOCOL_VERSION} \
+                             (mixed binaries?)"
+                        ),
+                    }
+                } else {
+                    continue;
+                }
+            }
+            Frame::Obs { obs } => Event::Lockstep(LockstepReply::Obs { env_id, obs }),
+            Frame::StepOut { result } => {
+                Event::Lockstep(LockstepReply::Step { env_id, result })
+            }
+            Frame::Episode { stats, traj, .. } => Event::Episode(EpisodeOut {
+                env_id,
+                traj,
+                stats,
+                completed_at: Instant::now(),
+            }),
+            Frame::Error { msg } => Event::WorkerError { env_id, msg },
+            other => Event::WorkerError {
+                env_id,
+                msg: format!("protocol violation: worker sent {other:?}"),
+            },
+        };
+        if tx.send(ev).is_err() {
+            return; // executor gone
+        }
+    }
+    let _ = tx.send(Event::Died {
+        env_id,
+        rank,
+        generation,
+    });
+}

@@ -1,0 +1,564 @@
+//! Length-prefixed binary wire protocol between the coordinator and
+//! `drlfoam worker` processes.
+//!
+//! Every frame is `[u32 payload_len][u8 tag][payload]`, little-endian
+//! throughout, with the same raw-f32 packing the *Optimized* exchange
+//! uses ([`crate::io_interface::binary`]) — floats travel bit-exact, so
+//! the multi-process backend reproduces the in-process learning curves
+//! bitwise (`rust/tests/exec_backend.rs`).
+//!
+//! | frame       | direction            | payload |
+//! |-------------|----------------------|---------|
+//! | `Hello`     | worker → coordinator | env_id, rank, pid, n_obs, protocol version |
+//! | `SetParams` | coordinator → worker | policy parameter vector (per-env serving) |
+//! | `Rollout`   | coordinator → worker | horizon, episode index, exploration seed |
+//! | `Reset`     | coordinator → worker | — (lockstep/batched mode) |
+//! | `Step`      | coordinator → worker | action (lockstep/batched mode) |
+//! | `Shutdown`  | coordinator → worker | — |
+//! | `Heartbeat` | worker → coordinator | — (liveness, every `--heartbeat-ms`) |
+//! | `Obs`       | worker → coordinator | initial observation (reply to `Reset`) |
+//! | `StepOut`   | worker → coordinator | full [`StepResult`] (reply to `Step`) |
+//! | `Episode`   | worker → coordinator | trajectory + [`EpisodeStats`] (reply to `Rollout`) |
+//! | `Error`     | worker → coordinator | terminal failure message |
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::pool::EpisodeStats;
+use crate::drl::{Trajectory, Transition};
+use crate::env::{StepResult, StepTimings};
+use crate::io_interface::binary::{get_f32s, put_f32s};
+use crate::io_interface::IoStats;
+
+/// Bumped on any incompatible frame-layout change; the coordinator
+/// rejects a `Hello` carrying a different version.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Corrupt-stream guard: no legitimate frame (even a full cylinder-grid
+/// trajectory) comes close to this.
+const MAX_FRAME: usize = 256 << 20;
+
+const TAG_HELLO: u8 = 1;
+const TAG_SET_PARAMS: u8 = 2;
+const TAG_RESET: u8 = 3;
+const TAG_STEP: u8 = 4;
+const TAG_ROLLOUT: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+const TAG_HEARTBEAT: u8 = 7;
+const TAG_OBS: u8 = 8;
+const TAG_STEP_OUT: u8 = 9;
+const TAG_EPISODE: u8 = 10;
+const TAG_ERROR: u8 = 11;
+
+/// One protocol frame (see the module-level table).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Hello {
+        env_id: u32,
+        rank: u32,
+        pid: u32,
+        n_obs: u32,
+        version: u32,
+    },
+    SetParams {
+        params: Vec<f32>,
+    },
+    Reset,
+    Step {
+        action: f64,
+    },
+    Rollout {
+        horizon: u32,
+        episode: u64,
+        episode_seed: u64,
+    },
+    Shutdown,
+    Heartbeat,
+    Obs {
+        obs: Vec<f32>,
+    },
+    StepOut {
+        result: StepResult,
+    },
+    Episode {
+        env_id: u32,
+        stats: EpisodeStats,
+        traj: Trajectory,
+    },
+    Error {
+        msg: String,
+    },
+}
+
+// --- little-endian scalar packing -----------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_bytes<'a>(bytes: &'a [u8], n: usize, off: &mut usize) -> Result<&'a [u8]> {
+    ensure!(bytes.len() >= *off + n, "wire frame truncated");
+    let s = &bytes[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+fn get_u32(bytes: &[u8], off: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(get_bytes(bytes, 4, off)?.try_into().unwrap()))
+}
+
+fn get_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(get_bytes(bytes, 8, off)?.try_into().unwrap()))
+}
+
+fn get_f64(bytes: &[u8], off: &mut usize) -> Result<f64> {
+    Ok(f64::from_le_bytes(get_bytes(bytes, 8, off)?.try_into().unwrap()))
+}
+
+fn put_vec_f32(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(buf, xs.len() as u32);
+    put_f32s(buf, xs);
+}
+
+fn get_vec_f32(bytes: &[u8], off: &mut usize) -> Result<Vec<f32>> {
+    let n = get_u32(bytes, off)? as usize;
+    ensure!(n <= MAX_FRAME / 4, "wire f32 vector implausibly long ({n})");
+    get_f32s(bytes, n, off)
+}
+
+// --- composite payloads ----------------------------------------------------
+
+fn put_io_stats(buf: &mut Vec<u8>, io: &IoStats) {
+    put_u64(buf, io.bytes_written);
+    put_u64(buf, io.bytes_read);
+    put_u32(buf, io.files);
+    put_f64(buf, io.write_s);
+    put_f64(buf, io.read_s);
+}
+
+fn get_io_stats(bytes: &[u8], off: &mut usize) -> Result<IoStats> {
+    Ok(IoStats {
+        bytes_written: get_u64(bytes, off)?,
+        bytes_read: get_u64(bytes, off)?,
+        files: get_u32(bytes, off)?,
+        write_s: get_f64(bytes, off)?,
+        read_s: get_f64(bytes, off)?,
+    })
+}
+
+fn put_step_result(buf: &mut Vec<u8>, r: &StepResult) {
+    put_vec_f32(buf, &r.obs);
+    put_f64(buf, r.reward);
+    put_f64(buf, r.cd_mean);
+    put_f64(buf, r.cl_mean);
+    put_f64(buf, r.jet);
+    put_f64(buf, r.timings.cfd_s);
+    put_f64(buf, r.timings.io_s);
+    put_io_stats(buf, &r.io);
+}
+
+fn get_step_result(bytes: &[u8], off: &mut usize) -> Result<StepResult> {
+    Ok(StepResult {
+        obs: get_vec_f32(bytes, off)?,
+        reward: get_f64(bytes, off)?,
+        cd_mean: get_f64(bytes, off)?,
+        cl_mean: get_f64(bytes, off)?,
+        jet: get_f64(bytes, off)?,
+        timings: StepTimings {
+            cfd_s: get_f64(bytes, off)?,
+            io_s: get_f64(bytes, off)?,
+        },
+        io: get_io_stats(bytes, off)?,
+    })
+}
+
+fn put_stats(buf: &mut Vec<u8>, s: &EpisodeStats) {
+    put_f64(buf, s.reward_sum);
+    put_f64(buf, s.cd_mean);
+    put_f64(buf, s.cl_abs_mean);
+    put_f64(buf, s.jet_final);
+    put_f64(buf, s.cfd_s);
+    put_f64(buf, s.io_s);
+    put_f64(buf, s.policy_s);
+    put_f64(buf, s.wall_s);
+    put_io_stats(buf, &s.io);
+}
+
+fn get_stats(bytes: &[u8], off: &mut usize) -> Result<EpisodeStats> {
+    Ok(EpisodeStats {
+        reward_sum: get_f64(bytes, off)?,
+        cd_mean: get_f64(bytes, off)?,
+        cl_abs_mean: get_f64(bytes, off)?,
+        jet_final: get_f64(bytes, off)?,
+        cfd_s: get_f64(bytes, off)?,
+        io_s: get_f64(bytes, off)?,
+        policy_s: get_f64(bytes, off)?,
+        wall_s: get_f64(bytes, off)?,
+        io: get_io_stats(bytes, off)?,
+    })
+}
+
+fn put_traj(buf: &mut Vec<u8>, t: &Trajectory) {
+    put_u64(buf, t.env_id as u64);
+    put_f64(buf, t.last_value);
+    put_u32(buf, t.transitions.len() as u32);
+    for tr in &t.transitions {
+        put_vec_f32(buf, &tr.obs);
+        put_f64(buf, tr.action);
+        put_f64(buf, tr.logp);
+        put_f64(buf, tr.reward);
+        put_f64(buf, tr.value);
+    }
+}
+
+fn get_traj(bytes: &[u8], off: &mut usize) -> Result<Trajectory> {
+    let env_id = get_u64(bytes, off)? as usize;
+    let last_value = get_f64(bytes, off)?;
+    let n = get_u32(bytes, off)? as usize;
+    ensure!(n <= 1 << 24, "wire trajectory implausibly long ({n})");
+    let mut transitions = Vec::with_capacity(n);
+    for _ in 0..n {
+        transitions.push(Transition {
+            obs: get_vec_f32(bytes, off)?,
+            action: get_f64(bytes, off)?,
+            logp: get_f64(bytes, off)?,
+            reward: get_f64(bytes, off)?,
+            value: get_f64(bytes, off)?,
+        });
+    }
+    Ok(Trajectory {
+        transitions,
+        last_value,
+        env_id,
+    })
+}
+
+// --- frame encode / decode -------------------------------------------------
+
+fn encode(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match frame {
+        Frame::Hello {
+            env_id,
+            rank,
+            pid,
+            n_obs,
+            version,
+        } => {
+            buf.push(TAG_HELLO);
+            put_u32(&mut buf, *env_id);
+            put_u32(&mut buf, *rank);
+            put_u32(&mut buf, *pid);
+            put_u32(&mut buf, *n_obs);
+            put_u32(&mut buf, *version);
+        }
+        Frame::SetParams { params } => {
+            buf.push(TAG_SET_PARAMS);
+            put_vec_f32(&mut buf, params);
+        }
+        Frame::Reset => buf.push(TAG_RESET),
+        Frame::Step { action } => {
+            buf.push(TAG_STEP);
+            put_f64(&mut buf, *action);
+        }
+        Frame::Rollout {
+            horizon,
+            episode,
+            episode_seed,
+        } => {
+            buf.push(TAG_ROLLOUT);
+            put_u32(&mut buf, *horizon);
+            put_u64(&mut buf, *episode);
+            put_u64(&mut buf, *episode_seed);
+        }
+        Frame::Shutdown => buf.push(TAG_SHUTDOWN),
+        Frame::Heartbeat => buf.push(TAG_HEARTBEAT),
+        Frame::Obs { obs } => {
+            buf.push(TAG_OBS);
+            put_vec_f32(&mut buf, obs);
+        }
+        Frame::StepOut { result } => {
+            buf.push(TAG_STEP_OUT);
+            put_step_result(&mut buf, result);
+        }
+        Frame::Episode {
+            env_id,
+            stats,
+            traj,
+        } => {
+            buf.push(TAG_EPISODE);
+            put_u32(&mut buf, *env_id);
+            put_stats(&mut buf, stats);
+            put_traj(&mut buf, traj);
+        }
+        Frame::Error { msg } => {
+            buf.push(TAG_ERROR);
+            let b = msg.as_bytes();
+            put_u32(&mut buf, b.len() as u32);
+            buf.extend_from_slice(b);
+        }
+    }
+    buf
+}
+
+fn decode(bytes: &[u8]) -> Result<Frame> {
+    ensure!(!bytes.is_empty(), "empty wire frame");
+    let tag = bytes[0];
+    let mut off = 1usize;
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello {
+            env_id: get_u32(bytes, &mut off)?,
+            rank: get_u32(bytes, &mut off)?,
+            pid: get_u32(bytes, &mut off)?,
+            n_obs: get_u32(bytes, &mut off)?,
+            version: get_u32(bytes, &mut off)?,
+        },
+        TAG_SET_PARAMS => Frame::SetParams {
+            params: get_vec_f32(bytes, &mut off)?,
+        },
+        TAG_RESET => Frame::Reset,
+        TAG_STEP => Frame::Step {
+            action: get_f64(bytes, &mut off)?,
+        },
+        TAG_ROLLOUT => Frame::Rollout {
+            horizon: get_u32(bytes, &mut off)?,
+            episode: get_u64(bytes, &mut off)?,
+            episode_seed: get_u64(bytes, &mut off)?,
+        },
+        TAG_SHUTDOWN => Frame::Shutdown,
+        TAG_HEARTBEAT => Frame::Heartbeat,
+        TAG_OBS => Frame::Obs {
+            obs: get_vec_f32(bytes, &mut off)?,
+        },
+        TAG_STEP_OUT => Frame::StepOut {
+            result: get_step_result(bytes, &mut off)?,
+        },
+        TAG_EPISODE => Frame::Episode {
+            env_id: get_u32(bytes, &mut off)?,
+            stats: get_stats(bytes, &mut off)?,
+            traj: get_traj(bytes, &mut off)?,
+        },
+        TAG_ERROR => {
+            let n = get_u32(bytes, &mut off)? as usize;
+            let b = get_bytes(bytes, n, &mut off)?;
+            Frame::Error {
+                msg: String::from_utf8_lossy(b).into_owned(),
+            }
+        }
+        other => bail!("unknown wire frame tag {other}"),
+    };
+    ensure!(
+        off == bytes.len(),
+        "wire frame has {} trailing bytes (tag {tag})",
+        bytes.len() - off
+    );
+    Ok(frame)
+}
+
+/// Write one frame (length prefix + payload) and flush, so a frame is
+/// never left sitting in a pipe buffer while the peer blocks on it.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let payload = encode(frame);
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .context("writing wire frame length")?;
+    w.write_all(&payload).context("writing wire frame payload")?;
+    w.flush().context("flushing wire frame")?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary (the peer
+/// closed the stream), an error on a truncated or corrupt frame.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut len4 = [0u8; 4];
+    // EOF before the first length byte is a clean close; EOF inside a
+    // frame is truncation
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("wire stream closed inside a frame header"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading wire frame length"),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(
+        len >= 1 && len <= MAX_FRAME,
+        "implausible wire frame length {len}"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .context("reading wire frame payload")?;
+    decode(&payload).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn every_frame_round_trips_bit_exact() {
+        roundtrip(Frame::Hello {
+            env_id: 3,
+            rank: 1,
+            pid: 4242,
+            n_obs: 32,
+            version: PROTOCOL_VERSION,
+        });
+        roundtrip(Frame::SetParams {
+            params: vec![0.25, -1.5e-7, f32::MIN_POSITIVE, 3.0e8],
+        });
+        roundtrip(Frame::Reset);
+        roundtrip(Frame::Step { action: -0.123456789012345 });
+        roundtrip(Frame::Rollout {
+            horizon: 100,
+            episode: 7,
+            episode_seed: u64::MAX - 3,
+        });
+        roundtrip(Frame::Shutdown);
+        roundtrip(Frame::Heartbeat);
+        roundtrip(Frame::Obs {
+            obs: vec![1.0, 2.0, -0.5],
+        });
+        roundtrip(Frame::StepOut {
+            result: StepResult {
+                obs: vec![0.1, 0.2],
+                reward: 0.33,
+                cd_mean: 3.01,
+                cl_mean: -0.2,
+                jet: 0.8,
+                timings: StepTimings {
+                    cfd_s: 1e-4,
+                    io_s: 2e-5,
+                },
+                io: IoStats {
+                    bytes_written: 1024,
+                    bytes_read: 512,
+                    files: 2,
+                    write_s: 1e-5,
+                    read_s: 2e-6,
+                },
+            },
+        });
+        roundtrip(Frame::Episode {
+            env_id: 1,
+            stats: EpisodeStats {
+                reward_sum: 1.25,
+                cd_mean: 3.0,
+                cl_abs_mean: 0.4,
+                jet_final: -0.7,
+                cfd_s: 0.01,
+                io_s: 0.002,
+                policy_s: 0.0005,
+                wall_s: 0.02,
+                io: IoStats::default(),
+            },
+            traj: Trajectory {
+                env_id: 1,
+                last_value: -0.05,
+                transitions: vec![
+                    Transition {
+                        obs: vec![0.5; 4],
+                        action: 0.7,
+                        logp: -0.9,
+                        reward: 0.02,
+                        value: 0.1,
+                    },
+                    Transition {
+                        obs: vec![-0.25; 4],
+                        action: -0.1,
+                        logp: -1.3,
+                        reward: -0.04,
+                        value: 0.2,
+                    },
+                ],
+            },
+        });
+        roundtrip(Frame::Error {
+            msg: "env worker setup failed: boom".into(),
+        });
+    }
+
+    #[test]
+    fn special_floats_survive_the_wire() {
+        // NaN defeats PartialEq, so compare bit patterns directly
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::SetParams {
+                params: vec![f32::NAN, f32::INFINITY, -0.0],
+            },
+        )
+        .unwrap();
+        match read_frame(&mut Cursor::new(&buf)).unwrap().unwrap() {
+            Frame::SetParams { params } => {
+                assert_eq!(params[0].to_bits(), f32::NAN.to_bits());
+                assert_eq!(params[1], f32::INFINITY);
+                assert_eq!(params[2].to_bits(), (-0.0f32).to_bits());
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncation_is_error() {
+        assert!(read_frame(&mut Cursor::new(&[])).unwrap().is_none());
+        // header cut mid-way
+        assert!(read_frame(&mut Cursor::new(&[5u8, 0])).is_err());
+        // complete header promising more payload than exists
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Step { action: 1.0 }).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_misread() {
+        // implausible length prefix
+        let big = (u32::MAX).to_le_bytes();
+        assert!(read_frame(&mut Cursor::new(&big[..])).is_err());
+        // unknown tag
+        let mut buf = vec![1u8, 0, 0, 0, 0xEE];
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+        // trailing garbage after a valid payload
+        buf = Vec::new();
+        write_frame(&mut buf, &Frame::Reset).unwrap();
+        buf[0] = 2; // lie: payload is 2 bytes
+        buf.push(0u8);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn multiple_frames_stream_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Reset).unwrap();
+        write_frame(&mut buf, &Frame::Step { action: 2.0 }).unwrap();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut c = Cursor::new(&buf);
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), Frame::Reset);
+        assert_eq!(
+            read_frame(&mut c).unwrap().unwrap(),
+            Frame::Step { action: 2.0 }
+        );
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), Frame::Shutdown);
+        assert!(read_frame(&mut c).unwrap().is_none());
+    }
+}

@@ -1,0 +1,199 @@
+//! The `drlfoam worker` process: one environment rank behind the wire
+//! protocol.
+//!
+//! Spawned by the multi-process executor ([`super::process`]) via
+//! self-exec; speaks [`super::wire`] frames over stdin/stdout (stdout is
+//! therefore *reserved* — all diagnostics go to stderr, which the
+//! coordinator inherits). Rank 0 builds the environment + per-env policy
+//! exactly like an in-process worker thread and serves
+//! `SetParams`/`Rollout`/`Reset`/`Step`; ranks ≥ 1 are placement members
+//! of their env's rank group and only heartbeat until shutdown. A
+//! heartbeat thread beats every `--heartbeat-ms` so the coordinator can
+//! tell a busy worker from a dead one.
+
+use std::io::{self, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::pool::{build_worker, run_episode};
+use crate::drl::policy::PolicyBackendKind;
+use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
+use crate::io_interface::IoMode;
+use crate::runtime::Manifest;
+
+/// Everything the `worker` subcommand parses off its command line.
+pub struct WorkerConfig {
+    pub env_id: usize,
+    /// 0 = the env's primary (does the work); ≥ 1 = placement rank.
+    pub rank: usize,
+    pub scenario: String,
+    pub variant: String,
+    pub artifact_dir: PathBuf,
+    pub work_dir: PathBuf,
+    pub io_mode: IoMode,
+    pub backend: PolicyBackendKind,
+    pub seed: u64,
+    /// Heartbeat period; 0 disables the heartbeat thread.
+    pub heartbeat_ms: u64,
+}
+
+/// Serve this rank until Shutdown or stdin EOF. On error, a terminal
+/// `Error` frame is emitted before returning so the coordinator gets the
+/// root cause instead of a bare dead channel.
+pub fn run(cfg: &WorkerConfig) -> Result<()> {
+    let out: Arc<Mutex<io::Stdout>> = Arc::new(Mutex::new(io::stdout()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat = if cfg.heartbeat_ms > 0 {
+        let o = Arc::clone(&out);
+        let s = Arc::clone(&stop);
+        let period = std::time::Duration::from_millis(cfg.heartbeat_ms);
+        Some(
+            std::thread::Builder::new()
+                .name("heartbeat".into())
+                .spawn(move || {
+                    while !s.load(Ordering::Relaxed) {
+                        std::thread::sleep(period);
+                        if send(&o, &Frame::Heartbeat).is_err() {
+                            return; // coordinator gone
+                        }
+                    }
+                })
+                .context("spawning heartbeat thread")?,
+        )
+    } else {
+        None
+    };
+
+    let res = serve(cfg, &out);
+    stop.store(true, Ordering::Relaxed);
+    if let Some(b) = beat {
+        let _ = b.join();
+    }
+    if let Err(e) = &res {
+        let _ = send(&out, &Frame::Error { msg: format!("{e:#}") });
+    }
+    res
+}
+
+fn send(out: &Mutex<io::Stdout>, frame: &Frame) -> Result<()> {
+    let mut g = out.lock().expect("stdout mutex poisoned");
+    wire::write_frame(&mut *g, frame)
+}
+
+fn hello(cfg: &WorkerConfig, n_obs: usize) -> Frame {
+    Frame::Hello {
+        env_id: cfg.env_id as u32,
+        rank: cfg.rank as u32,
+        pid: std::process::id(),
+        n_obs: n_obs as u32,
+        version: PROTOCOL_VERSION,
+    }
+}
+
+fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
+    let stdin = io::stdin();
+    let mut stdin = stdin.lock();
+
+    if cfg.rank > 0 {
+        // placement rank: hold the core, heartbeat, wait for shutdown
+        send(out, &hello(cfg, 0))?;
+        while let Some(frame) = wire::read_frame(&mut stdin)? {
+            if matches!(frame, Frame::Shutdown) {
+                break;
+            }
+        }
+        return Ok(());
+    }
+
+    // a *missing* manifest selects the artifact-free path (surrogate +
+    // native policy); a present-and-broken one is a real error
+    let manifest = Manifest::load_optional(&cfg.artifact_dir)?;
+    let (mut env, mut lp, policy) = build_worker(
+        cfg.env_id,
+        &cfg.artifact_dir,
+        &cfg.work_dir,
+        &cfg.variant,
+        &cfg.scenario,
+        cfg.io_mode,
+        cfg.seed,
+        cfg.backend,
+        manifest.as_ref(),
+    )
+    .context("env worker setup failed")?;
+    send(out, &hello(cfg, env.n_obs()))?;
+
+    let mut params: Arc<Vec<f32>> = Arc::new(Vec::new());
+    while let Some(frame) = wire::read_frame(&mut stdin)? {
+        match frame {
+            Frame::SetParams { params: p } => params = Arc::new(p),
+            Frame::Rollout {
+                horizon,
+                episode,
+                episode_seed,
+            } => {
+                maybe_crash(cfg, episode);
+                let eo = run_episode(
+                    cfg.env_id,
+                    env.as_mut(),
+                    &mut lp,
+                    &policy,
+                    &params,
+                    horizon as usize,
+                    cfg.seed ^ episode_seed,
+                )?;
+                send(
+                    out,
+                    &Frame::Episode {
+                        env_id: cfg.env_id as u32,
+                        stats: eo.stats,
+                        traj: eo.traj,
+                    },
+                )?;
+            }
+            Frame::Reset => {
+                let obs = env.reset()?;
+                send(out, &Frame::Obs { obs })?;
+            }
+            Frame::Step { action } => {
+                let result = env.step(action)?;
+                send(out, &Frame::StepOut { result })?;
+            }
+            Frame::Shutdown => break,
+            Frame::Heartbeat => {}
+            other => anyhow::bail!("unexpected coordinator frame {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// Chaos hook behind `train --chaos <env>:<episode>` (the executor
+/// exports it as `DRLFOAM_WORKER_CRASH`): the matching rank-0 worker
+/// dies by fatal signal immediately after *receiving* that episode's
+/// Rollout — exactly the SIGKILL-mid-dispatch shape the fault-recovery
+/// tests and the CI smoke assert on. A tombstone file in the shared work
+/// dir makes it a one-shot: the respawned twin runs the replay instead
+/// of re-crashing.
+fn maybe_crash(cfg: &WorkerConfig, episode: u64) {
+    let Ok(spec) = std::env::var("DRLFOAM_WORKER_CRASH") else {
+        return;
+    };
+    let Some((e, ep)) = spec.split_once(':') else {
+        return;
+    };
+    match (e.trim().parse::<usize>(), ep.trim().parse::<u64>()) {
+        (Ok(want_env), Ok(want_ep)) if want_env == cfg.env_id && want_ep == episode => {}
+        _ => return,
+    }
+    let marker = cfg
+        .work_dir
+        .join(format!("chaos-env{}-ep{episode}.tombstone", cfg.env_id));
+    if marker.exists() {
+        return;
+    }
+    let _ = std::fs::write(&marker, b"chaos hook fired here once\n");
+    let _ = io::stderr().flush();
+    std::process::abort();
+}

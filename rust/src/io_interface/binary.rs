@@ -39,13 +39,16 @@ impl BinaryExchange {
     }
 }
 
-fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+/// Pack f32s little-endian, bit-exact (shared with the exec wire
+/// protocol, `crate::exec::wire`, which reuses this encoding).
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-fn get_f32s(bytes: &[u8], n: usize, off: &mut usize) -> Result<Vec<f32>> {
+/// Inverse of [`put_f32s`]: read `n` f32s at `*off`, advancing it.
+pub(crate) fn get_f32s(bytes: &[u8], n: usize, off: &mut usize) -> Result<Vec<f32>> {
     ensure!(bytes.len() >= *off + 4 * n, "binary record truncated");
     let out = bytes[*off..*off + 4 * n]
         .chunks_exact(4)

@@ -83,7 +83,7 @@ pub struct FlowSnapshot<'a> {
 }
 
 /// Cost accounting for one exchange (consumed by metrics + DES calibration).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct IoStats {
     pub bytes_written: u64,
     pub bytes_read: u64,

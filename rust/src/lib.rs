@@ -12,10 +12,12 @@
 //! * **L3** this crate: PJRT runtime, the scenario registry of
 //!   environments (cylinder CFD at two Reynolds numbers + an analytic
 //!   surrogate), PPO trainer, multi-environment coordinator with per-env
-//!   or central batched policy inference, the three CFD<->DRL exchange
-//!   interfaces, the cluster discrete-event simulator that regenerates the
-//!   paper's tables/figures, the allocation planner that searches the
-//!   hybrid (envs x ranks x sync x io) layout space over it, and the CLI.
+//!   or central batched policy inference, the execution backends that
+//!   realise a layout as OS threads or real `drlfoam worker` processes
+//!   (rust/src/exec), the three CFD<->DRL exchange interfaces, the
+//!   cluster discrete-event simulator that regenerates the paper's
+//!   tables/figures, the allocation planner that searches the hybrid
+//!   (envs x ranks x sync x io) layout space over it, and the CLI.
 //!
 //! README.md covers the quickstart; ARCHITECTURE.md maps every module to
 //! the paper section it implements.
@@ -25,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod drl;
 pub mod env;
+pub mod exec;
 pub mod io_interface;
 pub mod metrics;
 pub mod reproduce;

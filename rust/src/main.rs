@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   train       — multi-environment PPO training on a selected scenario
-//!                 (--layout auto plans envs/sync/io before training)
+//!                 (--layout auto plans envs/ranks/sync/io before training,
+//!                 --executor picks threads or real worker processes)
+//!   worker      — one environment rank behind the exec wire protocol
+//!                 (spawned by `--executor multi-process` via self-exec)
 //!   episode     — roll out a single episode and print per-period stats
 //!   scenarios   — list the scenario registry
 //!   calibrate   — measure per-component costs, write out/calib.json
@@ -22,26 +25,37 @@ use anyhow::{bail, Context, Result};
 
 use drlfoam::cluster::{planner, simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
-use drlfoam::coordinator::{train, InferenceMode, LocalPolicy, SyncPolicy, TrainConfig};
+use drlfoam::coordinator::{train, EnvPool, InferenceMode, LocalPolicy, PoolConfig, SyncPolicy, TrainConfig};
 use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
+use drlfoam::exec::ExecutorKind;
 use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
 use drlfoam::env::Environment;
 use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
 
-const USAGE: &str = "usage: drlfoam <train|episode|scenarios|calibrate|reproduce|simulate|plan|info> [options]
+const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|reproduce|simulate|plan|info> [options]
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
-             --sync full|partial:<k>|async --layout manual|auto [--quiet]
-             (--scenario surrogate trains with no artifacts: native backends are
-              auto-selected when artifacts/ is absent. --sync partial:<k> updates
-              on any k of N trajectories; --async is a deprecated alias for
-              --sync async. --layout auto measures a small calibration, plans the
-              (envs, sync, io) layout under --cores [default: this machine's
-              cores], applies the winner, and writes out/plan.csv; axes passed
-              explicitly (--envs/--sync/--io) are pinned, not searched.)
+             --sync full|partial:<k>|async --executor in-process|multi-process
+             --ranks N --layout manual|auto [--quiet]
+             (--scenario surrogate|analytic trains with no artifacts: native
+              backends are auto-selected when artifacts/ is absent. --sync
+              partial:<k> updates on any k of N trajectories. --executor
+              multi-process runs each environment as a group of --ranks real
+              `drlfoam worker` OS processes with heartbeat fault handling: a
+              dead worker is respawned and its episode re-queued; --chaos
+              <env>:<episode> injects one such crash. --layout auto measures a
+              small calibration — through the worker processes when the
+              executor is multi-process — plans the (envs, ranks, sync, io)
+              layout under --cores [default: this machine's cores], applies
+              the winner, and writes out/plan.csv; axes passed explicitly
+              (--envs/--ranks/--sync/--io, and --executor itself) are pinned,
+              not searched.)
+  worker:    --env-id N --rank N --heartbeat-ms N (internal: spawned by
+             --executor multi-process; speaks length-prefixed binary frames
+             on stdin/stdout — not for interactive use)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
              (--scenario surrogate runs without artifacts)
   scenarios: list selectable scenarios
@@ -72,12 +86,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "horizon", "iterations", "epochs", "io", "inference", "backend",
         "update-backend", "sync", "episodes", "periods", "calib", "policy",
         "work-dir", "log-every", "layout", "cores", "objective", "syncs",
-        "ios", "staleness-weight",
+        "ios", "staleness-weight", "executor", "chaos", "env-id", "rank",
+        "heartbeat-ms",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
         "episode" => cmd_episode(&args),
         "scenarios" => cmd_scenarios(),
         "evaluate" => cmd_evaluate(&args),
@@ -94,20 +110,14 @@ fn out_dir(args: &Args) -> std::path::PathBuf {
     args.get_or("out", "out").into()
 }
 
-/// `--sync full|partial:<k>|async`, honouring the deprecated `--async`
-/// flag as an alias (train and simulate share the axis).
+/// `--sync full|partial:<k>|async` (train and simulate share the axis).
+/// The PR-3-era `--async` alias is gone; the parse-time error keeps
+/// pointing migrating scripts at the replacement.
 fn sync_policy(args: &Args) -> Result<SyncPolicy> {
-    let sync = SyncPolicy::parse(&args.get_or("sync", "full"))?;
     if args.has_flag("async") {
-        eprintln!("warning: --async is deprecated; use --sync async");
-        anyhow::ensure!(
-            args.get("sync").is_none() || sync == SyncPolicy::Async,
-            "--async conflicts with --sync {}",
-            sync.name()
-        );
-        return Ok(SyncPolicy::Async);
+        bail!("--async was removed; use --sync async");
     }
-    Ok(sync)
+    SyncPolicy::parse(&args.get_or("sync", "full"))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -123,6 +133,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         backend: PolicyBackendKind::parse(&args.get_or("backend", "xla"))?,
         update_backend: UpdateBackendKind::parse(&args.get_or("update-backend", "xla"))?,
         sync: sync_policy(args)?,
+        executor: ExecutorKind::parse(&args.get_or("executor", "in-process"))?,
+        ranks_per_env: args.usize_or("ranks", 1)?,
+        worker_bin: None,
+        fault_injection: args.get("chaos").map(|s| s.to_string()),
         horizon: args.usize_or("horizon", 100)?,
         iterations: args.usize_or("iterations", 100)?,
         epochs: args.usize_or("epochs", 4)?,
@@ -130,6 +144,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.usize_or("log-every", 1)?,
         quiet: args.has_flag("quiet"),
     };
+    anyhow::ensure!(cfg.ranks_per_env >= 1, "--ranks must be >= 1");
+    anyhow::ensure!(
+        cfg.ranks_per_env == 1 || cfg.executor == ExecutorKind::MultiProcess,
+        "--ranks {} needs --executor multi-process (in-process workers are single-rank)",
+        cfg.ranks_per_env
+    );
+    anyhow::ensure!(
+        cfg.fault_injection.is_none() || cfg.executor == ExecutorKind::MultiProcess,
+        "--chaos injects worker-process crashes and needs --executor multi-process"
+    );
     match args.get_or("layout", "manual").trim().to_ascii_lowercase().as_str() {
         "manual" => {}
         "auto" => auto_layout(args, &mut cfg)?,
@@ -139,17 +163,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     // be downgraded by the artifact-free fallback, so the *resolved*
     // engines are reported from inside the training setup instead
     println!(
-        "training: scenario={} variant={} envs={} horizon={} iterations={} io={} inference={} sync={}",
+        "training: scenario={} variant={} envs={} ranks={} horizon={} iterations={} io={} inference={} sync={} executor={}",
         cfg.scenario,
         cfg.variant,
         cfg.n_envs,
+        cfg.ranks_per_env,
         cfg.horizon,
         cfg.iterations,
         cfg.io_mode.name(),
         cfg.inference.name(),
-        cfg.sync.name()
+        cfg.sync.name(),
+        cfg.executor.name()
     );
     let summary = train(&cfg)?;
+    if summary.worker_restarts > 0 {
+        println!(
+            "worker restarts: {} (episodes re-queued; see {}/workers.csv)",
+            summary.worker_restarts,
+            cfg.out_dir.display()
+        );
+    }
     let first = summary.log.first().context("no iterations")?;
     let last = summary.log.last().context("no iterations")?;
     println!(
@@ -171,6 +204,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("learning curve: {}/train_log.csv", cfg.out_dir.display());
     Ok(())
+}
+
+/// `drlfoam worker`: one environment rank driven over the exec wire
+/// protocol on stdin/stdout. Spawned by `--executor multi-process` via
+/// self-exec — stdout carries binary frames, so nothing here may print
+/// to it (diagnostics go to stderr, inherited from the coordinator).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = drlfoam::exec::worker::WorkerConfig {
+        env_id: args.usize_or("env-id", 0)?,
+        rank: args.usize_or("rank", 0)?,
+        scenario: args.get_or("scenario", "surrogate"),
+        variant: args.get_or("variant", "small"),
+        artifact_dir: artifact_dir(args),
+        work_dir: args.get_or("work-dir", "out/work").into(),
+        io_mode: IoMode::parse(&args.get_or("io", "memory"))?,
+        backend: PolicyBackendKind::parse(&args.get_or("backend", "native"))?,
+        seed: args.u64_or("seed", 0)?,
+        heartbeat_ms: args.u64_or("heartbeat-ms", 200)?,
+    };
+    drlfoam::exec::worker::run(&cfg)
 }
 
 fn cmd_episode(args: &Args) -> Result<()> {
@@ -462,14 +515,19 @@ fn synth_traj(n_obs: usize, n: usize) -> drl::Trajectory {
     }
 }
 
-/// `train --layout auto`: search the (n_envs, sync, io) layout before
-/// training and apply the winner to the scheduler loop. The calibration
-/// is measured small — `--calib FILE` when given, otherwise a quick
-/// in-process measurement of the artifact-free surrogate pipeline — and
-/// the planner sweeps the `--cores` budget (default: this machine's
+/// `train --layout auto`: search the (n_envs, ranks, sync, io) layout
+/// before training and apply the winner to the scheduler loop. The
+/// calibration is measured small — `--calib FILE` when given; otherwise a
+/// quick measurement of the artifact-free surrogate pipeline, run
+/// *through real `drlfoam worker` processes* when the executor is
+/// multi-process ([`process_calibration`]) and in-process otherwise —
+/// and the planner sweeps the `--cores` budget (default: this machine's
 /// available parallelism). Axes pinned explicitly on the command line
-/// (`--envs`, `--sync`, `--io`) are respected, not searched; the rank
-/// axis is fixed at 1 because the live loop runs single-rank envs.
+/// (`--envs`, `--ranks`, `--sync`, `--io`) are respected, not searched,
+/// and the requested `--executor` is never overridden. Without an
+/// explicit `--ranks` the rank axis stays at 1: live rank groups are
+/// placement-only (the in-repo CFD is single-core), so searching the
+/// axis would claim MPI speedups this run cannot realise.
 fn auto_layout(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
     let cores = match args.get("cores") {
         Some(_) => args.usize_or("cores", 1)?,
@@ -478,23 +536,28 @@ fn auto_layout(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
     let calib = match args.get("calib") {
         Some(p) => Calibration::load(std::path::Path::new(p))
             .with_context(|| format!("loading calibration {p}"))?,
+        None if cfg.executor == ExecutorKind::MultiProcess => process_calibration(cfg)?,
         None => quick_surrogate_calibration(&cfg.work_dir.join("auto-calib"), cfg.horizon, cfg.seed)?,
     };
     let mut pc = planner::PlannerConfig::new(cores);
-    pc.ranks_options = vec![1];
+    pc.ranks_options = if args.get("ranks").is_some() {
+        vec![cfg.ranks_per_env]
+    } else {
+        vec![1]
+    };
     // fixed total budget: what the run would consume with every core
     // hosting an environment (planning is comparative, not a promise)
     pc.episodes_total = (cfg.iterations * cores).max(1);
     pc.seed = cfg.seed;
     pc.objective = planner::Objective::parse(&args.get_or("objective", "time"))?;
     pc.staleness_weight = args.f64_or("staleness-weight", pc.staleness_weight)?;
-    // unlike `drlfoam plan`, the in-process loop can genuinely skip the
+    // unlike `drlfoam plan`, the live loop can genuinely skip the
     // filesystem, so the I/O-disabled mode is a real candidate here
     pc.io_options = vec![IoMode::Baseline, IoMode::Optimized, IoMode::InMemory];
     if args.get("envs").is_some() {
         pc.env_options = Some(vec![cfg.n_envs]);
     }
-    if args.get("sync").is_some() || args.has_flag("async") {
+    if args.get("sync").is_some() {
         pc.sync_options = vec![cfg.sync];
     }
     if args.get("io").is_some() {
@@ -508,16 +571,75 @@ fn auto_layout(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
         println!("{}", set.render(8));
     }
     println!(
-        "layout auto: envs={} sync={} io={} ({} of {} cores; ranking in {}/plan.csv)",
+        "layout auto: envs={} ranks={} sync={} io={} executor={} ({} of {} cores; ranking in {}/plan.csv)",
         best.n_envs,
+        best.n_ranks,
         best.sync.name(),
         best.io_mode.name(),
+        cfg.executor.name(),
         best.total_cpus,
         cores,
         cfg.out_dir.display()
     );
     cfg.apply_plan(&best);
     Ok(())
+}
+
+/// Measure the artifact-free surrogate pipeline THROUGH the multi-process
+/// executor: a small pool of real `drlfoam worker` processes rolls a few
+/// episodes per exchange mode, and the per-worker telemetry supplies the
+/// period/exchange costs — so `--layout auto --executor multi-process`
+/// calibrates from real process timings (pipe hops, process scheduling
+/// and all) instead of the in-process surrogate. The policy-serving and
+/// PPO-minibatch costs are measured natively in this process, where they
+/// run under every executor.
+fn process_calibration(cfg: &TrainConfig) -> Result<Calibration> {
+    let reps = 8usize;
+    let n_envs = 2usize;
+    let measure = |mode: IoMode| -> Result<(f64, f64, f64)> {
+        let work = cfg.work_dir.join(format!("auto-calib-{}", mode.name()));
+        std::fs::create_dir_all(&work)?;
+        let pool_cfg = PoolConfig {
+            artifact_dir: work.join("no-artifacts"),
+            work_dir: work,
+            variant: cfg.variant.clone(),
+            scenario: "surrogate".into(),
+            backend: PolicyBackendKind::Native,
+            n_envs,
+            io_mode: mode,
+            seed: cfg.seed,
+            executor: ExecutorKind::MultiProcess,
+            ranks_per_env: 1,
+            worker_bin: cfg.worker_bin.clone(),
+            fault_injection: None,
+        };
+        let mut pool = EnvPool::standalone(&pool_cfg)?;
+        let params =
+            Arc::new(NativePolicy::new(pool.n_obs(), pool.hidden()).init_params(cfg.seed));
+        let outs = pool.rollout(&params, reps, 0)?;
+        let periods = (reps * outs.len()).max(1) as f64;
+        let cfd = outs.iter().map(|o| o.stats.cfd_s).sum::<f64>() / periods;
+        let cpu = outs.iter().map(|o| o.stats.io.total_s()).sum::<f64>() / periods;
+        let bytes = outs
+            .iter()
+            .map(|o| (o.stats.io.bytes_written + o.stats.io.bytes_read) as f64)
+            .sum::<f64>()
+            / periods;
+        Ok((cfd, cpu, bytes))
+    };
+    let (t_period, cpu_b, bytes_b) = measure(IoMode::Baseline)?;
+    let (_, cpu_o, bytes_o) = measure(IoMode::Optimized)?;
+    let (t_policy, t_update_mb) = native_policy_update_costs(cfg.seed)?;
+    Ok(Calibration::from_measured(
+        t_period.max(1e-7),
+        t_policy,
+        t_update_mb,
+        bytes_b.max(1.0),
+        bytes_o.max(1.0),
+        cpu_b,
+        cpu_o,
+        cfg.horizon.max(1),
+    ))
 }
 
 /// Measure the per-component costs of the artifact-free surrogate
@@ -558,8 +680,25 @@ fn quick_surrogate_calibration(
     };
     let (t_period, cpu_b, bytes_b) = measure(IoMode::Baseline)?;
     let (_, cpu_o, bytes_o) = measure(IoMode::Optimized)?;
+    let (t_policy, t_update_mb) = native_policy_update_costs(seed)?;
 
-    // native policy serving cost (the backend auto-selected artifact-free)
+    Ok(Calibration::from_measured(
+        t_period.max(1e-7),
+        t_policy,
+        t_update_mb,
+        bytes_b.max(1.0),
+        bytes_o.max(1.0),
+        cpu_b,
+        cpu_o,
+        horizon.max(1),
+    ))
+}
+
+/// Native policy-serving and PPO-minibatch costs, measured in this
+/// process (both components run on the coordinator/master under every
+/// executor, so one measurement serves both calibration paths).
+fn native_policy_update_costs(seed: u64) -> Result<(f64, f64)> {
+    // policy serving (the backend auto-selected artifact-free)
     let net = NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN);
     let params = net.init_params(seed);
     let obs = vec![0.1f32; SURROGATE_N_OBS];
@@ -569,7 +708,7 @@ fn quick_surrogate_calibration(
     }
     let t_policy = t0.elapsed().as_secs_f64() / 200.0;
 
-    // native PPO minibatch cost
+    // PPO minibatch
     let updater = drl::NativeUpdater::new(
         SURROGATE_N_OBS,
         SURROGATE_HIDDEN,
@@ -585,18 +724,7 @@ fn quick_surrogate_calibration(
         let st = trainer.update(drl::TrainerBackend::Native(&updater), &batch, &mut rng)?;
         mbs += st.minibatches;
     }
-    let t_update_mb = t0.elapsed().as_secs_f64() / mbs.max(1) as f64;
-
-    Ok(Calibration::from_measured(
-        t_period.max(1e-7),
-        t_policy,
-        t_update_mb,
-        bytes_b.max(1.0),
-        bytes_o.max(1.0),
-        cpu_b,
-        cpu_o,
-        horizon.max(1),
-    ))
+    Ok((t_policy, t0.elapsed().as_secs_f64() / mbs.max(1) as f64))
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {

@@ -1,0 +1,271 @@
+//! Execution-backend integration: the multi-process executor (real
+//! `drlfoam worker` OS processes over the wire protocol) must be
+//! *indistinguishable* from the in-process golden reference — bitwise —
+//! and must survive losing workers: a SIGKILL'd worker is respawned and
+//! its episode re-queued with the identical seed, so even a faulted run
+//! reproduces the fault-free learning curve.
+//!
+//! Everything runs artifact-free (surrogate scenario, native backends).
+//! The worker binary is resolved via `CARGO_BIN_EXE_drlfoam` (the test
+//! executable itself has no `worker` subcommand); when Cargo does not
+//! provide it, the suite skips gracefully.
+
+use std::sync::Arc;
+
+use drlfoam::coordinator::{train, EnvPool, PolicyServer, PoolConfig, SyncPolicy, TrainConfig};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::exec::ExecutorKind;
+use drlfoam::io_interface::IoMode;
+use drlfoam::metrics::parse_csv;
+
+fn worker_bin() -> Option<std::path::PathBuf> {
+    option_env!("CARGO_BIN_EXE_drlfoam").map(Into::into)
+}
+
+macro_rules! require_worker_bin {
+    () => {
+        match worker_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: CARGO_BIN_EXE_drlfoam not provided by cargo");
+                return;
+            }
+        }
+    };
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("drlfoam-exec-{tag}-{}", std::process::id()))
+}
+
+fn train_cfg(tag: &str, executor: ExecutorKind) -> TrainConfig {
+    let root = scratch(tag);
+    TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root.clone(),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        executor,
+        worker_bin: worker_bin(),
+        n_envs: 2,
+        io_mode: IoMode::InMemory,
+        horizon: 5,
+        iterations: 3,
+        epochs: 2,
+        seed: 11,
+        log_every: 1,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+fn pool_cfg(tag: &str, executor: ExecutorKind, n_envs: usize) -> PoolConfig {
+    let root = scratch(tag);
+    std::fs::create_dir_all(root.join("work")).unwrap();
+    PoolConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        n_envs,
+        io_mode: IoMode::InMemory,
+        seed: 5,
+        executor,
+        worker_bin: worker_bin(),
+        ..PoolConfig::default()
+    }
+}
+
+/// The learning-curve columns of train_log.csv: everything before the
+/// wall-clock fields (the first 9 of 14).
+fn learning_rows(out_dir: &std::path::Path) -> Vec<String> {
+    let csv = std::fs::read_to_string(out_dir.join("train_log.csv")).unwrap();
+    csv.lines()
+        .skip(1)
+        .map(|l| l.splitn(15, ',').take(9).collect::<Vec<_>>().join(","))
+        .collect()
+}
+
+#[test]
+fn multi_process_spawns_real_worker_processes() {
+    let _ = require_worker_bin!();
+    let mut pool = EnvPool::standalone(&pool_cfg("spawn", ExecutorKind::MultiProcess, 2)).unwrap();
+    assert_eq!(pool.executor(), ExecutorKind::MultiProcess);
+    let pids = pool.worker_pids();
+    assert_eq!(pids.len(), 2, "one OS process per environment");
+    assert!(
+        pids.iter().all(|&p| p != std::process::id()),
+        "workers must be real child processes, not this test"
+    );
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(5));
+    let outs = pool.rollout(&params, 4, 0).unwrap();
+    assert_eq!(outs.len(), 2);
+    assert!(outs.iter().all(|o| o.traj.transitions.len() == 4));
+    // per-worker telemetry accumulates across the pipe
+    assert!(pool.telemetry().iter().all(|t| t.episodes == 1));
+    assert_eq!(pool.restarts(), 0);
+}
+
+#[test]
+fn rank_groups_spawn_a_process_per_rank() {
+    let _ = require_worker_bin!();
+    let mut cfg = pool_cfg("ranks", ExecutorKind::MultiProcess, 2);
+    cfg.ranks_per_env = 2;
+    let mut pool = EnvPool::standalone(&cfg).unwrap();
+    // 2 envs x 2 ranks: rank 0 works, rank 1 holds its placement core
+    assert_eq!(pool.worker_pids().len(), 4);
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(5));
+    let outs = pool.rollout(&params, 3, 0).unwrap();
+    assert_eq!(outs.len(), 2);
+}
+
+#[test]
+fn in_process_rejects_rank_groups() {
+    let mut cfg = pool_cfg("ranks-ip", ExecutorKind::InProcess, 1);
+    cfg.ranks_per_env = 2;
+    let err = EnvPool::standalone(&cfg).unwrap_err().to_string();
+    assert!(err.contains("multi-process"), "{err}");
+}
+
+#[test]
+fn multi_process_episodes_match_in_process_bitwise() {
+    let _ = require_worker_bin!();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(21));
+    let mut ip = EnvPool::standalone(&pool_cfg("bit-ip", ExecutorKind::InProcess, 3)).unwrap();
+    let a = ip.rollout(&params, 6, 2).unwrap();
+    let mut mp = EnvPool::standalone(&pool_cfg("bit-mp", ExecutorKind::MultiProcess, 3)).unwrap();
+    let b = mp.rollout(&params, 6, 2).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.env_id, y.env_id);
+        // Trajectory: PartialEq over every action/logp/reward/value/obs
+        // f64/f32 — the wire protocol must be bit-transparent
+        assert_eq!(x.traj, y.traj, "env {}", x.env_id);
+        assert_eq!(x.stats.reward_sum, y.stats.reward_sum);
+    }
+}
+
+#[test]
+fn multi_process_lockstep_batched_matches_in_process() {
+    let _ = require_worker_bin!();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(8));
+    let mut server_a = PolicyServer::native(SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let mut ip = EnvPool::standalone(&pool_cfg("lk-ip", ExecutorKind::InProcess, 2)).unwrap();
+    let a = ip.rollout_batched(None, &mut server_a, &params, 5, 1).unwrap();
+    let mut server_b = PolicyServer::native(SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let mut mp = EnvPool::standalone(&pool_cfg("lk-mp", ExecutorKind::MultiProcess, 2)).unwrap();
+    let b = mp.rollout_batched(None, &mut server_b, &params, 5, 1).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.env_id, y.env_id);
+        assert_eq!(x.traj, y.traj, "env {}", x.env_id);
+    }
+}
+
+#[test]
+fn training_runs_are_bitwise_identical_across_backends() {
+    // the acceptance criterion: identical learning CSV under --sync full
+    let _ = require_worker_bin!();
+    let cfg_ip = train_cfg("train-ip", ExecutorKind::InProcess);
+    assert_eq!(cfg_ip.sync, SyncPolicy::Full);
+    let a = train(&cfg_ip).expect("in-process training failed");
+    let rows_ip = learning_rows(&cfg_ip.out_dir);
+    std::fs::remove_dir_all(&cfg_ip.out_dir).ok();
+
+    let cfg_mp = train_cfg("train-mp", ExecutorKind::MultiProcess);
+    let b = train(&cfg_mp).expect("multi-process training failed");
+    let rows_mp = learning_rows(&cfg_mp.out_dir);
+    assert!(cfg_mp.out_dir.join("workers.csv").exists());
+    std::fs::remove_dir_all(&cfg_mp.out_dir).ok();
+
+    assert_eq!(rows_ip, rows_mp, "learning-curve CSV diverged across executors");
+    assert_eq!(a.final_params, b.final_params, "final parameters diverged");
+    assert_eq!(b.worker_restarts, 0);
+}
+
+#[test]
+fn sigkilled_worker_is_respawned_and_episode_requeued() {
+    let _ = require_worker_bin!();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(3));
+
+    // fault-free twin for the bitwise comparison
+    let mut twin = EnvPool::standalone(&pool_cfg("kill-twin", ExecutorKind::MultiProcess, 2)).unwrap();
+    let want = twin.rollout(&params, 5, 0).unwrap();
+
+    let mut pool = EnvPool::standalone(&pool_cfg("kill", ExecutorKind::MultiProcess, 2)).unwrap();
+    let pids_before = pool.worker_pids();
+    // SIGKILL env 0's worker, then dispatch into the carnage: whether the
+    // dispatch hits the broken pipe or the death notice races in later,
+    // the pool must respawn the worker and replay the episode
+    pool.kill_worker(0).unwrap();
+    let got = pool.rollout(&params, 5, 0).unwrap();
+
+    assert_eq!(got.len(), 2);
+    assert_eq!(pool.restarts(), 1, "exactly one worker restart");
+    assert_eq!(pool.restarts_by_env(), vec![1, 0]);
+    let pids_after = pool.worker_pids();
+    assert_ne!(pids_before[0], pids_after[0], "env 0 worker was respawned");
+    assert_eq!(pids_before[1], pids_after[1], "env 1 worker untouched");
+    // the re-queued episode replays the identical seed: bitwise equal to
+    // the fault-free twin, so recovery cannot perturb learning
+    for (x, y) in want.iter().zip(&got) {
+        assert_eq!(x.env_id, y.env_id);
+        assert_eq!(x.traj, y.traj, "env {}", x.env_id);
+    }
+}
+
+#[test]
+fn chaos_crash_mid_training_recovers_and_reproduces_the_run() {
+    // full scheduler loop: worker 0 aborts on receiving its 2nd episode
+    // (--chaos 0:1); training must complete with one recorded restart
+    // and a learning curve identical to the fault-free run
+    let _ = require_worker_bin!();
+    let clean_cfg = train_cfg("chaos-clean", ExecutorKind::MultiProcess);
+    let clean = train(&clean_cfg).expect("fault-free training failed");
+    let rows_clean = learning_rows(&clean_cfg.out_dir);
+    std::fs::remove_dir_all(&clean_cfg.out_dir).ok();
+
+    let mut cfg = train_cfg("chaos", ExecutorKind::MultiProcess);
+    cfg.fault_injection = Some("0:1".into());
+    let s = train(&cfg).expect("training with injected crash failed");
+    let rows = learning_rows(&cfg.out_dir);
+
+    assert_eq!(s.worker_restarts, 1, "summary must record the restart");
+    assert_eq!(rows, rows_clean, "recovery must not perturb the learning curve");
+    assert_eq!(clean.final_params, s.final_params);
+
+    // workers.csv records the per-env restart + telemetry schema
+    let text = std::fs::read_to_string(cfg.out_dir.join("workers.csv")).unwrap();
+    let (header, rows) = parse_csv(&text).unwrap();
+    assert_eq!(
+        header,
+        vec!["env_id", "episodes", "restarts", "wall_s", "cfd_s", "io_s", "policy_s"]
+    );
+    assert_eq!(rows.len(), cfg.n_envs);
+    assert_eq!(rows[0][2], "1", "env 0 restarted once");
+    assert_eq!(rows[1][2], "0");
+    let episodes: usize = rows.iter().map(|r| r[1].parse::<usize>().unwrap()).sum();
+    assert_eq!(episodes, cfg.n_envs * cfg.iterations);
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn worker_error_is_contextual_not_a_hang() {
+    // a worker whose setup fails (cylinder scenario, no artifacts) must
+    // surface the root cause through the process boundary
+    let _ = require_worker_bin!();
+    let mut cfg = pool_cfg("seterr", ExecutorKind::MultiProcess, 1);
+    cfg.scenario = "cylinder".into();
+    cfg.backend = PolicyBackendKind::Native;
+    let mut pool = EnvPool::standalone(&cfg).unwrap();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(1));
+    let err = pool
+        .rollout(&params, 3, 0)
+        .expect_err("setup failure must propagate")
+        .to_string();
+    assert!(err.contains("artifacts"), "{err}");
+}

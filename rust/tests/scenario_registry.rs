@@ -28,6 +28,7 @@ fn standalone_cfg(tag: &str, n_envs: usize, io_mode: IoMode) -> PoolConfig {
         n_envs,
         io_mode,
         seed: 9,
+        ..PoolConfig::default()
     }
 }
 

@@ -70,6 +70,7 @@ fn reference_sync_rows(cfg: &TrainConfig) -> (Vec<String>, Vec<f32>) {
         n_envs: cfg.n_envs,
         io_mode: cfg.io_mode,
         seed: cfg.seed,
+        ..PoolConfig::default()
     };
     std::fs::create_dir_all(&cfg.work_dir).unwrap();
     let mut pool = EnvPool::standalone(&pool_cfg).unwrap();
