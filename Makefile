@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke
+.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke shm-smoke
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -59,6 +59,25 @@ exec-smoke:
 	    --artifacts out/exec-smoke/no-artifacts \
 	    --out out/exec-smoke/chaos --work-dir out/exec-smoke/chaos/work \
 	    --envs 2 --horizon 10 --iterations 3
+
+# Shared-memory transport smoke: the artifact-free multi-process loop
+# once per transport, bitwise-diffed (learning columns of train_log.csv
+# + policy_final.bin), then the exec_transport bench's throughput gate
+# (shm lockstep steps/s must not fall below pipe).
+shm-smoke:
+	for t in pipe shm; do \
+	    cargo run --release --quiet -- train \
+	        --scenario surrogate --backend native --update-backend native \
+	        --executor multi-process --transport $$t \
+	        --artifacts out/shm-smoke/no-artifacts \
+	        --out out/shm-smoke/$$t --work-dir out/shm-smoke/$$t/work \
+	        --envs 2 --horizon 5 --iterations 2 --quiet || exit 1; \
+	done
+	cut -d, -f1-9 out/shm-smoke/pipe/train_log.csv > out/shm-smoke/pipe-learning.csv
+	cut -d, -f1-9 out/shm-smoke/shm/train_log.csv > out/shm-smoke/shm-learning.csv
+	cmp out/shm-smoke/pipe-learning.csv out/shm-smoke/shm-learning.csv
+	cmp out/shm-smoke/pipe/policy_final.bin out/shm-smoke/shm/policy_final.bin
+	cargo bench --bench exec_transport -- --gate
 
 # Rollout-scheduler smoke: the same artifact-free loop once per sync
 # policy (full episode barrier, partial barrier, async).

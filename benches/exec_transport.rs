@@ -1,26 +1,40 @@
 //! Bench: execution-backend transport costs — wire-protocol frame
 //! round-trip latency (encode + decode through a byte buffer) and live
-//! step/episode throughput per backend (in-process threads vs real
-//! `drlfoam worker` processes), surrogate scenario, zero artifacts.
+//! step/episode throughput per (executor, transport) lane: in-process
+//! threads, worker processes over pipes, and worker processes over the
+//! shared-memory seqlock rings. Surrogate scenario, zero artifacts.
 //!
 //! This is the price tag of closing the sim-to-real gap: how much the
-//! process boundary (pipe hops, frame packing, context switches) costs
-//! relative to the in-process channel path the DES was calibrated on.
+//! process boundary costs relative to the in-process channel path the
+//! DES was calibrated on — and how much of that price the shm data
+//! plane buys back. The lockstep (batched-inference) section is the
+//! data-plane-heavy path: every actuation period crosses the transport
+//! twice (Step out, StepOut back), so it is where pipe and shm actually
+//! separate.
 //!
 //! Run: `cargo bench --bench exec_transport`
+//!
+//! CI gate: `cargo bench --bench exec_transport -- --gate` runs only a
+//! quick best-of-N lockstep comparison and exits non-zero if shm step
+//! throughput falls below pipe — the sanity bar for the shm ring.
 
 use std::io::Cursor;
 use std::sync::Arc;
 
-use drlfoam::coordinator::{EnvPool, PoolConfig};
+use drlfoam::coordinator::{EnvPool, PolicyServer, PoolConfig};
 use drlfoam::drl::{NativePolicy, PolicyBackendKind};
 use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
 use drlfoam::exec::wire::{read_frame, write_frame, Frame};
-use drlfoam::exec::ExecutorKind;
+use drlfoam::exec::{ExecutorKind, TransportKind};
 use drlfoam::io_interface::IoMode;
 use drlfoam::util::bench;
 
-fn pool_cfg(tag: &str, executor: ExecutorKind, n_envs: usize) -> PoolConfig {
+fn pool_cfg(
+    tag: &str,
+    executor: ExecutorKind,
+    transport: TransportKind,
+    n_envs: usize,
+) -> PoolConfig {
     let root = std::env::temp_dir().join(format!("drlfoam-exectb-{tag}-{}", std::process::id()));
     std::fs::create_dir_all(root.join("work")).unwrap();
     PoolConfig {
@@ -33,10 +47,18 @@ fn pool_cfg(tag: &str, executor: ExecutorKind, n_envs: usize) -> PoolConfig {
         io_mode: IoMode::InMemory,
         seed: 1,
         executor,
+        transport,
         worker_bin: option_env!("CARGO_BIN_EXE_drlfoam").map(Into::into),
         ..PoolConfig::default()
     }
 }
+
+/// The three lanes of the conformance matrix's transport axis.
+const LANES: [(&str, ExecutorKind, TransportKind); 3] = [
+    ("in-process", ExecutorKind::InProcess, TransportKind::Pipe),
+    ("mp/pipe", ExecutorKind::MultiProcess, TransportKind::Pipe),
+    ("mp/shm", ExecutorKind::MultiProcess, TransportKind::Shm),
+];
 
 fn frame_roundtrip_bench(results: &mut Vec<bench::BenchResult>) {
     println!("== wire frames: encode + decode round trip ==");
@@ -70,27 +92,27 @@ fn frame_roundtrip_bench(results: &mut Vec<bench::BenchResult>) {
 
 fn throughput_bench(results: &mut Vec<bench::BenchResult>) {
     let horizon = 50usize;
-    println!("\n== step throughput per backend (surrogate, per-env inference) ==");
+    println!("\n== episode throughput per transport lane (surrogate, per-env inference) ==");
     println!(
         "{:<16} {:>5} {:>12} {:>14} {:>12}",
-        "executor", "envs", "wall ms", "steps/s", "vs threads"
+        "lane", "envs", "wall ms", "steps/s", "vs threads"
     );
     for envs in [2usize, 4] {
         let mut t_inproc = 0.0f64;
-        for kind in [ExecutorKind::InProcess, ExecutorKind::MultiProcess] {
+        for (name, kind, transport) in LANES {
             if kind == ExecutorKind::MultiProcess
                 && option_env!("CARGO_BIN_EXE_drlfoam").is_none()
             {
-                println!("{:<16} {:>5} (skipped: no worker binary)", kind.name(), envs);
+                println!("{:<16} {:>5} (skipped: no worker binary)", name, envs);
                 continue;
             }
-            let cfg = pool_cfg(&format!("{}{envs}", kind.name()), kind, envs);
+            let cfg = pool_cfg(&format!("{}{envs}", name.replace('/', "-")), kind, transport, envs);
             let mut pool = EnvPool::standalone(&cfg).unwrap();
             let params =
                 Arc::new(NativePolicy::new(pool.n_obs(), pool.hidden()).init_params(3));
             let mut iter = 0u64;
             let r = bench::bench(
-                &format!("rollout {} x{envs} (horizon {horizon})", kind.name()),
+                &format!("rollout {name} x{envs} (horizon {horizon})"),
                 1,
                 5,
                 || {
@@ -104,7 +126,7 @@ fn throughput_bench(results: &mut Vec<bench::BenchResult>) {
             let steps_per_s = (envs * horizon) as f64 / r.mean_s;
             println!(
                 "{:<16} {:>5} {:>12.2} {:>14.0} {:>11.2}x",
-                kind.name(),
+                name,
                 envs,
                 r.mean_s * 1e3,
                 steps_per_s,
@@ -115,9 +137,90 @@ fn throughput_bench(results: &mut Vec<bench::BenchResult>) {
     }
 }
 
+/// Best-of-N lockstep wall time for one lane: `reps` batched rollouts,
+/// minimum taken (min is the robust statistic for a throughput gate —
+/// scheduling noise only ever adds time).
+fn lockstep_best_s(
+    name: &str,
+    kind: ExecutorKind,
+    transport: TransportKind,
+    envs: usize,
+    horizon: usize,
+    reps: usize,
+) -> f64 {
+    let cfg = pool_cfg(&format!("lk-{}", name.replace('/', "-")), kind, transport, envs);
+    let mut pool = EnvPool::standalone(&cfg).unwrap();
+    let params = Arc::new(NativePolicy::new(pool.n_obs(), pool.hidden()).init_params(3));
+    let mut server = PolicyServer::native(pool.n_obs(), pool.hidden());
+    // warmup spins the workers (and, for shm, maps the rings)
+    pool.rollout_batched(None, &mut server, &params, horizon, 0).unwrap();
+    let mut best = f64::INFINITY;
+    for rep in 0..reps {
+        let t0 = std::time::Instant::now();
+        pool.rollout_batched(None, &mut server, &params, horizon, 1 + rep as u64)
+            .unwrap();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn lockstep_bench(results: &mut Vec<bench::BenchResult>) {
+    let (envs, horizon) = (2usize, 50usize);
+    println!("\n== lockstep step throughput (batched inference; 2 transport hops/step) ==");
+    if option_env!("CARGO_BIN_EXE_drlfoam").is_none() {
+        println!("(skipped: no worker binary)");
+        return;
+    }
+    for (name, kind, transport) in LANES {
+        let cfg = pool_cfg(&format!("lkb-{}", name.replace('/', "-")), kind, transport, envs);
+        let mut pool = EnvPool::standalone(&cfg).unwrap();
+        let params = Arc::new(NativePolicy::new(pool.n_obs(), pool.hidden()).init_params(3));
+        let mut server = PolicyServer::native(pool.n_obs(), pool.hidden());
+        let mut iter = 0u64;
+        let r = bench::bench(&format!("lockstep {name} x{envs} (horizon {horizon})"), 1, 5, || {
+            pool.rollout_batched(None, &mut server, &params, horizon, iter).unwrap();
+            iter += 1;
+        });
+        let steps_per_s = (envs * horizon) as f64 / r.mean_s;
+        println!("    -> {steps_per_s:.0} steps/s");
+        results.push(r);
+    }
+}
+
+/// `--gate`: the CI sanity bar. Quick best-of-N lockstep comparison;
+/// exits 1 if the shm data plane delivers fewer steps/s than the pipe
+/// it is supposed to beat.
+fn gate() -> ! {
+    if option_env!("CARGO_BIN_EXE_drlfoam").is_none() {
+        println!("gate skipped: no worker binary");
+        std::process::exit(0);
+    }
+    let (envs, horizon, reps) = (2usize, 50usize, 7usize);
+    let pipe_s = lockstep_best_s("gate-pipe", ExecutorKind::MultiProcess, TransportKind::Pipe, envs, horizon, reps);
+    let shm_s = lockstep_best_s("gate-shm", ExecutorKind::MultiProcess, TransportKind::Shm, envs, horizon, reps);
+    let steps = (envs * horizon) as f64;
+    println!(
+        "gate: pipe {:.0} steps/s (best {:.2} ms), shm {:.0} steps/s (best {:.2} ms)",
+        steps / pipe_s,
+        pipe_s * 1e3,
+        steps / shm_s,
+        shm_s * 1e3
+    );
+    if shm_s > pipe_s {
+        eprintln!("GATE FAILED: shm lockstep throughput below pipe");
+        std::process::exit(1);
+    }
+    println!("gate OK: shm >= pipe");
+    std::process::exit(0);
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--gate") {
+        gate();
+    }
     let mut results = Vec::new();
     frame_roundtrip_bench(&mut results);
     throughput_bench(&mut results);
+    lockstep_bench(&mut results);
     bench::save("exec_transport", &results);
 }

@@ -19,6 +19,9 @@
 #                            `drlfoam worker` OS processes, plus a
 #                            chaos run (worker SIGKILL'd mid-training
 #                            -> respawn + episode re-queue)
+#  10. shm transport smoke   --transport shm train bitwise-diffed against
+#                            --transport pipe, then the exec_transport
+#                            bench's --gate (shm steps/s >= pipe)
 #
 # Integration tests that execute AOT artifacts skip themselves gracefully
 # when `make artifacts` has not been run; the scenario-registry and
@@ -146,5 +149,39 @@ cargo run --release --quiet -- train \
     --horizon 5 --iterations 2 --quiet
 test -f "$EXAUTO_OUT/plan.csv"
 test -f "$EXAUTO_OUT/train_log.csv"
+
+# 9d. shm transport smoke: the same artifact-free loop over the
+#     shared-memory seqlock rings, then bitwise-diffed against the pipe
+#     transport — the learning-curve columns of train_log.csv (wall-clock
+#     columns 10-14 legitimately differ) and the final parameter vector
+#     must be identical. This is the CI-sized slice of the transport
+#     conformance matrix (rust/tests/exec_transport_conformance.rs).
+echo "== shm transport smoke (--transport shm, bitwise vs pipe)"
+SHM_OUT=out/ci-shm-smoke
+rm -rf "$SHM_OUT"
+for t in pipe shm; do
+    cargo run --release --quiet -- train \
+        --scenario surrogate --backend native --update-backend native \
+        --executor multi-process --transport "$t" \
+        --artifacts "$SHM_OUT/no-artifacts" \
+        --out "$SHM_OUT/$t" --work-dir "$SHM_OUT/$t/work" \
+        --envs 2 --horizon 5 --iterations 2 --quiet
+    test -f "$SHM_OUT/$t/train_log.csv"
+    test -f "$SHM_OUT/$t/policy_final.bin"
+done
+cut -d, -f1-9 "$SHM_OUT/pipe/train_log.csv" > "$SHM_OUT/pipe-learning.csv"
+cut -d, -f1-9 "$SHM_OUT/shm/train_log.csv" > "$SHM_OUT/shm-learning.csv"
+cmp "$SHM_OUT/pipe-learning.csv" "$SHM_OUT/shm-learning.csv"
+cmp "$SHM_OUT/pipe/policy_final.bin" "$SHM_OUT/shm/policy_final.bin"
+# ring files must not outlive the run
+if ls "$SHM_OUT"/shm/work/*.ring >/dev/null 2>&1; then
+    echo "shm smoke FAILED: ring files left behind" >&2
+    exit 1
+fi
+
+# 9e. transport throughput gate: the shm data plane must not be slower
+#     than the pipe it replaces on the lockstep (data-plane-heavy) path.
+echo "== shm throughput gate (cargo bench exec_transport -- --gate)"
+cargo bench --bench exec_transport -- --gate
 
 echo "CI OK"

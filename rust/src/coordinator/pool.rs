@@ -33,7 +33,7 @@ use crate::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_
 use crate::env::Environment;
 use crate::exec::inprocess::InProcessExecutor;
 use crate::exec::process::ProcessExecutor;
-use crate::exec::{Executor, ExecutorKind, Job, LockstepReply};
+use crate::exec::{Executor, ExecutorKind, Job, LockstepReply, TransportKind};
 use crate::io_interface::{IoMode, IoStats};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
@@ -63,10 +63,16 @@ pub struct PoolConfig {
     /// point this at the real `drlfoam` binary, since *their* own
     /// executable has no `worker` subcommand).
     pub worker_bin: Option<std::path::PathBuf>,
-    /// Chaos hook `"<env>:<episode>"`: that worker aborts once upon
-    /// receiving that episode's dispatch (multi-process only; drives the
-    /// fault-recovery tests and `train --chaos`).
+    /// Chaos hook `"<env>:<episode>[:midframe]"`: that worker aborts
+    /// once upon receiving that episode's dispatch — with `midframe`,
+    /// after also leaving a partially written frame on each channel
+    /// (multi-process only; drives the fault-recovery tests and
+    /// `train --chaos`).
     pub fault_injection: Option<String>,
+    /// Data plane of the multi-process executor: every frame over the
+    /// worker pipes, or data frames over shared-memory seqlock rings
+    /// with the pipe as control channel + fallback (`--transport`).
+    pub transport: TransportKind,
 }
 
 impl Default for PoolConfig {
@@ -84,6 +90,7 @@ impl Default for PoolConfig {
             ranks_per_env: 1,
             worker_bin: None,
             fault_injection: None,
+            transport: TransportKind::Pipe,
         }
     }
 }
@@ -186,6 +193,11 @@ impl EnvPool {
                     "in-process workers are single-rank (got ranks_per_env = {}); \
                      use --executor multi-process to spawn rank groups",
                     cfg.ranks_per_env
+                );
+                anyhow::ensure!(
+                    cfg.transport == TransportKind::Pipe,
+                    "--transport {} needs worker processes; use --executor multi-process",
+                    cfg.transport.name()
                 );
                 Box::new(InProcessExecutor::spawn(cfg, manifest)?)
             }

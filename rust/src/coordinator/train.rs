@@ -28,7 +28,7 @@ use crate::drl::native_update::{NativeUpdater, PpoHyperParams, DEFAULT_GAE_LAMBD
 use crate::drl::policy::{NativePolicy, PolicyBackendKind};
 use crate::drl::{PpoTrainer, TrainerBackend, UpdateBackendKind};
 use crate::env::scenario::{self, ScenarioKind, SURROGATE_HIDDEN, SURROGATE_N_OBS};
-use crate::exec::ExecutorKind;
+use crate::exec::{ExecutorKind, TransportKind};
 use crate::io_interface::IoMode;
 use crate::runtime::{Manifest, Runtime};
 
@@ -91,9 +91,14 @@ pub struct TrainConfig {
     /// Binary to self-exec for multi-process workers; `None` uses
     /// `current_exe()` (integration tests override this).
     pub worker_bin: Option<std::path::PathBuf>,
-    /// Chaos hook `"<env>:<episode>"` (`--chaos`): that worker aborts
-    /// once on receiving that episode, exercising respawn + re-queue.
+    /// Chaos hook `"<env>:<episode>[:midframe]"` (`--chaos`): that
+    /// worker aborts once on receiving that episode (with `midframe`,
+    /// leaving partially written frames), exercising respawn + re-queue.
     pub fault_injection: Option<String>,
+    /// Multi-process data plane (`--transport pipe|shm`): worker pipes
+    /// for everything, or shared-memory seqlock rings for the data
+    /// frames with the pipe as control channel + fallback.
+    pub transport: TransportKind,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
     /// training iterations == episodes per environment (the episode
@@ -145,6 +150,7 @@ impl Default for TrainConfig {
             ranks_per_env: 1,
             worker_bin: None,
             fault_injection: None,
+            transport: TransportKind::Pipe,
             horizon: 100,
             iterations: 100,
             epochs: 4,
@@ -262,6 +268,7 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
         ranks_per_env: cfg.ranks_per_env,
         worker_bin: cfg.worker_bin.clone(),
         fault_injection: cfg.fault_injection.clone(),
+        transport: cfg.transport,
     };
     let pool = match &manifest {
         Some(m) => EnvPool::new(&pool_cfg, m)?,

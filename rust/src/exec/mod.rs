@@ -15,7 +15,11 @@
 //!   backends produce bitwise-identical learning CSVs);
 //! * [`process`] — worker processes spawned via `drlfoam worker`
 //!   self-exec, speaking the length-prefixed binary protocol of
-//!   [`wire`] over stdin/stdout. Supports `ranks_per_env > 1` by
+//!   [`wire`] over stdin/stdout. With `--transport shm` the *data*
+//!   frames (actions out, observations/step results/episodes back) move
+//!   through per-worker memory-mapped seqlock rings ([`shm`]) instead,
+//!   while the pipe remains the control channel and the per-frame
+//!   fallback — see [`TransportKind`]. Supports `ranks_per_env > 1` by
 //!   spawning *rank groups* (rank 0 does the work; ranks 1.. are
 //!   placement/heartbeat members, since the in-repo CFD is
 //!   single-core), plus heartbeat/timeout fault handling: a dead
@@ -46,6 +50,7 @@
 
 pub mod inprocess;
 pub mod process;
+pub mod shm;
 pub mod wire;
 pub mod worker;
 
@@ -118,6 +123,39 @@ impl ExecutorKind {
     }
 }
 
+/// Which data plane the multi-process backend moves frames over
+/// (`--transport pipe|shm`). Irrelevant for the in-process backend,
+/// which never serialises anything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Every frame over the worker's stdin/stdout pipes (default).
+    Pipe,
+    /// Data frames over memory-mapped seqlock rings ([`shm`]); the pipe
+    /// stays the control channel and the fallback when ring setup fails
+    /// or a frame outgrows a slot.
+    Shm,
+}
+
+impl TransportKind {
+    /// Parse a CLI/config string (trimmed, case-insensitive); the error
+    /// lists the accepted values.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "pipe" | "stdio" => Ok(TransportKind::Pipe),
+            "shm" | "shared-memory" => Ok(TransportKind::Shm),
+            _ => anyhow::bail!("unknown transport {s:?} (accepted: pipe|stdio, shm|shared-memory)"),
+        }
+    }
+
+    /// Canonical name, inverse of [`TransportKind::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Pipe => "pipe",
+            TransportKind::Shm => "shm",
+        }
+    }
+}
+
 /// A set of `n_envs` workers the pool can drive: send [`Job`]s to a
 /// specific worker, receive finished episodes from any, receive lockstep
 /// replies. Implementations own fault handling — [`Executor::recv_episode`]
@@ -174,5 +212,19 @@ mod tests {
             err.contains("in-process") && err.contains("multi-process"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn transport_kind_parse_round_trips_and_lists_accepted() {
+        for t in [TransportKind::Pipe, TransportKind::Shm] {
+            assert_eq!(TransportKind::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(TransportKind::parse(" Stdio ").unwrap(), TransportKind::Pipe);
+        assert_eq!(
+            TransportKind::parse("SHARED-MEMORY").unwrap(),
+            TransportKind::Shm
+        );
+        let err = TransportKind::parse("tcp").unwrap_err().to_string();
+        assert!(err.contains("pipe") && err.contains("shm"), "{err}");
     }
 }

@@ -26,10 +26,22 @@
 //! perturb the learning curve. The lockstep (batched-inference) protocol
 //! completes its dispatch set together and has no per-episode unit to
 //! re-queue: a death mid-lockstep is a clean, contextual error instead.
+//!
+//! Transport (`--transport pipe|shm`): the pipe is always the control
+//! channel. Under `shm` each rank-0 worker additionally gets a pair of
+//! generation-keyed seqlock rings ([`super::shm`]) for the data frames —
+//! `Step` out, `Obs`/`StepOut`/`Episode` back. The worker acks the rings
+//! in its `Hello` (`shm: 1`); until then — or forever, if mapping failed
+//! on either side — every frame stays on the pipe. Both receive paths
+//! accept frames from both channels at all times, so mixed delivery is
+//! always correct. On respawn the replacement worker gets *fresh* ring
+//! files (new generation), so no stale ring state can leak into a
+//! recovered run.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -38,7 +50,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::pool::{EpisodeOut, PoolConfig};
 use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
-use crate::exec::{Executor, Job, LockstepReply};
+use crate::exec::{shm, Executor, Job, LockstepReply, TransportKind};
 
 /// How often a blocked receive wakes to re-check worker liveness.
 const LIVENESS_POLL: Duration = Duration::from_millis(250);
@@ -74,6 +86,31 @@ enum Event {
     },
 }
 
+/// Coordinator end of one worker's shm data plane (rank 0, `--transport
+/// shm`, ring creation succeeded).
+struct RingLink {
+    /// coordinator → worker ring (actions).
+    tx_ring: shm::Producer,
+    /// Set by the reader thread when the worker's `Hello` acks the rings
+    /// (`shm: 1`). Gates only our *send* side — the worker may fall back
+    /// to the pipe unilaterally, and frames are accepted from both
+    /// channels regardless.
+    shm_active: Arc<AtomicBool>,
+    /// Tells the detached ring-reader thread to exit (respawn/shutdown).
+    stop: Arc<AtomicBool>,
+    /// Ring files, for cleanup — each generation gets fresh ones.
+    prefix: PathBuf,
+}
+
+impl RingLink {
+    fn teardown(&self) {
+        self.stop.store(true, Ordering::Release);
+        let (c2w, w2c) = shm::ring_paths(&self.prefix);
+        let _ = std::fs::remove_file(c2w);
+        let _ = std::fs::remove_file(w2c);
+    }
+}
+
 struct ChildProc {
     child: Child,
     /// `None` once shutdown closed the pipe.
@@ -81,6 +118,8 @@ struct ChildProc {
     pid: u32,
     generation: u64,
     last_seen: Arc<Mutex<Instant>>,
+    /// Shm data plane (rank-0 + `--transport shm` only).
+    ring: Option<RingLink>,
 }
 
 struct RankGroup {
@@ -99,6 +138,7 @@ struct SpawnSpec {
     io_mode: &'static str,
     seed: u64,
     fault_injection: Option<String>,
+    transport: TransportKind,
 }
 
 /// The rollout a worker currently owes us; replayed verbatim on respawn.
@@ -164,13 +204,10 @@ impl ProcessExecutor {
             io_mode: cfg.io_mode.name(),
             seed: cfg.seed,
             fault_injection: cfg.fault_injection.clone(),
+            transport: cfg.transport,
         };
-        let timeout = std::env::var("DRLFOAM_WORKER_TIMEOUT_S")
-            .ok()
-            .and_then(|v| v.trim().parse::<f64>().ok())
-            .filter(|s| *s > 0.0)
-            .map(Duration::from_secs_f64)
-            .unwrap_or(Duration::from_secs_f64(DEFAULT_TIMEOUT_S));
+        let timeout =
+            parse_worker_timeout(std::env::var("DRLFOAM_WORKER_TIMEOUT_S").ok().as_deref())?;
         let (tx, rx) = channel();
         let mut groups = Vec::with_capacity(cfg.n_envs);
         let mut next_generation = 0u64;
@@ -200,6 +237,31 @@ impl ProcessExecutor {
             lockstep: false,
             timeout,
         })
+    }
+
+    /// Send a *data* frame: over the shm ring when the worker has acked
+    /// it, over the pipe otherwise (including per-frame fallback when a
+    /// frame outgrows a ring slot). Control frames use [`Self::write_plain`]
+    /// directly.
+    fn write_data(&mut self, env_id: usize, frame: &Frame) -> Result<()> {
+        let timeout = self.timeout;
+        let sent = {
+            let g = &mut self.groups[env_id].primary;
+            match g.ring.as_mut() {
+                Some(link) if link.shm_active.load(Ordering::Acquire) => {
+                    let body = wire::encode(frame);
+                    link.tx_ring
+                        .push(&body, timeout)
+                        .with_context(|| format!("shm push to env worker {env_id}"))?
+                }
+                _ => false,
+            }
+        };
+        if sent {
+            Ok(())
+        } else {
+            self.write_plain(env_id, frame)
+        }
     }
 
     fn write_plain(&mut self, env_id: usize, frame: &Frame) -> Result<()> {
@@ -269,6 +331,9 @@ impl ProcessExecutor {
         self.consecutive_restarts[env_id] += 1;
         let old_pid = {
             let g = &mut self.groups[env_id].primary;
+            if let Some(link) = g.ring.take() {
+                link.teardown(); // stop the ring reader, unlink the files
+            }
             let _ = g.child.kill();
             let _ = g.child.wait(); // reap the zombie
             g.pid
@@ -410,7 +475,7 @@ impl Executor for ProcessExecutor {
             }
             Job::Step { action } => {
                 self.lockstep = true;
-                self.write_plain(env_id, &Frame::Step { action })
+                self.write_data(env_id, &Frame::Step { action })
                     .map_err(|e| self.send_failure(e))
             }
             Job::Shutdown => {
@@ -538,6 +603,9 @@ impl Drop for ProcessExecutor {
                 if let Some(mut w) = c.stdin.take() {
                     let _ = wire::write_frame(&mut w, &Frame::Shutdown);
                 } // dropping w closes the pipe
+                if let Some(link) = c.ring.take() {
+                    link.teardown();
+                }
             }
         }
         // ...then a bounded wait, then SIGKILL for stragglers
@@ -562,6 +630,24 @@ impl Drop for ProcessExecutor {
     }
 }
 
+/// Validate `DRLFOAM_WORKER_TIMEOUT_S`. Unset means the default; a set
+/// value must be a finite number of seconds > 0 — anything else is a
+/// startup error, because an override that silently fell back to the
+/// default would defeat the point of setting it.
+pub(crate) fn parse_worker_timeout(raw: Option<&str>) -> Result<Duration> {
+    let Some(raw) = raw else {
+        return Ok(Duration::from_secs_f64(DEFAULT_TIMEOUT_S));
+    };
+    let secs: f64 = raw.trim().parse().map_err(|_| {
+        anyhow::anyhow!("DRLFOAM_WORKER_TIMEOUT_S={raw:?} is not a number (want seconds > 0)")
+    })?;
+    anyhow::ensure!(
+        secs.is_finite() && secs > 0.0,
+        "DRLFOAM_WORKER_TIMEOUT_S={raw:?} must be a finite number of seconds > 0"
+    );
+    Ok(Duration::from_secs_f64(secs))
+}
+
 fn spawn_child(
     spec: &SpawnSpec,
     env_id: usize,
@@ -569,6 +655,26 @@ fn spawn_child(
     generation: u64,
     tx: &Sender<Event>,
 ) -> Result<ChildProc> {
+    // Shm transport: create this generation's ring pair up front so the
+    // worker can map it at startup. Failure is never fatal — warn and
+    // run this worker on the pipe alone.
+    let mut rings: Option<(shm::Producer, shm::Consumer, PathBuf)> = None;
+    if rank == 0 && spec.transport == TransportKind::Shm {
+        let prefix = spec
+            .work_dir
+            .join(format!("shm-env{env_id:03}-gen{generation}"));
+        let (c2w, w2c) = shm::ring_paths(&prefix);
+        let made = shm::create(&c2w, shm::DATA_SLOTS, shm::DATA_PAYLOAD)
+            .and_then(|_| shm::create(&w2c, shm::DATA_SLOTS, shm::DATA_PAYLOAD))
+            .and_then(|_| Ok((shm::producer(&c2w)?, shm::consumer(&w2c)?)));
+        match made {
+            Ok((p, c)) => rings = Some((p, c, prefix)),
+            Err(e) => eprintln!(
+                "warning: shm ring setup for env {env_id} failed ({e:#}); \
+                 falling back to the pipe transport for this worker"
+            ),
+        }
+    }
     let mut cmd = Command::new(&spec.bin);
     cmd.arg("worker")
         .arg("--env-id")
@@ -594,6 +700,9 @@ fn spawn_child(
         .stdin(Stdio::piped())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit());
+    if let Some((_, _, prefix)) = &rings {
+        cmd.arg("--shm-prefix").arg(prefix);
+    }
     if let Some(f) = &spec.fault_injection {
         cmd.env("DRLFOAM_WORKER_CRASH", f);
     }
@@ -607,11 +716,46 @@ fn spawn_child(
     let stdin = child.stdin.take().expect("piped stdin");
     let stdout = child.stdout.take().expect("piped stdout");
     let last_seen = Arc::new(Mutex::new(Instant::now()));
+    let shm_active = Arc::new(AtomicBool::new(false));
+    // Death-ordering handshake: with rings, the pipe reader does NOT
+    // report `Died` itself — it raises `peer_gone` and the ring reader
+    // reports death only once the ring is drained. Frames the worker
+    // published before dying are therefore always delivered first, same
+    // as the pipe's buffered-until-EOF semantics.
+    let peer_gone = Arc::new(AtomicBool::new(false));
+    let ring = match rings {
+        Some((tx_ring, rx_ring, prefix)) => {
+            let stop = Arc::new(AtomicBool::new(false));
+            let txc = tx.clone();
+            let seen = Arc::clone(&last_seen);
+            let stop_c = Arc::clone(&stop);
+            let gone = Arc::clone(&peer_gone);
+            std::thread::Builder::new()
+                .name(format!("exec-ring-{env_id}.{rank}"))
+                .spawn(move || {
+                    ring_reader_loop(env_id, rank, generation, rx_ring, txc, seen, stop_c, gone)
+                })
+                .context("spawning worker ring-reader thread")?;
+            Some(RingLink {
+                tx_ring,
+                shm_active: Arc::clone(&shm_active),
+                stop,
+                prefix,
+            })
+        }
+        None => None,
+    };
+    let has_ring = ring.is_some();
     let txc = tx.clone();
     let seen = Arc::clone(&last_seen);
+    let active = Arc::clone(&shm_active);
     std::thread::Builder::new()
         .name(format!("exec-read-{env_id}.{rank}"))
-        .spawn(move || reader_loop(env_id, rank, generation, stdout, txc, seen))
+        .spawn(move || {
+            reader_loop(
+                env_id, rank, generation, stdout, txc, seen, active, peer_gone, has_ring,
+            )
+        })
         .context("spawning worker reader thread")?;
     Ok(ChildProc {
         child,
@@ -619,12 +763,53 @@ fn spawn_child(
         pid,
         generation,
         last_seen,
+        ring,
     })
+}
+
+/// Turn one decoded worker frame into an event (`None` = nothing to
+/// forward). Shared by the pipe and ring readers, so a frame means the
+/// same thing whichever channel it arrived on.
+fn event_for_frame(env_id: usize, frame: Frame, shm_active: &AtomicBool) -> Option<Event> {
+    match frame {
+        Frame::Heartbeat => None,
+        Frame::Hello { version, shm, .. } => {
+            if version != PROTOCOL_VERSION {
+                Some(Event::WorkerError {
+                    env_id,
+                    msg: format!(
+                        "wire protocol version {version} != coordinator {PROTOCOL_VERSION} \
+                         (mixed binaries?)"
+                    ),
+                })
+            } else {
+                // the worker's shm ack arms our ring send side
+                shm_active.store(shm == 1, Ordering::Release);
+                None
+            }
+        }
+        Frame::Obs { obs } => Some(Event::Lockstep(LockstepReply::Obs { env_id, obs })),
+        Frame::StepOut { result } => {
+            Some(Event::Lockstep(LockstepReply::Step { env_id, result }))
+        }
+        Frame::Episode { stats, traj, .. } => Some(Event::Episode(EpisodeOut {
+            env_id,
+            traj,
+            stats,
+            completed_at: Instant::now(),
+        })),
+        Frame::Error { msg } => Some(Event::WorkerError { env_id, msg }),
+        other => Some(Event::WorkerError {
+            env_id,
+            msg: format!("protocol violation: worker sent {other:?}"),
+        }),
+    }
 }
 
 /// Decode worker frames into events until EOF; every frame (heartbeats
 /// included) stamps the liveness clock. The thread detaches — it exits
 /// by itself when the process dies or the executor is dropped.
+#[allow(clippy::too_many_arguments)]
 fn reader_loop(
     env_id: usize,
     rank: usize,
@@ -632,6 +817,9 @@ fn reader_loop(
     mut stdout: ChildStdout,
     tx: Sender<Event>,
     last_seen: Arc<Mutex<Instant>>,
+    shm_active: Arc<AtomicBool>,
+    peer_gone: Arc<AtomicBool>,
+    has_ring: bool,
 ) {
     loop {
         let frame = match wire::read_frame(&mut stdout) {
@@ -640,44 +828,121 @@ fn reader_loop(
             Ok(None) | Err(_) => break,
         };
         *last_seen.lock().expect("liveness clock poisoned") = Instant::now();
-        let ev = match frame {
-            Frame::Heartbeat => continue,
-            Frame::Hello { version, .. } => {
-                if version != PROTOCOL_VERSION {
-                    Event::WorkerError {
-                        env_id,
-                        msg: format!(
-                            "wire protocol version {version} != coordinator {PROTOCOL_VERSION} \
-                             (mixed binaries?)"
-                        ),
-                    }
-                } else {
-                    continue;
-                }
+        if let Some(ev) = event_for_frame(env_id, frame, &shm_active) {
+            if tx.send(ev).is_err() {
+                return; // executor gone
             }
-            Frame::Obs { obs } => Event::Lockstep(LockstepReply::Obs { env_id, obs }),
-            Frame::StepOut { result } => {
-                Event::Lockstep(LockstepReply::Step { env_id, result })
-            }
-            Frame::Episode { stats, traj, .. } => Event::Episode(EpisodeOut {
-                env_id,
-                traj,
-                stats,
-                completed_at: Instant::now(),
-            }),
-            Frame::Error { msg } => Event::WorkerError { env_id, msg },
-            other => Event::WorkerError {
-                env_id,
-                msg: format!("protocol violation: worker sent {other:?}"),
-            },
-        };
-        if tx.send(ev).is_err() {
-            return; // executor gone
         }
     }
-    let _ = tx.send(Event::Died {
-        env_id,
-        rank,
-        generation,
-    });
+    if has_ring {
+        // the ring reader reports the death once the ring is drained
+        peer_gone.store(true, Ordering::Release);
+    } else {
+        let _ = tx.send(Event::Died {
+            env_id,
+            rank,
+            generation,
+        });
+    }
+}
+
+/// Poll the worker→coordinator ring for published frames. The seqlock
+/// guarantees a frame is either fully published or invisible, so a torn
+/// write from a crashing worker can never surface here. Death (signalled
+/// by the pipe reader via `peer_gone`) is only reported once the ring is
+/// empty — every frame published before the crash is delivered first.
+#[allow(clippy::too_many_arguments)]
+fn ring_reader_loop(
+    env_id: usize,
+    rank: usize,
+    generation: u64,
+    mut rx_ring: shm::Consumer,
+    tx: Sender<Event>,
+    last_seen: Arc<Mutex<Instant>>,
+    stop: Arc<AtomicBool>,
+    peer_gone: Arc<AtomicBool>,
+) {
+    // the coordinator only sends on an acked ring, but the worker's ack
+    // travels on the pipe; this thread just drains whatever is published
+    let shm_active = AtomicBool::new(true);
+    let mut backoff = shm::Backoff::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return; // respawn/shutdown teardown
+        }
+        let gone = peer_gone.load(Ordering::Acquire);
+        match rx_ring.try_pop() {
+            Ok(Some(body)) => {
+                backoff.reset();
+                *last_seen.lock().expect("liveness clock poisoned") = Instant::now();
+                let ev = match wire::decode(&body) {
+                    Ok(frame) => event_for_frame(env_id, frame, &shm_active),
+                    Err(e) => Some(Event::WorkerError {
+                        env_id,
+                        msg: format!("corrupt shm frame: {e:#}"),
+                    }),
+                };
+                if let Some(ev) = ev {
+                    if tx.send(ev).is_err() {
+                        return; // executor gone
+                    }
+                }
+            }
+            Ok(None) if gone => {
+                // pipe hit EOF before this empty poll: the producer is
+                // dead and the ring is drained — now the death is safe
+                // to report
+                let _ = tx.send(Event::Died {
+                    env_id,
+                    rank,
+                    generation,
+                });
+                return;
+            }
+            Ok(None) => backoff.snooze(),
+            Err(e) => {
+                let _ = tx.send(Event::WorkerError {
+                    env_id,
+                    msg: format!("shm ring read failed: {e:#}"),
+                });
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_timeout_unset_uses_default() {
+        assert_eq!(
+            parse_worker_timeout(None).unwrap(),
+            Duration::from_secs_f64(DEFAULT_TIMEOUT_S)
+        );
+    }
+
+    #[test]
+    fn worker_timeout_accepts_positive_seconds() {
+        assert_eq!(
+            parse_worker_timeout(Some(" 2.5 ")).unwrap(),
+            Duration::from_secs_f64(2.5)
+        );
+        assert_eq!(
+            parse_worker_timeout(Some("120")).unwrap(),
+            Duration::from_secs_f64(120.0)
+        );
+    }
+
+    #[test]
+    fn worker_timeout_rejects_malformed_zero_and_negative() {
+        for bad in ["", "abc", "1.5s", "0", "0.0", "-3", "inf", "nan"] {
+            let err = parse_worker_timeout(Some(bad)).unwrap_err().to_string();
+            assert!(
+                err.contains("DRLFOAM_WORKER_TIMEOUT_S"),
+                "{bad:?} error should name the variable: {err}"
+            );
+        }
+    }
 }

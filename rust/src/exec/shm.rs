@@ -1,0 +1,586 @@
+//! Shared-memory seqlock ring: the multi-process executor's data plane.
+//!
+//! ROADMAP item 5(b): observations, actions and step results are small
+//! fixed-size f32 blocks, so instead of copying every frame through the
+//! stdin/stdout pipes they move through a pair of memory-mapped
+//! single-producer/single-consumer rings per worker (one per direction),
+//! while the pipe of [`super::wire`] stays the *control* channel
+//! (Hello/SetParams/Rollout/Reset/Heartbeat/Error/Shutdown) and the
+//! fallback whenever shm setup fails or a frame outgrows a slot.
+//!
+//! ## File layout
+//!
+//! The ring lives in a plain file (under the pool's work dir) mapped
+//! `MAP_SHARED` by both sides:
+//!
+//! ```text
+//! [header: 64 B]  magic u64 | version u32 | n_slots u32 | slot_payload u32 | pad
+//! [slot 0]        seq AtomicU64 | len u32 | pad u32 | payload [slot_payload B]
+//! [slot 1]        ...
+//! ```
+//!
+//! Slot stride is `16 + slot_payload` with `slot_payload` a multiple of
+//! 8, keeping every `seq` word 8-byte aligned. Payload bytes are a wire
+//! frame *body* (`[u8 tag][payload]`, exactly what [`super::wire`]
+//! length-prefixes on the pipe); the length lives in the slot header, so
+//! the bit-exact f32/f64 packing is byte-for-byte shared between both
+//! transports.
+//!
+//! ## Seqlock protocol (Vyukov bounded SPSC)
+//!
+//! Slot `i` starts with `seq = i`. The producer at position `p` waits for
+//! `seq == p` (Acquire), writes `len` + payload, then *publishes* with
+//! `seq.store(p + 1, Release)`. The consumer at `p` waits for
+//! `seq == p + 1` (Acquire), copies the frame out, then releases the slot
+//! with `seq.store(p + n_slots, Release)`. A crash mid-write leaves the
+//! slot unpublished — `seq` still reads `p` — so a torn frame is
+//! *invisible* by construction: the consumer can never observe a
+//! partially written payload (`torn_write_is_invisible` below, and the
+//! chaos tests in `rust/tests/exec_transport_conformance.rs`).
+//!
+//! Mapping is raw `mmap(2)` via a local `extern "C"` declaration — no
+//! crates are vendored for this — and the whole module degrades to a
+//! clear error on non-unix targets, which the executor turns into a pipe
+//! fallback.
+
+use std::fs::{File, OpenOptions};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+/// `b"DRLFRING"` little-endian; rejects mapping some unrelated file.
+const MAGIC: u64 = u64::from_le_bytes(*b"DRLFRING");
+
+/// Bumped on any layout change; both sides must agree.
+const RING_VERSION: u32 = 1;
+
+const HEADER_BYTES: usize = 64;
+
+/// Per-slot header: `seq: u64` + `len: u32` + 4 pad bytes.
+const SLOT_HEADER: usize = 16;
+
+/// Slots per ring for the executor's data plane. Lockstep traffic is
+/// strict request/reply, so depth mostly buys slack for the episode
+/// frames of the per-env path.
+pub const DATA_SLOTS: u32 = 64;
+
+/// Payload capacity per slot. Obs/Step/StepOut frames are a few hundred
+/// bytes; whole small-horizon Episode frames also fit. Anything larger
+/// falls back to the pipe per-frame (`push` returns `Ok(false)`).
+pub const DATA_PAYLOAD: u32 = 16 << 10;
+
+/// The two ring files behind a `--shm-prefix`: coordinator→worker
+/// (actions) and worker→coordinator (observations / step results /
+/// episodes). Shared by both sides so the naming can never drift.
+pub fn ring_paths(prefix: &Path) -> (std::path::PathBuf, std::path::PathBuf) {
+    let mut c2w = prefix.as_os_str().to_os_string();
+    c2w.push(".c2w.ring");
+    let mut w2c = prefix.as_os_str().to_os_string();
+    w2c.push(".w2c.ring");
+    (c2w.into(), w2c.into())
+}
+
+// --- raw mmap FFI (unix only) ----------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 0x01;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// An owned `MAP_SHARED` mapping (unmapped on drop). The raw pointer is
+/// only ever dereferenced through the seqlock discipline above, and each
+/// end of a ring is single-threaded, so shipping it across the spawn
+/// boundary is sound.
+struct Map {
+    ptr: *mut u8,
+    len: usize,
+}
+
+unsafe impl Send for Map {}
+
+impl Map {
+    #[cfg(unix)]
+    fn new(file: &File, len: usize) -> Result<Map> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        ensure!(
+            ptr as isize != -1 && !ptr.is_null(),
+            "mmap of shm ring failed ({} bytes)",
+            len
+        );
+        Ok(Map {
+            ptr: ptr as *mut u8,
+            len,
+        })
+    }
+
+    #[cfg(not(unix))]
+    fn new(_file: &File, _len: usize) -> Result<Map> {
+        anyhow::bail!("shared-memory transport requires a unix target (mmap)");
+    }
+}
+
+impl Drop for Map {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+// --- ring geometry ----------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct Geometry {
+    n_slots: u32,
+    slot_payload: u32,
+}
+
+impl Geometry {
+    fn stride(&self) -> usize {
+        SLOT_HEADER + self.slot_payload as usize
+    }
+
+    fn file_len(&self) -> usize {
+        HEADER_BYTES + self.n_slots as usize * self.stride()
+    }
+}
+
+struct Ring {
+    map: Map,
+    geo: Geometry,
+    /// Producer: next position to publish. Consumer: next to read.
+    pos: u64,
+}
+
+impl Ring {
+    fn slot_base(&self, pos: u64) -> *mut u8 {
+        let idx = (pos % self.geo.n_slots as u64) as usize;
+        unsafe { self.map.ptr.add(HEADER_BYTES + idx * self.geo.stride()) }
+    }
+
+    fn seq(&self, pos: u64) -> &AtomicU64 {
+        // The seq word is 8-byte aligned by construction (64 B header,
+        // stride = 16 + payload with payload % 8 == 0).
+        unsafe { &*(self.slot_base(pos) as *const AtomicU64) }
+    }
+}
+
+fn open_file(path: &Path) -> Result<File> {
+    OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening shm ring {}", path.display()))
+}
+
+/// Create a ring file at `path` (coordinator side): size it, map it,
+/// stamp the header and initialise every slot's sequence word.
+pub fn create(path: &Path, n_slots: u32, slot_payload: u32) -> Result<()> {
+    ensure!(n_slots > 0, "shm ring needs at least one slot");
+    ensure!(
+        slot_payload > 0 && slot_payload % 8 == 0,
+        "shm slot payload must be a positive multiple of 8"
+    );
+    let geo = Geometry {
+        n_slots,
+        slot_payload,
+    };
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(path)
+        .with_context(|| format!("creating shm ring {}", path.display()))?;
+    file.set_len(geo.file_len() as u64)
+        .context("sizing shm ring file")?;
+    let map = Map::new(&file, geo.file_len())?;
+    unsafe {
+        let hdr = map.ptr;
+        hdr.copy_from_nonoverlapping(MAGIC.to_le_bytes().as_ptr(), 8);
+        hdr.add(8)
+            .copy_from_nonoverlapping(RING_VERSION.to_le_bytes().as_ptr(), 4);
+        hdr.add(12)
+            .copy_from_nonoverlapping(n_slots.to_le_bytes().as_ptr(), 4);
+        hdr.add(16)
+            .copy_from_nonoverlapping(slot_payload.to_le_bytes().as_ptr(), 4);
+    }
+    let ring = Ring { map, geo, pos: 0 };
+    for i in 0..n_slots as u64 {
+        ring.seq(i).store(i, Ordering::Release);
+    }
+    Ok(())
+}
+
+fn open_ring(path: &Path) -> Result<Ring> {
+    let file = open_file(path)?;
+    let actual = file.metadata().context("statting shm ring")?.len() as usize;
+    ensure!(
+        actual >= HEADER_BYTES,
+        "shm ring {} too short for a header",
+        path.display()
+    );
+    // Map just the header first to read the geometry, then remap fully.
+    let hdr_map = Map::new(&file, HEADER_BYTES)?;
+    let (magic, version, n_slots, slot_payload) = unsafe {
+        let p = hdr_map.ptr;
+        let mut m = [0u8; 8];
+        p.copy_to_nonoverlapping(m.as_mut_ptr(), 8);
+        let mut v = [0u8; 4];
+        p.add(8).copy_to_nonoverlapping(v.as_mut_ptr(), 4);
+        let mut ns = [0u8; 4];
+        p.add(12).copy_to_nonoverlapping(ns.as_mut_ptr(), 4);
+        let mut sp = [0u8; 4];
+        p.add(16).copy_to_nonoverlapping(sp.as_mut_ptr(), 4);
+        (
+            u64::from_le_bytes(m),
+            u32::from_le_bytes(v),
+            u32::from_le_bytes(ns),
+            u32::from_le_bytes(sp),
+        )
+    };
+    drop(hdr_map);
+    ensure!(magic == MAGIC, "shm ring {}: bad magic", path.display());
+    ensure!(
+        version == RING_VERSION,
+        "shm ring {}: version {version} != {RING_VERSION}",
+        path.display()
+    );
+    ensure!(
+        n_slots > 0 && slot_payload > 0 && slot_payload % 8 == 0,
+        "shm ring {}: corrupt geometry ({n_slots} slots x {slot_payload} B)",
+        path.display()
+    );
+    let geo = Geometry {
+        n_slots,
+        slot_payload,
+    };
+    ensure!(
+        actual >= geo.file_len(),
+        "shm ring {}: file shorter than its declared geometry",
+        path.display()
+    );
+    let map = Map::new(&file, geo.file_len())?;
+    Ok(Ring { map, geo, pos: 0 })
+}
+
+// --- producer / consumer ----------------------------------------------------
+
+/// Write half of a ring (exactly one per ring file).
+pub struct Producer {
+    ring: Ring,
+}
+
+/// Read half of a ring (exactly one per ring file).
+pub struct Consumer {
+    ring: Ring,
+}
+
+/// Open the write half of an existing ring file.
+pub fn producer(path: &Path) -> Result<Producer> {
+    Ok(Producer {
+        ring: open_ring(path)?,
+    })
+}
+
+/// Open the read half of an existing ring file.
+pub fn consumer(path: &Path) -> Result<Consumer> {
+    Ok(Consumer {
+        ring: open_ring(path)?,
+    })
+}
+
+impl Producer {
+    /// Bytes a single slot can carry.
+    pub fn slot_payload(&self) -> usize {
+        self.ring.geo.slot_payload as usize
+    }
+
+    /// Publish one frame body. `Ok(false)` means the frame does not fit
+    /// a slot — the caller must send it over the pipe instead. Blocks
+    /// (with backoff) while the ring is full; errors after `timeout`,
+    /// which in practice means the peer died without draining.
+    pub fn push(&mut self, bytes: &[u8], timeout: Duration) -> Result<bool> {
+        if bytes.len() > self.slot_payload() {
+            return Ok(false);
+        }
+        let pos = self.ring.pos;
+        let seq = self.ring.seq(pos);
+        let mut backoff = Backoff::new();
+        let deadline = Instant::now() + timeout;
+        while seq.load(Ordering::Acquire) != pos {
+            ensure!(
+                Instant::now() < deadline,
+                "shm ring full for {timeout:?} (peer not draining)"
+            );
+            backoff.snooze();
+        }
+        unsafe {
+            let base = self.ring.slot_base(pos);
+            base.add(8)
+                .copy_from_nonoverlapping((bytes.len() as u32).to_le_bytes().as_ptr(), 4);
+            base.add(SLOT_HEADER)
+                .copy_from_nonoverlapping(bytes.as_ptr(), bytes.len());
+        }
+        seq.store(pos + 1, Ordering::Release);
+        self.ring.pos += 1;
+        Ok(true)
+    }
+
+    /// Chaos hook: write a frame body into the current slot but *never
+    /// publish it* — models a producer killed mid-write. The consumer
+    /// must keep seeing the slot as empty (the seqlock guarantee the
+    /// conformance chaos tests pin down).
+    pub fn write_torn(&mut self, bytes: &[u8]) {
+        let n = bytes.len().min(self.slot_payload());
+        let pos = self.ring.pos;
+        unsafe {
+            let base = self.ring.slot_base(pos);
+            base.add(8)
+                .copy_from_nonoverlapping((n as u32).to_le_bytes().as_ptr(), 4);
+            base.add(SLOT_HEADER)
+                .copy_from_nonoverlapping(bytes.as_ptr(), n);
+        }
+        // no seq.store: the frame stays unpublished forever
+    }
+}
+
+impl Consumer {
+    /// Pop the next published frame body, if any. Never blocks; never
+    /// yields a torn frame (unpublished slots are indistinguishable from
+    /// empty ones).
+    pub fn try_pop(&mut self) -> Result<Option<Vec<u8>>> {
+        let pos = self.ring.pos;
+        let seq = self.ring.seq(pos);
+        if seq.load(Ordering::Acquire) != pos + 1 {
+            return Ok(None);
+        }
+        let (len, base) = unsafe {
+            let base = self.ring.slot_base(pos);
+            let mut l = [0u8; 4];
+            base.add(8).copy_to_nonoverlapping(l.as_mut_ptr(), 4);
+            (u32::from_le_bytes(l) as usize, base)
+        };
+        ensure!(
+            len <= self.ring.geo.slot_payload as usize,
+            "shm slot declares {len} bytes > payload capacity"
+        );
+        let mut out = vec![0u8; len];
+        unsafe {
+            base.add(SLOT_HEADER)
+                .copy_to_nonoverlapping(out.as_mut_ptr(), len);
+        }
+        seq.store(pos + self.ring.geo.n_slots as u64, Ordering::Release);
+        self.ring.pos += 1;
+        Ok(Some(out))
+    }
+}
+
+// --- backoff ----------------------------------------------------------------
+
+/// Spin → yield → sleep backoff for the polling loops on both ends; keeps
+/// the hot path at spin-latency while idle waits cost ~no CPU.
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    pub fn new() -> Backoff {
+        Backoff { step: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    pub fn snooze(&mut self) {
+        if self.step < 64 {
+            std::hint::spin_loop();
+        } else if self.step < 256 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        self.step = self.step.saturating_add(1);
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("drlfoam-shm-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    const T: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn frames_round_trip_bit_exact() {
+        let path = scratch("roundtrip");
+        create(&path, 4, 64).unwrap();
+        let mut tx = producer(&path).unwrap();
+        let mut rx = consumer(&path).unwrap();
+        let frames: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0xAB],
+            (0..64u8).collect(),
+            1.25f64.to_le_bytes().to_vec(),
+        ];
+        for f in &frames {
+            assert!(tx.push(f, T).unwrap());
+        }
+        for f in &frames {
+            assert_eq!(rx.try_pop().unwrap().unwrap(), *f);
+        }
+        assert!(rx.try_pop().unwrap().is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn ring_wraps_around_many_times() {
+        let path = scratch("wrap");
+        create(&path, 4, 32).unwrap();
+        let mut tx = producer(&path).unwrap();
+        let mut rx = consumer(&path).unwrap();
+        for i in 0..100u32 {
+            assert!(tx.push(&i.to_le_bytes(), T).unwrap());
+            let got = rx.try_pop().unwrap().unwrap();
+            assert_eq!(got, i.to_le_bytes());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn oversized_frame_reports_pipe_fallback() {
+        let path = scratch("oversize");
+        create(&path, 2, 32).unwrap();
+        let mut tx = producer(&path).unwrap();
+        assert!(!tx.push(&[0u8; 33], T).unwrap());
+        // ring untouched: a normal frame still goes through slot 0
+        let mut rx = consumer(&path).unwrap();
+        assert!(tx.push(&[7u8; 32], T).unwrap());
+        assert_eq!(rx.try_pop().unwrap().unwrap(), vec![7u8; 32]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn full_ring_times_out_instead_of_overwriting() {
+        let path = scratch("full");
+        create(&path, 2, 32).unwrap();
+        let mut tx = producer(&path).unwrap();
+        assert!(tx.push(&[1], T).unwrap());
+        assert!(tx.push(&[2], T).unwrap());
+        let err = tx.push(&[3], Duration::from_millis(50)).unwrap_err();
+        assert!(err.to_string().contains("full"), "{err}");
+        // both published frames still intact
+        let mut rx = consumer(&path).unwrap();
+        assert_eq!(rx.try_pop().unwrap().unwrap(), vec![1]);
+        assert_eq!(rx.try_pop().unwrap().unwrap(), vec![2]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_write_is_invisible() {
+        let path = scratch("torn");
+        create(&path, 4, 32).unwrap();
+        let mut tx = producer(&path).unwrap();
+        let mut rx = consumer(&path).unwrap();
+        // producer dies mid-write: payload bytes land, seq never flips
+        tx.write_torn(&[0xDE, 0xAD, 0xBE, 0xEF]);
+        assert!(rx.try_pop().unwrap().is_none());
+        assert!(rx.try_pop().unwrap().is_none());
+        // a fresh producer generation (new ring file) starts clean
+        let path2 = scratch("torn2");
+        create(&path2, 4, 32).unwrap();
+        let mut tx2 = producer(&path2).unwrap();
+        let mut rx2 = consumer(&path2).unwrap();
+        assert!(tx2.push(&[1, 2, 3], T).unwrap());
+        assert_eq!(rx2.try_pop().unwrap().unwrap(), vec![1, 2, 3]);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&path2);
+    }
+
+    #[test]
+    fn header_validation_rejects_garbage() {
+        let path = scratch("garbage");
+        std::fs::write(&path, vec![0u8; 4096]).unwrap();
+        assert!(producer(&path).is_err());
+        assert!(consumer(&path).is_err());
+        // too short for even a header
+        let short = scratch("short");
+        std::fs::write(&short, [0u8; 8]).unwrap();
+        assert!(producer(&short).is_err());
+        // bad geometry is rejected at create time
+        assert!(create(&scratch("geo"), 0, 64).is_err());
+        assert!(create(&scratch("geo2"), 4, 12).is_err());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&short);
+    }
+
+    #[test]
+    fn cross_thread_spsc_stream_is_ordered_and_complete() {
+        let path = scratch("spsc");
+        create(&path, 8, 32).unwrap();
+        let mut tx = producer(&path).unwrap();
+        let mut rx = consumer(&path).unwrap();
+        let n = 10_000u32;
+        let h = std::thread::spawn(move || {
+            for i in 0..n {
+                tx.push(&i.to_le_bytes(), Duration::from_secs(30)).unwrap();
+            }
+        });
+        let mut backoff = Backoff::new();
+        let mut next = 0u32;
+        while next < n {
+            match rx.try_pop().unwrap() {
+                Some(bytes) => {
+                    assert_eq!(bytes, next.to_le_bytes());
+                    next += 1;
+                    backoff.reset();
+                }
+                None => backoff.snooze(),
+            }
+        }
+        h.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -7,9 +7,16 @@
 //! the multi-process backend reproduces the in-process learning curves
 //! bitwise (`rust/tests/exec_backend.rs`).
 //!
+//! With `--transport shm` the *data* frames (`Step`, `Obs`, `StepOut`,
+//! and `Episode` when it fits a slot) ride the seqlock rings of
+//! [`super::shm`] instead of the pipe; a ring slot carries the frame
+//! *body* (`[u8 tag][payload]`, no length prefix — the slot header holds
+//! the length), so [`encode`]/[`decode`] are shared byte-for-byte by both
+//! transports. Control frames always stay on the pipe.
+//!
 //! | frame       | direction            | payload |
 //! |-------------|----------------------|---------|
-//! | `Hello`     | worker → coordinator | env_id, rank, pid, n_obs, protocol version |
+//! | `Hello`     | worker → coordinator | env_id, rank, pid, n_obs, protocol version, shm ack |
 //! | `SetParams` | coordinator → worker | policy parameter vector (per-env serving) |
 //! | `Rollout`   | coordinator → worker | horizon, episode index, exploration seed |
 //! | `Reset`     | coordinator → worker | — (lockstep/batched mode) |
@@ -33,7 +40,7 @@ use crate::io_interface::IoStats;
 
 /// Bumped on any incompatible frame-layout change; the coordinator
 /// rejects a `Hello` carrying a different version.
-pub const PROTOCOL_VERSION: u32 = 1;
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Corrupt-stream guard: no legitimate frame (even a full cylinder-grid
 /// trajectory) comes close to this.
@@ -60,6 +67,10 @@ pub enum Frame {
         pid: u32,
         n_obs: u32,
         version: u32,
+        /// 1 if the worker successfully mapped the shm rings it was
+        /// offered (`--shm-prefix`); 0 means the coordinator must keep
+        /// every frame on the pipe for this worker.
+        shm: u32,
     },
     SetParams {
         params: Vec<f32>,
@@ -244,7 +255,10 @@ fn get_traj(bytes: &[u8], off: &mut usize) -> Result<Trajectory> {
 
 // --- frame encode / decode -------------------------------------------------
 
-fn encode(frame: &Frame) -> Vec<u8> {
+/// Encode a frame *body* (`[u8 tag][payload]`, no length prefix). The
+/// pipe transport prefixes it with a `u32` length ([`write_frame`]); the
+/// shm transport drops it into a ring slot as-is.
+pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
     let mut buf = Vec::new();
     match frame {
         Frame::Hello {
@@ -253,6 +267,7 @@ fn encode(frame: &Frame) -> Vec<u8> {
             pid,
             n_obs,
             version,
+            shm,
         } => {
             buf.push(TAG_HELLO);
             put_u32(&mut buf, *env_id);
@@ -260,6 +275,7 @@ fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut buf, *pid);
             put_u32(&mut buf, *n_obs);
             put_u32(&mut buf, *version);
+            put_u32(&mut buf, *shm);
         }
         Frame::SetParams { params } => {
             buf.push(TAG_SET_PARAMS);
@@ -310,7 +326,8 @@ fn encode(frame: &Frame) -> Vec<u8> {
     buf
 }
 
-fn decode(bytes: &[u8]) -> Result<Frame> {
+/// Decode a frame *body* (inverse of [`encode`]); rejects trailing bytes.
+pub(crate) fn decode(bytes: &[u8]) -> Result<Frame> {
     ensure!(!bytes.is_empty(), "empty wire frame");
     let tag = bytes[0];
     let mut off = 1usize;
@@ -321,6 +338,7 @@ fn decode(bytes: &[u8]) -> Result<Frame> {
             pid: get_u32(bytes, &mut off)?,
             n_obs: get_u32(bytes, &mut off)?,
             version: get_u32(bytes, &mut off)?,
+            shm: get_u32(bytes, &mut off)?,
         },
         TAG_SET_PARAMS => Frame::SetParams {
             params: get_vec_f32(bytes, &mut off)?,
@@ -422,6 +440,7 @@ mod tests {
             pid: 4242,
             n_obs: 32,
             version: PROTOCOL_VERSION,
+            shm: 1,
         });
         roundtrip(Frame::SetParams {
             params: vec![0.25, -1.5e-7, f32::MIN_POSITIVE, 3.0e8],

@@ -10,19 +10,34 @@
 //! of their env's rank group and only heartbeat until shutdown. A
 //! heartbeat thread beats every `--heartbeat-ms` so the coordinator can
 //! tell a busy worker from a dead one.
+//!
+//! When spawned with `--shm-prefix` (the coordinator's `--transport
+//! shm`), rank 0 maps the pre-created seqlock rings of [`super::shm`]
+//! and moves the *data* frames over them — `Step` in, `Obs`/`StepOut`/
+//! `Episode` out (per-frame pipe fallback when one outgrows a slot) —
+//! acking the rings via `Hello { shm: 1 }`. If mapping fails the worker
+//! warns on stderr, sends `Hello { shm: 0 }` and serves everything over
+//! the pipe; control frames stay on the pipe either way.
 
 use std::io::{self, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::pool::{build_worker, run_episode};
 use crate::drl::policy::PolicyBackendKind;
+use crate::exec::shm;
 use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
 use crate::io_interface::IoMode;
 use crate::runtime::Manifest;
+
+/// How long a ring push may block on a full ring before the worker gives
+/// up (the coordinator stopped draining — effectively a dead peer).
+const PUSH_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Everything the `worker` subcommand parses off its command line.
 pub struct WorkerConfig {
@@ -38,6 +53,9 @@ pub struct WorkerConfig {
     pub seed: u64,
     /// Heartbeat period; 0 disables the heartbeat thread.
     pub heartbeat_ms: u64,
+    /// Ring-file prefix (`<prefix>.c2w.ring` / `<prefix>.w2c.ring`) the
+    /// coordinator pre-created; `None` = pipe-only transport.
+    pub shm_prefix: Option<PathBuf>,
 }
 
 /// Serve this rank until Shutdown or stdin EOF. On error, a terminal
@@ -83,29 +101,101 @@ fn send(out: &Mutex<io::Stdout>, frame: &Frame) -> Result<()> {
     wire::write_frame(&mut *g, frame)
 }
 
-fn hello(cfg: &WorkerConfig, n_obs: usize) -> Frame {
+/// Reply path for *data* frames: the ring when mapped (with per-frame
+/// pipe fallback for frames that outgrow a slot), the pipe otherwise.
+fn send_data(
+    ring: Option<&mut shm::Producer>,
+    out: &Mutex<io::Stdout>,
+    frame: &Frame,
+) -> Result<()> {
+    if let Some(p) = ring {
+        let body = wire::encode(frame);
+        if p.push(&body, PUSH_TIMEOUT)
+            .context("shm push to coordinator")?
+        {
+            return Ok(());
+        } // frame outgrew the slot: fall through to the pipe
+    }
+    send(out, frame)
+}
+
+fn hello(cfg: &WorkerConfig, n_obs: usize, shm: bool) -> Frame {
     Frame::Hello {
         env_id: cfg.env_id as u32,
         rank: cfg.rank as u32,
         pid: std::process::id(),
         n_obs: n_obs as u32,
         version: PROTOCOL_VERSION,
+        shm: shm as u32,
+    }
+}
+
+/// Where the rank-0 serve loop gets its next coordinator frame from.
+enum FrameSource {
+    /// Pipe-only transport: block on stdin directly.
+    Pipe(io::Stdin),
+    /// Shm transport: a detached thread reads stdin into a channel while
+    /// the serve loop polls both the channel and the ring.
+    Dual {
+        frames: Receiver<Result<Option<Frame>>>,
+        ring: shm::Consumer,
+        backoff: shm::Backoff,
+    },
+}
+
+impl FrameSource {
+    fn next(&mut self) -> Result<Option<Frame>> {
+        match self {
+            FrameSource::Pipe(stdin) => wire::read_frame(stdin),
+            FrameSource::Dual {
+                frames,
+                ring,
+                backoff,
+            } => loop {
+                match frames.try_recv() {
+                    Ok(item) => return item,
+                    // the stdin thread exits right after its EOF/error
+                    // item; a disconnect past that is a clean close
+                    Err(TryRecvError::Disconnected) => return Ok(None),
+                    Err(TryRecvError::Empty) => {}
+                }
+                if let Some(body) = ring.try_pop()? {
+                    backoff.reset();
+                    return wire::decode(&body).map(Some);
+                }
+                backoff.snooze();
+            },
+        }
     }
 }
 
 fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
-    let stdin = io::stdin();
-    let mut stdin = stdin.lock();
-
     if cfg.rank > 0 {
         // placement rank: hold the core, heartbeat, wait for shutdown
-        send(out, &hello(cfg, 0))?;
+        let stdin = io::stdin();
+        let mut stdin = stdin.lock();
+        send(out, &hello(cfg, 0, false))?;
         while let Some(frame) = wire::read_frame(&mut stdin)? {
             if matches!(frame, Frame::Shutdown) {
                 break;
             }
         }
         return Ok(());
+    }
+
+    // map the offered rings; failure downgrades to the pipe, never kills
+    // the worker (the Hello ack tells the coordinator which happened)
+    let mut rings: Option<(shm::Consumer, shm::Producer)> = None;
+    if let Some(prefix) = &cfg.shm_prefix {
+        let (c2w, w2c) = shm::ring_paths(prefix);
+        match (|| -> Result<_> { Ok((shm::consumer(&c2w)?, shm::producer(&w2c)?)) })() {
+            Ok(pair) => rings = Some(pair),
+            Err(e) => eprintln!(
+                "warning: env worker {} could not map shm rings ({e:#}); \
+                 falling back to the pipe transport",
+                cfg.env_id
+            ),
+        }
     }
 
     // a *missing* manifest selects the artifact-free path (surrogate +
@@ -123,10 +213,38 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
         manifest.as_ref(),
     )
     .context("env worker setup failed")?;
-    send(out, &hello(cfg, env.n_obs()))?;
+    send(out, &hello(cfg, env.n_obs(), rings.is_some()))?;
+
+    let (mut source, mut tx_ring) = match rings {
+        Some((rx_ring, tx_ring)) => {
+            let (ftx, frx) = channel();
+            std::thread::Builder::new()
+                .name("stdin-read".into())
+                .spawn(move || {
+                    let mut stdin = io::stdin();
+                    loop {
+                        let item = wire::read_frame(&mut stdin);
+                        let done = matches!(item, Ok(None) | Err(_));
+                        if ftx.send(item).is_err() || done {
+                            return;
+                        }
+                    }
+                })
+                .context("spawning stdin reader thread")?;
+            (
+                FrameSource::Dual {
+                    frames: frx,
+                    ring: rx_ring,
+                    backoff: shm::Backoff::new(),
+                },
+                Some(tx_ring),
+            )
+        }
+        None => (FrameSource::Pipe(io::stdin()), None),
+    };
 
     let mut params: Arc<Vec<f32>> = Arc::new(Vec::new());
-    while let Some(frame) = wire::read_frame(&mut stdin)? {
+    while let Some(frame) = source.next()? {
         match frame {
             Frame::SetParams { params: p } => params = Arc::new(p),
             Frame::Rollout {
@@ -134,7 +252,7 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
                 episode,
                 episode_seed,
             } => {
-                maybe_crash(cfg, episode);
+                maybe_crash(cfg, episode, tx_ring.as_mut(), out);
                 let eo = run_episode(
                     cfg.env_id,
                     env.as_mut(),
@@ -144,7 +262,8 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
                     horizon as usize,
                     cfg.seed ^ episode_seed,
                 )?;
-                send(
+                send_data(
+                    tx_ring.as_mut(),
                     out,
                     &Frame::Episode {
                         env_id: cfg.env_id as u32,
@@ -155,11 +274,11 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
             }
             Frame::Reset => {
                 let obs = env.reset()?;
-                send(out, &Frame::Obs { obs })?;
+                send_data(tx_ring.as_mut(), out, &Frame::Obs { obs })?;
             }
             Frame::Step { action } => {
                 let result = env.step(action)?;
-                send(out, &Frame::StepOut { result })?;
+                send_data(tx_ring.as_mut(), out, &Frame::StepOut { result })?;
             }
             Frame::Shutdown => break,
             Frame::Heartbeat => {}
@@ -169,20 +288,31 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
     Ok(())
 }
 
-/// Chaos hook behind `train --chaos <env>:<episode>` (the executor
-/// exports it as `DRLFOAM_WORKER_CRASH`): the matching rank-0 worker
-/// dies by fatal signal immediately after *receiving* that episode's
-/// Rollout — exactly the SIGKILL-mid-dispatch shape the fault-recovery
-/// tests and the CI smoke assert on. A tombstone file in the shared work
-/// dir makes it a one-shot: the respawned twin runs the replay instead
-/// of re-crashing.
-fn maybe_crash(cfg: &WorkerConfig, episode: u64) {
+/// Chaos hook behind `train --chaos <env>:<episode>[:midframe]` (the
+/// executor exports it as `DRLFOAM_WORKER_CRASH`): the matching rank-0
+/// worker dies by fatal signal immediately after *receiving* that
+/// episode's Rollout — exactly the SIGKILL-mid-dispatch shape the
+/// fault-recovery tests and the CI smoke assert on. The `midframe`
+/// variant additionally dies with a *partially written* frame on every
+/// channel — a torn (never-published) ring slot and a pipe frame whose
+/// header promises more bytes than ever arrive — pinning down that
+/// neither reader can surface a corrupt frame. A tombstone file in the
+/// shared work dir makes it a one-shot: the respawned twin runs the
+/// replay instead of re-crashing.
+fn maybe_crash(
+    cfg: &WorkerConfig,
+    episode: u64,
+    ring: Option<&mut shm::Producer>,
+    out: &Mutex<io::Stdout>,
+) {
     let Ok(spec) = std::env::var("DRLFOAM_WORKER_CRASH") else {
         return;
     };
-    let Some((e, ep)) = spec.split_once(':') else {
+    let mut parts = spec.splitn(3, ':');
+    let (Some(e), Some(ep)) = (parts.next(), parts.next()) else {
         return;
     };
+    let midframe = parts.next().map(str::trim) == Some("midframe");
     match (e.trim().parse::<usize>(), ep.trim().parse::<u64>()) {
         (Ok(want_env), Ok(want_ep)) if want_env == cfg.env_id && want_ep == episode => {}
         _ => return,
@@ -194,6 +324,18 @@ fn maybe_crash(cfg: &WorkerConfig, episode: u64) {
         return;
     }
     let _ = std::fs::write(&marker, b"chaos hook fired here once\n");
+    if midframe {
+        if let Some(p) = ring {
+            // payload bytes land in the slot, seq is never published
+            p.write_torn(&[0xAA; 64]);
+        }
+        if let Ok(mut g) = out.lock() {
+            // header promising 64 payload bytes, then only 3 of them
+            let _ = g.write_all(&64u32.to_le_bytes());
+            let _ = g.write_all(&[9u8, 0xAA, 0xAA]);
+            let _ = g.flush();
+        }
+    }
     let _ = io::stderr().flush();
     std::process::abort();
 }

@@ -27,7 +27,7 @@ use drlfoam::cluster::{planner, simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
 use drlfoam::coordinator::{train, EnvPool, InferenceMode, LocalPolicy, PoolConfig, SyncPolicy, TrainConfig};
 use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
-use drlfoam::exec::ExecutorKind;
+use drlfoam::exec::{ExecutorKind, TransportKind};
 use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
 use drlfoam::env::Environment;
 use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
@@ -39,23 +39,27 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
              --sync full|partial:<k>|async --executor in-process|multi-process
-             --ranks N --layout manual|auto [--quiet]
+             --transport pipe|shm --ranks N --layout manual|auto [--quiet]
              (--scenario surrogate|analytic trains with no artifacts: native
               backends are auto-selected when artifacts/ is absent. --sync
               partial:<k> updates on any k of N trajectories. --executor
               multi-process runs each environment as a group of --ranks real
               `drlfoam worker` OS processes with heartbeat fault handling: a
               dead worker is respawned and its episode re-queued; --chaos
-              <env>:<episode> injects one such crash. --layout auto measures a
+              <env>:<episode>[:midframe] injects one such crash. --transport
+              shm moves the data frames over per-worker shared-memory seqlock
+              rings (pipe stays the control channel + fallback). --layout auto
+              measures a
               small calibration — through the worker processes when the
               executor is multi-process — plans the (envs, ranks, sync, io)
               layout under --cores [default: this machine's cores], applies
               the winner, and writes out/plan.csv; axes passed explicitly
               (--envs/--ranks/--sync/--io, and --executor itself) are pinned,
               not searched.)
-  worker:    --env-id N --rank N --heartbeat-ms N (internal: spawned by
-             --executor multi-process; speaks length-prefixed binary frames
-             on stdin/stdout — not for interactive use)
+  worker:    --env-id N --rank N --heartbeat-ms N [--shm-prefix PATH]
+             (internal: spawned by --executor multi-process; speaks
+             length-prefixed binary frames on stdin/stdout, plus shm rings
+             under --transport shm — not for interactive use)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
              (--scenario surrogate runs without artifacts)
   scenarios: list selectable scenarios
@@ -87,7 +91,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "update-backend", "sync", "episodes", "periods", "calib", "policy",
         "work-dir", "log-every", "layout", "cores", "objective", "syncs",
         "ios", "staleness-weight", "executor", "chaos", "env-id", "rank",
-        "heartbeat-ms",
+        "heartbeat-ms", "transport", "shm-prefix",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -137,6 +141,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ranks_per_env: args.usize_or("ranks", 1)?,
         worker_bin: None,
         fault_injection: args.get("chaos").map(|s| s.to_string()),
+        transport: TransportKind::parse(&args.get_or("transport", "pipe"))?,
         horizon: args.usize_or("horizon", 100)?,
         iterations: args.usize_or("iterations", 100)?,
         epochs: args.usize_or("epochs", 4)?,
@@ -154,6 +159,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.fault_injection.is_none() || cfg.executor == ExecutorKind::MultiProcess,
         "--chaos injects worker-process crashes and needs --executor multi-process"
     );
+    anyhow::ensure!(
+        cfg.transport == TransportKind::Pipe || cfg.executor == ExecutorKind::MultiProcess,
+        "--transport shm moves frames between worker processes and needs \
+         --executor multi-process"
+    );
     match args.get_or("layout", "manual").trim().to_ascii_lowercase().as_str() {
         "manual" => {}
         "auto" => auto_layout(args, &mut cfg)?,
@@ -163,7 +173,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     // be downgraded by the artifact-free fallback, so the *resolved*
     // engines are reported from inside the training setup instead
     println!(
-        "training: scenario={} variant={} envs={} ranks={} horizon={} iterations={} io={} inference={} sync={} executor={}",
+        "training: scenario={} variant={} envs={} ranks={} horizon={} iterations={} io={} inference={} sync={} executor={} transport={}",
         cfg.scenario,
         cfg.variant,
         cfg.n_envs,
@@ -173,7 +183,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.io_mode.name(),
         cfg.inference.name(),
         cfg.sync.name(),
-        cfg.executor.name()
+        cfg.executor.name(),
+        cfg.transport.name()
     );
     let summary = train(&cfg)?;
     if summary.worker_restarts > 0 {
@@ -222,6 +233,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         backend: PolicyBackendKind::parse(&args.get_or("backend", "native"))?,
         seed: args.u64_or("seed", 0)?,
         heartbeat_ms: args.u64_or("heartbeat-ms", 200)?,
+        shm_prefix: args.get("shm-prefix").map(Into::into),
     };
     drlfoam::exec::worker::run(&cfg)
 }
@@ -589,8 +601,11 @@ fn auto_layout(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
 /// executor: a small pool of real `drlfoam worker` processes rolls a few
 /// episodes per exchange mode, and the per-worker telemetry supplies the
 /// period/exchange costs — so `--layout auto --executor multi-process`
-/// calibrates from real process timings (pipe hops, process scheduling
-/// and all) instead of the in-process surrogate. The policy-serving and
+/// calibrates from real process timings (transport hops, process
+/// scheduling and all) instead of the in-process surrogate. The pool
+/// inherits the run's `--transport`, so a `--transport shm` layout
+/// search is calibrated against the shm data plane it will actually
+/// train over, not the pipe. The policy-serving and
 /// PPO-minibatch costs are measured natively in this process, where they
 /// run under every executor.
 fn process_calibration(cfg: &TrainConfig) -> Result<Calibration> {
@@ -612,6 +627,7 @@ fn process_calibration(cfg: &TrainConfig) -> Result<Calibration> {
             ranks_per_env: 1,
             worker_bin: cfg.worker_bin.clone(),
             fault_injection: None,
+            transport: cfg.transport,
         };
         let mut pool = EnvPool::standalone(&pool_cfg)?;
         let params =

@@ -269,3 +269,188 @@ fn worker_error_is_contextual_not_a_hang() {
         .to_string();
     assert!(err.contains("artifacts"), "{err}");
 }
+
+// --- wire-protocol fuzzing --------------------------------------------------
+//
+// `exec/wire.rs` is the trust boundary between the coordinator and
+// arbitrary worker processes: whatever bytes arrive, the decoder must
+// yield `Ok(Some(frame))`, `Ok(None)` (clean EOF before a header), or a
+// typed `Err` — never panic, and never silently misparse. A proptest
+// dependency is off the table, so this is a hand-rolled deterministic
+// fuzz loop over the repo's own xorshift RNG: same seed, same corpus,
+// every run.
+
+mod wire_fuzz {
+    use std::io::Cursor;
+
+    use drlfoam::coordinator::EpisodeStats;
+    use drlfoam::drl::{Trajectory, Transition};
+    use drlfoam::env::{StepResult, StepTimings};
+    use drlfoam::exec::wire::{read_frame, write_frame, Frame};
+    use drlfoam::io_interface::IoStats;
+    use drlfoam::util::rng::Rng;
+
+    /// One random frame, sized by the RNG: payloads span empty to a few
+    /// KiB so header/payload boundaries land everywhere.
+    fn random_frame(rng: &mut Rng) -> Frame {
+        match rng.below(10) {
+            0 => Frame::Hello {
+                env_id: rng.next_u64() as u32,
+                rank: rng.below(8) as u32,
+                pid: rng.next_u64() as u32,
+                n_obs: rng.below(512) as u32,
+                version: rng.next_u64() as u32,
+                shm: rng.below(2) as u32,
+            },
+            1 => Frame::SetParams {
+                params: (0..rng.below(1024)).map(|_| rng.range(-2.0, 2.0) as f32).collect(),
+            },
+            2 => Frame::Reset,
+            3 => Frame::Step { action: rng.normal() },
+            4 => Frame::Rollout {
+                horizon: rng.below(4096) as u32,
+                episode: rng.next_u64(),
+                episode_seed: rng.next_u64(),
+            },
+            5 => Frame::Heartbeat,
+            6 => Frame::Obs {
+                obs: (0..rng.below(512)).map(|_| rng.normal() as f32).collect(),
+            },
+            7 => Frame::StepOut {
+                result: StepResult {
+                    obs: (0..rng.below(64)).map(|_| rng.normal() as f32).collect(),
+                    reward: rng.normal(),
+                    cd_mean: rng.normal(),
+                    cl_mean: rng.normal(),
+                    jet: rng.normal(),
+                    timings: StepTimings { cfd_s: rng.uniform(), io_s: rng.uniform() },
+                    io: IoStats::default(),
+                },
+            },
+            8 => Frame::Episode {
+                env_id: rng.below(64) as u32,
+                stats: EpisodeStats {
+                    reward_sum: rng.normal(),
+                    cd_mean: rng.normal(),
+                    cl_abs_mean: rng.normal().abs(),
+                    jet_final: rng.normal(),
+                    cfd_s: rng.uniform(),
+                    io_s: rng.uniform(),
+                    policy_s: rng.uniform(),
+                    wall_s: rng.uniform(),
+                    io: IoStats::default(),
+                },
+                traj: Trajectory {
+                    env_id: rng.below(64),
+                    last_value: rng.normal(),
+                    transitions: (0..rng.below(20))
+                        .map(|_| Transition {
+                            obs: (0..rng.below(16)).map(|_| rng.normal() as f32).collect(),
+                            action: rng.normal(),
+                            logp: rng.normal(),
+                            reward: rng.normal(),
+                            value: rng.normal(),
+                        })
+                        .collect(),
+                },
+            },
+            _ => Frame::Error {
+                msg: String::from_utf8_lossy(
+                    &(0..rng.below(256)).map(|_| rng.below(256) as u8).collect::<Vec<_>>(),
+                )
+                .into_owned(),
+            },
+        }
+    }
+
+    fn encode(frame: &Frame) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        buf
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors_never_frames() {
+        // cutting a well-formed frame anywhere must yield Ok(None) at
+        // offset 0 (clean EOF) and Err everywhere else — never a frame
+        let mut rng = Rng::new(0xF0CC_5EED);
+        for _ in 0..64 {
+            let buf = encode(&random_frame(&mut rng));
+            let cuts = [0, 1, 2, 3, buf.len() / 2, buf.len().saturating_sub(1)];
+            for &cut in cuts.iter().filter(|&&c| c < buf.len()) {
+                match read_frame(&mut Cursor::new(&buf[..cut])) {
+                    Ok(None) => assert_eq!(cut, 0, "EOF mid-frame must be an error"),
+                    Ok(Some(f)) => panic!("truncated at {cut}/{}: misparsed {f:?}", buf.len()),
+                    Err(_) => assert!(cut > 0, "clean EOF must be Ok(None)"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flipped_frames_never_panic_or_destabilise_reencoding() {
+        // a single flipped bit may still decode (flips inside an f32
+        // payload are just different numbers) — but whatever decodes
+        // must re-encode to the *same bytes it was decoded from*, i.e.
+        // a corrupt frame can never alias two byte representations
+        let mut rng = Rng::new(0xB17F11B5);
+        for _ in 0..128 {
+            let clean = encode(&random_frame(&mut rng));
+            let mut buf = clean.clone();
+            let bit = rng.below(buf.len() * 8);
+            buf[bit / 8] ^= 1u8 << (bit % 8);
+            match read_frame(&mut Cursor::new(&buf)) {
+                Err(_) | Ok(None) => {}
+                Ok(Some(frame)) => {
+                    let round1 = encode(&frame);
+                    let reread = read_frame(&mut Cursor::new(&round1))
+                        .expect("re-reading own encoding failed")
+                        .expect("own encoding read as EOF");
+                    assert_eq!(round1, encode(&reread), "re-encoding is not a fixed point");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mutated_length_prefixes_are_rejected_not_trusted() {
+        let mut rng = Rng::new(0x1E46);
+        for _ in 0..64 {
+            let clean = encode(&random_frame(&mut rng));
+            let mut buf = clean.clone();
+            // lie about the length: longer than the bytes that follow,
+            // absurdly huge (must trip the MAX_FRAME guard before any
+            // allocation), or zero
+            for lie in [buf.len() as u32 * 2 + 7, u32::MAX, 0] {
+                buf[..4].copy_from_slice(&lie.to_le_bytes());
+                match read_frame(&mut Cursor::new(&buf)) {
+                    Ok(Some(f)) => panic!("length {lie} accepted: {f:?}"),
+                    Ok(None) | Err(_) => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_tags_are_typed_errors() {
+        for bad_tag in [0u8, 12, 99, 200, 255] {
+            let mut buf = encode(&Frame::Heartbeat);
+            buf[4] = bad_tag; // first payload byte is the tag
+            let err = read_frame(&mut Cursor::new(&buf))
+                .expect_err("unknown tag must be rejected")
+                .to_string();
+            assert!(err.contains("tag"), "error should name the tag: {err}");
+        }
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        let mut rng = Rng::new(0x6A4BA6E);
+        for _ in 0..256 {
+            let n = rng.below(512);
+            let garbage: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            // any outcome is fine except a panic or a hang
+            let _ = read_frame(&mut Cursor::new(&garbage));
+        }
+    }
+}

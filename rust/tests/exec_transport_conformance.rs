@@ -1,0 +1,387 @@
+//! Transport conformance: the bar any executor data plane must clear.
+//!
+//! The multi-process executor can move frames over stdin/stdout pipes
+//! (`--transport pipe`) or over shared-memory seqlock rings
+//! (`--transport shm`, the pipe staying control channel + fallback).
+//! Whatever the transport, training must be *indistinguishable* — the
+//! learning-curve CSV and the final parameter vector must match the
+//! in-process golden reference bitwise. This suite runs that equivalence
+//! matrix across
+//!
+//! ```text
+//! {in-process, pipe, shm} × {full, partial:k, async} × {per-env, batched}
+//! ```
+//!
+//! restricted to the cells where the schedule itself is deterministic:
+//! `partial:k` with `k < n` and per-env `async` with `n > 1` consume
+//! episodes in racy arrival order by design, so only their learning
+//! *distribution* is defined, not a bitwise curve. `partial:n` (the
+//! drained-then-sorted batch), per-env `async` with one env, and batched
+//! `async` (deterministic slot order) pin the same code paths without
+//! the race.
+//!
+//! On top of the matrix: chaos tests around the seqlock's core guarantee
+//! — a crash mid-write (torn ring slot + truncated pipe frame) must
+//! never surface a corrupt frame, and respawn + re-queue recovery must
+//! reproduce the fault-free run bitwise, with the injected kill counted
+//! exactly once in `TrainSummary::worker_restarts` and `workers.csv`.
+//!
+//! Everything runs artifact-free (surrogate scenario, native backends);
+//! the suite skips gracefully when Cargo does not provide the worker
+//! binary.
+
+use std::sync::Arc;
+
+use drlfoam::coordinator::{
+    train, EnvPool, PolicyServer, PoolConfig, SyncPolicy, TrainConfig,
+};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::exec::{ExecutorKind, TransportKind};
+use drlfoam::io_interface::IoMode;
+use drlfoam::metrics::parse_csv;
+
+fn worker_bin() -> Option<std::path::PathBuf> {
+    option_env!("CARGO_BIN_EXE_drlfoam").map(Into::into)
+}
+
+macro_rules! require_worker_bin {
+    () => {
+        match worker_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: CARGO_BIN_EXE_drlfoam not provided by cargo");
+                return;
+            }
+        }
+    };
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("drlfoam-conf-{tag}-{}", std::process::id()))
+}
+
+/// One lane of the transport axis: where workers live and how frames
+/// move. In-process workers serialise nothing, so they only pair with
+/// the (irrelevant) pipe default.
+#[derive(Clone, Copy)]
+struct Lane {
+    name: &'static str,
+    executor: ExecutorKind,
+    transport: TransportKind,
+}
+
+const LANES: [Lane; 3] = [
+    Lane {
+        name: "in-process",
+        executor: ExecutorKind::InProcess,
+        transport: TransportKind::Pipe,
+    },
+    Lane {
+        name: "pipe",
+        executor: ExecutorKind::MultiProcess,
+        transport: TransportKind::Pipe,
+    },
+    Lane {
+        name: "shm",
+        executor: ExecutorKind::MultiProcess,
+        transport: TransportKind::Shm,
+    },
+];
+
+fn train_cfg(tag: &str, lane: Lane, n_envs: usize) -> TrainConfig {
+    let root = scratch(tag);
+    TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root.clone(),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        executor: lane.executor,
+        transport: lane.transport,
+        worker_bin: worker_bin(),
+        n_envs,
+        io_mode: IoMode::InMemory,
+        horizon: 5,
+        iterations: 3,
+        epochs: 2,
+        seed: 11,
+        log_every: 1,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+fn pool_cfg(tag: &str, lane: Lane, n_envs: usize) -> PoolConfig {
+    let root = scratch(tag);
+    std::fs::create_dir_all(root.join("work")).unwrap();
+    PoolConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        n_envs,
+        io_mode: IoMode::InMemory,
+        seed: 5,
+        executor: lane.executor,
+        transport: lane.transport,
+        worker_bin: worker_bin(),
+        ..PoolConfig::default()
+    }
+}
+
+/// The learning-curve columns of train_log.csv: everything before the
+/// wall-clock fields (the first 9 of 14).
+fn learning_rows(out_dir: &std::path::Path) -> Vec<String> {
+    let csv = std::fs::read_to_string(out_dir.join("train_log.csv")).unwrap();
+    csv.lines()
+        .skip(1)
+        .map(|l| l.splitn(15, ',').take(9).collect::<Vec<_>>().join(","))
+        .collect()
+}
+
+/// Run one matrix cell on every transport lane and assert the learning
+/// CSV and final parameters are bitwise identical across all three.
+fn assert_cell_bitwise(
+    cell: &str,
+    n_envs: usize,
+    sync: SyncPolicy,
+    batched: bool,
+) {
+    use drlfoam::coordinator::InferenceMode;
+    let mut reference: Option<(Vec<String>, Vec<f32>, &'static str)> = None;
+    for lane in LANES {
+        let tag = format!("{cell}-{}", lane.name);
+        let mut cfg = train_cfg(&tag, lane, n_envs);
+        cfg.sync = sync;
+        cfg.inference = if batched {
+            InferenceMode::Batched
+        } else {
+            InferenceMode::PerEnv
+        };
+        let summary = train(&cfg)
+            .unwrap_or_else(|e| panic!("cell {cell}, lane {}: training failed: {e:#}", lane.name));
+        let rows = learning_rows(&cfg.out_dir);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+        match &reference {
+            None => reference = Some((rows, summary.final_params, lane.name)),
+            Some((want_rows, want_params, ref_name)) => {
+                assert_eq!(
+                    want_rows, &rows,
+                    "cell {cell}: learning CSV diverged ({ref_name} vs {})",
+                    lane.name
+                );
+                assert_eq!(
+                    want_params, &summary.final_params,
+                    "cell {cell}: final params diverged ({ref_name} vs {})",
+                    lane.name
+                );
+            }
+        }
+    }
+}
+
+// --- the equivalence matrix -------------------------------------------------
+
+#[test]
+fn matrix_full_per_env() {
+    let _ = require_worker_bin!();
+    assert_cell_bitwise("full-pe", 2, SyncPolicy::Full, false);
+}
+
+#[test]
+fn matrix_full_batched() {
+    let _ = require_worker_bin!();
+    assert_cell_bitwise("full-ba", 2, SyncPolicy::Full, true);
+}
+
+#[test]
+fn matrix_partial_k_per_env() {
+    let _ = require_worker_bin!();
+    // k == n: the partial-barrier code path (drain + sort by env) with a
+    // deterministic batch composition
+    assert_cell_bitwise("part-pe", 2, SyncPolicy::Partial { k: 2 }, false);
+}
+
+#[test]
+fn matrix_partial_k_batched() {
+    let _ = require_worker_bin!();
+    assert_cell_bitwise("part-ba", 2, SyncPolicy::Partial { k: 2 }, true);
+}
+
+#[test]
+fn matrix_async_per_env() {
+    let _ = require_worker_bin!();
+    // one env: the async (k = 1) loop without the multi-env arrival race
+    assert_cell_bitwise("async-pe", 1, SyncPolicy::Async, false);
+}
+
+#[test]
+fn matrix_async_batched() {
+    let _ = require_worker_bin!();
+    // batched lockstep returns episodes in slot order: deterministic
+    // even under async with several envs
+    assert_cell_bitwise("async-ba", 2, SyncPolicy::Async, true);
+}
+
+// --- shm data plane, pool level ---------------------------------------------
+
+#[test]
+fn shm_episodes_match_in_process_bitwise() {
+    let _ = require_worker_bin!();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(21));
+    let mut ip = EnvPool::standalone(&pool_cfg("bit-ip", LANES[0], 3)).unwrap();
+    let a = ip.rollout(&params, 6, 2).unwrap();
+    let mut shm = EnvPool::standalone(&pool_cfg("bit-shm", LANES[2], 3)).unwrap();
+    let b = shm.rollout(&params, 6, 2).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.env_id, y.env_id);
+        assert_eq!(x.traj, y.traj, "env {}", x.env_id);
+        assert_eq!(x.stats.reward_sum, y.stats.reward_sum);
+    }
+}
+
+#[test]
+fn shm_lockstep_batched_matches_in_process() {
+    // the lockstep path is where the ring actually carries the traffic:
+    // every actuation period moves Step out and StepOut back
+    let _ = require_worker_bin!();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(8));
+    let mut server_a = PolicyServer::native(SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let mut ip = EnvPool::standalone(&pool_cfg("lk-ip", LANES[0], 2)).unwrap();
+    let a = ip.rollout_batched(None, &mut server_a, &params, 5, 1).unwrap();
+    let mut server_b = PolicyServer::native(SURROGATE_N_OBS, SURROGATE_HIDDEN);
+    let mut shm = EnvPool::standalone(&pool_cfg("lk-shm", LANES[2], 2)).unwrap();
+    let b = shm.rollout_batched(None, &mut server_b, &params, 5, 1).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.env_id, y.env_id);
+        assert_eq!(x.traj, y.traj, "env {}", x.env_id);
+    }
+}
+
+// --- chaos: crashes, torn writes, recovery ----------------------------------
+
+#[test]
+fn shm_sigkilled_worker_is_respawned_and_episode_requeued() {
+    let _ = require_worker_bin!();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(3));
+
+    // fault-free twin for the bitwise comparison
+    let mut twin = EnvPool::standalone(&pool_cfg("kill-twin", LANES[2], 2)).unwrap();
+    let want = twin.rollout(&params, 5, 0).unwrap();
+
+    let mut pool = EnvPool::standalone(&pool_cfg("kill", LANES[2], 2)).unwrap();
+    let pids_before = pool.worker_pids();
+    pool.kill_worker(0).unwrap();
+    let got = pool.rollout(&params, 5, 0).unwrap();
+
+    assert_eq!(got.len(), 2);
+    assert_eq!(pool.restarts(), 1, "exactly one worker restart");
+    assert_eq!(pool.restarts_by_env(), vec![1, 0]);
+    let pids_after = pool.worker_pids();
+    assert_ne!(pids_before[0], pids_after[0], "env 0 worker was respawned");
+    assert_eq!(pids_before[1], pids_after[1], "env 1 worker untouched");
+    // respawn gets fresh generation-keyed rings, so the replay cannot
+    // read stale ring state: bitwise equal to the fault-free twin
+    for (x, y) in want.iter().zip(&got) {
+        assert_eq!(x.env_id, y.env_id);
+        assert_eq!(x.traj, y.traj, "env {}", x.env_id);
+    }
+}
+
+#[test]
+fn torn_frame_crash_never_corrupts_and_recovery_is_bitwise() {
+    // the centre of the chaos story: worker 0 dies *between* heartbeats
+    // on receiving its 2nd episode, after writing a torn (unpublished)
+    // ring slot AND a truncated pipe frame. The seqlock must make the
+    // torn slot invisible, the pipe reader must treat the truncated
+    // frame as death (not data), and respawn + re-queue must reproduce
+    // the fault-free learning curve bitwise.
+    let _ = require_worker_bin!();
+    let clean_cfg = train_cfg("torn-clean", LANES[2], 2);
+    let clean = train(&clean_cfg).expect("fault-free shm training failed");
+    let rows_clean = learning_rows(&clean_cfg.out_dir);
+    std::fs::remove_dir_all(&clean_cfg.out_dir).ok();
+
+    let mut cfg = train_cfg("torn", LANES[2], 2);
+    cfg.fault_injection = Some("0:1:midframe".into());
+    let s = train(&cfg).expect("training with mid-frame crash failed");
+    let rows = learning_rows(&cfg.out_dir);
+
+    // the injected kill is counted exactly once — not zero (the crash
+    // fired: its tombstone exists), not more (no corrupt-frame fallout)
+    assert!(
+        cfg.work_dir.join("chaos-env0-ep1.tombstone").exists(),
+        "chaos hook must actually have fired"
+    );
+    assert_eq!(s.worker_restarts, 1, "exactly the injected kill");
+    assert_eq!(rows, rows_clean, "recovery must not perturb the learning curve");
+    assert_eq!(clean.final_params, s.final_params, "final params diverged");
+
+    // workers.csv agrees with the summary, per env
+    let text = std::fs::read_to_string(cfg.out_dir.join("workers.csv")).unwrap();
+    let (header, wrows) = parse_csv(&text).unwrap();
+    assert_eq!(
+        header,
+        vec!["env_id", "episodes", "restarts", "wall_s", "cfd_s", "io_s", "policy_s"]
+    );
+    assert_eq!(wrows[0][2], "1", "env 0 restarted once");
+    assert_eq!(wrows[1][2], "0", "env 1 untouched");
+    let episodes: usize = wrows.iter().map(|r| r[1].parse::<usize>().unwrap()).sum();
+    assert_eq!(episodes, cfg.n_envs * cfg.iterations);
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn pipe_midframe_crash_also_recovers_bitwise() {
+    // same chaos shape on the pipe transport: the truncated pipe frame
+    // must read as death, never as data
+    let _ = require_worker_bin!();
+    let clean_cfg = train_cfg("ptorn-clean", LANES[1], 2);
+    let clean = train(&clean_cfg).expect("fault-free pipe training failed");
+    let rows_clean = learning_rows(&clean_cfg.out_dir);
+    std::fs::remove_dir_all(&clean_cfg.out_dir).ok();
+
+    let mut cfg = train_cfg("ptorn", LANES[1], 2);
+    cfg.fault_injection = Some("0:1:midframe".into());
+    let s = train(&cfg).expect("pipe training with mid-frame crash failed");
+    let rows = learning_rows(&cfg.out_dir);
+    assert_eq!(s.worker_restarts, 1);
+    assert_eq!(rows, rows_clean);
+    assert_eq!(clean.final_params, s.final_params);
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+// --- guard rails ------------------------------------------------------------
+
+#[test]
+fn shm_with_in_process_executor_is_rejected() {
+    let mut cfg = pool_cfg("shm-ip", LANES[0], 1);
+    cfg.transport = TransportKind::Shm;
+    let err = EnvPool::standalone(&cfg).unwrap_err().to_string();
+    assert!(err.contains("multi-process"), "{err}");
+}
+
+#[test]
+fn shm_ring_files_are_cleaned_up_on_drop() {
+    let _ = require_worker_bin!();
+    let cfg = pool_cfg("cleanup", LANES[2], 2);
+    let work = cfg.work_dir.clone();
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(5));
+    {
+        let mut pool = EnvPool::standalone(&cfg).unwrap();
+        let outs = pool.rollout(&params, 3, 0).unwrap();
+        assert_eq!(outs.len(), 2);
+    } // pool dropped: executor tears the rings down
+    let leftover: Vec<_> = std::fs::read_dir(&work)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".ring"))
+        .collect();
+    assert!(leftover.is_empty(), "ring files left behind: {leftover:?}");
+}
