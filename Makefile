@@ -3,7 +3,8 @@
 
 PY ?= python3
 
-.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke shm-smoke
+.PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke shm-smoke \
+        audit loom miri tsan asan
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -17,6 +18,40 @@ artifacts-paper:
 # Tier-1 gate (fmt, clippy, release build, docs, tests, smokes).
 ci:
 	./ci.sh
+
+# Repo-invariant audit (ARCHITECTURE.md §9): SAFETY comments on every
+# unsafe, determinism bans (hash collections / wall clock / f32 sums) in
+# the bitwise-pinned modules, wire-tag coverage. Exceptions live in
+# rust/audit.allow. Runs unconditionally in ci.sh too.
+audit:
+	cargo run --release --quiet -- audit
+
+# Loom model checking of the seqlock ring protocol (exhaustive
+# interleavings of publish/consume, wraparound, torn writes, the
+# drain-before-Died handshake). Needs the loom dev-dependency.
+loom:
+	RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+	    cargo test --release --test loom_shm
+
+# Miri over the safe codec layers (wire frames, exchange interfaces,
+# trajectory buffer). Needs a nightly toolchain with miri installed.
+miri:
+	MIRIFLAGS="-Zmiri-strict-provenance" cargo +nightly miri test --lib \
+	    exec::wire io_interface drl::buffer
+
+# Sanitizers over the concurrent exec/transport tests (real mmap ring,
+# OS threads/processes). Need nightly + rust-src for -Zbuild-std.
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" \
+	    cargo +nightly test -Zbuild-std \
+	    --target "$$(rustc -vV | sed -n 's/^host: //p')" \
+	    --test exec_backend --test exec_transport_conformance
+
+asan:
+	RUSTFLAGS="-Zsanitizer=address" \
+	    cargo +nightly test -Zbuild-std \
+	    --target "$$(rustc -vV | sed -n 's/^host: //p')" \
+	    --test exec_backend --test exec_transport_conformance
 
 # Rustdoc gate: warning-free docs + runnable doctests (same as ci.sh).
 doc:

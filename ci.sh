@@ -22,6 +22,17 @@
 #  10. shm transport smoke   --transport shm train bitwise-diffed against
 #                            --transport pipe, then the exec_transport
 #                            bench's --gate (shm steps/s >= pipe)
+#  11. repo-invariant audit  drlfoam audit (SAFETY comments, determinism
+#                            bans, wire-tag coverage; ARCHITECTURE.md §9)
+#
+# Deeper verification stages run on demand behind env gates (set any to 1;
+# they need toolchain components tier-1 does not assume):
+#   DRLFOAM_CI_LOOM=1   loom model checking of the seqlock ring protocol
+#                       (rust/tests/loom_shm.rs under RUSTFLAGS="--cfg loom")
+#   DRLFOAM_CI_MIRI=1   cargo +nightly miri test over the safe codec layers
+#                       (exec::wire, io_interface, drl::buffer)
+#   DRLFOAM_CI_TSAN=1   ThreadSanitizer over the exec/transport test suite
+#   DRLFOAM_CI_ASAN=1   AddressSanitizer over the same suite
 #
 # Integration tests that execute AOT artifacts skip themselves gracefully
 # when `make artifacts` has not been run; the scenario-registry and
@@ -34,10 +45,16 @@ echo "== cargo fmt --check"
 cargo fmt --check
 
 echo "== cargo clippy -D warnings"
-cargo clippy --all-targets -- -D warnings
+cargo clippy --all-targets --all-features -- -D warnings
 
 echo "== cargo build --release"
 cargo build --release
+
+# 11 runs right after the build: the audit is pure static analysis over
+# rust/src (plus the fuzz corpus), so a rules violation fails the gate
+# before any smoke spends time training.
+echo "== repo-invariant audit (drlfoam audit)"
+cargo run --release --quiet -- audit
 
 echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -183,5 +200,54 @@ fi
 #     than the pipe it replaces on the lockstep (data-plane-heavy) path.
 echo "== shm throughput gate (cargo bench exec_transport -- --gate)"
 cargo bench --bench exec_transport -- --gate
+
+# ---------------------------------------------------------------------------
+# Deeper verification, opt-in (each stage needs a toolchain component the
+# tier-1 environment does not assume: the loom dev-dependency graph, a
+# nightly toolchain with miri, or sanitizer runtimes + rust-src).
+# ---------------------------------------------------------------------------
+
+# Loom model checking: exhaustively explores the interleavings of the
+# seqlock ring protocol (publish/consume ordering, wraparound, torn
+# writes, the drain-before-Died handshake). cfg(loom) swaps the std
+# atomics for loom's via util::sync; the mmap ring itself is stubbed out
+# and the protocol runs on the heap-backed ModelRing.
+if [[ "${DRLFOAM_CI_LOOM:-0}" == "1" ]]; then
+    echo "== loom model checking (rust/tests/loom_shm.rs)"
+    RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+        cargo test --release --test loom_shm
+fi
+
+# Miri: interprets the safe codec layers (wire frame encode/decode, the
+# three CFD<->DRL exchange interfaces, the trajectory buffer) checking
+# for UB that tests can't observe. The mmap/process layers are excluded
+# — miri has no OS to mmap from.
+if [[ "${DRLFOAM_CI_MIRI:-0}" == "1" ]]; then
+    echo "== cargo miri test (wire codec, io_interface, drl::buffer)"
+    MIRIFLAGS="-Zmiri-strict-provenance" cargo +nightly miri test --lib \
+        exec::wire io_interface drl::buffer
+fi
+
+# ThreadSanitizer over the concurrent exec/transport suite: catches data
+# races the seqlock discipline is supposed to make impossible, on the
+# real mmap ring rather than the loom model. Needs nightly + rust-src
+# (-Zbuild-std so std itself is instrumented).
+if [[ "${DRLFOAM_CI_TSAN:-0}" == "1" ]]; then
+    echo "== ThreadSanitizer (exec_backend + exec_transport_conformance)"
+    RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std \
+        --target "$(rustc -vV | sed -n 's/^host: //p')" \
+        --test exec_backend --test exec_transport_conformance
+fi
+
+# AddressSanitizer over the same suite: bounds/use-after-free coverage
+# for the unsafe mmap slot arithmetic.
+if [[ "${DRLFOAM_CI_ASAN:-0}" == "1" ]]; then
+    echo "== AddressSanitizer (exec_backend + exec_transport_conformance)"
+    RUSTFLAGS="-Zsanitizer=address" \
+        cargo +nightly test -Zbuild-std \
+        --target "$(rustc -vV | sed -n 's/^host: //p')" \
+        --test exec_backend --test exec_transport_conformance
+fi
 
 echo "CI OK"

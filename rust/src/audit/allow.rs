@@ -1,0 +1,240 @@
+//! The audit allowlist: audited exceptions with justification and a cap.
+//!
+//! `rust/audit.allow` holds one entry per line:
+//!
+//! ```text
+//! # comment
+//! rule-name | rust/src/relative/path.rs | max-count | justification text
+//! ```
+//!
+//! Semantics (enforced by [`Allowlist::apply`]):
+//!
+//! * an entry suppresses up to `max-count` findings of `rule-name` in
+//!   `path` — the cap is the point: when a module is allowed 3 telemetry
+//!   clock reads and a 4th appears, the audit fails with ALL of them
+//!   listed, instead of the new one hiding behind the old justification;
+//! * an entry that suppresses *zero* findings is itself reported
+//!   (`allowlist-stale`): either the code was fixed (delete the entry)
+//!   or the path/rule is misspelled (fix it) — the list cannot rot;
+//! * the justification is mandatory, so the *why* lives next to the
+//!   exception and shows up in diffs when someone widens it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Finding;
+
+pub(crate) const RULE_STALE: &str = "allowlist-stale";
+
+/// One parsed allowlist line.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    /// Root-relative path, forward slashes (as findings report it).
+    pub file: String,
+    pub max_count: usize,
+    pub justification: String,
+    /// 1-based line in the allowlist file (for stale-entry findings).
+    pub line: usize,
+}
+
+/// The parsed allowlist.
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+    /// Root-relative path of the allowlist file itself.
+    rel: String,
+}
+
+impl Allowlist {
+    pub fn load(path: &Path) -> Result<Allowlist> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading allowlist {}", path.display()))?;
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = t.splitn(4, '|').map(str::trim).collect();
+            if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+                bail!(
+                    "allowlist {}:{}: expected `rule | file | max-count | justification`, \
+                     got {t:?}",
+                    path.display(),
+                    i + 1
+                );
+            }
+            let max_count: usize = parts[2].parse().with_context(|| {
+                format!(
+                    "allowlist {}:{}: max-count {:?} is not a number",
+                    path.display(),
+                    i + 1,
+                    parts[2]
+                )
+            })?;
+            if max_count == 0 {
+                bail!(
+                    "allowlist {}:{}: max-count 0 is meaningless — delete the entry instead",
+                    path.display(),
+                    i + 1
+                );
+            }
+            entries.push(AllowEntry {
+                rule: parts[0].to_string(),
+                file: parts[1].to_string(),
+                max_count,
+                justification: parts[3].to_string(),
+                line: i + 1,
+            });
+        }
+        Ok(Allowlist {
+            entries,
+            rel: path
+                .file_name()
+                .map(|n| format!("rust/{}", n.to_string_lossy()))
+                .unwrap_or_else(|| path.display().to_string()),
+        })
+    }
+
+    /// Build directly from entries (tests).
+    pub fn from_entries(entries: Vec<AllowEntry>, rel: &str) -> Allowlist {
+        Allowlist {
+            entries,
+            rel: rel.to_string(),
+        }
+    }
+
+    /// Suppress allowlisted findings; returns the kept findings (with
+    /// stale-entry and over-cap findings added) and the suppressed count.
+    pub fn apply(&self, findings: Vec<Finding>, _root: &Path) -> (Vec<Finding>, usize) {
+        // count matches per (rule, file)
+        let mut matched: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in &findings {
+            *matched.entry((f.rule.to_string(), f.file.clone())).or_insert(0) += 1;
+        }
+        let mut kept = Vec::new();
+        let mut suppressed = 0;
+        for f in findings {
+            let key = (f.rule.to_string(), f.file.clone());
+            let n = matched.get(&key).copied().unwrap_or(0);
+            match self.entry_for(&f.rule, &f.file) {
+                Some(e) if n <= e.max_count => suppressed += 1,
+                Some(e) => {
+                    // over cap: keep every finding, annotated
+                    kept.push(Finding {
+                        message: format!(
+                            "{} [allowlist caps {} at {} for this file; {n} found]",
+                            f.message, e.rule, e.max_count
+                        ),
+                        ..f
+                    });
+                }
+                None => kept.push(f),
+            }
+        }
+        // stale entries: nothing matched at all
+        for e in &self.entries {
+            let n = matched
+                .get(&(e.rule.clone(), e.file.clone()))
+                .copied()
+                .unwrap_or(0);
+            if n == 0 {
+                kept.push(Finding {
+                    rule: RULE_STALE,
+                    file: self.rel.clone(),
+                    line: e.line,
+                    message: format!(
+                        "entry `{} | {}` suppresses nothing — fixed code or a typo; \
+                         delete or correct it",
+                        e.rule, e.file
+                    ),
+                });
+            }
+        }
+        (kept, suppressed)
+    }
+
+    fn entry_for(&self, rule: &str, file: &str) -> Option<&AllowEntry> {
+        self.entries.iter().find(|e| e.rule == rule && e.file == file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: usize) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message: "m".to_string(),
+        }
+    }
+
+    fn entry(rule: &str, file: &str, max: usize) -> AllowEntry {
+        AllowEntry {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            max_count: max,
+            justification: "j".to_string(),
+            line: 1,
+        }
+    }
+
+    #[test]
+    fn within_cap_suppresses_over_cap_reports_all() {
+        let allow = Allowlist::from_entries(vec![entry("r", "f.rs", 2)], "rust/audit.allow");
+        let (kept, n) = allow.apply(
+            vec![finding("r", "f.rs", 1), finding("r", "f.rs", 2)],
+            Path::new("."),
+        );
+        assert_eq!(n, 2);
+        assert!(kept.is_empty(), "{kept:?}");
+
+        let (kept, n) = allow.apply(
+            vec![
+                finding("r", "f.rs", 1),
+                finding("r", "f.rs", 2),
+                finding("r", "f.rs", 3),
+            ],
+            Path::new("."),
+        );
+        assert_eq!(n, 0);
+        assert_eq!(kept.len(), 3);
+        assert!(kept[0].message.contains("caps"), "{:?}", kept[0].message);
+    }
+
+    #[test]
+    fn stale_entry_is_a_finding_and_unmatched_findings_pass_through() {
+        let allow = Allowlist::from_entries(vec![entry("r", "gone.rs", 1)], "rust/audit.allow");
+        let (kept, n) = allow.apply(vec![finding("other", "f.rs", 9)], Path::new("."));
+        assert_eq!(n, 0);
+        assert_eq!(kept.len(), 2, "{kept:?}");
+        assert!(kept.iter().any(|f| f.rule == RULE_STALE && f.line == 1));
+        assert!(kept.iter().any(|f| f.rule == "other" && f.line == 9));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines_and_zero_caps() {
+        let dir = std::env::temp_dir().join(format!("audit-allow-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("audit.allow");
+
+        std::fs::write(&p, "# comment\n\nr | f.rs | 2 | why\n").unwrap();
+        let a = Allowlist::load(&p).unwrap();
+        assert_eq!(a.entries.len(), 1);
+        assert_eq!(a.entries[0].max_count, 2);
+        assert_eq!(a.entries[0].justification, "why");
+
+        std::fs::write(&p, "r | f.rs | 2\n").unwrap();
+        assert!(Allowlist::load(&p).is_err());
+        std::fs::write(&p, "r | f.rs | nope | why\n").unwrap();
+        assert!(Allowlist::load(&p).is_err());
+        std::fs::write(&p, "r | f.rs | 0 | why\n").unwrap();
+        assert!(Allowlist::load(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

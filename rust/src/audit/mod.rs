@@ -1,0 +1,514 @@
+//! `drlfoam audit` — repo-invariant lint pass for rules clippy can't see.
+//!
+//! This repo's acceptance bar is *bitwise-identical* learning output, and
+//! its data plane is an `unsafe` mmap'd seqlock ring — so two whole
+//! classes of bug are invisible to the compiler and to clippy: a memory
+//! ordering or `unsafe` contract quietly weakened, and a source of
+//! nondeterminism (hash iteration order, wall-clock reads, f32 reduction
+//! order) creeping into a module whose output the equivalence tests pin.
+//! The audit makes those *crate-specific* invariants mechanical:
+//!
+//! | rule | scope | requirement |
+//! |------|-------|-------------|
+//! | `unsafe-safety-comment` | all of `rust/src/**` | every `unsafe` keyword preceded by a `// SAFETY:` comment (same line, or in the comment block above, attributes/blank lines skipped) |
+//! | `det-hash-collections`  | determinism-critical modules | no `HashMap`/`HashSet` at all (iteration order is nondeterministic; use `BTreeMap`/sorted `Vec`) |
+//! | `det-wall-clock`        | determinism-critical modules | no `Instant::now` / `SystemTime`; even the sanctioned [`crate::util::clock::telemetry_now`] choke point is flagged so each telemetry read needs a justified allowlist entry |
+//! | `f32-sum-in-scored-path`| determinism-critical modules | no `.sum::<f32>()` and no untyped `.sum()` (spell the accumulator type; f32 reduction is order-sensitive) |
+//! | `wire-tag-coverage`     | `exec/wire.rs` + fuzz corpus | every `wire::Tag` variant has an encode arm, a decode arm, and a `wire_fuzz` corpus case |
+//! | `allowlist-stale`       | the allowlist itself | every allowlist entry still suppresses at least one finding |
+//!
+//! Determinism-critical modules (`cluster/des.rs`, `cluster/planner.rs`,
+//! `coordinator/scheduler.rs`, `drl/*`) are the ones whose outputs the
+//! bitwise tests compare: DES scores, planner rankings, learning columns,
+//! policy parameters.
+//!
+//! Audited exceptions live in `rust/audit.allow`, one per line:
+//!
+//! ```text
+//! rule-name | rust/src/relative/path.rs | max-count | justification
+//! ```
+//!
+//! An entry suppresses up to `max-count` findings of `rule-name` in that
+//! file; more than `max-count` findings reports them ALL (so a new
+//! violation can't hide behind an old exception), and an entry that
+//! suppresses nothing is itself a finding (`allowlist-stale`) — the
+//! allowlist can only ever shrink-or-justify, never rot.
+//!
+//! The pass is a line-based pseudo-parser, not a rustc plugin: string
+//! literals and comments are stripped before pattern checks (so the rule
+//! table above, and the audit's own source, don't self-flag), the file
+//! walk is sorted, and all state is `BTreeMap` — the audit holds itself
+//! to its own determinism rules. Run `drlfoam audit` (text) or
+//! `drlfoam audit --format json` (machine-readable, for CI); exit status
+//! is the report's [`AuditReport::ok`]. See ARCHITECTURE.md §9.
+
+mod allow;
+mod rules;
+
+pub use allow::{AllowEntry, Allowlist};
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json;
+use crate::util::json::Json;
+
+/// Where the audit looks: a repo root (the directory holding `rust/src`),
+/// the integration-test dir (fuzz-corpus coverage), and an optional
+/// allowlist. [`AuditConfig::discover`] builds one from any cwd inside
+/// the repo; tests build fixture configs by hand.
+pub struct AuditConfig {
+    pub root: PathBuf,
+    pub tests_dir: PathBuf,
+    pub allowlist: Option<PathBuf>,
+}
+
+impl AuditConfig {
+    /// Config rooted at an explicit repo root, with the conventional
+    /// `rust/tests` + `rust/audit.allow` locations (allowlist only if
+    /// the file exists).
+    pub fn for_root(root: impl Into<PathBuf>) -> AuditConfig {
+        let root = root.into();
+        let allow = root.join("rust").join("audit.allow");
+        AuditConfig {
+            tests_dir: root.join("rust").join("tests"),
+            allowlist: allow.is_file().then_some(allow),
+            root,
+        }
+    }
+
+    /// Walk up from `start` to the nearest directory containing
+    /// `rust/src` — lets `drlfoam audit` run from anywhere in the repo.
+    pub fn discover(start: &Path) -> Result<AuditConfig> {
+        let start = start
+            .canonicalize()
+            .with_context(|| format!("resolving audit start dir {}", start.display()))?;
+        let mut dir = start.as_path();
+        loop {
+            if dir.join("rust").join("src").is_dir() {
+                return Ok(AuditConfig::for_root(dir));
+            }
+            dir = match dir.parent() {
+                Some(p) => p,
+                None => anyhow::bail!(
+                    "no repo root (a directory containing rust/src) above {}",
+                    start.display()
+                ),
+            };
+        }
+    }
+}
+
+/// One rule violation at a specific source line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Root-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number (0 = whole-file finding).
+    pub line: usize,
+    pub message: String,
+}
+
+/// Outcome of one audit run.
+pub struct AuditReport {
+    /// Violations after allowlist suppression, sorted (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by allowlist entries.
+    pub suppressed: usize,
+    /// Source files scanned.
+    pub files_checked: usize,
+}
+
+impl AuditReport {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report (one `file:line: [rule] message` per finding).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.line > 0 {
+                let _ = writeln!(out, "{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+            } else {
+                let _ = writeln!(out, "{}: [{}] {}", f.file, f.rule, f.message);
+            }
+        }
+        let _ = writeln!(
+            out,
+            "audit: {} finding(s), {} suppressed by allowlist, {} file(s) checked — {}",
+            self.findings.len(),
+            self.suppressed,
+            self.files_checked,
+            if self.ok() { "clean" } else { "FAIL" }
+        );
+        out
+    }
+
+    /// Machine-readable report for CI (`--format json`).
+    pub fn to_json(&self) -> String {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                json::obj(vec![
+                    ("rule", json::s(f.rule)),
+                    ("file", json::s(&f.file)),
+                    ("line", json::num(f.line as f64)),
+                    ("message", json::s(&f.message)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("files_checked", json::num(self.files_checked as f64)),
+            ("suppressed", json::num(self.suppressed as f64)),
+            ("findings", Json::Arr(findings)),
+        ])
+        .to_string()
+    }
+}
+
+/// A scanned source file: raw lines (SAFETY-comment detection needs
+/// comments) and code lines (comments + string literals blanked, so
+/// pattern rules can't be fooled by prose or fooled *into* firing on it).
+pub(crate) struct SourceFile {
+    pub rel: String,
+    pub raw: Vec<String>,
+    pub code: Vec<String>,
+}
+
+impl SourceFile {
+    pub(crate) fn load(path: &Path, root: &Path) -> Result<SourceFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let raw: Vec<String> = text.lines().map(str::to_owned).collect();
+        let code = strip_comments_and_strings(&raw);
+        Ok(SourceFile { rel, raw, code })
+    }
+
+    /// Is this file in the determinism-critical set (outputs pinned by
+    /// the bitwise equivalence tests)?
+    pub(crate) fn is_det_critical(&self) -> bool {
+        matches!(
+            self.rel.as_str(),
+            "rust/src/cluster/des.rs"
+                | "rust/src/cluster/planner.rs"
+                | "rust/src/coordinator/scheduler.rs"
+        ) || self.rel.starts_with("rust/src/drl/")
+    }
+}
+
+/// Run every rule over `rust/src/**` under the config's root and apply
+/// the allowlist. The report is deterministic: sorted walk, sorted
+/// findings, `BTreeMap` state only.
+pub fn run(cfg: &AuditConfig) -> Result<AuditReport> {
+    let src_root = cfg.root.join("rust").join("src");
+    ensure!(
+        src_root.is_dir(),
+        "audit root {} has no rust/src",
+        cfg.root.display()
+    );
+    let mut paths = Vec::new();
+    collect_rs_files(&src_root, &mut paths)?;
+    paths.sort();
+    let files = paths
+        .iter()
+        .map(|p| SourceFile::load(p, &cfg.root))
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut findings = Vec::new();
+    rules::unsafe_safety_comment(&files, &mut findings);
+    rules::det_hash_collections(&files, &mut findings);
+    rules::det_wall_clock(&files, &mut findings);
+    rules::f32_sum_in_scored_path(&files, &mut findings);
+    rules::wire_tag_coverage(&files, &cfg.tests_dir, &mut findings)?;
+
+    let mut suppressed = 0;
+    if let Some(path) = &cfg.allowlist {
+        let allow = Allowlist::load(path)?;
+        let (kept, n) = allow.apply(findings, &cfg.root);
+        findings = kept;
+        suppressed = n;
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(AuditReport {
+        findings,
+        suppressed,
+        files_checked: files.len(),
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("walking {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if matches!(path.extension(), Some(e) if e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Blank out comments (`//…`, `/*…*/`, doc variants) and string/char
+/// literals, preserving line structure and column positions (replaced by
+/// spaces). Handles escapes in `"…"`, `'x'`/`'\n'` char literals vs
+/// lifetimes, and `r"…"`/`r#"…"#` raw strings; block comments, plain
+/// strings (Rust string literals include their newlines), and raw
+/// strings may all span lines. A pseudo-lexer — good enough for pattern
+/// rules, not a real one.
+pub(crate) fn strip_comments_and_strings(raw: &[String]) -> Vec<String> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mode {
+        Code,
+        Block(u32),    // nested /* depth
+        Str,           // inside "…", possibly spanning lines
+        RawStr(usize), // number of # in the delimiter
+    }
+    let mut mode = Mode::Code;
+    let mut out = Vec::with_capacity(raw.len());
+    for line in raw {
+        let b: Vec<char> = line.chars().collect();
+        let mut o: Vec<char> = Vec::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                        mode = if depth > 1 { Mode::Block(depth - 1) } else { Mode::Code };
+                        o.push(' ');
+                        o.push(' ');
+                        i += 2;
+                    } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        o.push(' ');
+                        o.push(' ');
+                        i += 2;
+                    } else {
+                        o.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if b[i] == '\\' {
+                        // escape (incl. a trailing `\` escaping the newline)
+                        o.push(' ');
+                        o.push(' ');
+                        i += 2;
+                    } else if b[i] == '"' {
+                        o.push(' ');
+                        i += 1;
+                        mode = Mode::Code;
+                    } else {
+                        o.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if b[i] == '"' && closes_raw(&b, i + 1, hashes) {
+                        for _ in 0..=hashes {
+                            o.push(' ');
+                        }
+                        i += 1 + hashes;
+                        mode = Mode::Code;
+                    } else {
+                        o.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = b[i];
+                    if c == '/' && b.get(i + 1) == Some(&'/') {
+                        // line comment: blank to end of line
+                        while i < b.len() {
+                            o.push(' ');
+                            i += 1;
+                        }
+                    } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        o.push(' ');
+                        o.push(' ');
+                        i += 2;
+                    } else if c == 'r'
+                        && !prev_is_ident(&b, i)
+                        && raw_str_hashes(&b, i + 1).is_some()
+                    {
+                        let hashes = raw_str_hashes(&b, i + 1).unwrap();
+                        for _ in 0..(2 + hashes) {
+                            o.push(' ');
+                        }
+                        i += 2 + hashes; // r, #…#, "
+                        mode = Mode::RawStr(hashes);
+                    } else if c == '"' {
+                        o.push(' ');
+                        i += 1;
+                        mode = Mode::Str;
+                    } else if c == '\'' && is_char_literal(&b, i) {
+                        o.push(' ');
+                        i += 1;
+                        if b.get(i) == Some(&'\\') {
+                            o.push(' ');
+                            o.push(' ');
+                            i += 2;
+                        } else {
+                            o.push(' ');
+                            i += 1;
+                        }
+                        if b.get(i) == Some(&'\'') {
+                            o.push(' ');
+                            i += 1;
+                        }
+                    } else {
+                        o.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(o.into_iter().collect());
+    }
+    out
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// At `i` (just past an `r`): `#…#"` or `"` starts a raw string; returns
+/// the hash count.
+fn raw_str_hashes(b: &[char], i: usize) -> Option<usize> {
+    let mut n = 0;
+    while b.get(i + n) == Some(&'#') {
+        n += 1;
+    }
+    (b.get(i + n) == Some(&'"')).then_some(n)
+}
+
+fn closes_raw(b: &[char], i: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| b.get(i + k) == Some(&'#'))
+}
+
+/// `'` at `i` starts a char literal (vs a lifetime): `'\…'` or `'x'`.
+fn is_char_literal(b: &[char], i: usize) -> bool {
+    b.get(i + 1) == Some(&'\\') || b.get(i + 2) == Some(&'\'')
+}
+
+/// Does `hay` contain `needle` as a token — i.e. not embedded in a
+/// longer identifier on either side? (`unsafe_op_in_unsafe_fn` must not
+/// match a search for `unsafe`; `Frame::StepOut` must not satisfy a
+/// search for `Frame::Step`.)
+pub(crate) fn contains_token(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(off) = hay[from..].find(needle) {
+        let start = from + off;
+        let end = start + needle.len();
+        let pre = hay[..start].chars().next_back();
+        let post = hay[end..].chars().next();
+        let pre_ok = !matches!(pre, Some(c) if c.is_alphanumeric() || c == '_');
+        let post_ok = !matches!(post, Some(c) if c.is_alphanumeric() || c == '_');
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip1(s: &str) -> String {
+        strip_comments_and_strings(&[s.to_string()]).remove(0)
+    }
+
+    #[test]
+    fn strips_line_comments_and_strings_preserving_columns() {
+        let s = strip1(r#"let x = "Instant::now"; // HashMap here"#);
+        assert!(!s.contains("Instant::now"));
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("let x ="));
+        assert_eq!(s.len(), r#"let x = "Instant::now"; // HashMap here"#.len());
+    }
+
+    #[test]
+    fn strips_block_comments_across_lines() {
+        let lines = vec![
+            "let a = 1; /* HashMap".to_string(),
+            "still comment */ let b = 2;".to_string(),
+        ];
+        let out = strip_comments_and_strings(&lines);
+        assert!(!out[0].contains("HashMap"));
+        assert!(out[1].contains("let b = 2;"));
+        assert!(!out[1].contains("still"));
+    }
+
+    #[test]
+    fn escaped_quotes_and_char_literals_do_not_derail() {
+        let s = strip1(r#"let q = "a\"b"; let c = '"'; let l: &'static str = x;"#);
+        assert!(s.contains("let c ="));
+        assert!(s.contains("&'static str")); // lifetime untouched
+        let s2 = strip1(r"let nl = '\n'; HashMap");
+        assert!(s2.contains("HashMap")); // code after the char literal survives
+    }
+
+    #[test]
+    fn plain_strings_spanning_lines_are_blanked() {
+        // Rust string literals include their newlines — interior lines
+        // must not be mistaken for code (the CLI usage text mentions
+        // `unsafe` and rule names mid-string).
+        let lines = vec![
+            r#"const USAGE: &str = "first line"#.to_string(),
+            "  SAFETY comments on every unsafe, HashMap\";".to_string(),
+            "let after = 1;".to_string(),
+        ];
+        let out = strip_comments_and_strings(&lines);
+        assert!(!out[1].contains("unsafe"), "{:?}", out[1]);
+        assert!(!out[1].contains("HashMap"));
+        assert!(out[2].contains("let after = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let s = strip1(r##"let r = r#"Instant::now"#; tail()"##);
+        assert!(!s.contains("Instant::now"));
+        assert!(s.contains("tail()"));
+    }
+
+    #[test]
+    fn token_matching_respects_identifier_boundaries() {
+        assert!(contains_token("unsafe {", "unsafe"));
+        assert!(!contains_token("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(contains_token("x = Frame::Step,", "Frame::Step"));
+        assert!(!contains_token("x = Frame::StepOut,", "Frame::Step"));
+    }
+
+    #[test]
+    fn discover_walks_up_to_the_repo_root() {
+        let root = std::env::temp_dir().join(format!("audit-discover-{}", std::process::id()));
+        let deep = root.join("rust").join("src").join("cluster");
+        std::fs::create_dir_all(&deep).unwrap();
+        let cfg = AuditConfig::discover(&deep).unwrap();
+        assert_eq!(
+            cfg.root.canonicalize().unwrap(),
+            root.canonicalize().unwrap()
+        );
+        assert!(AuditConfig::discover(std::path::Path::new("/")).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

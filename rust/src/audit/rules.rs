@@ -1,0 +1,385 @@
+//! The audit's rule implementations (see the table in [`super`]'s docs).
+//!
+//! Every rule is a pure function over pre-lexed [`SourceFile`]s pushing
+//! [`Finding`]s; pattern checks run on the *stripped* line (comments and
+//! string literals blanked) so prose can neither trigger nor mask a
+//! finding, while SAFETY-comment detection reads the raw line (comments
+//! are the evidence there). Rules never early-exit a file: the report
+//! lists every violation, not the first.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{contains_token, strip_comments_and_strings, Finding, SourceFile};
+
+pub(crate) const RULE_UNSAFE: &str = "unsafe-safety-comment";
+pub(crate) const RULE_HASH: &str = "det-hash-collections";
+pub(crate) const RULE_CLOCK: &str = "det-wall-clock";
+pub(crate) const RULE_F32_SUM: &str = "f32-sum-in-scored-path";
+pub(crate) const RULE_WIRE: &str = "wire-tag-coverage";
+
+/// Every `unsafe` keyword (block, fn, impl) must be justified by a
+/// `SAFETY:` comment — on the same line, or in the contiguous comment
+/// block above it (attribute lines and blank lines in between are
+/// skipped, so `// SAFETY: …` above `#[cfg(unix)]` + `unsafe {` counts).
+pub(crate) fn unsafe_safety_comment(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files {
+        for (i, code) in f.code.iter().enumerate() {
+            if !contains_token(code, "unsafe") {
+                continue;
+            }
+            if f.raw[i].contains("SAFETY:") || comment_block_above_has_safety(f, i) {
+                continue;
+            }
+            out.push(Finding {
+                rule: RULE_UNSAFE,
+                file: f.rel.clone(),
+                line: i + 1,
+                message: "unsafe without a preceding `// SAFETY:` comment".into(),
+            });
+        }
+    }
+}
+
+fn comment_block_above_has_safety(f: &SourceFile, line: usize) -> bool {
+    for j in (0..line).rev() {
+        let t = f.raw[j].trim_start();
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("#![") || t.is_empty() {
+            // attributes/blank lines sit between the comment and the site
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Determinism-critical modules must not use `HashMap`/`HashSet` *at
+/// all*: their iteration order is randomized per process, and these
+/// modules' outputs (DES scores, plan rankings, learning columns) are
+/// compared bitwise. Deliberately coarser than "no iteration" — whether
+/// a given map is iterated is one refactor away from changing, so the
+/// types are banned outright (`BTreeMap` / sorted `Vec` instead), with
+/// the allowlist as the escape hatch for a justified, never-iterated use.
+pub(crate) fn det_hash_collections(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files.iter().filter(|f| f.is_det_critical()) {
+        for (i, code) in f.code.iter().enumerate() {
+            for ty in ["HashMap", "HashSet"] {
+                if contains_token(code, ty) {
+                    out.push(Finding {
+                        rule: RULE_HASH,
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "{ty} in a determinism-critical module (iteration order is \
+                             nondeterministic; use BTreeMap or a sorted Vec)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Determinism-critical modules must not read the wall clock: `Instant`
+/// and `SystemTime` values can never influence a pinned output. The
+/// sanctioned telemetry choke point `telemetry_now`
+/// ([`crate::util::clock`]) is flagged too — each telemetry read exists
+/// by explicit allowlist entry, with a max count so new reads can't ride
+/// in on an old justification.
+pub(crate) fn det_wall_clock(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files.iter().filter(|f| f.is_det_critical()) {
+        for (i, code) in f.code.iter().enumerate() {
+            // an import is not a read, and every actual read names the
+            // pattern again at the call site — skip `use` lines so the
+            // allowlist counts stay "number of reads", not reads + 1
+            let t = code.trim_start();
+            if t.starts_with("use ") || t.starts_with("pub use ") {
+                continue;
+            }
+            for pat in ["Instant::now", "SystemTime", "telemetry_now"] {
+                if contains_token(code, pat) {
+                    out.push(Finding {
+                        rule: RULE_CLOCK,
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        message: format!(
+                            "{pat} in a determinism-critical module (wall-clock reads are \
+                             allowlist-only telemetry)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// f32 summation is order-sensitive, and scored paths must be
+/// order-stable: `.sum::<f32>()` is banned outright, and an untyped
+/// `.sum()` is flagged because nothing stops it inferring to f32 later —
+/// spell the accumulator (`.sum::<f64>()`, `.sum::<usize>()`, …) so the
+/// audit (and the reviewer) can see it.
+pub(crate) fn f32_sum_in_scored_path(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for f in files.iter().filter(|f| f.is_det_critical()) {
+        for (i, code) in f.code.iter().enumerate() {
+            let (flagged, msg) = if code.contains(".sum::<f32") {
+                (true, "f32 .sum() in a scored path (order-sensitive; accumulate in f64)")
+            } else if code.contains(".sum()") {
+                (
+                    true,
+                    "untyped .sum() in a scored path (could infer to f32; \
+                     spell the accumulator type, e.g. .sum::<f64>())",
+                )
+            } else {
+                (false, "")
+            };
+            if flagged {
+                out.push(Finding {
+                    rule: RULE_F32_SUM,
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: msg.into(),
+                });
+            }
+        }
+    }
+}
+
+/// Every `wire::Tag` variant must be wired end to end: an encode arm
+/// (`Tag::V as u8`), a decode arm (`Some(Tag::V) =>`), and a fuzz-corpus
+/// case (`Frame::V` inside `mod wire_fuzz` of the exec integration
+/// tests). Parses the `pub enum Tag` block out of `exec/wire.rs`, so a
+/// newly appended frame that misses any of the three fails the audit
+/// instead of failing in production with "unknown wire frame tag".
+pub(crate) fn wire_tag_coverage(
+    files: &[SourceFile],
+    tests_dir: &Path,
+    out: &mut Vec<Finding>,
+) -> Result<()> {
+    let Some(wire) = files.iter().find(|f| f.rel == "rust/src/exec/wire.rs") else {
+        return Ok(()); // no wire module under this root (fixture tree)
+    };
+    let variants = parse_tag_variants(wire);
+    let fuzz = fuzz_corpus_text(tests_dir)?;
+    for (line, v) in &variants {
+        if !wire.code.iter().any(|c| c.contains(&format!("Tag::{v} as u8"))) {
+            out.push(Finding {
+                rule: RULE_WIRE,
+                file: wire.rel.clone(),
+                line: *line,
+                message: format!("Tag::{v} has no encode arm (`Tag::{v} as u8`)"),
+            });
+        }
+        if !wire.code.iter().any(|c| c.contains(&format!("Some(Tag::{v})"))) {
+            out.push(Finding {
+                rule: RULE_WIRE,
+                file: wire.rel.clone(),
+                line: *line,
+                message: format!("Tag::{v} has no decode arm (`Some(Tag::{v}) =>`)"),
+            });
+        }
+        match &fuzz {
+            Some(corpus) if contains_token(corpus, &format!("Frame::{v}")) => {}
+            Some(_) => out.push(Finding {
+                rule: RULE_WIRE,
+                file: wire.rel.clone(),
+                line: *line,
+                message: format!(
+                    "Tag::{v} has no fuzz-corpus case (`Frame::{v}` in mod wire_fuzz \
+                     of rust/tests/exec_backend.rs)"
+                ),
+            }),
+            None => out.push(Finding {
+                rule: RULE_WIRE,
+                file: wire.rel.clone(),
+                line: *line,
+                message: "wire fuzz corpus not found (`mod wire_fuzz` in \
+                          rust/tests/exec_backend.rs)"
+                    .into(),
+            }),
+        }
+    }
+    Ok(())
+}
+
+/// `(line, name)` of each variant inside the `pub enum Tag { … }` block.
+fn parse_tag_variants(wire: &SourceFile) -> Vec<(usize, String)> {
+    let mut variants = Vec::new();
+    let Some(start) = wire
+        .code
+        .iter()
+        .position(|c| c.contains("pub enum Tag"))
+    else {
+        return variants;
+    };
+    for (i, code) in wire.code.iter().enumerate().skip(start + 1) {
+        let t = code.trim();
+        if t.starts_with('}') {
+            break;
+        }
+        // `Hello = 1,`
+        if let Some((name, _)) = t.split_once('=') {
+            let name = name.trim();
+            if !name.is_empty() && name.chars().all(|c| c.is_alphanumeric()) {
+                variants.push((i + 1, name.to_string()));
+            }
+        }
+    }
+    variants
+}
+
+/// The stripped text of `mod wire_fuzz { … }` in the exec integration
+/// tests (brace-counted extent), if present.
+fn fuzz_corpus_text(tests_dir: &Path) -> Result<Option<String>> {
+    let path = tests_dir.join("exec_backend.rs");
+    if !path.is_file() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let raw: Vec<String> = text.lines().map(str::to_owned).collect();
+    let code = strip_comments_and_strings(&raw);
+    let Some(start) = code.iter().position(|c| c.contains("mod wire_fuzz")) else {
+        return Ok(None);
+    };
+    let mut depth = 0i64;
+    let mut opened = false;
+    let mut block = String::new();
+    for line in &code[start..] {
+        block.push_str(line);
+        block.push('\n');
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    Ok(Some(block))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let raw: Vec<String> = src.lines().map(str::to_owned).collect();
+        let code = strip_comments_and_strings(&raw);
+        SourceFile {
+            rel: rel.to_string(),
+            raw,
+            code,
+        }
+    }
+
+    #[test]
+    fn unsafe_rule_accepts_safety_above_attributes_and_same_line() {
+        let good = file(
+            "rust/src/exec/x.rs",
+            "// SAFETY: fine\n#[cfg(unix)]\nunsafe { a(); }\n\
+             let v = c.with(|p| unsafe { (*p).clone() }); // SAFETY: owned\n",
+        );
+        let mut out = Vec::new();
+        unsafe_safety_comment(&[good], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+
+        let bad = file("rust/src/exec/x.rs", "// setup\nunsafe { a(); }\n");
+        let mut out = Vec::new();
+        unsafe_safety_comment(&[bad], &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_rule_ignores_lint_names_and_prose() {
+        let f = file(
+            "rust/src/lib.rs",
+            "#![deny(unsafe_op_in_unsafe_fn)]\n// unsafe is discussed here\n",
+        );
+        let mut out = Vec::new();
+        unsafe_safety_comment(&[f], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn det_rules_fire_only_in_det_critical_files() {
+        let src = "use std::collections::HashMap;\nlet t = Instant::now();\n\
+                   let s: f32 = xs.iter().sum();\n";
+        let critical = file("rust/src/drl/x.rs", src);
+        let free = file("rust/src/exec/x.rs", src);
+        let mut out = Vec::new();
+        det_hash_collections(&[critical, free], &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].file, "rust/src/drl/x.rs");
+
+        let critical = file("rust/src/coordinator/scheduler.rs", src);
+        let mut out = Vec::new();
+        det_wall_clock(&[critical], &mut out);
+        assert_eq!(out.len(), 1);
+        let critical = file("rust/src/cluster/des.rs", src);
+        let mut out = Vec::new();
+        f32_sum_in_scored_path(&[critical], &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn sum_rule_accepts_explicit_non_f32_accumulators() {
+        let f = file(
+            "rust/src/cluster/planner.rs",
+            "let a = xs.iter().sum::<f64>();\nlet b: usize = ys.iter().sum::<usize>();\n",
+        );
+        let mut out = Vec::new();
+        f32_sum_in_scored_path(&[f], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let f = file("rust/src/cluster/planner.rs", "let c = zs.iter().sum::<f32>();\n");
+        let mut out = Vec::new();
+        f32_sum_in_scored_path(&[f], &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn clock_rule_flags_the_telemetry_choke_point_too() {
+        let f = file(
+            "rust/src/drl/trainer.rs",
+            "let t0 = crate::util::clock::telemetry_now();\n",
+        );
+        let mut out = Vec::new();
+        det_wall_clock(&[f], &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn wire_rule_reports_missing_arms_and_corpus() {
+        let wire = file(
+            "rust/src/exec/wire.rs",
+            "pub enum Tag {\n    Hello = 1,\n    Probe = 2,\n}\n\
+             fn enc() { buf.push(Tag::Hello as u8); }\n\
+             fn dec() { match t { Some(Tag::Hello) => {} } }\n",
+        );
+        // fixture tests dir with a corpus that only covers Hello
+        let dir = std::env::temp_dir().join(format!("audit-wire-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("exec_backend.rs"),
+            "mod wire_fuzz {\n    fn corpus() { let _ = Frame::Hello; }\n}\n",
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        wire_tag_coverage(&[wire], &dir, &mut out).unwrap();
+        let msgs: Vec<&str> = out.iter().map(|f| f.message.as_str()).collect();
+        assert_eq!(out.len(), 3, "{msgs:?}"); // Probe: encode + decode + corpus
+        assert!(msgs.iter().all(|m| m.contains("Probe")), "{msgs:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -34,7 +34,6 @@
 use std::collections::VecDeque;
 use std::io::Write as _;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -46,6 +45,7 @@ use crate::coordinator::train::{
 use crate::drl::policy::PolicyBackendKind;
 use crate::drl::Batch;
 use crate::runtime::write_f32_bin;
+use crate::util::clock::telemetry_now;
 use crate::util::rng::Rng;
 
 /// When the coordinator stops collecting trajectories and updates the
@@ -202,7 +202,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     let mut stale_hist: Vec<usize> = Vec::new();
     let mut stale_sum = 0u64;
     let mut barrier_idle_s = 0.0f64;
-    let t_total = Instant::now();
+    let t_total = telemetry_now();
 
     let mut csv = std::fs::File::create(cfg.out_dir.join("train_log.csv"))?;
     writeln!(
@@ -214,7 +214,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
 
     for it in 0..total_updates {
         let take = k.min(total_episodes - consumed);
-        let t0 = Instant::now();
+        let t0 = telemetry_now();
 
         match &mut server {
             None => {
@@ -276,7 +276,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         batch_eps.sort_by_key(|o| o.env_id);
         let rollout_s = t0.elapsed().as_secs_f64();
 
-        let t_update_start = Instant::now();
+        let t_update_start = telemetry_now();
         for o in &batch_eps {
             let e = o.env_id;
             let stale = version - env_version[e];
@@ -375,7 +375,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     // process* timings — the measured source `--layout auto` calibrates
     // from.
     let restarts_by_env = pool.restarts_by_env();
-    let worker_restarts: usize = restarts_by_env.iter().sum();
+    let worker_restarts: usize = restarts_by_env.iter().sum::<usize>();
     let mut wcsv = std::fs::File::create(cfg.out_dir.join("workers.csv"))?;
     writeln!(wcsv, "env_id,episodes,restarts,wall_s,cfd_s,io_s,policy_s")?;
     for (e, t) in pool.telemetry().iter().enumerate() {

@@ -34,7 +34,7 @@ impl Trajectory {
 
     /// Undiscounted episode return.
     pub fn total_reward(&self) -> f64 {
-        self.transitions.iter().map(|t| t.reward).sum()
+        self.transitions.iter().map(|t| t.reward).sum::<f64>()
     }
 }
 
@@ -53,7 +53,7 @@ impl Batch {
     /// (standard PPO practice; keeps the update scale-invariant to the
     /// reward magnitude, which for Eq. 12 is O(0.1)).
     pub fn assemble(trajs: &[Trajectory], n_obs: usize, gamma: f64, lam: f64) -> Batch {
-        let total: usize = trajs.iter().map(|t| t.len()).sum();
+        let total: usize = trajs.iter().map(|t| t.len()).sum::<usize>();
         let mut b = Batch {
             n_obs,
             obs: Vec::with_capacity(total * n_obs),

@@ -301,7 +301,7 @@ impl NativeUpdater {
         let entropy = logstd + 0.5 * (log2pi + 1.0);
         g[lay.logstd] = g_logstd - self.hp.ent_coef as f32;
 
-        let norm2: f64 = g.iter().map(|&x| x as f64 * x as f64).sum();
+        let norm2: f64 = g.iter().map(|&x| x as f64 * x as f64).sum::<f64>();
         let stats = [
             -pg_acc / bf,
             v_acc / bf,

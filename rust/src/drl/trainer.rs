@@ -3,13 +3,13 @@
 //! [`TrainerBackend`] — the AOT `ppo_update` artifact (XLA) or the
 //! pure-Rust [`NativeUpdater`] (no artifacts required).
 
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::drl::buffer::Batch;
 use crate::drl::native_update::NativeUpdater;
 use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, DrlManifest, Executable};
+use crate::util::clock::telemetry_now;
 use crate::util::rng::Rng;
 
 /// Which engine performs the PPO minibatch update (`--update-backend`).
@@ -129,7 +129,7 @@ impl PpoTrainer {
         batch: &Batch,
         rng: &mut Rng,
     ) -> Result<UpdateStats> {
-        let t0 = Instant::now();
+        let t0 = telemetry_now();
         let mut agg = UpdateStats::default();
         match backend {
             TrainerBackend::Xla(exe) => self.update_xla(exe, batch, rng, &mut agg)?,

@@ -50,6 +50,7 @@
 
 pub mod inprocess;
 pub mod process;
+pub mod seqlock;
 pub mod shm;
 pub mod wire;
 pub mod worker;

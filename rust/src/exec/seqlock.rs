@@ -1,0 +1,254 @@
+//! The SPSC seqlock protocol — ordering decisions in ONE place.
+//!
+//! [`super::shm`]'s memory-mapped ring and the loom model checks
+//! (`rust/tests/loom_shm.rs`) must agree on the protocol *exactly*, or
+//! the model proves the wrong thing. So the four sequence-word
+//! transitions of the Vyukov bounded SPSC queue live here as free
+//! functions over the [`crate::util::sync`] facade, and both the mmap
+//! ring and the heap-backed [`ModelRing`] below drive their slots
+//! through them:
+//!
+//! | transition        | who      | op                                  | why this ordering |
+//! |-------------------|----------|-------------------------------------|-------------------|
+//! | [`slot_init`]     | creator  | `seq.store(i, Release)`             | initial handoff to both sides' first `Acquire` load |
+//! | [`producer_owns`] | producer | `seq.load(Acquire) == pos`          | acquires the consumer's *release* of this slot — the consumer's final payload read happens-before our overwrite |
+//! | [`publish`]       | producer | `seq.store(pos + 1, Release)`       | releases the payload bytes — a consumer that acquires `pos + 1` sees the complete frame, never a torn one |
+//! | [`consumer_owns`] | consumer | `seq.load(Acquire) == pos + 1`      | acquires the producer's publish — pairs with [`publish`] |
+//! | [`release`]       | consumer | `seq.store(pos + n_slots, Release)` | releases the slot for the producer's next lap — pairs with [`producer_owns`] |
+//!
+//! The load half of each Release/Acquire pair is what makes torn writes
+//! *invisible*: a producer that dies between writing payload bytes and
+//! calling [`publish`] leaves `seq == pos`, so [`consumer_owns`] stays
+//! false forever and the consumer never touches the half-written slot
+//! (`torn_write_is_never_observable` in the loom suite, plus the chaos
+//! tests over the real mmap ring). Weakening any `Release` here to
+//! `Relaxed` is caught by loom as a causality violation on the payload
+//! cell — `relaxed_publish_is_caught_by_loom` demonstrates it.
+//!
+//! [`ModelRing`] is the loom-checkable stand-in for the mmap ring:
+//! payload slots are [`UnsafeCell`]s (tracked under loom), sequence
+//! words are facade atomics, and push/pop mirror
+//! `shm::Producer::push` / `shm::Consumer::try_pop` step for step.
+
+use crate::util::sync::{Arc, AtomicU64, Ordering, UnsafeCell};
+
+/// Stamp slot `idx`'s sequence word with its initial value (`seq = idx`
+/// means "empty, awaiting lap-0 producer").
+pub fn slot_init(seq: &AtomicU64, idx: u64) {
+    seq.store(idx, Ordering::Release);
+}
+
+/// Does the producer at position `pos` own its slot (is it free)?
+pub fn producer_owns(seq: &AtomicU64, pos: u64) -> bool {
+    seq.load(Ordering::Acquire) == pos
+}
+
+/// Publish the frame the producer wrote into slot `pos`. Must be the
+/// LAST thing the producer does to the slot: the Release store is what
+/// transfers the payload bytes to the consumer.
+pub fn publish(seq: &AtomicU64, pos: u64) {
+    seq.store(pos + 1, Ordering::Release);
+}
+
+/// Does the consumer at position `pos` have a published frame waiting?
+pub fn consumer_owns(seq: &AtomicU64, pos: u64) -> bool {
+    seq.load(Ordering::Acquire) == pos + 1
+}
+
+/// Hand slot `pos` back to the producer for its next lap. Must be the
+/// LAST thing the consumer does to the slot.
+pub fn release(seq: &AtomicU64, pos: u64, n_slots: u64) {
+    seq.store(pos + n_slots, Ordering::Release);
+}
+
+// --- heap-backed model ring -------------------------------------------------
+
+/// Shared state of a heap-backed SPSC seqlock ring: the protocol of the
+/// mmap ring, minus the mmap. Exists so the protocol can be (a) loom
+/// model-checked and (b) unit-tested without touching the filesystem;
+/// it is NOT a transport (the real data plane is [`super::shm`]).
+pub struct ModelRing {
+    seqs: Box<[AtomicU64]>,
+    slots: Box<[UnsafeCell<Vec<u8>>]>,
+}
+
+// SAFETY: `UnsafeCell<Vec<u8>>` makes `ModelRing` `!Sync` by default,
+// but every access to `slots[i]` is guarded by the seqlock discipline on
+// `seqs[i]`: the producer only writes a slot it owns (`producer_owns`),
+// the consumer only reads a slot that was published (`consumer_owns`),
+// and the Release/Acquire pairs above order those accesses. Loom checks
+// exactly this claim on every interleaving.
+unsafe impl Sync for ModelRing {}
+// SAFETY: sending the ring between threads moves no thread-affine state;
+// see the `Sync` argument for why shared access is then sound.
+unsafe impl Send for ModelRing {}
+
+impl ModelRing {
+    /// Create a ring of `n_slots` slots and split it into its two
+    /// single-threaded halves.
+    pub fn pair(n_slots: usize) -> (ModelProducer, ModelConsumer) {
+        assert!(n_slots > 0, "model ring needs at least one slot");
+        let seqs: Box<[AtomicU64]> = (0..n_slots as u64).map(AtomicU64::new).collect();
+        let slots: Box<[UnsafeCell<Vec<u8>>]> =
+            (0..n_slots).map(|_| UnsafeCell::new(Vec::new())).collect();
+        let ring = Arc::new(ModelRing { seqs, slots });
+        (
+            ModelProducer {
+                ring: Arc::clone(&ring),
+                pos: 0,
+            },
+            ModelConsumer { ring, pos: 0 },
+        )
+    }
+
+    fn n_slots(&self) -> u64 {
+        self.seqs.len() as u64
+    }
+
+    fn idx(&self, pos: u64) -> usize {
+        (pos % self.n_slots()) as usize
+    }
+}
+
+/// Write half of a [`ModelRing`] (exactly one exists per ring).
+pub struct ModelProducer {
+    ring: Arc<ModelRing>,
+    pos: u64,
+}
+
+/// Read half of a [`ModelRing`] (exactly one exists per ring).
+pub struct ModelConsumer {
+    ring: Arc<ModelRing>,
+    pos: u64,
+}
+
+impl ModelProducer {
+    /// Non-blocking push: write + publish one frame if the slot is free.
+    /// Mirrors `shm::Producer::push` minus the backoff/timeout loop
+    /// (model checks need bounded executions, so the caller spins).
+    pub fn try_push(&mut self, bytes: &[u8]) -> bool {
+        let idx = self.ring.idx(self.pos);
+        let seq = &self.ring.seqs[idx];
+        if !producer_owns(seq, self.pos) {
+            return false;
+        }
+        // SAFETY: we own the slot (seq == pos): the consumer will not
+        // touch the cell until `publish` below, and the previous
+        // consumer's reads happened-before our `producer_owns` Acquire.
+        self.ring.slots[idx].with_mut(|p| unsafe {
+            (*p).clear();
+            (*p).extend_from_slice(bytes);
+        });
+        publish(seq, self.pos);
+        self.pos += 1;
+        true
+    }
+
+    /// Chaos/model hook: write the payload but never publish — a
+    /// producer crashed mid-write. The protocol must keep this slot
+    /// invisible to the consumer forever (the seqlock's core guarantee).
+    pub fn write_torn(&mut self, bytes: &[u8]) {
+        let idx = self.ring.idx(self.pos);
+        // SAFETY: as in `try_push` — we own the unpublished slot; since
+        // `publish` is never called, no other side ever reads it.
+        self.ring.slots[idx].with_mut(|p| unsafe {
+            (*p).clear();
+            (*p).extend_from_slice(bytes);
+        });
+        // no publish: the frame must stay unobservable
+    }
+
+    /// Deliberately WRONG publish (Relaxed instead of Release), kept for
+    /// the negative loom test `relaxed_publish_is_caught_by_loom`: with
+    /// no release fence the consumer can acquire the new sequence value
+    /// without the payload bytes, which loom reports as a causality
+    /// violation on the slot cell. Never call this outside that test.
+    pub fn push_with_relaxed_publish(&mut self, bytes: &[u8]) -> bool {
+        let idx = self.ring.idx(self.pos);
+        let seq = &self.ring.seqs[idx];
+        if !producer_owns(seq, self.pos) {
+            return false;
+        }
+        // SAFETY: identical slot ownership to `try_push`; the *bug*
+        // below is the ordering of the store, not the cell access.
+        self.ring.slots[idx].with_mut(|p| unsafe {
+            (*p).clear();
+            (*p).extend_from_slice(bytes);
+        });
+        seq.store(self.pos + 1, Ordering::Relaxed); // BUG by design
+        self.pos += 1;
+        true
+    }
+}
+
+impl ModelConsumer {
+    /// Non-blocking pop: mirror of `shm::Consumer::try_pop`.
+    pub fn try_pop(&mut self) -> Option<Vec<u8>> {
+        let idx = self.ring.idx(self.pos);
+        let seq = &self.ring.seqs[idx];
+        if !consumer_owns(seq, self.pos) {
+            return None;
+        }
+        // SAFETY: the slot is published (seq == pos + 1): the producer's
+        // payload writes happened-before our `consumer_owns` Acquire,
+        // and it will not write again until `release` below.
+        let out = self.ring.slots[idx].with(|p| unsafe { (*p).clone() });
+        release(seq, self.pos, self.ring.n_slots());
+        self.pos += 1;
+        Some(out)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_ring_round_trips_in_order_across_wraps() {
+        let (mut tx, mut rx) = ModelRing::pair(2);
+        for lap in 0..5u32 {
+            assert!(tx.try_push(&lap.to_le_bytes()));
+            assert!(tx.try_push(&(lap + 100).to_le_bytes()));
+            // ring of 2 is now full
+            assert!(!tx.try_push(&[0xFF]));
+            assert_eq!(rx.try_pop().unwrap(), lap.to_le_bytes());
+            assert_eq!(rx.try_pop().unwrap(), (lap + 100).to_le_bytes());
+            assert!(rx.try_pop().is_none());
+        }
+    }
+
+    #[test]
+    fn torn_write_is_invisible_on_the_model_ring() {
+        let (mut tx, mut rx) = ModelRing::pair(4);
+        tx.write_torn(&[0xDE, 0xAD]);
+        assert!(rx.try_pop().is_none());
+        assert!(rx.try_pop().is_none());
+    }
+
+    #[test]
+    fn cross_thread_stream_is_ordered_and_complete() {
+        let (mut tx, mut rx) = ModelRing::pair(4);
+        let n = 1000u32;
+        let h = std::thread::spawn(move || {
+            let mut sent = 0u32;
+            while sent < n {
+                if tx.try_push(&sent.to_le_bytes()) {
+                    sent += 1;
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let mut next = 0u32;
+        while next < n {
+            match rx.try_pop() {
+                Some(bytes) => {
+                    assert_eq!(bytes, next.to_le_bytes());
+                    next += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        h.join().unwrap();
+    }
+}

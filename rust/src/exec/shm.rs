@@ -28,37 +28,58 @@
 //!
 //! ## Seqlock protocol (Vyukov bounded SPSC)
 //!
-//! Slot `i` starts with `seq = i`. The producer at position `p` waits for
-//! `seq == p` (Acquire), writes `len` + payload, then *publishes* with
-//! `seq.store(p + 1, Release)`. The consumer at `p` waits for
-//! `seq == p + 1` (Acquire), copies the frame out, then releases the slot
-//! with `seq.store(p + n_slots, Release)`. A crash mid-write leaves the
+//! The sequence-word transitions — and every memory-ordering decision —
+//! live in [`super::seqlock`], shared verbatim with the loom model
+//! checks (`rust/tests/loom_shm.rs`): slot `i` starts at `seq = i`
+//! ([`seqlock::slot_init`]); the producer at `p` waits for ownership
+//! ([`seqlock::producer_owns`]), writes `len` + payload, publishes
+//! ([`seqlock::publish`]); the consumer waits for the published frame
+//! ([`seqlock::consumer_owns`]), copies it out, and releases the slot
+//! for the next lap ([`seqlock::release`]). A crash mid-write leaves the
 //! slot unpublished — `seq` still reads `p` — so a torn frame is
 //! *invisible* by construction: the consumer can never observe a
-//! partially written payload (`torn_write_is_invisible` below, and the
-//! chaos tests in `rust/tests/exec_transport_conformance.rs`).
+//! partially written payload (`torn_write_is_invisible` below, the loom
+//! suite, and the chaos tests in
+//! `rust/tests/exec_transport_conformance.rs`).
 //!
 //! Mapping is raw `mmap(2)` via a local `extern "C"` declaration — no
 //! crates are vendored for this — and the whole module degrades to a
 //! clear error on non-unix targets, which the executor turns into a pipe
-//! fallback.
+//! fallback. Under `--cfg loom` the mmap ring cannot exist (loom's
+//! atomics are heap objects, not a transparent view over mapped bytes),
+//! so every entry point degrades to the same clear error and the
+//! protocol is checked on [`seqlock::ModelRing`] instead.
 
-use std::fs::{File, OpenOptions};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{ensure, Context, Result};
+#[cfg(not(loom))]
+use std::fs::{File, OpenOptions};
+#[cfg(not(loom))]
+use std::time::Instant;
+
+use anyhow::Result;
+#[cfg(not(loom))]
+use anyhow::{ensure, Context};
+
+#[cfg(not(loom))]
+use super::seqlock;
+#[cfg(not(loom))]
+use crate::util::sync::AtomicU64;
 
 /// `b"DRLFRING"` little-endian; rejects mapping some unrelated file.
+#[cfg(not(loom))]
 const MAGIC: u64 = u64::from_le_bytes(*b"DRLFRING");
 
 /// Bumped on any layout change; both sides must agree.
+#[cfg(not(loom))]
 const RING_VERSION: u32 = 1;
 
+#[cfg(not(loom))]
 const HEADER_BYTES: usize = 64;
 
 /// Per-slot header: `seq: u64` + `len: u32` + 4 pad bytes.
+#[cfg(not(loom))]
 const SLOT_HEADER: usize = 16;
 
 /// Slots per ring for the executor's data plane. Lockstep traffic is
@@ -84,7 +105,7 @@ pub fn ring_paths(prefix: &Path) -> (std::path::PathBuf, std::path::PathBuf) {
 
 // --- raw mmap FFI (unix only) ----------------------------------------------
 
-#[cfg(unix)]
+#[cfg(all(unix, not(loom)))]
 mod sys {
     use std::ffi::c_void;
 
@@ -109,17 +130,31 @@ mod sys {
 /// only ever dereferenced through the seqlock discipline above, and each
 /// end of a ring is single-threaded, so shipping it across the spawn
 /// boundary is sound.
+#[cfg(not(loom))]
 struct Map {
     ptr: *mut u8,
     len: usize,
 }
 
+// SAFETY: the mapping is plain `MAP_SHARED` memory with no thread
+// affinity; `Map` is `!Send` only because of the raw pointer. All
+// dereferences go through the seqlock protocol (each slot is touched
+// exclusively by whichever side owns its sequence word), and each half
+// of a ring (Producer/Consumer) is used from a single thread at a time,
+// so moving the handle to another thread cannot introduce a data race.
+#[cfg(not(loom))]
 unsafe impl Send for Map {}
 
+#[cfg(not(loom))]
 impl Map {
     #[cfg(unix)]
     fn new(file: &File, len: usize) -> Result<Map> {
         use std::os::unix::io::AsRawFd;
+        // SAFETY: plain FFI call. `addr` is null (kernel picks the
+        // address, never MAP_FIXED), `len > 0` is sized by the caller to
+        // the ring geometry, `fd` is a live file descriptor owned by
+        // `file` for the duration of the call, and the result is checked
+        // for MAP_FAILED/null before use.
         let ptr = unsafe {
             sys::mmap(
                 std::ptr::null_mut(),
@@ -147,8 +182,12 @@ impl Map {
     }
 }
 
+#[cfg(not(loom))]
 impl Drop for Map {
     fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` are exactly the mapping `mmap` returned in
+        // `Map::new` (never offset, never resized), this drop is the
+        // unique owner, and no access can follow the unmap.
         #[cfg(unix)]
         unsafe {
             sys::munmap(self.ptr as *mut _, self.len);
@@ -158,12 +197,14 @@ impl Drop for Map {
 
 // --- ring geometry ----------------------------------------------------------
 
+#[cfg(not(loom))]
 #[derive(Clone, Copy)]
 struct Geometry {
     n_slots: u32,
     slot_payload: u32,
 }
 
+#[cfg(not(loom))]
 impl Geometry {
     fn stride(&self) -> usize {
         SLOT_HEADER + self.slot_payload as usize
@@ -174,6 +215,7 @@ impl Geometry {
     }
 }
 
+#[cfg(not(loom))]
 struct Ring {
     map: Map,
     geo: Geometry,
@@ -181,19 +223,30 @@ struct Ring {
     pos: u64,
 }
 
+#[cfg(not(loom))]
 impl Ring {
     fn slot_base(&self, pos: u64) -> *mut u8 {
         let idx = (pos % self.geo.n_slots as u64) as usize;
+        // SAFETY: `idx < n_slots`, so `HEADER_BYTES + idx * stride` is
+        // at most `file_len - stride`, and the mapping is `file_len`
+        // bytes (validated against the file's real size at open/create).
+        // The offset stays within the single mapped allocation.
         unsafe { self.map.ptr.add(HEADER_BYTES + idx * self.geo.stride()) }
     }
 
     fn seq(&self, pos: u64) -> &AtomicU64 {
-        // The seq word is 8-byte aligned by construction (64 B header,
-        // stride = 16 + payload with payload % 8 == 0).
+        // SAFETY: the slot base is 8-byte aligned by construction (64 B
+        // header; stride = 16 + payload with payload % 8 == 0 — both
+        // enforced at create/open), so casting the first 8 bytes to
+        // `AtomicU64` is aligned and in-bounds. `AtomicU64` has the same
+        // layout as `u64`, and cross-process concurrent access to the
+        // word is exactly what the atomic type exists to make defined;
+        // the returned borrow lives no longer than the mapping (`&self`).
         unsafe { &*(self.slot_base(pos) as *const AtomicU64) }
     }
 }
 
+#[cfg(not(loom))]
 fn open_file(path: &Path) -> Result<File> {
     OpenOptions::new()
         .read(true)
@@ -204,6 +257,7 @@ fn open_file(path: &Path) -> Result<File> {
 
 /// Create a ring file at `path` (coordinator side): size it, map it,
 /// stamp the header and initialise every slot's sequence word.
+#[cfg(not(loom))]
 pub fn create(path: &Path, n_slots: u32, slot_payload: u32) -> Result<()> {
     ensure!(n_slots > 0, "shm ring needs at least one slot");
     ensure!(
@@ -224,6 +278,11 @@ pub fn create(path: &Path, n_slots: u32, slot_payload: u32) -> Result<()> {
     file.set_len(geo.file_len() as u64)
         .context("sizing shm ring file")?;
     let map = Map::new(&file, geo.file_len())?;
+    // SAFETY: the mapping is `file_len >= HEADER_BYTES` bytes; all four
+    // copies land inside the 64-byte header region, from local arrays of
+    // exactly the lengths written. No other thread or process can hold
+    // the file yet — the path is generation-unique and workers only map
+    // it after spawn.
     unsafe {
         let hdr = map.ptr;
         hdr.copy_from_nonoverlapping(MAGIC.to_le_bytes().as_ptr(), 8);
@@ -236,11 +295,12 @@ pub fn create(path: &Path, n_slots: u32, slot_payload: u32) -> Result<()> {
     }
     let ring = Ring { map, geo, pos: 0 };
     for i in 0..n_slots as u64 {
-        ring.seq(i).store(i, Ordering::Release);
+        seqlock::slot_init(ring.seq(i), i);
     }
     Ok(())
 }
 
+#[cfg(not(loom))]
 fn open_ring(path: &Path) -> Result<Ring> {
     let file = open_file(path)?;
     let actual = file.metadata().context("statting shm ring")?.len() as usize;
@@ -251,6 +311,9 @@ fn open_ring(path: &Path) -> Result<Ring> {
     );
     // Map just the header first to read the geometry, then remap fully.
     let hdr_map = Map::new(&file, HEADER_BYTES)?;
+    // SAFETY: `hdr_map` is `HEADER_BYTES` long (and the file is at least
+    // that, checked above); all four reads stay inside the header region
+    // and copy into local arrays of exactly the lengths read.
     let (magic, version, n_slots, slot_payload) = unsafe {
         let p = hdr_map.ptr;
         let mut m = [0u8; 8];
@@ -296,16 +359,19 @@ fn open_ring(path: &Path) -> Result<Ring> {
 // --- producer / consumer ----------------------------------------------------
 
 /// Write half of a ring (exactly one per ring file).
+#[cfg(not(loom))]
 pub struct Producer {
     ring: Ring,
 }
 
 /// Read half of a ring (exactly one per ring file).
+#[cfg(not(loom))]
 pub struct Consumer {
     ring: Ring,
 }
 
 /// Open the write half of an existing ring file.
+#[cfg(not(loom))]
 pub fn producer(path: &Path) -> Result<Producer> {
     Ok(Producer {
         ring: open_ring(path)?,
@@ -313,12 +379,14 @@ pub fn producer(path: &Path) -> Result<Producer> {
 }
 
 /// Open the read half of an existing ring file.
+#[cfg(not(loom))]
 pub fn consumer(path: &Path) -> Result<Consumer> {
     Ok(Consumer {
         ring: open_ring(path)?,
     })
 }
 
+#[cfg(not(loom))]
 impl Producer {
     /// Bytes a single slot can carry.
     pub fn slot_payload(&self) -> usize {
@@ -337,13 +405,19 @@ impl Producer {
         let seq = self.ring.seq(pos);
         let mut backoff = Backoff::new();
         let deadline = Instant::now() + timeout;
-        while seq.load(Ordering::Acquire) != pos {
+        while !seqlock::producer_owns(seq, pos) {
             ensure!(
                 Instant::now() < deadline,
                 "shm ring full for {timeout:?} (peer not draining)"
             );
             backoff.snooze();
         }
+        // SAFETY: we own the slot (`producer_owns` acquired the
+        // consumer's release of it, so its reads happened-before these
+        // writes, and the consumer will not touch the slot again until
+        // `publish` below). `bytes.len() <= slot_payload` was checked
+        // above, so both copies stay inside this slot's `stride` bytes
+        // of the mapping.
         unsafe {
             let base = self.ring.slot_base(pos);
             base.add(8)
@@ -351,7 +425,7 @@ impl Producer {
             base.add(SLOT_HEADER)
                 .copy_from_nonoverlapping(bytes.as_ptr(), bytes.len());
         }
-        seq.store(pos + 1, Ordering::Release);
+        seqlock::publish(seq, pos);
         self.ring.pos += 1;
         Ok(true)
     }
@@ -363,6 +437,9 @@ impl Producer {
     pub fn write_torn(&mut self, bytes: &[u8]) {
         let n = bytes.len().min(self.slot_payload());
         let pos = self.ring.pos;
+        // SAFETY: same slot ownership and bounds as `push` (`n` is
+        // clamped to `slot_payload`); since `publish` is deliberately
+        // never called, the consumer can never read these bytes.
         unsafe {
             let base = self.ring.slot_base(pos);
             base.add(8)
@@ -374,6 +451,7 @@ impl Producer {
     }
 }
 
+#[cfg(not(loom))]
 impl Consumer {
     /// Pop the next published frame body, if any. Never blocks; never
     /// yields a torn frame (unpublished slots are indistinguishable from
@@ -381,9 +459,13 @@ impl Consumer {
     pub fn try_pop(&mut self) -> Result<Option<Vec<u8>>> {
         let pos = self.ring.pos;
         let seq = self.ring.seq(pos);
-        if seq.load(Ordering::Acquire) != pos + 1 {
+        if !seqlock::consumer_owns(seq, pos) {
             return Ok(None);
         }
+        // SAFETY: the slot is published (`consumer_owns` acquired the
+        // producer's `publish`, so the complete header + payload writes
+        // happened-before this read); the 4-byte length read is inside
+        // the slot's header region of the mapping.
         let (len, base) = unsafe {
             let base = self.ring.slot_base(pos);
             let mut l = [0u8; 4];
@@ -395,15 +477,74 @@ impl Consumer {
             "shm slot declares {len} bytes > payload capacity"
         );
         let mut out = vec![0u8; len];
+        // SAFETY: `len <= slot_payload` (validated just above against
+        // the mapped geometry), so the copy stays inside this slot; the
+        // destination is a freshly allocated Vec of exactly `len` bytes,
+        // and the producer cannot overwrite the slot until `release`.
         unsafe {
             base.add(SLOT_HEADER)
                 .copy_to_nonoverlapping(out.as_mut_ptr(), len);
         }
-        seq.store(pos + self.ring.geo.n_slots as u64, Ordering::Release);
+        seqlock::release(seq, pos, self.ring.geo.n_slots as u64);
         self.ring.pos += 1;
         Ok(Some(out))
     }
 }
+
+// --- loom stand-ins ---------------------------------------------------------
+
+/// Under `--cfg loom` the mmap ring cannot exist: loom's `AtomicU64` is
+/// a tracked heap object, not a transparent view over 8 mapped bytes,
+/// so there is nothing sound to cast the file contents to. The protocol
+/// itself is model-checked on [`seqlock::ModelRing`]
+/// (`rust/tests/loom_shm.rs`); these stand-ins keep the executor
+/// compiling and make every runtime entry point degrade to the error
+/// path the executor already treats as "fall back to the pipe".
+#[cfg(loom)]
+mod loom_stub {
+    use super::*;
+
+    pub struct Producer {
+        _priv: (),
+    }
+
+    pub struct Consumer {
+        _priv: (),
+    }
+
+    impl Producer {
+        pub fn slot_payload(&self) -> usize {
+            0
+        }
+
+        pub fn push(&mut self, _bytes: &[u8], _timeout: Duration) -> Result<bool> {
+            anyhow::bail!("shm ring unavailable under loom (model-checked via seqlock::ModelRing)")
+        }
+
+        pub fn write_torn(&mut self, _bytes: &[u8]) {}
+    }
+
+    impl Consumer {
+        pub fn try_pop(&mut self) -> Result<Option<Vec<u8>>> {
+            anyhow::bail!("shm ring unavailable under loom (model-checked via seqlock::ModelRing)")
+        }
+    }
+
+    pub fn create(_path: &Path, _n_slots: u32, _slot_payload: u32) -> Result<()> {
+        anyhow::bail!("shm ring unavailable under loom (model-checked via seqlock::ModelRing)")
+    }
+
+    pub fn producer(_path: &Path) -> Result<Producer> {
+        anyhow::bail!("shm ring unavailable under loom (model-checked via seqlock::ModelRing)")
+    }
+
+    pub fn consumer(_path: &Path) -> Result<Consumer> {
+        anyhow::bail!("shm ring unavailable under loom (model-checked via seqlock::ModelRing)")
+    }
+}
+
+#[cfg(loom)]
+pub use loom_stub::{consumer, create, producer, Consumer, Producer};
 
 // --- backoff ----------------------------------------------------------------
 
@@ -440,7 +581,7 @@ impl Default for Backoff {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::path::PathBuf;

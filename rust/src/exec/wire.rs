@@ -46,17 +46,49 @@ pub const PROTOCOL_VERSION: u32 = 2;
 /// trajectory) comes close to this.
 const MAX_FRAME: usize = 256 << 20;
 
-const TAG_HELLO: u8 = 1;
-const TAG_SET_PARAMS: u8 = 2;
-const TAG_RESET: u8 = 3;
-const TAG_STEP: u8 = 4;
-const TAG_ROLLOUT: u8 = 5;
-const TAG_SHUTDOWN: u8 = 6;
-const TAG_HEARTBEAT: u8 = 7;
-const TAG_OBS: u8 = 8;
-const TAG_STEP_OUT: u8 = 9;
-const TAG_EPISODE: u8 = 10;
-const TAG_ERROR: u8 = 11;
+/// On-wire tag byte of each frame, one variant per [`Frame`] variant.
+/// Discriminants are the protocol — never renumber, only append. The
+/// `drlfoam audit` rule `wire-tag-coverage` parses this enum and
+/// verifies every variant has an [`encode`] arm, a [`decode`] arm, and a
+/// fuzz-corpus entry (`wire_fuzz` in `rust/tests/exec_backend.rs`), so
+/// adding a frame without wiring it everywhere fails CI.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tag {
+    Hello = 1,
+    SetParams = 2,
+    Reset = 3,
+    Step = 4,
+    Rollout = 5,
+    Shutdown = 6,
+    Heartbeat = 7,
+    Obs = 8,
+    StepOut = 9,
+    Episode = 10,
+    Error = 11,
+}
+
+impl Tag {
+    /// Every tag, in discriminant order (corpus/coverage iteration).
+    pub const ALL: [Tag; 11] = [
+        Tag::Hello,
+        Tag::SetParams,
+        Tag::Reset,
+        Tag::Step,
+        Tag::Rollout,
+        Tag::Shutdown,
+        Tag::Heartbeat,
+        Tag::Obs,
+        Tag::StepOut,
+        Tag::Episode,
+        Tag::Error,
+    ];
+
+    /// Inverse of `as u8`; `None` for bytes outside the protocol.
+    pub fn from_u8(b: u8) -> Option<Tag> {
+        Tag::ALL.into_iter().find(|t| *t as u8 == b)
+    }
+}
 
 /// One protocol frame (see the module-level table).
 #[derive(Clone, Debug, PartialEq)]
@@ -269,7 +301,7 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             version,
             shm,
         } => {
-            buf.push(TAG_HELLO);
+            buf.push(Tag::Hello as u8);
             put_u32(&mut buf, *env_id);
             put_u32(&mut buf, *rank);
             put_u32(&mut buf, *pid);
@@ -278,12 +310,12 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut buf, *shm);
         }
         Frame::SetParams { params } => {
-            buf.push(TAG_SET_PARAMS);
+            buf.push(Tag::SetParams as u8);
             put_vec_f32(&mut buf, params);
         }
-        Frame::Reset => buf.push(TAG_RESET),
+        Frame::Reset => buf.push(Tag::Reset as u8),
         Frame::Step { action } => {
-            buf.push(TAG_STEP);
+            buf.push(Tag::Step as u8);
             put_f64(&mut buf, *action);
         }
         Frame::Rollout {
@@ -291,19 +323,19 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             episode,
             episode_seed,
         } => {
-            buf.push(TAG_ROLLOUT);
+            buf.push(Tag::Rollout as u8);
             put_u32(&mut buf, *horizon);
             put_u64(&mut buf, *episode);
             put_u64(&mut buf, *episode_seed);
         }
-        Frame::Shutdown => buf.push(TAG_SHUTDOWN),
-        Frame::Heartbeat => buf.push(TAG_HEARTBEAT),
+        Frame::Shutdown => buf.push(Tag::Shutdown as u8),
+        Frame::Heartbeat => buf.push(Tag::Heartbeat as u8),
         Frame::Obs { obs } => {
-            buf.push(TAG_OBS);
+            buf.push(Tag::Obs as u8);
             put_vec_f32(&mut buf, obs);
         }
         Frame::StepOut { result } => {
-            buf.push(TAG_STEP_OUT);
+            buf.push(Tag::StepOut as u8);
             put_step_result(&mut buf, result);
         }
         Frame::Episode {
@@ -311,13 +343,13 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             stats,
             traj,
         } => {
-            buf.push(TAG_EPISODE);
+            buf.push(Tag::Episode as u8);
             put_u32(&mut buf, *env_id);
             put_stats(&mut buf, stats);
             put_traj(&mut buf, traj);
         }
         Frame::Error { msg } => {
-            buf.push(TAG_ERROR);
+            buf.push(Tag::Error as u8);
             let b = msg.as_bytes();
             put_u32(&mut buf, b.len() as u32);
             buf.extend_from_slice(b);
@@ -331,8 +363,8 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Frame> {
     ensure!(!bytes.is_empty(), "empty wire frame");
     let tag = bytes[0];
     let mut off = 1usize;
-    let frame = match tag {
-        TAG_HELLO => Frame::Hello {
+    let frame = match Tag::from_u8(tag) {
+        Some(Tag::Hello) => Frame::Hello {
             env_id: get_u32(bytes, &mut off)?,
             rank: get_u32(bytes, &mut off)?,
             pid: get_u32(bytes, &mut off)?,
@@ -340,39 +372,39 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Frame> {
             version: get_u32(bytes, &mut off)?,
             shm: get_u32(bytes, &mut off)?,
         },
-        TAG_SET_PARAMS => Frame::SetParams {
+        Some(Tag::SetParams) => Frame::SetParams {
             params: get_vec_f32(bytes, &mut off)?,
         },
-        TAG_RESET => Frame::Reset,
-        TAG_STEP => Frame::Step {
+        Some(Tag::Reset) => Frame::Reset,
+        Some(Tag::Step) => Frame::Step {
             action: get_f64(bytes, &mut off)?,
         },
-        TAG_ROLLOUT => Frame::Rollout {
+        Some(Tag::Rollout) => Frame::Rollout {
             horizon: get_u32(bytes, &mut off)?,
             episode: get_u64(bytes, &mut off)?,
             episode_seed: get_u64(bytes, &mut off)?,
         },
-        TAG_SHUTDOWN => Frame::Shutdown,
-        TAG_HEARTBEAT => Frame::Heartbeat,
-        TAG_OBS => Frame::Obs {
+        Some(Tag::Shutdown) => Frame::Shutdown,
+        Some(Tag::Heartbeat) => Frame::Heartbeat,
+        Some(Tag::Obs) => Frame::Obs {
             obs: get_vec_f32(bytes, &mut off)?,
         },
-        TAG_STEP_OUT => Frame::StepOut {
+        Some(Tag::StepOut) => Frame::StepOut {
             result: get_step_result(bytes, &mut off)?,
         },
-        TAG_EPISODE => Frame::Episode {
+        Some(Tag::Episode) => Frame::Episode {
             env_id: get_u32(bytes, &mut off)?,
             stats: get_stats(bytes, &mut off)?,
             traj: get_traj(bytes, &mut off)?,
         },
-        TAG_ERROR => {
+        Some(Tag::Error) => {
             let n = get_u32(bytes, &mut off)? as usize;
             let b = get_bytes(bytes, n, &mut off)?;
             Frame::Error {
                 msg: String::from_utf8_lossy(b).into_owned(),
             }
         }
-        other => bail!("unknown wire frame tag {other}"),
+        None => bail!("unknown wire frame tag {tag}"),
     };
     ensure!(
         off == bytes.len(),
@@ -514,6 +546,18 @@ mod tests {
         roundtrip(Frame::Error {
             msg: "env worker setup failed: boom".into(),
         });
+    }
+
+    #[test]
+    fn tag_discriminants_round_trip_and_are_dense() {
+        for (i, t) in Tag::ALL.into_iter().enumerate() {
+            // dense, 1-based, in declaration order — the wire contract
+            assert_eq!(t as u8, i as u8 + 1);
+            assert_eq!(Tag::from_u8(t as u8), Some(t));
+        }
+        assert_eq!(Tag::from_u8(0), None);
+        assert_eq!(Tag::from_u8(Tag::ALL.len() as u8 + 1), None);
+        assert_eq!(Tag::from_u8(0xEE), None);
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //! README.md covers the quickstart; ARCHITECTURE.md maps every module to
 //! the paper section it implements.
 
+// Every unsafe operation must sit in an explicit `unsafe` block even
+// inside `unsafe fn`, so each one is individually visible to the
+// `drlfoam audit` SAFETY-comment rule (ARCHITECTURE.md §9).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod audit;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -34,7 +34,7 @@ use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
 
-const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|reproduce|simulate|plan|info> [options]
+const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|reproduce|simulate|plan|audit|info> [options]
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
@@ -74,7 +74,12 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
              [--ios baseline,optimized,memory] [--staleness-weight W]
              [--episodes N] [--calib out/calib.json]
              (exhaustive DES-scored sweep of feasible layouts; ranked table on
-              stdout, every layout to out/plan.csv, Pareto front marked)";
+              stdout, every layout to out/plan.csv, Pareto front marked)
+  audit:     [--root DIR] [--allowlist FILE] [--format text|json]
+             (repo-invariant lint pass: SAFETY comments on every unsafe,
+              no hash collections / wall-clock reads / f32 sums in
+              determinism-critical modules, wire::Tag coverage; audited
+              exceptions in rust/audit.allow; exits non-zero on findings)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -91,7 +96,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "update-backend", "sync", "episodes", "periods", "calib", "policy",
         "work-dir", "log-every", "layout", "cores", "objective", "syncs",
         "ios", "staleness-weight", "executor", "chaos", "env-id", "rank",
-        "heartbeat-ms", "transport", "shm-prefix",
+        "heartbeat-ms", "transport", "shm-prefix", "root", "tests",
+        "allowlist", "format",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -105,6 +111,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "reproduce" => cmd_reproduce(&args),
         "simulate" => cmd_simulate(&args),
         "plan" => cmd_plan(&args),
+        "audit" => cmd_audit(&args),
         "info" => cmd_info(&args),
         _ => bail!("{USAGE}"),
     }
@@ -857,6 +864,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         r.breakdown.barrier_idle_s,
         100.0 * r.disk_utilisation
     );
+    Ok(())
+}
+
+/// `drlfoam audit`: the repo-invariant lint pass (ARCHITECTURE.md §9).
+/// Non-zero exit on any finding, so ci.sh can gate on it directly.
+fn cmd_audit(args: &Args) -> Result<()> {
+    use drlfoam::audit::{self, AuditConfig};
+    let mut cfg = match args.get("root") {
+        Some(root) => AuditConfig::for_root(root),
+        None => AuditConfig::discover(&std::env::current_dir()?)?,
+    };
+    if let Some(tests) = args.get("tests") {
+        cfg.tests_dir = tests.into();
+    }
+    if let Some(allow) = args.get("allowlist") {
+        cfg.allowlist = Some(allow.into());
+    }
+    let report = audit::run(&cfg)?;
+    match args.get_or("format", "text").as_str() {
+        "text" => print!("{}", report.to_text()),
+        "json" => println!("{}", report.to_json()),
+        other => bail!("unknown audit format {other:?} (accepted: text, json)"),
+    }
+    if !report.ok() {
+        bail!("audit failed: {} finding(s)", report.findings.len());
+    }
     Ok(())
 }
 

@@ -1,0 +1,45 @@
+//! Wall-clock access for *telemetry only* — the determinism choke point.
+//!
+//! This repo's acceptance bar is bitwise-identical learning output
+//! (train_log.csv learning columns, policy parameters, plan.csv), so
+//! determinism-critical modules (`cluster/des.rs`, `cluster/planner.rs`,
+//! `coordinator/scheduler.rs`, `drl/*`) must never let wall-clock time
+//! influence a scored or learned value. They still legitimately *report*
+//! wall time — rollout seconds, update seconds, barrier idle — as
+//! telemetry columns that the equivalence tests deliberately exclude.
+//!
+//! [`telemetry_now`] is the single sanctioned door to the wall clock for
+//! those modules. The `drlfoam audit` rule `det-wall-clock` flags every
+//! wall-clock read (including this function) inside the
+//! determinism-critical set, so each call site needs an explicit,
+//! justified entry in `rust/audit.allow` with a maximum count — new
+//! clock reads can't creep in unreviewed, and the allowlist documents
+//! exactly which telemetry each module is allowed to measure. See
+//! ARCHITECTURE.md §9.
+
+use std::time::Instant;
+
+/// Read the wall clock for a telemetry measurement (never for anything
+/// that feeds scoring, scheduling decisions, or learning output).
+///
+/// Returns a plain [`std::time::Instant`]; subtract two of them for a
+/// duration column. The name exists so `drlfoam audit` can tell a
+/// sanctioned telemetry read from a stray `Instant::now()`.
+pub fn telemetry_now() -> Instant {
+    Instant::now()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn telemetry_now_is_monotonic() {
+        let a = telemetry_now();
+        let b = telemetry_now();
+        assert!(b >= a);
+        // and the result subtracts like a std Instant
+        let d = b.duration_since(a);
+        assert!(d.as_secs_f64() >= 0.0);
+    }
+}

@@ -5,7 +5,9 @@
 //! JSON, statistics, a bench harness and a property-test driver live here.
 
 pub mod bench;
+pub mod clock;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,102 @@
+//! Loom-aware synchronization facade.
+//!
+//! Every atomic the concurrency-critical modules touch is imported from
+//! HERE, never from `std::sync::atomic` directly. In a normal build the
+//! re-exports below are exactly the `std` types (zero cost, zero
+//! indirection); under `RUSTFLAGS="--cfg loom"` they become loom's
+//! model-checked twins, and `rust/tests/loom_shm.rs` exhaustively
+//! explores the interleavings of the shm seqlock protocol
+//! ([`crate::exec::seqlock`]) instead of hoping a stress test hits the
+//! bad one.
+//!
+//! Loom is a *dev-time* dependency gated behind the non-default `loom`
+//! cfg — a regular `cargo build`/`cargo test` never compiles it (the
+//! offline environment does not vendor it; the loom CI stage is env-gated
+//! for toolchains that do). Manifest line, for when the crate graph is
+//! materialized:
+//!
+//! ```text
+//! [target.'cfg(loom)'.dependencies]
+//! loom = "0.7"
+//! ```
+//!
+//! The [`UnsafeCell`] here mirrors loom's `with`/`with_mut` access API
+//! rather than `std::cell::UnsafeCell::get`, because that is the shape
+//! loom needs to *track* reads and writes: any protocol bug that lets a
+//! reader observe a cell while a writer holds it becomes a loom panic
+//! instead of silent UB. Run `make loom` (or
+//! `DRLFOAM_CI_LOOM=1 ./ci.sh`) to model-check; see ARCHITECTURE.md §9.
+
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;
+#[cfg(loom)]
+pub use loom::hint::spin_loop;
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+#[cfg(loom)]
+pub use loom::sync::Arc;
+#[cfg(loom)]
+pub use loom::thread::yield_now;
+
+#[cfg(not(loom))]
+pub use std::hint::spin_loop;
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::Arc;
+#[cfg(not(loom))]
+pub use std::thread::yield_now;
+
+/// `std` stand-in for `loom::cell::UnsafeCell`: same `with`/`with_mut`
+/// closure API, no tracking. Callers uphold the aliasing contract
+/// themselves (for the seqlock ring: a slot's cell is only touched by
+/// the side that currently owns the slot's sequence word) — under loom
+/// that claim is *checked*, here it is merely documented.
+#[cfg(not(loom))]
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub fn new(data: T) -> UnsafeCell<T> {
+        UnsafeCell(std::cell::UnsafeCell::new(data))
+    }
+
+    /// Immutable access to the cell's contents (loom: tracked read).
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Mutable access to the cell's contents (loom: tracked write).
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facade_atomics_are_std_atomics() {
+        // the not(loom) build must stay zero-cost: these are the std
+        // types, byte-compatible with what the mmap ring casts to
+        let a = AtomicU64::new(7);
+        a.store(9, Ordering::Release);
+        assert_eq!(a.load(Ordering::Acquire), 9);
+        assert_eq!(std::mem::size_of::<AtomicU64>(), 8);
+        let b = AtomicBool::new(false);
+        b.store(true, Ordering::Release);
+        assert!(b.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn unsafe_cell_shim_matches_looms_api_shape() {
+        let c = UnsafeCell::new(vec![1u8, 2, 3]);
+        // SAFETY: single-threaded test — no concurrent access to the cell.
+        c.with_mut(|p| unsafe { (*p).push(4) });
+        // SAFETY: as above.
+        let got = c.with(|p| unsafe { (*p).clone() });
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+}

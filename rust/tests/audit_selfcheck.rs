@@ -1,0 +1,180 @@
+//! The audit audits itself: the real repo must come up clean (every
+//! exception justified in `rust/audit.allow`), and a deliberately-bad
+//! fixture tree must trip every rule — so a future refactor can neither
+//! rot the codebase past the audit nor quietly lobotomize the audit.
+
+use drlfoam::audit::{run, AuditConfig};
+
+/// The repo root, found by walking up from the build manifest dir — the
+/// same discovery `drlfoam audit` uses from an arbitrary cwd.
+fn repo_cfg() -> AuditConfig {
+    AuditConfig::discover(std::path::Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap()
+}
+
+#[test]
+fn the_repo_itself_passes_the_audit() {
+    let report = run(&repo_cfg()).unwrap();
+    assert!(report.ok(), "repo audit FAILED:\n{}", report.to_text());
+    assert!(
+        report.files_checked > 20,
+        "only {} files walked — audit is not seeing the tree",
+        report.files_checked
+    );
+    // the telemetry_now() allowlist entries must be doing real work (a
+    // stale entry is itself a finding, so ok() already bounds the other
+    // direction)
+    assert!(
+        report.suppressed >= 2,
+        "expected the det-wall-clock allowlist entries to suppress \
+         findings, suppressed={}",
+        report.suppressed
+    );
+}
+
+/// A minimal repo tree seeded with one violation of every det rule plus
+/// an unjustified `unsafe`, and one clean file proving the rules don't
+/// over-fire outside their scope.
+fn write_bad_fixture(tag: &str) -> std::path::PathBuf {
+    let root = std::env::temp_dir().join(format!(
+        "drlfoam-audit-fixture-{tag}-{}",
+        std::process::id()
+    ));
+    let src = root.join("rust").join("src");
+    std::fs::create_dir_all(src.join("cluster")).unwrap();
+    std::fs::create_dir_all(src.join("util")).unwrap();
+    // det-critical file: hash collections, two wall-clock reads, f32 and
+    // untyped sums, and a bare unsafe
+    std::fs::write(
+        src.join("cluster").join("des.rs"),
+        r#"use std::collections::HashMap;
+pub fn score(xs: &[f32]) -> f32 {
+    let t0 = Instant::now();
+    let t1 = Instant::now();
+    let m: HashMap<u32, f32> = HashMap::new();
+    let a = xs.iter().copied().sum::<f32>();
+    let b: f32 = xs.iter().copied().sum();
+    let p = xs.as_ptr();
+    let c = unsafe { *p };
+    a + b + c + m.len() as f32 + (t1 - t0).as_secs_f32()
+}
+"#,
+    )
+    .unwrap();
+    // non-critical file: same hash/clock/sum patterns are fine here, and
+    // a SAFETY-commented unsafe satisfies the unsafe rule
+    std::fs::write(
+        src.join("util").join("ok.rs"),
+        r#"use std::collections::HashMap;
+pub fn helper(xs: &[f32]) -> f32 {
+    let _t = Instant::now();
+    let _m: HashMap<u32, u32> = HashMap::new();
+    let s: f32 = xs.iter().copied().sum();
+    // SAFETY: xs is non-empty by the caller's contract.
+    let first = unsafe { *xs.as_ptr() };
+    s + first
+}
+"#,
+    )
+    .unwrap();
+    root
+}
+
+#[test]
+fn a_deliberately_bad_fixture_trips_every_rule() {
+    let root = write_bad_fixture("trip");
+    let report = run(&AuditConfig::for_root(&root)).unwrap();
+    let rules: Vec<&str> = report.findings.iter().map(|f| f.rule).collect();
+    for rule in [
+        "unsafe-safety-comment",
+        "det-hash-collections",
+        "det-wall-clock",
+        "f32-sum-in-scored-path",
+    ] {
+        assert!(
+            rules.contains(&rule),
+            "rule {rule} did not fire on the bad fixture:\n{}",
+            report.to_text()
+        );
+    }
+    // every finding points into the det-critical file — the clean file's
+    // identical patterns are out of scope, and its SAFETY comment holds
+    assert!(
+        report
+            .findings
+            .iter()
+            .all(|f| f.file == "rust/src/cluster/des.rs"),
+        "findings leaked outside the det-critical fixture:\n{}",
+        report.to_text()
+    );
+    // both Instant::now reads are reported, with real line numbers
+    let clocks: Vec<usize> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "det-wall-clock")
+        .map(|f| f.line)
+        .collect();
+    assert_eq!(clocks, vec![3, 4], "wall-clock lines: {clocks:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn allowlist_suppresses_caps_and_reports_stale_entries() {
+    let root = write_bad_fixture("allow");
+    let allow_path = root.join("rust").join("audit.allow");
+    std::fs::write(
+        &allow_path,
+        "# fixture allowlist\n\
+         det-wall-clock | rust/src/cluster/des.rs | 1 | capped below the real count on purpose\n\
+         det-hash-collections | rust/src/cluster/des.rs | 9 | generous cap, suppresses all\n\
+         f32-sum-in-scored-path | rust/src/util/ok.rs | 1 | never fires here: stale\n",
+    )
+    .unwrap();
+    // for_root picks the allowlist up from its conventional location
+    let report = run(&AuditConfig::for_root(&root)).unwrap();
+    assert!(!report.ok());
+
+    // over-cap: 2 wall-clock findings against max-count 1 -> ALL reported,
+    // annotated with the cap so the reviewer sees which entry is too small
+    let clocks: Vec<&str> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "det-wall-clock")
+        .map(|f| f.message.as_str())
+        .collect();
+    assert_eq!(clocks.len(), 2, "{}", report.to_text());
+    assert!(
+        clocks.iter().all(|m| m.contains("allowlist caps")),
+        "{clocks:?}"
+    );
+
+    // within-cap: the HashMap findings are suppressed and counted
+    assert!(
+        !report.findings.iter().any(|f| f.rule == "det-hash-collections"),
+        "{}",
+        report.to_text()
+    );
+    assert!(report.suppressed >= 2, "suppressed={}", report.suppressed);
+
+    // stale entry -> its own finding, pointing at the allowlist line
+    let stale: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "allowlist-stale")
+        .collect();
+    assert_eq!(stale.len(), 1, "{}", report.to_text());
+    assert!(stale[0].message.contains("f32-sum-in-scored-path"), "{}", stale[0].message);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn json_report_is_machine_readable() {
+    let root = write_bad_fixture("json");
+    let report = run(&AuditConfig::for_root(&root)).unwrap();
+    let js = report.to_json();
+    assert!(js.contains("\"ok\":false"), "{js}");
+    assert!(js.contains("\"findings\":["), "{js}");
+    assert!(js.contains("\"rule\":\"unsafe-safety-comment\""), "{js}");
+    assert!(js.contains("\"file\":\"rust/src/cluster/des.rs\""), "{js}");
+    assert!(js.contains("\"suppressed\":0"), "{js}");
+    let _ = std::fs::remove_dir_all(&root);
+}

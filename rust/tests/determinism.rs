@@ -1,0 +1,100 @@
+//! Bitwise-determinism pins for the PR-7 audit cleanups.
+//!
+//! The audit pass (`drlfoam audit`, ARCHITECTURE.md §9) forced two kinds
+//! of edits in determinism-critical modules:
+//!
+//! * wall-clock reads in `coordinator::scheduler` and `drl::trainer` were
+//!   routed through `util::clock::telemetry_now()` and allowlisted, and
+//! * every bare `.sum()` in `drl::{buffer,native_update}` and the
+//!   scheduler gained an explicit, type-identical turbofish.
+//!
+//! Neither edit may change behaviour. These tests pin that: two training
+//! runs with identical configs must agree bitwise on every learning
+//! column of `train_log.csv` and on the final policy parameters, and two
+//! planner sweeps must emit identical `plan.csv` bytes. If a "refactor"
+//! ever slips a wall-clock value or a widened accumulator into a scored
+//! path, the double-run comparison here goes red.
+
+use drlfoam::cluster::planner::{search, PlannerConfig};
+use drlfoam::cluster::Calibration;
+use drlfoam::coordinator::{train, TrainConfig};
+use drlfoam::drl::{PolicyBackendKind, UpdateBackendKind};
+use drlfoam::io_interface::IoMode;
+
+fn base_cfg(tag: &str) -> TrainConfig {
+    let root = std::env::temp_dir().join(format!("drlfoam-det-{tag}-{}", std::process::id()));
+    TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root.clone(),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        n_envs: 3,
+        io_mode: IoMode::InMemory,
+        horizon: 5,
+        iterations: 3,
+        epochs: 2,
+        seed: 7,
+        log_every: 1,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+/// The learning-curve columns of train_log.csv: everything before the
+/// wall-clock fields (iteration..approx_kl, the first 9 of 14). The
+/// telemetry columns are the only place `telemetry_now()` feeds, so they
+/// are excluded by construction — exactly the contract the audit
+/// allowlist entries for `det-wall-clock` claim.
+fn learning_rows(out_dir: &std::path::Path) -> Vec<String> {
+    let csv = std::fs::read_to_string(out_dir.join("train_log.csv")).unwrap();
+    csv.lines()
+        .skip(1)
+        .map(|l| l.splitn(15, ',').take(9).collect::<Vec<_>>().join(","))
+        .collect()
+}
+
+fn run_once(tag: &str) -> (Vec<String>, Vec<u8>) {
+    let cfg = base_cfg(tag);
+    train(&cfg).unwrap();
+    let rows = learning_rows(&cfg.out_dir);
+    let params = std::fs::read(cfg.out_dir.join("policy_final.bin")).unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    (rows, params)
+}
+
+#[test]
+fn training_is_bitwise_reproducible_across_runs() {
+    let (rows_a, params_a) = run_once("a");
+    let (rows_b, params_b) = run_once("b");
+    assert!(!rows_a.is_empty(), "no learning rows written");
+    assert_eq!(rows_a, rows_b, "learning columns diverged between runs");
+    assert!(!params_a.is_empty(), "no final parameters written");
+    assert_eq!(
+        params_a, params_b,
+        "policy_final.bin diverged between identical runs"
+    );
+}
+
+#[test]
+fn planner_sweep_is_bitwise_reproducible_across_runs() {
+    let calib = Calibration::paper_scale();
+    let mut cfg = PlannerConfig::new(20);
+    cfg.episodes_total = 120;
+    let sweep = |tag: &str| -> String {
+        let path = std::env::temp_dir().join(format!(
+            "drlfoam-det-plan-{tag}-{}.csv",
+            std::process::id()
+        ));
+        search(&calib, &cfg).unwrap().write_csv(&path).unwrap();
+        let bytes = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        bytes
+    };
+    let a = sweep("a");
+    let b = sweep("b");
+    assert!(a.lines().count() > 1, "plan.csv has no data rows");
+    assert_eq!(a, b, "plan.csv diverged between identical sweeps");
+}

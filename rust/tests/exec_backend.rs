@@ -291,9 +291,12 @@ mod wire_fuzz {
     use drlfoam::util::rng::Rng;
 
     /// One random frame, sized by the RNG: payloads span empty to a few
-    /// KiB so header/payload boundaries land everywhere.
+    /// KiB so header/payload boundaries land everywhere. Every
+    /// `wire::Tag` variant has an arm here — the `drlfoam audit` rule
+    /// `wire-tag-coverage` checks this corpus, so a frame added to the
+    /// protocol without a fuzz case fails the audit.
     fn random_frame(rng: &mut Rng) -> Frame {
-        match rng.below(10) {
+        match rng.below(11) {
             0 => Frame::Hello {
                 env_id: rng.next_u64() as u32,
                 rank: rng.below(8) as u32,
@@ -313,6 +316,7 @@ mod wire_fuzz {
                 episode_seed: rng.next_u64(),
             },
             5 => Frame::Heartbeat,
+            9 => Frame::Shutdown,
             6 => Frame::Obs {
                 obs: (0..rng.below(512)).map(|_| rng.normal() as f32).collect(),
             },
