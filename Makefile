@@ -4,7 +4,7 @@
 PY ?= python3
 
 .PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke shm-smoke \
-        audit loom miri tsan asan
+        cfd-smoke audit loom miri tsan asan
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -113,6 +113,34 @@ shm-smoke:
 	cmp out/shm-smoke/pipe-learning.csv out/shm-smoke/shm-learning.csv
 	cmp out/shm-smoke/pipe/policy_final.bin out/shm-smoke/shm/policy_final.bin
 	cargo bench --bench exec_transport -- --gate
+
+# Native CFD engine smoke: cylinder training with zero artifacts on the
+# pure-Rust engine (--cfd-backend native), bitwise-diffed across a
+# re-run and a forced-scalar single-thread run, then the cfd_scaling
+# bench's SIMD-vs-scalar throughput gate.
+cfd-smoke:
+	for v in a b; do \
+	    DRLFOAM_CFD_THREADS=2 cargo run --release --quiet -- train \
+	        --scenario cylinder --variant tiny --cfd-backend native \
+	        --backend native --update-backend native \
+	        --artifacts out/cfd-smoke/no-artifacts \
+	        --out out/cfd-smoke/$$v --work-dir out/cfd-smoke/$$v/work \
+	        --envs 2 --horizon 3 --iterations 2 --quiet || exit 1; \
+	done
+	DRLFOAM_CFD_THREADS=1 DRLFOAM_FORCE_SCALAR=1 cargo run --release --quiet -- train \
+	    --scenario cylinder --variant tiny --cfd-backend native \
+	    --backend native --update-backend native \
+	    --artifacts out/cfd-smoke/no-artifacts \
+	    --out out/cfd-smoke/scalar --work-dir out/cfd-smoke/scalar/work \
+	    --envs 2 --horizon 3 --iterations 2 --quiet
+	cut -d, -f1-9 out/cfd-smoke/a/train_log.csv > out/cfd-smoke/a-learning.csv
+	cut -d, -f1-9 out/cfd-smoke/b/train_log.csv > out/cfd-smoke/b-learning.csv
+	cut -d, -f1-9 out/cfd-smoke/scalar/train_log.csv > out/cfd-smoke/scalar-learning.csv
+	cmp out/cfd-smoke/a-learning.csv out/cfd-smoke/b-learning.csv
+	cmp out/cfd-smoke/a-learning.csv out/cfd-smoke/scalar-learning.csv
+	cmp out/cfd-smoke/a/policy_final.bin out/cfd-smoke/b/policy_final.bin
+	cmp out/cfd-smoke/a/policy_final.bin out/cfd-smoke/scalar/policy_final.bin
+	cargo bench --bench cfd_scaling -- --gate
 
 # Rollout-scheduler smoke: the same artifact-free loop once per sync
 # policy (full episode barrier, partial barrier, async).

@@ -1,45 +1,140 @@
 //! Bench: Fig 7 — CFD strong scaling (speedup + parallel efficiency vs
-//! N_ranks, T_1 and T_100 series), plus the real single-rank CFD period
-//! cost on this machine that anchors the DES calibration.
+//! N_ranks, T_1 and T_100 series), plus the real CFD period cost on this
+//! machine from BOTH engines:
+//!
+//! * native lanes (always, artifact-free): the pure-Rust SIMD+threaded
+//!   engine across scalar/SIMD × thread counts on the `tiny` and `small`
+//!   grids — the race the `--cfd-backend native` tentpole claims;
+//! * XLA anchor (when `make artifacts` has run): the AOT `cfd_period`
+//!   through CfdEnv, the series the DES calibration is scaled against.
 //!
 //! Run: `cargo bench --bench cfd_scaling`
+//! CI gate: `cargo bench --bench cfd_scaling -- --gate` asserts the SIMD
+//! path is not slower than scalar on this machine (trivially passes where
+//! AVX2 is unavailable) — exits 1 on regression.
 
+use drlfoam::cfd::{self, NativeEngine};
 use drlfoam::cluster::Calibration;
-use drlfoam::env::CfdEnv;
+use drlfoam::env::{CfdEngineRef, CfdEnv};
 use drlfoam::io_interface::{make_interface, IoMode};
 use drlfoam::reproduce;
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::util::bench;
 
+/// One native-engine lane: actuation periods on a developing flow from a
+/// quiescent start (no base-flow develop, so the lane costs milliseconds
+/// and needs no artifacts). Returns the bench result for `save`.
+fn native_lane(
+    variant: &str,
+    threads: usize,
+    force_scalar: bool,
+    warmup: usize,
+    iters: usize,
+) -> bench::BenchResult {
+    let spec = cfd::variant(variant).unwrap();
+    let mut engine = NativeEngine::new(spec, threads, force_scalar);
+    let (mut u, mut v, mut p) = engine.quiescent();
+    let label = format!(
+        "native {variant} {}T {}",
+        engine.threads(),
+        if engine.simd_active() { "simd" } else { "scalar" }
+    );
+    bench::bench(&label, warmup, iters, || {
+        engine.period(&mut u, &mut v, &mut p, 0.1);
+    })
+}
+
+/// `--gate`: SIMD must not be slower than scalar (5% measurement slack;
+/// best-of-N period time is the robust statistic). Where AVX2 is absent
+/// the two lanes run identical code, so the gate passes trivially.
+fn gate() -> ! {
+    if !drlfoam::cfd::simd::avx2_available() {
+        println!("gate skipped: AVX2 unavailable (scalar == simd path)");
+        std::process::exit(0);
+    }
+    let best = |force_scalar: bool| -> f64 {
+        let spec = cfd::variant("small").unwrap();
+        let mut engine = NativeEngine::new(spec, 1, force_scalar);
+        let (mut u, mut v, mut p) = engine.quiescent();
+        for _ in 0..3 {
+            engine.period(&mut u, &mut v, &mut p, 0.1);
+        }
+        (0..10)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                engine.period(&mut u, &mut v, &mut p, 0.1);
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let scalar_s = best(true);
+    let simd_s = best(false);
+    println!(
+        "gate: scalar best {:.3} ms/period, simd best {:.3} ms/period ({:.2}x)",
+        scalar_s * 1e3,
+        simd_s * 1e3,
+        scalar_s / simd_s
+    );
+    if simd_s > scalar_s * 1.05 {
+        eprintln!("GATE FAILED: native SIMD cfd period slower than scalar");
+        std::process::exit(1);
+    }
+    println!("gate OK: simd >= scalar throughput");
+    std::process::exit(0);
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--gate") {
+        gate();
+    }
     let out = std::path::Path::new("out");
     std::fs::create_dir_all(out).unwrap();
     let calib = Calibration::paper_scale();
     println!("{}", reproduce::fig7(&calib, out).unwrap());
 
-    // --- real anchor: single-rank CFD actuation period on this machine
-    let m = Manifest::load("artifacts").expect("run `make artifacts`");
-    let mut rt = Runtime::new("artifacts").unwrap();
-    let vm = m.variant("small").unwrap().clone();
-    rt.load(&vm.cfd_period_file).unwrap();
-    let work = std::env::temp_dir().join("drlfoam-bench-cfd");
-    std::fs::create_dir_all(&work).unwrap();
-    let mut env = CfdEnv::new(
-        vm.clone(),
-        m.load_state0("small").unwrap(),
-        m.drl.action_smoothing_beta,
-        m.drl.reward_lift_penalty,
-        make_interface(IoMode::InMemory, &work, 0).unwrap(),
-    );
-    let cfd = rt.get(&vm.cfd_period_file).unwrap();
-    env.reset(cfd).unwrap();
-    let r = bench::bench("cfd_period small (1 rank, real)", 3, 20, || {
-        env.step(cfd, 0.1).unwrap();
-    });
+    // --- native engine lanes: scalar vs SIMD vs SIMD+threads, always on
     println!(
-        "\n(real {:.1} ms/period on this machine vs paper-scale {:.2} s; the DES\n uses the paper scale for absolute hours, `--calib out/calib.json`\n for machine scale)",
-        r.mean_s * 1e3,
-        calib.t_period_1rank
+        "\n== native CFD engine (artifact-free; avx2 {}) ==",
+        if drlfoam::cfd::simd::avx2_available() { "on" } else { "off" }
     );
-    bench::save("cfd_scaling", &[r]);
+    let mut results = Vec::new();
+    for variant in ["tiny", "small"] {
+        let (warmup, iters) = if variant == "tiny" { (5, 30) } else { (3, 15) };
+        results.push(native_lane(variant, 1, true, warmup, iters));
+        results.push(native_lane(variant, 1, false, warmup, iters));
+        for threads in [2usize, 4] {
+            results.push(native_lane(variant, threads, false, warmup, iters));
+        }
+    }
+
+    // --- XLA anchor: single-rank AOT CFD actuation period on this machine
+    match Manifest::load_optional("artifacts").unwrap() {
+        Some(m) => {
+            let mut rt = Runtime::new("artifacts").unwrap();
+            let vm = m.variant("small").unwrap().clone();
+            rt.load(&vm.cfd_period_file).unwrap();
+            let work = std::env::temp_dir().join("drlfoam-bench-cfd");
+            std::fs::create_dir_all(&work).unwrap();
+            let mut env = CfdEnv::new(
+                vm.clone(),
+                m.load_state0("small").unwrap(),
+                m.drl.action_smoothing_beta,
+                m.drl.reward_lift_penalty,
+                make_interface(IoMode::InMemory, &work, 0).unwrap(),
+            );
+            let cfd = rt.get(&vm.cfd_period_file).unwrap();
+            env.reset(CfdEngineRef::Xla(cfd)).unwrap();
+            let r = bench::bench("cfd_period small (xla, 1 rank)", 3, 20, || {
+                env.step(CfdEngineRef::Xla(cfd), 0.1).unwrap();
+            });
+            println!(
+                "\n(real {:.1} ms/period on this machine vs paper-scale {:.2} s; the DES\n uses the paper scale for absolute hours, `--calib out/calib.json`\n for machine scale)",
+                r.mean_s * 1e3,
+                calib.t_period_1rank
+            );
+            results.push(r);
+        }
+        None => println!("cfd_period small (xla): skipped: no artifacts"),
+    }
+    bench::save("cfd_scaling", &results);
 }

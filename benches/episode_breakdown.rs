@@ -1,12 +1,13 @@
 //! Bench: Fig 10 — per-episode time breakdown (CFD vs I/O vs DRL) as the
 //! environment count grows, via the DES at paper scale; plus the real
-//! measured breakdown of one episode on this machine.
+//! measured breakdown of one episode on this machine (XLA engine when
+//! artifacts exist, skipped per-lane otherwise).
 //!
 //! Run: `cargo bench --bench episode_breakdown`
 
 use drlfoam::cluster::Calibration;
 use drlfoam::drl::Policy;
-use drlfoam::env::CfdEnv;
+use drlfoam::env::{CfdEngineRef, CfdEnv};
 use drlfoam::io_interface::{make_interface, IoMode};
 use drlfoam::reproduce;
 use drlfoam::runtime::{Manifest, Runtime};
@@ -19,7 +20,13 @@ fn main() {
     println!("{}", reproduce::fig10(&calib, out).unwrap());
 
     // --- real measured breakdown, one 20-period episode per I/O mode
-    let m = Manifest::load("artifacts").expect("make artifacts");
+    let m = match Manifest::load_optional("artifacts").unwrap() {
+        Some(m) => m,
+        None => {
+            println!("real breakdown (xla): skipped: no artifacts");
+            return;
+        }
+    };
     let mut rt = Runtime::new("artifacts").unwrap();
     let vm = m.variant("small").unwrap().clone();
     rt.load(&vm.cfd_period_file).unwrap();
@@ -45,14 +52,14 @@ fn main() {
         let cfd = rt.get(&vm.cfd_period_file).unwrap();
         let pol = rt.get(&m.drl.policy_apply_file).unwrap();
         let mut rng = Rng::new(0);
-        let mut obs = env.reset(cfd).unwrap();
+        let mut obs = env.reset(CfdEngineRef::Xla(cfd)).unwrap();
         let (mut t_cfd, mut t_io, mut t_pol) = (0.0, 0.0, 0.0);
         for _ in 0..20 {
             let t0 = std::time::Instant::now();
             let pout = policy.apply(pol, &params, &obs).unwrap();
             t_pol += t0.elapsed().as_secs_f64();
             let (a, _) = policy.sample(&pout, &mut rng);
-            let sr = env.step(cfd, a).unwrap();
+            let sr = env.step(CfdEngineRef::Xla(cfd), a).unwrap();
             t_cfd += sr.timings.cfd_s;
             t_io += sr.timings.io_s;
             obs = sr.obs;

@@ -3,22 +3,99 @@
 //! latency budget — policy serving, CFD period execution, PPO minibatch,
 //! and the literal-conversion overhead around each.
 //!
+//! The artifact-free lanes (native policy, native CFD period, native PPO
+//! minibatch, batch assembly) always run; each XLA lane prints
+//! `skipped: no artifacts` when `make artifacts` has not been run.
+//!
 //! Run: `cargo bench --bench hot_path`
 
-use drlfoam::drl::{Batch, Policy, PpoTrainer, TrainerBackend, Trajectory, Transition};
+use drlfoam::cfd::{self, NativeEngine, NATIVE_HIDDEN, N_PROBES};
+use drlfoam::drl::{
+    Batch, NativePolicy, NativeUpdater, Policy, PpoHyperParams, PpoTrainer, TrainerBackend,
+    Trajectory, Transition,
+};
 use drlfoam::runtime::{literal_f32, Manifest, Runtime};
 use drlfoam::util::bench;
 use drlfoam::util::rng::Rng;
 
-fn main() {
-    let m = Manifest::load("artifacts").expect("run `make artifacts`");
+fn synth_traj(n_obs: usize, n: usize, rng: &mut Rng) -> Trajectory {
+    Trajectory {
+        transitions: (0..n)
+            .map(|_| Transition {
+                obs: (0..n_obs).map(|_| rng.normal() as f32).collect(),
+                action: rng.normal() * 0.1,
+                logp: -1.0,
+                reward: rng.normal() * 0.1,
+                value: 0.0,
+            })
+            .collect(),
+        last_value: 0.0,
+        env_id: 0,
+    }
+}
+
+/// The artifact-free lanes: the exact hot path of a `--cfd-backend
+/// native` training run (native serving, native CFD period, native PPO
+/// minibatch, GAE/batch assembly).
+fn native_lanes(results: &mut Vec<bench::BenchResult>) {
+    let mut rng = Rng::new(5);
+
+    // --- native policy serving at the native-cylinder dims
+    let net = NativePolicy::new(N_PROBES, NATIVE_HIDDEN);
+    let params = net.init_params(0);
+    let obs = vec![0.2f32; N_PROBES];
+    results.push(bench::bench("native policy_apply B=1", 10, 100, || {
+        net.apply(&params, &obs).unwrap();
+    }));
+
+    // --- native CFD period (tiny grid; quiescent start, no artifacts)
+    let spec = cfd::variant("tiny").unwrap();
+    let mut engine = NativeEngine::from_env(spec);
+    let (mut u, mut v, mut p) = engine.quiescent();
+    results.push(bench::bench("native cfd_period tiny", 5, 30, || {
+        engine.period(&mut u, &mut v, &mut p, 0.1);
+    }));
+
+    // --- native PPO minibatch update
+    let updater = NativeUpdater::new(N_PROBES, NATIVE_HIDDEN, PpoHyperParams::default());
+    let traj = synth_traj(N_PROBES, 64, &mut rng);
+    let batch = Batch::assemble(&[traj], N_PROBES, 0.99, 0.95);
+    let mut trainer = PpoTrainer::with_minibatch(params, 64, 1);
+    results.push(bench::bench("native ppo_update 1 minibatch (64)", 3, 30, || {
+        trainer
+            .update(TrainerBackend::Native(&updater), &batch, &mut rng)
+            .unwrap();
+    }));
+
+    // --- GAE + batch assembly (pure rust part of the loop)
+    let trajs: Vec<Trajectory> = (0..8)
+        .map(|e| Trajectory {
+            transitions: (0..100)
+                .map(|_| Transition {
+                    obs: vec![0.1; N_PROBES],
+                    action: 0.0,
+                    logp: -1.0,
+                    reward: 0.05,
+                    value: 0.01,
+                })
+                .collect(),
+            last_value: 0.0,
+            env_id: e,
+        })
+        .collect();
+    results.push(bench::bench("batch assemble 8x100 samples", 5, 50, || {
+        Batch::assemble(&trajs, N_PROBES, 0.99, 0.95);
+    }));
+}
+
+/// The XLA lanes, only runnable over real artifacts.
+fn xla_lanes(m: &Manifest, results: &mut Vec<bench::BenchResult>) {
     let mut rt = Runtime::new("artifacts").unwrap();
     let vm = m.variant("small").unwrap().clone();
     rt.load(&vm.cfd_period_file).unwrap();
     rt.load(&m.drl.policy_apply_file).unwrap();
     rt.load(&m.drl.ppo_update_file).unwrap();
     let params = m.load_params_init().unwrap();
-    let mut results = Vec::new();
 
     // --- policy serving (B=1)
     let pol = rt.get(&m.drl.policy_apply_file).unwrap();
@@ -55,45 +132,31 @@ fn main() {
 
     // --- PPO minibatch update
     let mut rng = Rng::new(1);
-    let traj = Trajectory {
-        transitions: (0..m.drl.minibatch)
-            .map(|_| Transition {
-                obs: (0..m.drl.n_obs).map(|_| rng.normal() as f32).collect(),
-                action: rng.normal() * 0.1,
-                logp: -1.0,
-                reward: rng.normal() * 0.1,
-                value: 0.0,
-            })
-            .collect(),
-        last_value: 0.0,
-        env_id: 0,
-    };
+    let traj = synth_traj(m.drl.n_obs, m.drl.minibatch, &mut rng);
     let batch = Batch::assemble(&[traj], m.drl.n_obs, 0.99, 0.95);
     let mut trainer = PpoTrainer::new(&m.drl, params.clone(), 1);
     let upd = rt.get(&m.drl.ppo_update_file).unwrap();
     results.push(bench::bench("ppo_update 1 minibatch (64)", 3, 30, || {
         trainer.update(TrainerBackend::Xla(upd), &batch, &mut rng).unwrap();
     }));
+}
 
-    // --- GAE + batch assembly (pure rust part of the loop)
-    let trajs: Vec<Trajectory> = (0..8)
-        .map(|e| Trajectory {
-            transitions: (0..100)
-                .map(|_| Transition {
-                    obs: vec![0.1; m.drl.n_obs],
-                    action: 0.0,
-                    logp: -1.0,
-                    reward: 0.05,
-                    value: 0.01,
-                })
-                .collect(),
-            last_value: 0.0,
-            env_id: e,
-        })
-        .collect();
-    results.push(bench::bench("batch assemble 8x100 samples", 5, 50, || {
-        Batch::assemble(&trajs, m.drl.n_obs, 0.99, 0.95);
-    }));
-
+fn main() {
+    let mut results = Vec::new();
+    native_lanes(&mut results);
+    match Manifest::load_optional("artifacts").unwrap() {
+        Some(m) => xla_lanes(&m, &mut results),
+        None => {
+            for lane in [
+                "policy_apply B=1",
+                "policy_apply B=1 (session/buffers)",
+                "literal_f32 340k params",
+                "cfd_period small (incl. transfers)",
+                "ppo_update 1 minibatch (64)",
+            ] {
+                println!("{lane}: skipped: no artifacts");
+            }
+        }
+    }
     bench::save("hot_path", &results);
 }

@@ -22,7 +22,12 @@
 #  10. shm transport smoke   --transport shm train bitwise-diffed against
 #                            --transport pipe, then the exec_transport
 #                            bench's --gate (shm steps/s >= pipe)
-#  11. repo-invariant audit  drlfoam audit (SAFETY comments, determinism
+#  11. native CFD smoke      --cfd-backend native cylinder training with
+#                            zero artifacts, bitwise-diffed across a
+#                            re-run, a thread-count change, and
+#                            DRLFOAM_FORCE_SCALAR=1; then the cfd_scaling
+#                            bench's --gate (SIMD period >= scalar)
+#  12. repo-invariant audit  drlfoam audit (SAFETY comments, determinism
 #                            bans, wire-tag coverage; ARCHITECTURE.md §9)
 #
 # Deeper verification stages run on demand behind env gates (set any to 1;
@@ -200,6 +205,41 @@ fi
 #     than the pipe it replaces on the lockstep (data-plane-heavy) path.
 echo "== shm throughput gate (cargo bench exec_transport -- --gate)"
 cargo bench --bench exec_transport -- --gate
+
+# 9f. native-CFD smoke: a real cylinder training run with zero artifacts
+#     (--cfd-backend native; the base flow develops in-process). Run three
+#     ways — baseline (2 threads), an identical re-run, and a 1-thread
+#     forced-scalar run — all three must agree bitwise on the learning
+#     columns and on policy_final.bin. This is the engine's
+#     scalar==SIMD==threaded contract observed end to end through
+#     training, not just at the kernel level (rust/tests/cfd_native.rs).
+echo "== native CFD smoke (--cfd-backend native, bitwise across paths)"
+CFD_OUT=out/ci-cfd-smoke
+rm -rf "$CFD_OUT"
+run_native_cfd() {
+    cargo run --release --quiet -- train \
+        --scenario cylinder --variant tiny --cfd-backend native \
+        --backend native --update-backend native \
+        --artifacts "$CFD_OUT/no-artifacts" \
+        --out "$CFD_OUT/$1" --work-dir "$CFD_OUT/$1/work" \
+        --envs 2 --horizon 3 --iterations 2 --quiet
+    test -f "$CFD_OUT/$1/train_log.csv"
+    test -f "$CFD_OUT/$1/policy_final.bin"
+    cut -d, -f1-9 "$CFD_OUT/$1/train_log.csv" > "$CFD_OUT/$1-learning.csv"
+}
+DRLFOAM_CFD_THREADS=2 run_native_cfd a
+DRLFOAM_CFD_THREADS=2 run_native_cfd b
+DRLFOAM_CFD_THREADS=1 DRLFOAM_FORCE_SCALAR=1 run_native_cfd scalar
+cmp "$CFD_OUT/a-learning.csv" "$CFD_OUT/b-learning.csv"
+cmp "$CFD_OUT/a-learning.csv" "$CFD_OUT/scalar-learning.csv"
+cmp "$CFD_OUT/a/policy_final.bin" "$CFD_OUT/b/policy_final.bin"
+cmp "$CFD_OUT/a/policy_final.bin" "$CFD_OUT/scalar/policy_final.bin"
+
+# 9g. native CFD SIMD gate: the vectorized row kernels must not be slower
+#     than the scalar twins on this machine (trivially passes where AVX2
+#     is unavailable — the paths are then identical code).
+echo "== native CFD SIMD gate (cargo bench cfd_scaling -- --gate)"
+cargo bench --bench cfd_scaling -- --gate
 
 # ---------------------------------------------------------------------------
 # Deeper verification, opt-in (each stage needs a toolchain component the

@@ -18,9 +18,10 @@
 //! | `allowlist-stale`       | the allowlist itself | every allowlist entry still suppresses at least one finding |
 //!
 //! Determinism-critical modules (`cluster/des.rs`, `cluster/planner.rs`,
-//! `coordinator/scheduler.rs`, `drl/*`) are the ones whose outputs the
-//! bitwise tests compare: DES scores, planner rankings, learning columns,
-//! policy parameters.
+//! `coordinator/scheduler.rs`, `drl/*`, `env/*`, `cfd/*`) are the ones
+//! whose outputs the bitwise tests compare: DES scores, planner rankings,
+//! learning columns, policy parameters, environment rewards/observations,
+//! and the native CFD engine's fields and force histories.
 //!
 //! Audited exceptions live in `rust/audit.allow`, one per line:
 //!
@@ -206,6 +207,8 @@ impl SourceFile {
                 | "rust/src/cluster/planner.rs"
                 | "rust/src/coordinator/scheduler.rs"
         ) || self.rel.starts_with("rust/src/drl/")
+            || self.rel.starts_with("rust/src/env/")
+            || self.rel.starts_with("rust/src/cfd/")
     }
 }
 

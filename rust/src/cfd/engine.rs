@@ -1,0 +1,385 @@
+//! [`NativeEngine`]: the actuation-period driver — the pure-Rust twin of
+//! the XLA `cfd_period_<variant>` executable, plus base-flow development
+//! (the twin of `python/compile/aot.py::develop_and_measure`).
+//!
+//! The substep sequence mirrors `python/compile/cfd.py::make_period_fn`
+//! verbatim: velocity BCs -> RK2 advection-diffusion predictor ->
+//! immersed-boundary force + jet overwrite -> divergence RHS -> red-black
+//! SOR projection -> pressure correction -> second force sample -> solid
+//! blend; probes are gathered from the final pressure field. All f32 op
+//! orders match the reference (see module docs in [`super::kernels`]);
+//! force reductions widen to f64 like numpy's `.astype(float64)` sums.
+
+use super::geometry::Geometry;
+use super::{kernels, poisson, simd, GridSpec, N_PROBES};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything one actuation period returns to the environment.
+pub struct PeriodOutput {
+    /// 149 pressure probes from the end-of-period field.
+    pub probes: Vec<f32>,
+    /// Per-substep drag coefficient history.
+    pub cd_hist: Vec<f32>,
+    /// Per-substep lift coefficient history.
+    pub cl_hist: Vec<f32>,
+}
+
+/// Developed base flow + the statistics the manifest normally bakes.
+pub struct BaseFlow {
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+    pub p: Vec<f32>,
+    /// Mean drag over the second half of development (reward baseline).
+    pub cd0: f64,
+    /// Population std of the per-period mean lift over the tail.
+    pub cl0_amplitude: f64,
+    /// Per-probe mean over the tail periods (observation normalization).
+    pub probe_mean: Vec<f32>,
+    /// Per-probe std, floored at 1e-3.
+    pub probe_std: Vec<f32>,
+}
+
+/// Base flows are pure functions of the variant (bitwise invariant across
+/// SIMD path and thread count), so one development run per process is
+/// shared by every env instance.
+static BASE_FLOW_CACHE: Mutex<BTreeMap<String, Arc<BaseFlow>>> = Mutex::new(BTreeMap::new());
+
+pub struct NativeEngine {
+    spec: GridSpec,
+    geom: Geometry,
+    simd: bool,
+    threads: usize,
+    // f32 constants, cast from f64 exactly where numpy/XLA cast.
+    h32: f32,
+    dt32: f32,
+    hdt: f32,
+    two_h: f32,
+    hh: f32,
+    nu: f32,
+    coef: f32,
+    qref: f32,
+    omega32: f32,
+    one_minus_omega: f32,
+    // scratch fields (ny*nx each), reused across substeps
+    ru: Vec<f32>,
+    rv: Vec<f32>,
+    uh: Vec<f32>,
+    vh: Vec<f32>,
+    us: Vec<f32>,
+    vs: Vec<f32>,
+    rhs: Vec<f32>,
+    p_scratch: Vec<f32>,
+    term: Vec<f64>,
+}
+
+impl NativeEngine {
+    pub fn new(spec: GridSpec, threads: usize, force_scalar: bool) -> NativeEngine {
+        let geom = Geometry::build(&spec);
+        let total = geom.ny * geom.nx;
+        let (h, dt) = (spec.h(), spec.dt);
+        NativeEngine {
+            simd: !force_scalar && simd::avx2_available(),
+            threads: threads.max(1),
+            h32: h as f32,
+            dt32: dt as f32,
+            hdt: (0.5 * dt) as f32,
+            two_h: (2.0 * h) as f32,
+            hh: (h * h) as f32,
+            nu: (1.0 / spec.re) as f32,
+            coef: (-(h * h / dt)) as f32,
+            qref: (0.5 * spec.u_mean * spec.u_mean * (2.0 * spec.radius)) as f32,
+            omega32: spec.sor_omega as f32,
+            one_minus_omega: (1.0 - spec.sor_omega) as f32,
+            ru: vec![0.0; total],
+            rv: vec![0.0; total],
+            uh: vec![0.0; total],
+            vh: vec![0.0; total],
+            us: vec![0.0; total],
+            vs: vec![0.0; total],
+            rhs: vec![0.0; total],
+            p_scratch: vec![0.0; total],
+            term: Vec::with_capacity(geom.solid_cells.len()),
+            geom,
+            spec,
+        }
+    }
+
+    /// Construct from the process environment: `DRLFOAM_CFD_THREADS`
+    /// (default 1) and `DRLFOAM_FORCE_SCALAR=1`.
+    pub fn from_env(spec: GridSpec) -> NativeEngine {
+        let threads = std::env::var("DRLFOAM_CFD_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1);
+        NativeEngine::new(spec, threads, simd::force_scalar_env())
+    }
+
+    pub fn spec(&self) -> &GridSpec {
+        &self.spec
+    }
+
+    pub fn geom(&self) -> &Geometry {
+        &self.geom
+    }
+
+    pub fn simd_active(&self) -> bool {
+        self.simd
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// (u, v, p) for an impulsive start.
+    pub fn quiescent(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.geom.quiescent()
+    }
+
+    /// Advection-diffusion RHS for all interior rows, SIMD-dispatched.
+    #[allow(clippy::too_many_arguments)]
+    fn adv_diff(
+        ru: &mut [f32],
+        rv: &mut [f32],
+        u: &[f32],
+        v: &[f32],
+        ny: usize,
+        nx: usize,
+        two_h: f32,
+        hh: f32,
+        nu: f32,
+        use_simd: bool,
+    ) {
+        for j in 1..ny - 1 {
+            let row = j * nx;
+            let ru_row = &mut ru[row..row + nx];
+            let rv_row = &mut rv[row..row + nx];
+            let i0 = if use_simd {
+                // SAFETY: `use_simd` is only set after runtime AVX2
+                // detection; u/v are ny*nx grids and j is interior.
+                unsafe { simd::adv_diff_row(u, v, ru_row, rv_row, j, nx, two_h, hh, nu) }
+            } else {
+                1
+            };
+            kernels::adv_diff_row_scalar(u, v, ru_row, rv_row, j, i0, nx, two_h, hh, nu);
+        }
+    }
+
+    /// `coef * sum(solid * (jet*jet_q - q))`, the immersed-boundary force
+    /// sample. Fluid cells contribute exact zeros in the reference sum,
+    /// so only solid cells are accumulated; terms widen to f64 (numpy's
+    /// `.astype(float64)`) and reduce in fixed tree order.
+    fn ib_force(geom: &Geometry, term: &mut Vec<f64>, jet: f32, q: &[f32], jet_q: &[f32]) -> f32 {
+        term.clear();
+        term.extend(
+            geom.solid_cells
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| (jet * jet_q[k] - q[c]) as f64),
+        );
+        kernels::tree_sum_f64(term) as f32
+    }
+
+    /// One projection substep, in place on (u, v, p). Returns (cd, cl).
+    fn substep(&mut self, u: &mut [f32], v: &mut [f32], p: &mut [f32], jet: f32) -> (f32, f32) {
+        let (ny, nx) = (self.geom.ny, self.geom.nx);
+        let g = &self.geom;
+
+        kernels::apply_vel_bcs(u, v, &g.u_in, ny, nx);
+
+        // RK2 predictor: half-step state, then the full step from it.
+        Self::adv_diff(
+            &mut self.ru, &mut self.rv, u, v, ny, nx, self.two_h, self.hh, self.nu, self.simd,
+        );
+        kernels::axpy_interior(&mut self.uh, u, &self.ru, self.hdt, ny, nx);
+        kernels::axpy_interior(&mut self.vh, v, &self.rv, self.hdt, ny, nx);
+        kernels::apply_vel_bcs(&mut self.uh, &mut self.vh, &g.u_in, ny, nx);
+        Self::adv_diff(
+            &mut self.ru,
+            &mut self.rv,
+            &self.uh,
+            &self.vh,
+            ny,
+            nx,
+            self.two_h,
+            self.hh,
+            self.nu,
+            self.simd,
+        );
+        kernels::axpy_interior(&mut self.us, u, &self.ru, self.dt32, ny, nx);
+        kernels::axpy_interior(&mut self.vs, v, &self.rv, self.dt32, ny, nx);
+        kernels::apply_vel_bcs(&mut self.us, &mut self.vs, &g.u_in, ny, nx);
+
+        // First IB force sample, then impose the jet inside the solid.
+        let fx1 = self.coef * Self::ib_force(g, &mut self.term, jet, &self.us, &g.jet_u);
+        let fy1 = self.coef * Self::ib_force(g, &mut self.term, jet, &self.vs, &g.jet_v);
+        for (k, &c) in g.solid_cells.iter().enumerate() {
+            self.us[c] = jet * g.jet_u[k];
+            self.vs[c] = jet * g.jet_v[k];
+        }
+
+        // Projection: Poisson solve on the divergence, then correct.
+        kernels::divergence_rhs(&mut self.rhs, &self.us, &self.vs, self.h32, self.dt32, ny, nx);
+        poisson::solve(
+            p,
+            &mut self.p_scratch,
+            &self.rhs,
+            &g.parity_mask,
+            ny,
+            nx,
+            self.hh,
+            self.omega32,
+            self.one_minus_omega,
+            self.spec.n_sweeps,
+            self.threads,
+            self.simd,
+        );
+        kernels::pressure_correct(u, v, &self.us, &self.vs, p, self.h32, self.dt32, ny, nx);
+        kernels::apply_vel_bcs(u, v, &g.u_in, ny, nx);
+
+        // Second force sample against the corrected field, then blend.
+        let fx2 = self.coef * Self::ib_force(g, &mut self.term, jet, u, &g.jet_u);
+        let fy2 = self.coef * Self::ib_force(g, &mut self.term, jet, v, &g.jet_v);
+        for (k, &c) in g.solid_cells.iter().enumerate() {
+            u[c] = jet * g.jet_u[k];
+            v[c] = jet * g.jet_v[k];
+        }
+
+        ((fx1 + fx2) / self.qref, (fy1 + fy2) / self.qref)
+    }
+
+    /// One actuation period (`substeps` projection substeps at constant
+    /// jet amplitude), in place on (u, v, p).
+    pub fn period(&mut self, u: &mut [f32], v: &mut [f32], p: &mut [f32], jet: f32) -> PeriodOutput {
+        let n = self.spec.substeps;
+        let mut out = PeriodOutput {
+            probes: Vec::with_capacity(N_PROBES),
+            cd_hist: Vec::with_capacity(n),
+            cl_hist: Vec::with_capacity(n),
+        };
+        for _ in 0..n {
+            let (cd, cl) = self.substep(u, v, p, jet);
+            out.cd_hist.push(cd);
+            out.cl_hist.push(cl);
+        }
+        // Probe gather: f32 products, 4-term f64 sum, f32 result — the
+        // numpy `(vals*w).astype(float64).sum(axis=1).astype(float32)`.
+        for (idx, w) in self.geom.probe_idx.iter().zip(&self.geom.probe_w) {
+            let t0 = (p[idx[0]] * w[0]) as f64;
+            let t1 = (p[idx[1]] * w[1]) as f64;
+            let t2 = (p[idx[2]] * w[2]) as f64;
+            let t3 = (p[idx[3]] * w[3]) as f64;
+            out.probes.push((((t0 + t1) + t2) + t3) as f32);
+        }
+        out
+    }
+
+    /// Develop the unactuated base flow from quiescent and measure the
+    /// reward baseline + probe statistics — the `aot.py` twin: per-period
+    /// means in f64, statistics over the second half of development,
+    /// probe std floored at 1e-3.
+    pub fn develop_base_flow(&mut self) -> BaseFlow {
+        let (mut u, mut v, mut p) = self.geom.quiescent();
+        let n_periods = ((self.spec.base_flow_time / self.spec.period()).round() as usize).max(1);
+        let mut cds = Vec::with_capacity(n_periods);
+        let mut cls = Vec::with_capacity(n_periods);
+        let mut probes = Vec::with_capacity(n_periods);
+        for _ in 0..n_periods {
+            let out = self.period(&mut u, &mut v, &mut p, 0.0);
+            cds.push(mean_f64(&out.cd_hist));
+            cls.push(mean_f64(&out.cl_hist));
+            probes.push(out.probes);
+        }
+        // aot.py: tail = slice(max(1, n//2), None); keep the tail
+        // non-empty when development is a single period.
+        let tail = if n_periods < 2 { 0 } else { (n_periods / 2).max(1) };
+        let cd_tail = &cds[tail..];
+        let cl_tail = &cls[tail..];
+        let mut probe_mean = Vec::with_capacity(N_PROBES);
+        let mut probe_std = Vec::with_capacity(N_PROBES);
+        let mut col: Vec<f64> = Vec::new();
+        for k in 0..N_PROBES {
+            col.clear();
+            col.extend(probes[tail..].iter().map(|pr| pr[k] as f64));
+            let m = col.iter().sum::<f64>() / col.len() as f64;
+            let var = col.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / col.len() as f64;
+            probe_mean.push(m as f32);
+            probe_std.push(var.sqrt().max(1e-3) as f32);
+        }
+        let cd0 = cd_tail.iter().sum::<f64>() / cd_tail.len() as f64;
+        let cl_m = cl_tail.iter().sum::<f64>() / cl_tail.len() as f64;
+        let cl_var =
+            cl_tail.iter().map(|x| (x - cl_m) * (x - cl_m)).sum::<f64>() / cl_tail.len() as f64;
+        BaseFlow {
+            u,
+            v,
+            p,
+            cd0,
+            cl0_amplitude: cl_var.sqrt(),
+            probe_mean,
+            probe_std,
+        }
+    }
+
+    /// Process-wide cached [`develop_base_flow`], keyed by variant name.
+    pub fn cached_base_flow(&mut self) -> Arc<BaseFlow> {
+        if let Some(bf) = BASE_FLOW_CACHE.lock().unwrap().get(&self.spec.name) {
+            return Arc::clone(bf);
+        }
+        // Develop outside the lock (minutes-scale on big grids); a racing
+        // duplicate is bitwise identical, first insert wins.
+        let bf = Arc::new(self.develop_base_flow());
+        Arc::clone(
+            BASE_FLOW_CACHE
+                .lock()
+                .unwrap()
+                .entry(self.spec.name.clone())
+                .or_insert(bf),
+        )
+    }
+}
+
+fn mean_f64(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfd::variant;
+
+    fn run_periods(threads: usize, force_scalar: bool, n: usize) -> (Vec<f32>, PeriodOutput) {
+        let mut eng = NativeEngine::new(variant("tiny").unwrap(), threads, force_scalar);
+        let (mut u, mut v, mut p) = eng.quiescent();
+        let mut last = None;
+        for _ in 0..n {
+            last = Some(eng.period(&mut u, &mut v, &mut p, 0.05));
+        }
+        (p, last.unwrap())
+    }
+
+    #[test]
+    fn period_output_shape_and_finiteness() {
+        let (p, out) = run_periods(1, true, 3);
+        assert_eq!(out.probes.len(), N_PROBES);
+        assert_eq!(out.cd_hist.len(), 4); // tiny substeps
+        assert!(p.iter().all(|x| x.is_finite()));
+        assert!(out.probes.iter().all(|x| x.is_finite()));
+        assert!(out.cd_hist.iter().chain(&out.cl_hist).all(|x| x.is_finite()));
+        // An impulsively started confined cylinder drags forward.
+        assert!(out.cd_hist.iter().all(|&cd| cd > 0.0), "{:?}", out.cd_hist);
+    }
+
+    #[test]
+    fn periods_are_bitwise_invariant_across_threads_and_simd() {
+        let (p_ref, out_ref) = run_periods(1, true, 2);
+        for (threads, force_scalar) in [(3, true), (1, false), (4, false)] {
+            let (p, out) = run_periods(threads, force_scalar, 2);
+            assert_eq!(p_ref, p, "threads={threads} force_scalar={force_scalar}");
+            assert_eq!(out_ref.probes, out.probes);
+            assert_eq!(out_ref.cd_hist, out.cd_hist);
+            assert_eq!(out_ref.cl_hist, out.cl_hist);
+        }
+    }
+}

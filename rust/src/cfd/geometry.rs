@@ -1,0 +1,257 @@
+//! Static geometry for the confined-cylinder benchmark — the native twin
+//! of `python/compile/cfd.py::build_geometry` / `probe_positions`.
+//!
+//! Everything here is computed once per engine: the immersed-boundary
+//! solid mask (kept as a sparse cell list — the cylinder covers ~0.5% of
+//! the grid), the two synthetic jet velocity profiles on the outermost
+//! solid shell (theta = ±90°, parabolic lip profile, antisymmetric so the
+//! pair has zero net mass flux), the parabolic inlet profile, the SOR
+//! checkerboard row patterns, and the 149-probe bilinear gather table.
+//!
+//! Scalar derivations follow the Python/numpy dtype flow (f64 arithmetic
+//! cast to f32 exactly where numpy casts) so masks and weights agree with
+//! the AOT-baked geometry; the native-vs-XLA tolerance test in
+//! `rust/tests/cfd_native.rs` holds the composition to that.
+
+use super::{GridSpec, N_PROBES};
+
+/// Precomputed static fields for one [`GridSpec`].
+pub struct Geometry {
+    pub ny: usize,
+    pub nx: usize,
+    /// Parabolic inlet profile, one value per row (f32, numpy-cast).
+    pub u_in: Vec<f32>,
+    /// Linear indices (j * nx + i) of solid cells, row-major order.
+    pub solid_cells: Vec<usize>,
+    /// Unit-action jet velocity at each solid cell (zero off the lips),
+    /// aligned with `solid_cells`.
+    pub jet_u: Vec<f32>,
+    pub jet_v: Vec<f32>,
+    /// SOR checkerboard row patterns: `parity_mask[q][i]` is 1.0 where
+    /// `i % 2 == q` (interior column bounds are enforced by loop ranges).
+    pub parity_mask: [Vec<f32>; 2],
+    /// Bilinear gather corners per probe: linear indices of
+    /// (j0,i0), (j0,i0+1), (j0+1,i0), (j0+1,i0+1).
+    pub probe_idx: Vec<[usize; 4]>,
+    /// Bilinear weights per probe (sum to 1).
+    pub probe_w: Vec<[f32; 4]>,
+}
+
+/// The 149 pressure-probe positions: two rings around the cylinder, a
+/// near-jet ring off the two lips, and a 13x7 wake grid.
+pub fn probe_positions() -> Vec<[f64; 2]> {
+    let mut pts = Vec::with_capacity(N_PROBES);
+    for (r, n) in [(0.75_f64, 24usize), (1.0, 24)] {
+        for k in 0..n {
+            let th = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            pts.push([r * th.cos(), r * th.sin()]);
+        }
+    }
+    for base in [75.0_f64, 255.0] {
+        for k in 0..5 {
+            // linspace(base, base+30, 5) in degrees
+            let th = (base + 30.0 * k as f64 / 4.0).to_radians();
+            pts.push([0.6 * th.cos(), 0.6 * th.sin()]);
+        }
+    }
+    // wake grid: meshgrid(linspace(1,8,13), linspace(-1.5,1.5,7)), C-order
+    for ky in 0..7 {
+        let y = -1.5 + 3.0 * ky as f64 / 6.0;
+        for kx in 0..13 {
+            let x = 1.0 + 7.0 * kx as f64 / 12.0;
+            pts.push([x, y]);
+        }
+    }
+    debug_assert_eq!(pts.len(), N_PROBES);
+    pts
+}
+
+impl Geometry {
+    pub fn build(spec: &GridSpec) -> Geometry {
+        let (ny, nx, h) = (spec.ny, spec.nx(), spec.h());
+
+        // Cell-centre coordinates, f64 -> f32 (numpy: arange*h astype f32).
+        let xc: Vec<f32> = (0..nx)
+            .map(|i| (-spec.x_up + (i as f64 + 0.5) * h) as f32)
+            .collect();
+        let yc: Vec<f32> = (0..ny)
+            .map(|j| (spec.y_lo + (j as f64 + 0.5) * h) as f32)
+            .collect();
+
+        // Solid mask: r < radius with r in f32 (numpy computes sqrt on the
+        // f32 meshgrid), compared against the f64 radius like numpy's
+        // f32-array < f64-scalar promotion.
+        let is_solid = |j: usize, i: usize| -> bool {
+            let (x, y) = (xc[i], yc[j]);
+            let r = (x * x + y * y).sqrt();
+            (r as f64) < spec.radius
+        };
+
+        let mut solid_cells = Vec::new();
+        for j in 0..ny {
+            for i in 0..nx {
+                if is_solid(j, i) {
+                    solid_cells.push(j * nx + i);
+                }
+            }
+        }
+
+        // Jet profiles on the outermost solid shell (>=1 fluid 4-neighbour;
+        // the cylinder never touches the domain boundary, so neighbour
+        // lookups need no wrap handling).
+        let half_w = spec.jet_width_deg.to_radians() / 2.0;
+        let mut jet_u = vec![0.0f32; solid_cells.len()];
+        let mut jet_v = vec![0.0f32; solid_cells.len()];
+        for (k, &cell) in solid_cells.iter().enumerate() {
+            let (j, i) = (cell / nx, cell % nx);
+            if j == 0 || j == ny - 1 || i == 0 || i == nx - 1 {
+                // The cylinder never reaches the domain boundary for any
+                // preset; skip rather than wrap the neighbour lookup.
+                continue;
+            }
+            let shell = !is_solid(j + 1, i)
+                || !is_solid(j - 1, i)
+                || !is_solid(j, i + 1)
+                || !is_solid(j, i - 1);
+            if !shell {
+                continue;
+            }
+            // theta in f32 (numpy arctan2 on the f32 meshgrid), widened to
+            // f64 for the arc-distance and lip-profile arithmetic exactly
+            // where numpy promotes.
+            let theta = (yc[j]).atan2(xc[i]);
+            let cos_t = theta.cos(); // f32, like np.cos(f32 array)
+            let sin_t = theta.sin();
+            let (mut ju, mut jv) = (0.0f64, 0.0f64);
+            for (theta0, sign) in [(std::f64::consts::FRAC_PI_2, 1.0f64), (-std::f64::consts::FRAC_PI_2, -1.0)] {
+                let dth = theta as f64 - theta0;
+                let d = dth.sin().atan2(dth.cos());
+                if d.abs() < half_w {
+                    let w = 1.0 - (d / half_w) * (d / half_w);
+                    ju += sign * w * cos_t as f64;
+                    jv += sign * w * sin_t as f64;
+                }
+            }
+            jet_u[k] = ju as f32;
+            jet_v[k] = jv as f32;
+        }
+
+        // Parabolic inlet (f64 arithmetic, f32 cast — numpy astype).
+        let u_in: Vec<f32> = yc
+            .iter()
+            .map(|&y| {
+                let t = (y as f64 - spec.y_center()) / (spec.height() / 2.0);
+                (spec.u_max() * (1.0 - t * t)) as f32
+            })
+            .collect();
+
+        // Checkerboard row patterns for the masked SOR blend.
+        let parity_mask = [
+            (0..nx).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect(),
+            (0..nx).map(|i| if i % 2 == 1 { 1.0 } else { 0.0 }).collect(),
+        ];
+
+        // Bilinear probe gather table (cell-centre based, clamped).
+        let mut probe_idx = Vec::with_capacity(N_PROBES);
+        let mut probe_w = Vec::with_capacity(N_PROBES);
+        for [px, py] in probe_positions() {
+            let fx = (px as f32 as f64 + spec.x_up) / h - 0.5;
+            let fy = (py as f32 as f64 - spec.y_lo) / h - 0.5;
+            let i0 = (fx.floor() as i64).clamp(0, nx as i64 - 2) as usize;
+            let j0 = (fy.floor() as i64).clamp(0, ny as i64 - 2) as usize;
+            let tx = (fx - i0 as f64) as f32;
+            let ty = (fy - j0 as f64) as f32;
+            probe_idx.push([
+                j0 * nx + i0,
+                j0 * nx + i0 + 1,
+                (j0 + 1) * nx + i0,
+                (j0 + 1) * nx + i0 + 1,
+            ]);
+            probe_w.push([
+                (1.0 - tx) * (1.0 - ty),
+                tx * (1.0 - ty),
+                (1.0 - tx) * ty,
+                tx * ty,
+            ]);
+        }
+
+        Geometry {
+            ny,
+            nx,
+            u_in,
+            solid_cells,
+            jet_u,
+            jet_v,
+            parity_mask,
+            probe_idx,
+            probe_w,
+        }
+    }
+
+    /// Initial condition: inlet profile everywhere, zeroed inside the
+    /// cylinder (impulsive start). Returns (u, v, p).
+    pub fn quiescent(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (ny, nx) = (self.ny, self.nx);
+        let mut u = vec![0.0f32; ny * nx];
+        for j in 0..ny {
+            let uj = self.u_in[j];
+            for i in 0..nx {
+                u[j * nx + i] = uj;
+            }
+        }
+        for &c in &self.solid_cells {
+            u[c] = 0.0;
+        }
+        (u, vec![0.0f32; ny * nx], vec![0.0f32; ny * nx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfd::variant;
+
+    #[test]
+    fn probe_layout_has_149_points_with_unit_weights() {
+        assert_eq!(probe_positions().len(), N_PROBES);
+        let g = Geometry::build(&variant("tiny").unwrap());
+        assert_eq!(g.probe_idx.len(), N_PROBES);
+        for w in &g.probe_w {
+            let s = ((w[0] as f64 + w[1] as f64) + w[2] as f64) + w[3] as f64;
+            assert!((s - 1.0).abs() < 1e-5, "weights {w:?} sum {s}");
+        }
+    }
+
+    #[test]
+    fn masks_match_the_python_geometry() {
+        // Counts pinned against python/compile/cfd.py::build_geometry.
+        let g = Geometry::build(&variant("tiny").unwrap());
+        let area = g.solid_cells.len() as f64 * (4.1 / 24.0) * (4.1 / 24.0);
+        assert!(
+            (area - std::f64::consts::PI * 0.25).abs() < 0.25,
+            "solid area {area}"
+        );
+        // Antisymmetric jet pair: both lips blow/suck along ±y; the jets
+        // carry zero net x-momentum up to grid asymmetry.
+        let jv: f64 = g.jet_v.iter().map(|&x| x as f64).sum::<f64>();
+        assert!(jv > 0.0, "top jet blows outward, bottom sucks: {jv}");
+        let n_jet = g.jet_v.iter().filter(|&&x| x != 0.0).count();
+        assert!(n_jet >= 2, "expected jet cells on both lips");
+        // Inlet: parabolic, peak near mid-channel, ~0 at the walls.
+        let peak = g.u_in.iter().cloned().fold(f32::MIN, f32::max);
+        assert!((peak as f64 - 1.5).abs() < 0.01, "u_in peak {peak}");
+        assert!(g.u_in[0] < 0.3 && g.u_in[g.ny - 1] < 0.3);
+    }
+
+    #[test]
+    fn quiescent_state_is_masked_inlet_flow() {
+        let g = Geometry::build(&variant("tiny").unwrap());
+        let (u, v, p) = g.quiescent();
+        assert_eq!(u.len(), g.ny * g.nx);
+        assert!(v.iter().all(|&x| x == 0.0) && p.iter().all(|&x| x == 0.0));
+        for &c in &g.solid_cells {
+            assert_eq!(u[c], 0.0);
+        }
+        assert_eq!(u[(g.ny / 2) * g.nx], g.u_in[g.ny / 2]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Scalar stencil kernels, boundary conditions, and fixed-order
+//! reductions — the op-order reference the SIMD twins in [`super::simd`]
+//! must match bitwise.
+//!
+//! Array convention (same as `python/compile/kernels/ref.py`): fields are
+//! `(ny, nx)` f32 row-major, row j = y index, column i = x index. Rows/
+//! columns 0 and ny-1/nx-1 are boundary cells owned by the BC routines;
+//! stencils only read them and only update the interior. Every kernel
+//! spells its f32 evaluation order explicitly (and the SIMD path repeats
+//! it lane-wise), so scalar == SIMD == threaded holds bitwise — see
+//! ARCHITECTURE.md §10.
+
+/// Inlet Dirichlet (parabolic), outlet zero-gradient, no-slip walls.
+/// Write order matters for the corners (rows last), mirroring
+/// `cfd.py::apply_vel_bcs`.
+pub fn apply_vel_bcs(u: &mut [f32], v: &mut [f32], u_in: &[f32], ny: usize, nx: usize) {
+    for j in 0..ny {
+        u[j * nx] = u_in[j];
+        v[j * nx] = 0.0;
+        u[j * nx + nx - 1] = u[j * nx + nx - 2];
+        v[j * nx + nx - 1] = v[j * nx + nx - 2];
+    }
+    for i in 0..nx {
+        u[i] = 0.0;
+        u[(ny - 1) * nx + i] = 0.0;
+        v[i] = 0.0;
+        v[(ny - 1) * nx + i] = 0.0;
+    }
+}
+
+/// Neumann at inlet/walls, Dirichlet p=0 at the outlet. Write order is
+/// load-bearing (col 0 first, outlet column last), mirroring
+/// `cfd.py::apply_pressure_bcs`.
+pub fn apply_pressure_bcs(p: &mut [f32], ny: usize, nx: usize) {
+    for j in 0..ny {
+        p[j * nx] = p[j * nx + 1];
+    }
+    for i in 0..nx {
+        p[i] = p[nx + i];
+        p[(ny - 1) * nx + i] = p[(ny - 2) * nx + i];
+    }
+    for j in 0..ny {
+        p[j * nx + nx - 1] = 0.0;
+    }
+}
+
+/// Scalar advection-diffusion RHS for one interior row:
+/// `r = -q*dqdx - w*dqdy + nu*lap(q)` with central differences, written
+/// for columns `i0..nx-1` of row j (boundary reads hit materialized BC
+/// values, so no remapping is needed). `i0 = 1` covers the whole row;
+/// the SIMD dispatch passes the first column its lanes did not fill.
+#[allow(clippy::too_many_arguments)]
+pub fn adv_diff_row_scalar(
+    u: &[f32],
+    v: &[f32],
+    ru_row: &mut [f32],
+    rv_row: &mut [f32],
+    j: usize,
+    i0: usize,
+    nx: usize,
+    two_h: f32,
+    hh: f32,
+    nu: f32,
+) {
+    let r = j * nx;
+    for i in i0..nx - 1 {
+        let (uc, vc) = (u[r + i], v[r + i]);
+        let (ue, uw, un, us) = (u[r + i + 1], u[r + i - 1], u[r + nx + i], u[r - nx + i]);
+        let (ve, vw, vn, vs) = (v[r + i + 1], v[r + i - 1], v[r + nx + i], v[r - nx + i]);
+        let dudx = (ue - uw) / two_h;
+        let dudy = (un - us) / two_h;
+        let dvdx = (ve - vw) / two_h;
+        let dvdy = (vn - vs) / two_h;
+        let lap_u = (((ue + uw) + un + us) - 4.0 * uc) / hh;
+        let lap_v = (((ve + vw) + vn + vs) - 4.0 * vc) / hh;
+        // Python's `-u*dudx - v*dudy + nu*lap` is bitwise `nu*lap - (a+b)`
+        // (negation is exact; see ARCHITECTURE.md §10).
+        ru_row[i] = nu * lap_u - (uc * dudx + vc * dudy);
+        rv_row[i] = nu * lap_v - (uc * dvdx + vc * dvdy);
+    }
+}
+
+/// One masked SOR cell — the scalar op-order reference for the f32x8
+/// lane in `simd::sor_phase_row`: `gs = 0.25*((((e+w)+n)+s) - hh*rhs)`,
+/// then the over-relaxed blend, selected by the checkerboard mask.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn sor_cell(
+    c: f32,
+    e: f32,
+    w: f32,
+    n: f32,
+    s: f32,
+    rhs: f32,
+    hh: f32,
+    omega: f32,
+    one_minus_omega: f32,
+    colored: bool,
+) -> f32 {
+    if !colored {
+        return c;
+    }
+    let gs = 0.25 * ((((e + w) + n) + s) - hh * rhs);
+    one_minus_omega * c + omega * gs
+}
+
+/// `out = a + c * b` over the interior (boundary cells are re-materialized
+/// by the subsequent BC application). Plain mul-then-add, matching the
+/// XLA lowering of `a + c*b`.
+pub fn axpy_interior(out: &mut [f32], a: &[f32], b: &[f32], c: f32, ny: usize, nx: usize) {
+    for j in 1..ny - 1 {
+        let r = j * nx;
+        for i in 1..nx - 1 {
+            out[r + i] = a[r + i] + c * b[r + i];
+        }
+    }
+}
+
+/// Backward-difference divergence scaled by 1/dt (the Poisson RHS):
+/// `rhs = ((u - W(u))/h + (v - S(v))/h) / dt` over the interior.
+pub fn divergence_rhs(
+    rhs: &mut [f32],
+    u: &[f32],
+    v: &[f32],
+    h: f32,
+    dt: f32,
+    ny: usize,
+    nx: usize,
+) {
+    for j in 1..ny - 1 {
+        let r = j * nx;
+        for i in 1..nx - 1 {
+            let div = (u[r + i] - u[r + i - 1]) / h + (v[r + i] - v[r - nx + i]) / h;
+            rhs[r + i] = div / dt;
+        }
+    }
+}
+
+/// Projection correction with the forward-difference pressure gradient:
+/// `u = us - dt*(E(p)-p)/h`, `v = vs - dt*(N(p)-p)/h` over the interior.
+#[allow(clippy::too_many_arguments)]
+pub fn pressure_correct(
+    u: &mut [f32],
+    v: &mut [f32],
+    us: &[f32],
+    vs: &[f32],
+    p: &[f32],
+    h: f32,
+    dt: f32,
+    ny: usize,
+    nx: usize,
+) {
+    for j in 1..ny - 1 {
+        let r = j * nx;
+        for i in 1..nx - 1 {
+            let gpx = (p[r + i + 1] - p[r + i]) / h;
+            let gpy = (p[r + nx + i] - p[r + i]) / h;
+            u[r + i] = us[r + i] - dt * gpx;
+            v[r + i] = vs[r + i] - dt * gpy;
+        }
+    }
+}
+
+/// Fixed-order pairwise tree sum in f32. Deterministic by construction
+/// (the order depends only on `terms.len()`), independent of SIMD path
+/// and thread count.
+pub fn tree_sum(terms: &mut [f32]) -> f32 {
+    let mut n = terms.len();
+    if n == 0 {
+        return 0.0;
+    }
+    while n > 1 {
+        let half = n / 2;
+        for k in 0..half {
+            terms[k] = terms[2 * k] + terms[2 * k + 1];
+        }
+        if n % 2 == 1 {
+            terms[half] = terms[n - 1];
+        }
+        n = half + n % 2;
+    }
+    terms[0]
+}
+
+/// f64 variant of [`tree_sum`] — used for the drag/lift force reductions,
+/// which numpy/XLA accumulate in f64 (`.astype(float64)` before the sum)
+/// and cast back to f32 afterwards.
+pub fn tree_sum_f64(terms: &mut [f64]) -> f64 {
+    let mut n = terms.len();
+    if n == 0 {
+        return 0.0;
+    }
+    while n > 1 {
+        let half = n / 2;
+        for k in 0..half {
+            terms[k] = terms[2 * k] + terms[2 * k + 1];
+        }
+        if n % 2 == 1 {
+            terms[half] = terms[n - 1];
+        }
+        n = half + n % 2;
+    }
+    terms[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_sum_is_a_fixed_order_reduction() {
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(tree_sum(&mut a), 15.0);
+        assert_eq!(tree_sum(&mut []), 0.0);
+        assert_eq!(tree_sum(&mut [42.0]), 42.0);
+        // order pinned so a "refactor" to a serial fold (different
+        // rounding) is caught: pairwise keeps the small terms together.
+        let mut b = vec![1.0f32, 1.0, 1e8, -1e8];
+        let tree = tree_sum(&mut b);
+        let serial: f32 = [1.0f32, 1.0, 1e8, -1e8].iter().fold(0.0, |acc, x| acc + x);
+        assert_eq!(tree, 2.0);
+        assert_eq!(serial, 0.0, "serial fold absorbs the small terms");
+        assert_ne!(tree, serial);
+    }
+
+    #[test]
+    fn pressure_bcs_write_order_matches_python() {
+        // 3x3: p[:,0]=p[:,1]; p[0,:]=p[1,:]; p[-1,:]=p[-2,:]; p[:,-1]=0.
+        let mut p = vec![9.0, 9.0, 9.0, 5.0, 7.0, 9.0, 9.0, 9.0, 9.0];
+        apply_pressure_bcs(&mut p, 3, 3);
+        // row1 -> [7,7,0]; row0=row1 (post col-0 fix) -> [7,7,0]; corner
+        // p[0,0] must be old p[1,1].
+        assert_eq!(p, vec![7.0, 7.0, 0.0, 7.0, 7.0, 0.0, 7.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn vel_bcs_zero_walls_after_outlet_copy() {
+        let ny = 3;
+        let nx = 4;
+        let mut u = vec![1.0f32; ny * nx];
+        let mut v = vec![1.0f32; ny * nx];
+        let u_in = vec![2.0f32; ny];
+        apply_vel_bcs(&mut u, &mut v, &u_in, ny, nx);
+        assert_eq!(u[nx], 2.0); // inlet row 1
+        assert_eq!(v[nx], 0.0);
+        assert_eq!(u[nx + nx - 1], u[nx + nx - 2]); // outlet zero-gradient
+        assert!(u[..nx].iter().all(|&x| x == 0.0)); // walls overwrite corners
+        assert!(u[(ny - 1) * nx..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,230 @@
+//! Native CFD engine: the cylinder actuation period in pure Rust.
+//!
+//! This is the artifact-free twin of the XLA path (`python/compile/cfd.py`
+//! lowered to HLO by `aot.py` and executed through `runtime::Executable`).
+//! It implements the same Chorin projection substep end-to-end — geometry
+//! and mask construction, RK2 central advection-diffusion predictor,
+//! red-black SOR pressure projection, immersed-boundary forcing, boundary
+//! conditions, and force/probe extraction — so the `cylinder` and
+//! `cylinder-re200` scenarios train with no `artifacts/` present.
+//!
+//! Module map:
+//!
+//! | module | contents |
+//! |--------|----------|
+//! | [`geometry`] | masks, jets, parabolic inlet, 149 bilinear probes |
+//! | [`kernels`]  | scalar stencils, BCs, fixed-order tree reductions |
+//! | [`simd`]     | AVX2 f32x8 twins of the hot row kernels (runtime-detected) |
+//! | [`poisson`]  | panel-tiled two-phase red-black SOR, scoped-thread pool |
+//! | [`engine`]   | [`NativeEngine`]: the period driver + base-flow development |
+//!
+//! Determinism contract (pinned by `rust/tests/cfd_native.rs`): the engine
+//! output is **bitwise identical** across scalar vs SIMD paths, across
+//! thread counts, and across runs. See ARCHITECTURE.md §10 for why each
+//! holds (per-element op-order parity, static panel partition with
+//! phase-barrier halo exchange, fixed-order typed tree sums).
+
+pub mod engine;
+pub mod geometry;
+pub mod kernels;
+pub mod poisson;
+pub mod simd;
+
+pub use engine::{BaseFlow, NativeEngine, PeriodOutput};
+pub use geometry::Geometry;
+
+use anyhow::{bail, Result};
+
+/// Number of pressure probes (the policy observation width of the real
+/// CFD scenarios; matches `python/compile/configs.py::DrlConfig.n_obs`).
+pub const N_PROBES: usize = 149;
+
+/// Hidden width of the Rabault-style policy when the cylinder scenarios
+/// run artifact-free (matches `DrlConfig.hidden`; with artifacts the
+/// manifest supplies the same value).
+pub const NATIVE_HIDDEN: usize = 512;
+
+/// `DrlConfig.action_smoothing_beta` (Eq. 11) for artifact-free runs.
+pub const NATIVE_ACTION_BETA: f32 = 0.4;
+
+/// `DrlConfig.reward_lift_penalty` (omega in Eq. 12) for artifact-free runs.
+pub const NATIVE_LIFT_PENALTY: f32 = 0.1;
+
+/// Which engine executes the CFD actuation period of the cylinder
+/// scenarios: the AOT-compiled XLA artifact, or the native Rust engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CfdBackend {
+    /// `Executable::run` over `cfd_period_<variant>.hlo.txt` (requires
+    /// `make artifacts`).
+    Xla,
+    /// The pure-Rust engine in this module (no artifacts needed).
+    Native,
+}
+
+impl CfdBackend {
+    pub fn parse(s: &str) -> Result<CfdBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "xla" => Ok(CfdBackend::Xla),
+            "native" | "rust" => Ok(CfdBackend::Native),
+            other => bail!("unknown CFD backend '{other}' (accepted: xla, native)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CfdBackend::Xla => "xla",
+            CfdBackend::Native => "native",
+        }
+    }
+}
+
+/// Grid + solver constants for one CFD variant — the native twin of
+/// `python/compile/configs.py::GridConfig` (all lengths in units of the
+/// cylinder diameter D; derived quantities reproduce the Python property
+/// arithmetic in f64 before any cast to f32).
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub name: String,
+    pub ny: usize,
+    pub x_up: f64,
+    pub x_down: f64,
+    pub y_lo: f64,
+    pub y_hi: f64,
+    pub re: f64,
+    pub u_mean: f64,
+    pub dt: f64,
+    pub substeps: usize,
+    pub n_sweeps: usize,
+    pub sor_omega: f64,
+    pub jet_width_deg: f64,
+    pub jet_max: f64,
+    pub radius: f64,
+    pub base_flow_time: f64,
+}
+
+impl GridSpec {
+    /// Base spec with the shared Schaefer-benchmark geometry; variant
+    /// constructors override the numerics.
+    fn base(name: &str, ny: usize) -> GridSpec {
+        GridSpec {
+            name: name.to_string(),
+            ny,
+            x_up: 2.0,
+            x_down: 20.0,
+            y_lo: -2.0,
+            y_hi: 2.1,
+            re: 100.0,
+            u_mean: 1.0,
+            dt: 0.005,
+            substeps: 10,
+            n_sweeps: 50,
+            sor_omega: 1.7,
+            jet_width_deg: 10.0,
+            jet_max: 1.5,
+            radius: 0.5,
+            base_flow_time: 60.0,
+        }
+    }
+
+    pub fn height(&self) -> f64 {
+        self.y_hi - self.y_lo
+    }
+
+    /// Uniform grid spacing (set by ny).
+    pub fn h(&self) -> f64 {
+        self.height() / self.ny as f64
+    }
+
+    pub fn nx(&self) -> usize {
+        ((self.x_up + self.x_down) / self.h()).round() as usize
+    }
+
+    /// Peak of the parabolic inlet profile (Ubar = 2/3 Um).
+    pub fn u_max(&self) -> f64 {
+        1.5 * self.u_mean
+    }
+
+    pub fn y_center(&self) -> f64 {
+        0.5 * (self.y_lo + self.y_hi)
+    }
+
+    pub fn period(&self) -> f64 {
+        self.dt * self.substeps as f64
+    }
+}
+
+/// Look up a variant preset by name (the same four presets `aot.py`
+/// compiles: small, paper, tiny, re200).
+pub fn variant(name: &str) -> Result<GridSpec> {
+    let mut s = match name {
+        "small" => {
+            let mut s = GridSpec::base("small", 48);
+            s.n_sweeps = 30;
+            s.jet_width_deg = 34.0;
+            s
+        }
+        "paper" => {
+            let mut s = GridSpec::base("paper", 96);
+            s.dt = 0.002;
+            s.substeps = 20;
+            s.n_sweeps = 60;
+            s.base_flow_time = 80.0;
+            s.jet_width_deg = 18.0;
+            s
+        }
+        "tiny" => {
+            let mut s = GridSpec::base("tiny", 24);
+            s.dt = 0.008;
+            s.substeps = 4;
+            s.n_sweeps = 30;
+            s.base_flow_time = 2.0;
+            s.jet_width_deg = 45.0;
+            s
+        }
+        "re200" => {
+            let mut s = GridSpec::base("re200", 48);
+            s.re = 200.0;
+            s.n_sweeps = 30;
+            s.base_flow_time = 80.0;
+            s.jet_width_deg = 34.0;
+            s
+        }
+        other => bail!(
+            "unknown CFD variant '{other}' (native engine knows: small, paper, tiny, re200)"
+        ),
+    };
+    s.name = name.to_string();
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_round_trips() {
+        for b in [CfdBackend::Xla, CfdBackend::Native] {
+            assert_eq!(CfdBackend::parse(b.name()).unwrap(), b);
+        }
+        assert_eq!(CfdBackend::parse(" Native ").unwrap(), CfdBackend::Native);
+        assert_eq!(CfdBackend::parse("rust").unwrap(), CfdBackend::Native);
+        let err = CfdBackend::parse("cuda").unwrap_err().to_string();
+        assert!(err.contains("xla") && err.contains("native"), "{err}");
+    }
+
+    #[test]
+    fn variant_grids_match_the_python_presets() {
+        // ny -> nx from configs.py: round(22 / (4.1/ny)).
+        for (name, ny, nx, substeps) in [
+            ("small", 48, 258, 10),
+            ("paper", 96, 515, 20),
+            ("tiny", 24, 129, 4),
+            ("re200", 48, 258, 10),
+        ] {
+            let s = variant(name).unwrap();
+            assert_eq!((s.ny, s.nx(), s.substeps), (ny, nx, substeps), "{name}");
+        }
+        assert_eq!(variant("re200").unwrap().re, 200.0);
+        assert!(variant("huge").is_err());
+    }
+}

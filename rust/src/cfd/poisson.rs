@@ -1,0 +1,318 @@
+//! Panel-tiled two-phase red-black SOR pressure solver.
+//!
+//! One SOR "sweep" of the reference kernel (`python/compile/cfd.py`:
+//! materialize pressure BCs, masked red half-update, masked black
+//! half-update) is executed here as **two ping-pong phases** over a pair
+//! of buffers: each phase writes every interior cell of the destination
+//! from the source snapshot — colored cells get the over-relaxed update,
+//! the off-color cells are copied through. Boundary cells are never
+//! materialized between phases; stencil reads that would land on them
+//! are folded through the closed-form BC accessor (row 0 reads row 1,
+//! row ny-1 reads row ny-2, column 0 reads column 1 of the *same* row,
+//! column nx-1 reads the outlet Dirichlet 0.0). Because every cell a
+//! colored update reads is either itself (the column-0 fold) or the
+//! *other* color — frozen during this phase — the scheme is bitwise
+//! identical to the sequential masked reference (proven against the
+//! numpy twin; see ARCHITECTURE.md §10).
+//!
+//! That same freeze is what makes the phase embarrassingly parallel:
+//! threads own static, contiguous panels of destination rows (assignment
+//! depends only on `ny` and the thread count), read the shared source
+//! snapshot, and synchronize on a barrier at each phase boundary — the
+//! barrier *is* the halo exchange. No location is both written and read
+//! within a phase, and each cell's value depends only on the snapshot,
+//! so results are bitwise independent of the thread count.
+
+use super::{kernels, simd};
+use std::sync::Barrier;
+
+/// Rows per tile. Panels are the partition unit so thread assignments
+/// stay cache-friendly contiguous row blocks; the value only shapes the
+/// split (never the arithmetic), so it is not determinism-relevant.
+const PANEL_ROWS: usize = 8;
+
+/// Static panel partition: interior rows `1..ny-1` in contiguous
+/// panel-aligned blocks, one per worker. Depends only on (ny, threads).
+fn row_ranges(ny: usize, threads: usize) -> Vec<(usize, usize)> {
+    let interior = ny - 2;
+    let n_panels = (interior + PANEL_ROWS - 1) / PANEL_ROWS;
+    let t = threads.min(n_panels).max(1);
+    (0..t)
+        .map(|k| {
+            let lo = k * n_panels / t;
+            let hi = (k + 1) * n_panels / t;
+            (1 + lo * PANEL_ROWS, (1 + hi * PANEL_ROWS).min(ny - 1))
+        })
+        .collect()
+}
+
+/// One destination row of one phase: masked update of row `j` from the
+/// `src` snapshot. `mask` is the checkerboard pattern for this (row,
+/// parity); columns 1 and nx-2 fold the inlet/outlet BC reads, the body
+/// reads directly (optionally via the AVX2 lanes).
+#[allow(clippy::too_many_arguments)]
+fn phase_row(
+    src: &[f32],
+    dst_row: &mut [f32],
+    rhs: &[f32],
+    mask: &[f32],
+    j: usize,
+    ny: usize,
+    nx: usize,
+    hh: f32,
+    omega: f32,
+    one_minus_omega: f32,
+    use_simd: bool,
+) {
+    // Vertical BC folds: row 0 mirrors row 1, row ny-1 mirrors row ny-2.
+    let jn = if j + 1 == ny - 1 { ny - 2 } else { j + 1 };
+    let js = if j == 1 { 1 } else { j - 1 };
+    let (rm, rn, rs) = (j * nx, jn * nx, js * nx);
+
+    // i = 1: the west read lands on column 0, which mirrors column 1 —
+    // i.e. the cell itself.
+    let c = src[rm + 1];
+    dst_row[1] = kernels::sor_cell(
+        c,
+        src[rm + 2],
+        c,
+        src[rn + 1],
+        src[rs + 1],
+        rhs[rm + 1],
+        hh,
+        omega,
+        one_minus_omega,
+        mask[1] > 0.0,
+    );
+
+    // Body columns [2, nx-2): no folds needed in either direction.
+    let mut i = 2;
+    if use_simd {
+        // SAFETY: `use_simd` is only set after runtime AVX2 detection
+        // (engine construction); src/rhs are ny*nx grids, jn/js are
+        // valid remapped interior rows, dst_row/mask are nx long.
+        i = unsafe {
+            simd::sor_phase_row(
+                src,
+                dst_row,
+                rhs,
+                mask,
+                j,
+                jn,
+                js,
+                nx,
+                hh,
+                omega,
+                one_minus_omega,
+            )
+        };
+    }
+    while i < nx - 2 {
+        dst_row[i] = kernels::sor_cell(
+            src[rm + i],
+            src[rm + i + 1],
+            src[rm + i - 1],
+            src[rn + i],
+            src[rs + i],
+            rhs[rm + i],
+            hh,
+            omega,
+            one_minus_omega,
+            mask[i] > 0.0,
+        );
+        i += 1;
+    }
+
+    // i = nx-2: the east read lands on the outlet Dirichlet column (0.0).
+    let i = nx - 2;
+    dst_row[i] = kernels::sor_cell(
+        src[rm + i],
+        0.0,
+        src[rm + i - 1],
+        src[rn + i],
+        src[rs + i],
+        rhs[rm + i],
+        hh,
+        omega,
+        one_minus_omega,
+        mask[i] > 0.0,
+    );
+}
+
+/// Run `n_sweeps` red/black SOR sweeps on `p` (using `scratch` as the
+/// ping-pong partner; its prior contents are irrelevant) and materialize
+/// the final pressure BCs. Bitwise invariant across `threads` and
+/// `use_simd` — pinned by `rust/tests/cfd_native.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn solve(
+    p: &mut [f32],
+    scratch: &mut [f32],
+    rhs: &[f32],
+    parity_mask: &[Vec<f32>; 2],
+    ny: usize,
+    nx: usize,
+    hh: f32,
+    omega: f32,
+    one_minus_omega: f32,
+    n_sweeps: usize,
+    threads: usize,
+    use_simd: bool,
+) {
+    debug_assert!(ny >= 3 && nx >= 4, "grid too small for the BC folds");
+    debug_assert_eq!(p.len(), ny * nx);
+    debug_assert_eq!(scratch.len(), ny * nx);
+    debug_assert_eq!(rhs.len(), ny * nx);
+
+    let ranges = row_ranges(ny, threads);
+    if ranges.len() <= 1 {
+        for _ in 0..n_sweeps {
+            for j in 1..ny - 1 {
+                let mask = &parity_mask[j % 2]; // red: (j+i) even
+                phase_row(
+                    p,
+                    &mut scratch[j * nx..(j + 1) * nx],
+                    rhs,
+                    mask,
+                    j,
+                    ny,
+                    nx,
+                    hh,
+                    omega,
+                    one_minus_omega,
+                    use_simd,
+                );
+            }
+            for j in 1..ny - 1 {
+                let mask = &parity_mask[(j + 1) % 2]; // black: (j+i) odd
+                phase_row(
+                    scratch,
+                    &mut p[j * nx..(j + 1) * nx],
+                    rhs,
+                    mask,
+                    j,
+                    ny,
+                    nx,
+                    hh,
+                    omega,
+                    one_minus_omega,
+                    use_simd,
+                );
+            }
+        }
+    } else {
+        let total = ny * nx;
+        let p_addr = p.as_mut_ptr() as usize;
+        let s_addr = scratch.as_mut_ptr() as usize;
+        let barrier = Barrier::new(ranges.len());
+        std::thread::scope(|scope| {
+            for &(row_lo, row_hi) in &ranges {
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    for _ in 0..n_sweeps {
+                        for (parity, src_addr, dst_addr) in
+                            [(0usize, p_addr, s_addr), (1, s_addr, p_addr)]
+                        {
+                            // SAFETY: during this phase `src` is only
+                            // read (every thread writes `dst` rows only)
+                            // and the previous phase's writes to it were
+                            // sequenced by the barrier below, so a shared
+                            // borrow of the whole buffer is sound.
+                            let src = unsafe {
+                                std::slice::from_raw_parts(src_addr as *const f32, total)
+                            };
+                            for j in row_lo..row_hi {
+                                // SAFETY: row ranges from `row_ranges`
+                                // are disjoint across threads and `j` is
+                                // in this thread's range, so this is the
+                                // only live mutable view of these nx
+                                // cells; `dst` and `src` are distinct
+                                // buffers.
+                                let dst_row = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        (dst_addr as *mut f32).add(j * nx),
+                                        nx,
+                                    )
+                                };
+                                let mask = &parity_mask[(j + parity) % 2];
+                                phase_row(
+                                    src,
+                                    dst_row,
+                                    rhs,
+                                    mask,
+                                    j,
+                                    ny,
+                                    nx,
+                                    hh,
+                                    omega,
+                                    one_minus_omega,
+                                    use_simd,
+                                );
+                            }
+                            // The halo exchange: no thread may read this
+                            // phase's dst as the next phase's src until
+                            // every panel is written.
+                            barrier.wait();
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    kernels::apply_pressure_bcs(p, ny, nx);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_ranges_cover_the_interior_exactly_once() {
+        for (ny, threads) in [(24, 1), (24, 3), (48, 4), (98, 16), (10, 64)] {
+            let ranges = row_ranges(ny, threads);
+            let mut next = 1;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, next, "ny={ny} t={threads}");
+                assert!(hi > lo);
+                next = hi;
+            }
+            assert_eq!(next, ny - 1, "ny={ny} t={threads}");
+        }
+    }
+
+    #[test]
+    fn solver_reduces_the_residual_and_is_thread_invariant() {
+        // A small but realistic grid: fixed rhs bump, zero initial p.
+        let (ny, nx) = (24, 40);
+        let parity: [Vec<f32>; 2] = [
+            (0..nx).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect(),
+            (0..nx).map(|i| if i % 2 == 1 { 1.0 } else { 0.0 }).collect(),
+        ];
+        let mut rhs = vec![0.0f32; ny * nx];
+        rhs[12 * nx + 17] = 1.0;
+        rhs[7 * nx + 5] = -0.5;
+        let hh = 0.01f32;
+        let run = |threads: usize, simd: bool| {
+            let mut p = vec![0.0f32; ny * nx];
+            let mut s = vec![f32::NAN; ny * nx]; // scratch contents must not matter
+            solve(
+                &mut p, &mut s, &rhs, &parity, ny, nx, hh, 1.7, 1.0 - 1.7, 40, threads, simd,
+            );
+            p
+        };
+        let base = run(1, false);
+        assert!(base.iter().all(|x| x.is_finite()));
+        assert!(base.iter().any(|&x| x != 0.0));
+        // outlet Dirichlet held
+        for j in 0..ny {
+            assert_eq!(base[j * nx + nx - 1], 0.0);
+        }
+        for threads in [2, 3, 5, 64] {
+            assert_eq!(base, run(threads, false), "threads={threads}");
+        }
+        if simd::avx2_available() {
+            assert_eq!(base, run(1, true), "simd scalar mismatch");
+            assert_eq!(base, run(4, true), "simd threaded mismatch");
+        }
+    }
+}

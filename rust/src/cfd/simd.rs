@@ -1,0 +1,202 @@
+//! AVX2 f32x8 twins of the hot row kernels (advection-diffusion and the
+//! SOR phase), behind runtime feature detection with the scalar kernels
+//! as fallback.
+//!
+//! Bitwise contract: each lane performs *exactly* the per-element op
+//! sequence of the scalar cell helpers in [`super::kernels`] — unaligned
+//! loads of the shifted stencils, IEEE add/sub/mul/div (both paths
+//! correctly rounded, no FMA contraction, no reassociation), and the
+//! masked SOR blend via `cmp_gt` + `blendv` which selects exactly like
+//! the scalar `if mask > 0`. Row remainders that don't fill a lane run
+//! the scalar helper. `DRLFOAM_FORCE_SCALAR=1` (read once at engine
+//! construction) disables the path entirely; outputs are bitwise equal
+//! either way (pinned by `rust/tests/cfd_native.rs`).
+
+/// Is the AVX2 fast path usable on this CPU?
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Has the user forced the scalar fallback? (`DRLFOAM_FORCE_SCALAR=1`.)
+pub fn force_scalar_env() -> bool {
+    std::env::var("DRLFOAM_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Vector body of [`super::super::kernels::adv_diff_row_scalar`]:
+    /// writes `ru_row[i0..]`/`rv_row[i0..]` in f32x8 lanes while a full
+    /// lane fits strictly inside the interior columns, returning the
+    /// first unprocessed column (caller finishes with the scalar cell
+    /// helper).
+    ///
+    /// SAFETY: caller must ensure AVX2 is available (runtime-detected),
+    /// `u`/`v` are `ny*nx` grids with `1 <= j <= ny-2`, and the row
+    /// slices hold `nx` elements.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn adv_diff_row(
+        u: &[f32],
+        v: &[f32],
+        ru_row: &mut [f32],
+        rv_row: &mut [f32],
+        j: usize,
+        nx: usize,
+        two_h: f32,
+        hh: f32,
+        nu: f32,
+    ) -> usize {
+        let r = j * nx;
+        let mut i = 1usize;
+        // SAFETY: every load/store below touches indices in
+        // [r-nx+i, r+nx+i+7] with i+7 <= nx-2, all inside the `ny*nx`
+        // grids because 1 <= j <= ny-2; unaligned intrinsics are used
+        // throughout, so no alignment requirement exists.
+        unsafe {
+            let v_two_h = _mm256_set1_ps(two_h);
+            let v_hh = _mm256_set1_ps(hh);
+            let v_nu = _mm256_set1_ps(nu);
+            let v_four = _mm256_set1_ps(4.0);
+            while i + 8 <= nx - 1 {
+                let uc = _mm256_loadu_ps(u.as_ptr().add(r + i));
+                let ue = _mm256_loadu_ps(u.as_ptr().add(r + i + 1));
+                let uw = _mm256_loadu_ps(u.as_ptr().add(r + i - 1));
+                let un = _mm256_loadu_ps(u.as_ptr().add(r + nx + i));
+                let us = _mm256_loadu_ps(u.as_ptr().add(r - nx + i));
+                let vc = _mm256_loadu_ps(v.as_ptr().add(r + i));
+                let ve = _mm256_loadu_ps(v.as_ptr().add(r + i + 1));
+                let vw = _mm256_loadu_ps(v.as_ptr().add(r + i - 1));
+                let vn = _mm256_loadu_ps(v.as_ptr().add(r + nx + i));
+                let vs = _mm256_loadu_ps(v.as_ptr().add(r - nx + i));
+
+                let dudx = _mm256_div_ps(_mm256_sub_ps(ue, uw), v_two_h);
+                let dudy = _mm256_div_ps(_mm256_sub_ps(un, us), v_two_h);
+                let dvdx = _mm256_div_ps(_mm256_sub_ps(ve, vw), v_two_h);
+                let dvdy = _mm256_div_ps(_mm256_sub_ps(vn, vs), v_two_h);
+                // (((e+w)+n)+s - 4c) / hh — same association as scalar.
+                let su = _mm256_add_ps(_mm256_add_ps(_mm256_add_ps(ue, uw), un), us);
+                let sv = _mm256_add_ps(_mm256_add_ps(_mm256_add_ps(ve, vw), vn), vs);
+                let lap_u =
+                    _mm256_div_ps(_mm256_sub_ps(su, _mm256_mul_ps(v_four, uc)), v_hh);
+                let lap_v =
+                    _mm256_div_ps(_mm256_sub_ps(sv, _mm256_mul_ps(v_four, vc)), v_hh);
+                // nu*lap - (c_u*dqdx + c_v*dqdy), matching the scalar cell.
+                let adv_u =
+                    _mm256_add_ps(_mm256_mul_ps(uc, dudx), _mm256_mul_ps(vc, dudy));
+                let adv_v =
+                    _mm256_add_ps(_mm256_mul_ps(uc, dvdx), _mm256_mul_ps(vc, dvdy));
+                let ru = _mm256_sub_ps(_mm256_mul_ps(v_nu, lap_u), adv_u);
+                let rv = _mm256_sub_ps(_mm256_mul_ps(v_nu, lap_v), adv_v);
+                _mm256_storeu_ps(ru_row.as_mut_ptr().add(i), ru);
+                _mm256_storeu_ps(rv_row.as_mut_ptr().add(i), rv);
+                i += 8;
+            }
+        }
+        i
+    }
+
+    /// Vector body of the SOR phase row: masked red/black update of
+    /// `dst_row` from the `src` snapshot, lanes `i0..` while a full lane
+    /// fits in the remap-free column range `[2, nx-2)`; returns the first
+    /// unprocessed column.
+    ///
+    /// SAFETY: caller must ensure AVX2 is available, `src`/`rhs` are
+    /// `ny*nx` grids, `jn`/`js` are valid (remapped) row indices, and
+    /// `dst_row`/`mask` hold `nx` elements.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn sor_phase_row(
+        src: &[f32],
+        dst_row: &mut [f32],
+        rhs: &[f32],
+        mask: &[f32],
+        j: usize,
+        jn: usize,
+        js: usize,
+        nx: usize,
+        hh: f32,
+        omega: f32,
+        one_minus_omega: f32,
+    ) -> usize {
+        let (rm, rn, rs) = (j * nx, jn * nx, js * nx);
+        let mut i = 2usize;
+        // SAFETY: lanes cover columns [i, i+7] with i+7 <= nx-3 (loop
+        // bound), so the shifted loads stay inside rows j/jn/js of the
+        // `ny*nx` grids; unaligned intrinsics throughout.
+        unsafe {
+            let v_q = _mm256_set1_ps(0.25);
+            let v_hh = _mm256_set1_ps(hh);
+            let v_om = _mm256_set1_ps(omega);
+            let v_1mo = _mm256_set1_ps(one_minus_omega);
+            let v_zero = _mm256_setzero_ps();
+            while i + 8 <= nx - 2 {
+                let c = _mm256_loadu_ps(src.as_ptr().add(rm + i));
+                let e = _mm256_loadu_ps(src.as_ptr().add(rm + i + 1));
+                let w = _mm256_loadu_ps(src.as_ptr().add(rm + i - 1));
+                let n = _mm256_loadu_ps(src.as_ptr().add(rn + i));
+                let s = _mm256_loadu_ps(src.as_ptr().add(rs + i));
+                let rh = _mm256_loadu_ps(rhs.as_ptr().add(rm + i));
+                let m = _mm256_loadu_ps(mask.as_ptr().add(i));
+                // gs = 0.25*((((e+w)+n)+s) - hh*rhs), scalar association.
+                let sum = _mm256_add_ps(_mm256_add_ps(_mm256_add_ps(e, w), n), s);
+                let gs = _mm256_mul_ps(v_q, _mm256_sub_ps(sum, _mm256_mul_ps(v_hh, rh)));
+                let newv =
+                    _mm256_add_ps(_mm256_mul_ps(v_1mo, c), _mm256_mul_ps(v_om, gs));
+                // mask > 0 ? newv : c — identical to the scalar branch.
+                let sel = _mm256_cmp_ps::<_CMP_GT_OQ>(m, v_zero);
+                let out = _mm256_blendv_ps(c, newv, sel);
+                _mm256_storeu_ps(dst_row.as_mut_ptr().add(i), out);
+                i += 8;
+            }
+        }
+        i
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use avx2::{adv_diff_row, sor_phase_row};
+
+// Non-x86_64 stubs: `avx2_available()` is false there, so these are
+// unreachable; they exist only to keep the dispatch sites compiling.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn adv_diff_row(
+    _u: &[f32],
+    _v: &[f32],
+    _ru_row: &mut [f32],
+    _rv_row: &mut [f32],
+    _j: usize,
+    _nx: usize,
+    _two_h: f32,
+    _hh: f32,
+    _nu: f32,
+) -> usize {
+    unreachable!("SIMD path dispatched without AVX2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn sor_phase_row(
+    _src: &[f32],
+    _dst_row: &mut [f32],
+    _rhs: &[f32],
+    _mask: &[f32],
+    _j: usize,
+    _jn: usize,
+    _js: usize,
+    _nx: usize,
+    _hh: f32,
+    _omega: f32,
+    _one_minus_omega: f32,
+) -> usize {
+    unreachable!("SIMD path dispatched without AVX2")
+}

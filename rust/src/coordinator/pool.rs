@@ -29,7 +29,8 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::policy_server::PolicyServer;
 use crate::drl::policy::{NativePolicy, PolicyBackendKind, PolicyOutput, PolicySession};
 use crate::drl::{Policy, Trajectory, Transition};
-use crate::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use crate::cfd::CfdBackend;
+use crate::env::scenario::{self, policy_dims, ScenarioContext};
 use crate::env::Environment;
 use crate::exec::inprocess::InProcessExecutor;
 use crate::exec::process::ProcessExecutor;
@@ -50,6 +51,9 @@ pub struct PoolConfig {
     /// Per-env serving engine for [`EnvPool::rollout`] (ignored by the
     /// batched mode, where the coordinator's server does the inference).
     pub backend: PolicyBackendKind,
+    /// Which engine advances cylinder CFD periods (`--cfd-backend`):
+    /// the AOT XLA executable or the pure-Rust native engine.
+    pub cfd_backend: CfdBackend,
     pub n_envs: usize,
     pub io_mode: IoMode,
     pub seed: u64,
@@ -83,6 +87,7 @@ impl Default for PoolConfig {
             variant: "small".into(),
             scenario: "cylinder".into(),
             backend: PolicyBackendKind::Xla,
+            cfd_backend: CfdBackend::Xla,
             n_envs: 1,
             io_mode: IoMode::InMemory,
             seed: 0,
@@ -182,10 +187,7 @@ impl EnvPool {
         // the error is immediate instead of a dead worker
         scenario::spec(&cfg.scenario)?;
         anyhow::ensure!(cfg.n_envs >= 1, "need at least one environment");
-        let dims = match &manifest {
-            Some(m) => (m.drl.n_obs, m.drl.hidden),
-            None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
-        };
+        let dims = policy_dims(&cfg.scenario, cfg.cfd_backend, manifest.as_deref());
         let exec: Box<dyn Executor> = match cfg.executor {
             ExecutorKind::InProcess => {
                 anyhow::ensure!(
@@ -603,6 +605,7 @@ pub(crate) fn build_worker(
     io_mode: IoMode,
     seed: u64,
     backend: PolicyBackendKind,
+    cfd_backend: CfdBackend,
     manifest: Option<&Manifest>,
 ) -> Result<(Box<dyn Environment>, LocalPolicy, Policy)> {
     let ctx = ScenarioContext {
@@ -612,6 +615,7 @@ pub(crate) fn build_worker(
         io_mode,
         manifest,
         variant,
+        cfd_backend,
         seed,
     };
     let env = scenario::build(scenario_name, &ctx)?;
@@ -621,10 +625,7 @@ pub(crate) fn build_worker(
             LocalPolicy::xla(&m.drl)
         }
         PolicyBackendKind::Native => {
-            let (n_obs, hidden) = match manifest {
-                Some(m) => (m.drl.n_obs, m.drl.hidden),
-                None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
-            };
+            let (n_obs, hidden) = policy_dims(scenario_name, cfd_backend, manifest);
             LocalPolicy::native(n_obs, hidden)
         }
     };

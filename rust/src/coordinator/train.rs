@@ -27,7 +27,8 @@ use crate::coordinator::scheduler::SyncPolicy;
 use crate::drl::native_update::{NativeUpdater, PpoHyperParams, DEFAULT_GAE_LAMBDA, DEFAULT_GAMMA};
 use crate::drl::policy::{NativePolicy, PolicyBackendKind};
 use crate::drl::{PpoTrainer, TrainerBackend, UpdateBackendKind};
-use crate::env::scenario::{self, ScenarioKind, SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use crate::cfd::CfdBackend;
+use crate::env::scenario::{self, policy_dims, ScenarioKind};
 use crate::exec::{ExecutorKind, TransportKind};
 use crate::io_interface::IoMode;
 use crate::runtime::{Manifest, Runtime};
@@ -79,6 +80,11 @@ pub struct TrainConfig {
     pub backend: PolicyBackendKind,
     /// Engine for the PPO minibatch update (XLA artifact or native step).
     pub update_backend: UpdateBackendKind,
+    /// Engine for cylinder CFD periods (`--cfd-backend`): the AOT XLA
+    /// executable, or the pure-Rust native engine (artifact-free; forces
+    /// native policy + update backends and ignores any manifest so the
+    /// run is identical with and without artifacts present).
+    pub cfd_backend: CfdBackend,
     /// Rollout scheduler barrier policy (full / `partial:<k>` / async).
     pub sync: SyncPolicy,
     /// Execution backend for the env workers: OS threads in this process
@@ -145,6 +151,7 @@ impl Default for TrainConfig {
             inference: InferenceMode::PerEnv,
             backend: PolicyBackendKind::Xla,
             update_backend: UpdateBackendKind::Xla,
+            cfd_backend: CfdBackend::Xla,
             sync: SyncPolicy::Full,
             executor: ExecutorKind::InProcess,
             ranks_per_env: 1,
@@ -192,17 +199,29 @@ pub(crate) struct TrainSetup {
 /// training ingredients. `serve_batched` is true when the caller will run
 /// central batched inference (it pre-warms the coordinator runtime).
 pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup> {
-    let manifest = Manifest::load_optional(&cfg.artifact_dir)?.map(Arc::new);
+    let mut manifest = Manifest::load_optional(&cfg.artifact_dir)?.map(Arc::new);
+
+    let sp = scenario::spec(&cfg.scenario)?;
+    // `--cfd-backend native` on a cylinder scenario is artifact-free by
+    // construction: the scenario builder ignores the manifest, so the
+    // whole run must too — policy sizing, params init and hyperparameters
+    // all come from the native defaults, making the run bitwise identical
+    // with and without artifacts on disk.
+    let native_cfd =
+        cfg.cfd_backend == CfdBackend::Native && matches!(sp.kind, ScenarioKind::Cylinder { .. });
+    if native_cfd {
+        manifest = None;
+    }
 
     // with no artifacts anywhere, everything runs native (the same
     // fallback the CLI's `episode` command applies to rollouts)
     let (backend, update_backend) = match &manifest {
         Some(_) => (cfg.backend, cfg.update_backend),
         None => {
-            let sp = scenario::spec(&cfg.scenario)?;
             anyhow::ensure!(
-                matches!(sp.kind, ScenarioKind::Surrogate),
-                "scenario {:?} needs AOT artifacts at {} (run `make artifacts`, or use --scenario surrogate)",
+                native_cfd || matches!(sp.kind, ScenarioKind::Surrogate),
+                "scenario {:?} needs AOT artifacts at {} (run `make artifacts`, \
+                 or use --cfd-backend native, or --scenario surrogate)",
                 cfg.scenario,
                 cfg.artifact_dir.display()
             );
@@ -212,19 +231,20 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
                 // a requested XLA engine is being downgraded: warn even
                 // under --quiet, so benchmark labels can't silently lie
                 // about which backend produced the numbers
+                let why = if native_cfd {
+                    "--cfd-backend native is artifact-free".to_string()
+                } else {
+                    format!("no artifacts at {}", cfg.artifact_dir.display())
+                };
                 eprintln!(
-                    "warning: no artifacts at {} — falling back to native policy + native update backends",
-                    cfg.artifact_dir.display()
+                    "warning: {why} — falling back to native policy + native update backends"
                 );
             }
             (PolicyBackendKind::Native, UpdateBackendKind::Native)
         }
     };
 
-    let (n_obs, hidden) = match &manifest {
-        Some(m) => (m.drl.n_obs, m.drl.hidden),
-        None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
-    };
+    let (n_obs, hidden) = policy_dims(&cfg.scenario, cfg.cfd_backend, manifest.as_deref());
 
     let mut rt = None;
     let mut update_file = None;
@@ -261,6 +281,7 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
         // in batched mode the workers never serve the policy; the
         // LocalPolicy is lazy, so passing the backend through is free
         backend,
+        cfd_backend: cfg.cfd_backend,
         n_envs: cfg.n_envs,
         io_mode: cfg.io_mode,
         seed: cfg.seed,

@@ -1,7 +1,9 @@
 //! The AFC environments: CFD and surrogate workloads seen as MDPs.
 //!
 //! [`CfdEnv`] owns the flow state between actuation periods, invokes the
-//! AOT-compiled `cfd_period` executable (L2/L1), applies the paper's action
+//! CFD engine behind [`CfdEngineRef`] — either the AOT-compiled
+//! `cfd_period` executable (L2/L1) or the pure-Rust [`crate::cfd`] engine
+//! (`--cfd-backend native`, artifact-free) — applies the paper's action
 //! smoothing (Eq. 11) and reward (Eq. 12), normalises probe observations,
 //! and pushes every period's outputs through the configured exchange
 //! interface so the I/O cost of the coupled framework is physically
@@ -14,17 +16,28 @@
 pub mod scenario;
 
 pub use scenario::{
-    build as build_scenario, spec as scenario_spec, CylinderEnv, Environment, ScenarioContext,
-    ScenarioKind, ScenarioSpec, SurrogateConfig, SurrogateEnv, SCENARIOS, SURROGATE_HIDDEN,
-    SURROGATE_N_OBS,
+    build as build_scenario, policy_dims, spec as scenario_spec, CylinderEnv, Environment,
+    ScenarioContext, ScenarioKind, ScenarioSpec, SurrogateConfig, SurrogateEnv, SCENARIOS,
+    SURROGATE_HIDDEN, SURROGATE_N_OBS,
 };
-
-use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cfd::NativeEngine;
 use crate::io_interface::{CfdOutput, ExchangeInterface, FlowSnapshot};
 use crate::runtime::{literal_f32, scalar_f32, to_vec_f32, Executable, VariantManifest};
+use crate::util::clock::telemetry_now;
+
+/// Which engine runs one actuation period for [`CfdEnv`]. Borrowed per
+/// call (not owned) because PJRT executables live in the worker's
+/// [`crate::runtime::Runtime`] while the native engine is plain state the
+/// caller owns; either way the env itself stays engine-agnostic.
+pub enum CfdEngineRef<'a> {
+    /// AOT-compiled `cfd_period_<variant>` (requires `make artifacts`).
+    Xla(&'a Executable),
+    /// Pure-Rust engine (`--cfd-backend native`), artifact-free.
+    Native(&'a mut NativeEngine),
+}
 
 /// Per-step wall-clock breakdown (feeds Fig 10 and the DES calibration).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -91,6 +104,15 @@ impl FlowState {
         }
         Ok(self.host.as_ref().unwrap())
     }
+
+    /// Mutable host views for in-place native advancement. Any cached
+    /// literals are dropped — they would go stale the moment the caller
+    /// writes.
+    fn as_host_mut(&mut self) -> Result<&mut (Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.as_host()?;
+        self.lits = None;
+        Ok(self.host.as_mut().unwrap())
+    }
 }
 
 pub struct CfdEnv {
@@ -133,7 +155,7 @@ impl CfdEnv {
     }
 
     /// Reset to the developed base flow; returns the initial observation.
-    pub fn reset(&mut self, cfd_period: &Executable) -> Result<Vec<f32>> {
+    pub fn reset(&mut self, cfd: CfdEngineRef) -> Result<Vec<f32>> {
         self.flow = FlowState::from_host(
             self.state0.0.clone(),
             self.state0.1.clone(),
@@ -142,7 +164,7 @@ impl CfdEnv {
         self.jet = 0.0;
         self.step_idx = 0;
         // one uncontrolled period to produce a consistent observation
-        let r = self.advance(cfd_period, 0.0)?;
+        let r = self.advance(cfd, 0.0)?;
         Ok(r.obs)
     }
 
@@ -150,47 +172,59 @@ impl CfdEnv {
     ///
     /// Eq. (11): V_{T_i} = V_{T_{i-1}} + beta (a - V_{T_{i-1}}), then the
     /// jet amplitude is capped at jet_max (paper: V_jet <= U_m).
-    pub fn step(&mut self, cfd_period: &Executable, action: f64) -> Result<StepResult> {
+    pub fn step(&mut self, cfd: CfdEngineRef, action: f64) -> Result<StepResult> {
         let jet_target = self.jet + self.beta * (action - self.jet);
         let jet = jet_target.clamp(-self.variant.jet_max, self.variant.jet_max);
         self.jet = jet;
-        self.advance(cfd_period, jet)
+        self.advance(cfd, jet)
     }
 
-    fn advance(&mut self, cfd_period: &Executable, jet: f64) -> Result<StepResult> {
+    fn advance(&mut self, cfd: CfdEngineRef, jet: f64) -> Result<StepResult> {
         let v = &self.variant;
         let dims = [v.ny as i64, v.nx as i64];
 
         // DRL -> CFD: the action travels through the exchange interface
         // (regex into a config dict for the baseline mode), and the solver
         // uses the value as parsed back.
-        let t_io0 = Instant::now();
+        let t_io0 = telemetry_now();
         let (jet_parsed, io_inject) = self.exchange.inject_action(self.step_idx, jet)?;
         let io_inject_s = t_io0.elapsed().as_secs_f64();
 
-        let t0 = Instant::now();
-        let state = self.flow.as_literals(&dims)?;
-        let args = [
-            state[0].clone(),
-            state[1].clone(),
-            state[2].clone(),
-            scalar_f32(jet_parsed as f32),
-        ];
-        let mut outs = cfd_period.run(&args)?;
-        anyhow::ensure!(outs.len() == 6, "cfd_period returned {} outputs", outs.len());
-        let cl_hist = to_vec_f32(&outs[5])?;
-        let cd_hist = to_vec_f32(&outs[4])?;
-        let probes = to_vec_f32(&outs[3])?;
-        // feed the output literals straight back as the next state
-        let p_lit = outs.remove(2);
-        let v_lit = outs.remove(1);
-        let u_lit = outs.remove(0);
-        self.flow = FlowState::from_lits(u_lit, v_lit, p_lit);
+        let t0 = telemetry_now();
+        let (probes, cd_hist, cl_hist) = match cfd {
+            CfdEngineRef::Xla(cfd_period) => {
+                let state = self.flow.as_literals(&dims)?;
+                let args = [
+                    state[0].clone(),
+                    state[1].clone(),
+                    state[2].clone(),
+                    scalar_f32(jet_parsed as f32),
+                ];
+                let mut outs = cfd_period.run(&args)?;
+                anyhow::ensure!(outs.len() == 6, "cfd_period returned {} outputs", outs.len());
+                let cl_hist = to_vec_f32(&outs[5])?;
+                let cd_hist = to_vec_f32(&outs[4])?;
+                let probes = to_vec_f32(&outs[3])?;
+                // feed the output literals straight back as the next state
+                let p_lit = outs.remove(2);
+                let v_lit = outs.remove(1);
+                let u_lit = outs.remove(0);
+                self.flow = FlowState::from_lits(u_lit, v_lit, p_lit);
+                (probes, cd_hist, cl_hist)
+            }
+            CfdEngineRef::Native(engine) => {
+                // in place on the host-resident fields — the native engine
+                // has no device/host boundary to pay for
+                let (u, vv, p) = self.flow.as_host_mut()?;
+                let out = engine.period(u, vv, p, jet_parsed as f32);
+                (out.probes, out.cd_hist, out.cl_hist)
+            }
+        };
         let cfd_s = t0.elapsed().as_secs_f64();
 
         // CFD -> DRL: outputs travel through the exchange interface; the
         // agent consumes the parsed-back copy.
-        let t1 = Instant::now();
+        let t1 = telemetry_now();
         let out = CfdOutput {
             probes,
             cd_hist,

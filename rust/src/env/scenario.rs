@@ -23,11 +23,13 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::env::{CfdEnv, StepResult, StepTimings};
+use crate::cfd::{self, CfdBackend, NativeEngine, N_PROBES};
+use crate::env::{CfdEngineRef, CfdEnv, StepResult, StepTimings};
 use crate::io_interface::{
     make_interface, CfdOutput, ExchangeInterface, FlowSnapshot, IoMode,
 };
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{Manifest, Runtime, VariantManifest};
+use crate::util::clock::telemetry_now;
 use crate::util::rng::Rng;
 
 /// One selectable workload seen as an MDP: reset to a start state, then
@@ -123,17 +125,44 @@ pub fn spec(name: &str) -> Result<&'static ScenarioSpec> {
         })
 }
 
+/// Policy dimensions `(n_obs, hidden)` for `scenario_name` under
+/// `cfd_backend` — the one sizing dispatch point shared by the
+/// coordinator, the pool and the workers, so the policy width cannot
+/// drift between them. The native cylinder path is always
+/// ([`N_PROBES`], [`cfd::NATIVE_HIDDEN`]) — [`build`] ignores the
+/// manifest there, so sizing must too; otherwise the manifest sizes the
+/// policy when present, and the artifact-free surrogate defaults apply.
+pub fn policy_dims(
+    scenario_name: &str,
+    cfd_backend: CfdBackend,
+    manifest: Option<&Manifest>,
+) -> (usize, usize) {
+    let cylinder = spec(scenario_name)
+        .map(|sp| matches!(sp.kind, ScenarioKind::Cylinder { .. }))
+        .unwrap_or(false);
+    if cylinder && cfd_backend == CfdBackend::Native {
+        return (N_PROBES, cfd::NATIVE_HIDDEN);
+    }
+    match manifest {
+        Some(m) => (m.drl.n_obs, m.drl.hidden),
+        None => (SURROGATE_N_OBS, SURROGATE_HIDDEN),
+    }
+}
+
 /// Everything a worker thread needs to build its environment instance.
 pub struct ScenarioContext<'a> {
     pub artifact_dir: &'a Path,
     pub work_dir: &'a Path,
     pub env_id: usize,
     pub io_mode: IoMode,
-    /// Required for cylinder scenarios; the surrogate uses it only to match
-    /// `n_obs` to the compiled policy width when present.
+    /// Required for cylinder scenarios on the XLA backend; the surrogate
+    /// uses it only to match `n_obs` to the compiled policy width when
+    /// present, and the native CFD backend ignores it entirely.
     pub manifest: Option<&'a Manifest>,
     /// Manifest variant used when the scenario does not pin one.
     pub variant: &'a str,
+    /// Which engine runs the cylinder CFD period (`--cfd-backend`).
+    pub cfd_backend: CfdBackend,
     pub seed: u64,
 }
 
@@ -142,35 +171,63 @@ pub fn build(name: &str, ctx: &ScenarioContext) -> Result<Box<dyn Environment>> 
     let sp = spec(name)?;
     match sp.kind {
         ScenarioKind::Cylinder { variant, .. } => {
-            let manifest = ctx.manifest.with_context(|| {
-                format!(
-                    "scenario {:?} needs AOT artifacts (run `make artifacts`)",
-                    sp.name
-                )
-            })?;
             let vname = variant.unwrap_or(ctx.variant);
-            let vm = manifest
-                .variant(vname)
-                .with_context(|| format!("building scenario {:?}", sp.name))?
-                .clone();
-            let mut rt = Runtime::new(ctx.artifact_dir)?;
-            rt.load(&vm.cfd_period_file)?;
             let exchange = make_interface(ctx.io_mode, ctx.work_dir, ctx.env_id)?;
-            let cfd_file = vm.cfd_period_file.clone();
-            let inner = CfdEnv::new(
-                vm,
-                manifest.load_state0(vname)?,
-                manifest.drl.action_smoothing_beta,
-                manifest.drl.reward_lift_penalty,
-                exchange,
-            );
-            Ok(Box::new(CylinderEnv {
-                rt,
-                inner,
-                cfd_file,
-                name: sp.name,
-                n_obs: manifest.drl.n_obs,
-            }))
+            match ctx.cfd_backend {
+                CfdBackend::Xla => {
+                    let manifest = ctx.manifest.with_context(|| {
+                        format!(
+                            "scenario {:?} needs AOT artifacts (run `make artifacts`, \
+                             or use --cfd-backend native)",
+                            sp.name
+                        )
+                    })?;
+                    let vm = manifest
+                        .variant(vname)
+                        .with_context(|| format!("building scenario {:?}", sp.name))?
+                        .clone();
+                    let mut rt = Runtime::new(ctx.artifact_dir)?;
+                    rt.load(&vm.cfd_period_file)?;
+                    let cfd_file = vm.cfd_period_file.clone();
+                    let inner = CfdEnv::new(
+                        vm,
+                        manifest.load_state0(vname)?,
+                        manifest.drl.action_smoothing_beta,
+                        manifest.drl.reward_lift_penalty,
+                        exchange,
+                    );
+                    Ok(Box::new(CylinderEnv {
+                        backend: CylinderBackend::Xla { rt, cfd_file },
+                        inner,
+                        name: sp.name,
+                        n_obs: manifest.drl.n_obs,
+                    }))
+                }
+                CfdBackend::Native => {
+                    // Artifact-free: the manifest (if any) is ignored so
+                    // behaviour is uniform with and without artifacts; the
+                    // base flow is developed in-process (cached per
+                    // variant) and stands in for the baked statistics.
+                    let spec = cfd::variant(vname)
+                        .with_context(|| format!("building scenario {:?}", sp.name))?;
+                    let mut engine = NativeEngine::from_env(spec);
+                    let bf = engine.cached_base_flow();
+                    let vm = native_manifest(engine.spec(), &bf);
+                    let inner = CfdEnv::new(
+                        vm,
+                        (bf.u.clone(), bf.v.clone(), bf.p.clone()),
+                        cfd::NATIVE_ACTION_BETA as f64,
+                        cfd::NATIVE_LIFT_PENALTY as f64,
+                        exchange,
+                    );
+                    Ok(Box::new(CylinderEnv {
+                        backend: CylinderBackend::Native(engine),
+                        inner,
+                        name: sp.name,
+                        n_obs: N_PROBES,
+                    }))
+                }
+            }
         }
         ScenarioKind::Surrogate => {
             // match the compiled policy width when artifacts are present,
@@ -190,12 +247,42 @@ pub fn build(name: &str, ctx: &ScenarioContext) -> Result<Box<dyn Environment>> 
 // Cylinder scenarios: CfdEnv + its own PJRT runtime behind the trait
 // ---------------------------------------------------------------------------
 
-/// [`CfdEnv`] plus the runtime that owns its compiled `cfd_period`
-/// executable, packaged as one [`Environment`].
+/// Synthesize the manifest entry the native engine would otherwise read
+/// from `artifacts/manifest.json`: grid constants from the [`cfd::GridSpec`],
+/// reward baseline + probe statistics from the developed base flow.
+fn native_manifest(spec: &cfd::GridSpec, bf: &cfd::BaseFlow) -> VariantManifest {
+    VariantManifest {
+        name: spec.name.clone(),
+        cfd_period_file: String::new(),
+        state0_file: String::new(),
+        ny: spec.ny,
+        nx: spec.nx(),
+        h: spec.h(),
+        dt: spec.dt,
+        substeps: spec.substeps,
+        period: spec.period(),
+        re: spec.re,
+        n_sweeps: spec.n_sweeps,
+        jet_max: spec.jet_max,
+        cd0: bf.cd0,
+        cl0_amplitude: bf.cl0_amplitude,
+        probe_mean: bf.probe_mean.clone(),
+        probe_std: bf.probe_std.clone(),
+    }
+}
+
+/// The engine behind a [`CylinderEnv`]: a PJRT runtime owning the
+/// compiled `cfd_period`, or the pure-Rust engine.
+enum CylinderBackend {
+    Xla { rt: Runtime, cfd_file: String },
+    Native(NativeEngine),
+}
+
+/// [`CfdEnv`] plus the engine that advances it, packaged as one
+/// [`Environment`].
 pub struct CylinderEnv {
-    rt: Runtime,
+    backend: CylinderBackend,
     inner: CfdEnv,
-    cfd_file: String,
     name: &'static str,
     n_obs: usize,
 }
@@ -210,17 +297,30 @@ impl Environment for CylinderEnv {
     }
 
     fn reset(&mut self) -> Result<Vec<f32>> {
-        let exe = self.rt.get(&self.cfd_file)?;
-        self.inner.reset(exe)
+        match &mut self.backend {
+            CylinderBackend::Xla { rt, cfd_file } => {
+                self.inner.reset(CfdEngineRef::Xla(rt.get(cfd_file)?))
+            }
+            CylinderBackend::Native(engine) => self.inner.reset(CfdEngineRef::Native(engine)),
+        }
     }
 
     fn step(&mut self, action: f64) -> Result<StepResult> {
-        let exe = self.rt.get(&self.cfd_file)?;
-        self.inner.step(exe, action)
+        match &mut self.backend {
+            CylinderBackend::Xla { rt, cfd_file } => {
+                self.inner.step(CfdEngineRef::Xla(rt.get(cfd_file)?), action)
+            }
+            CylinderBackend::Native(engine) => {
+                self.inner.step(CfdEngineRef::Native(engine), action)
+            }
+        }
     }
 
     fn runtime_mut(&mut self) -> Option<&mut Runtime> {
-        Some(&mut self.rt)
+        match &mut self.backend {
+            CylinderBackend::Xla { rt, .. } => Some(rt),
+            CylinderBackend::Native(_) => None,
+        }
     }
 }
 
@@ -346,12 +446,12 @@ impl SurrogateEnv {
         let c = &self.cfg;
 
         // DRL -> CFD through the exchange interface, like CfdEnv
-        let t_io0 = std::time::Instant::now();
+        let t_io0 = telemetry_now();
         let (jet_parsed, io_inject) = self.exchange.inject_action(self.step_idx, jet)?;
         let io_inject_s = t_io0.elapsed().as_secs_f64();
 
         // closed-form "solve" for one actuation period
-        let t0 = std::time::Instant::now();
+        let t0 = telemetry_now();
         let target = (1.0 - c.suppression * jet_parsed.abs()).max(0.0);
         self.amp += c.relax * (target - self.amp);
         self.amp = self.amp.clamp(0.0, 1.2);
@@ -373,7 +473,7 @@ impl SurrogateEnv {
         let cfd_s = t0.elapsed().as_secs_f64();
 
         // CFD -> DRL through the exchange interface
-        let t1 = std::time::Instant::now();
+        let t1 = telemetry_now();
         let out = CfdOutput {
             probes,
             cd_hist,

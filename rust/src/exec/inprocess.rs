@@ -169,6 +169,7 @@ fn worker_main(
         cfg.io_mode,
         cfg.seed,
         cfg.backend,
+        cfg.cfd_backend,
         manifest.as_deref(),
     );
 

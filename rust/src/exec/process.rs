@@ -135,6 +135,7 @@ struct SpawnSpec {
     variant: String,
     scenario: String,
     backend: &'static str,
+    cfd_backend: &'static str,
     io_mode: &'static str,
     seed: u64,
     fault_injection: Option<String>,
@@ -201,6 +202,7 @@ impl ProcessExecutor {
             variant: cfg.variant.clone(),
             scenario: cfg.scenario.clone(),
             backend: cfg.backend.name(),
+            cfd_backend: cfg.cfd_backend.name(),
             io_mode: cfg.io_mode.name(),
             seed: cfg.seed,
             fault_injection: cfg.fault_injection.clone(),
@@ -693,6 +695,8 @@ fn spawn_child(
         .arg(spec.io_mode)
         .arg("--backend")
         .arg(spec.backend)
+        .arg("--cfd-backend")
+        .arg(spec.cfd_backend)
         .arg("--seed")
         .arg(spec.seed.to_string())
         .arg("--heartbeat-ms")

@@ -28,6 +28,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::cfd::CfdBackend;
 use crate::coordinator::pool::{build_worker, run_episode};
 use crate::drl::policy::PolicyBackendKind;
 use crate::exec::shm;
@@ -50,6 +51,8 @@ pub struct WorkerConfig {
     pub work_dir: PathBuf,
     pub io_mode: IoMode,
     pub backend: PolicyBackendKind,
+    /// Engine for cylinder CFD periods (`--cfd-backend`).
+    pub cfd_backend: CfdBackend,
     pub seed: u64,
     /// Heartbeat period; 0 disables the heartbeat thread.
     pub heartbeat_ms: u64,
@@ -210,6 +213,7 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
         cfg.io_mode,
         cfg.seed,
         cfg.backend,
+        cfg.cfd_backend,
         manifest.as_ref(),
     )
     .context("env worker setup failed")?;

@@ -28,6 +28,7 @@
 #![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod audit;
+pub mod cfd;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

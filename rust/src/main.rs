@@ -23,13 +23,14 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use drlfoam::cfd::CfdBackend;
 use drlfoam::cluster::{planner, simulate_training, Calibration, SimConfig};
 use drlfoam::config::{artifact_dir, Args};
 use drlfoam::coordinator::{train, EnvPool, InferenceMode, LocalPolicy, PoolConfig, SyncPolicy, TrainConfig};
 use drlfoam::drl::{NativePolicy, PolicyBackendKind, UpdateBackendKind};
 use drlfoam::exec::{ExecutorKind, TransportKind};
 use drlfoam::env::scenario::{self, ScenarioContext, SURROGATE_HIDDEN, SURROGATE_N_OBS};
-use drlfoam::env::Environment;
+use drlfoam::env::{CfdEngineRef, Environment};
 use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
@@ -38,10 +39,15 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
-             --sync full|partial:<k>|async --executor in-process|multi-process
+             --cfd-backend xla|native --sync full|partial:<k>|async
+             --executor in-process|multi-process
              --transport pipe|shm --ranks N --layout manual|auto [--quiet]
              (--scenario surrogate|analytic trains with no artifacts: native
-              backends are auto-selected when artifacts/ is absent. --sync
+              backends are auto-selected when artifacts/ is absent.
+              --cfd-backend native runs the cylinder CFD on the pure-Rust
+              SIMD+threaded engine — no artifacts needed, the base flow is
+              developed in-process; DRLFOAM_CFD_THREADS and
+              DRLFOAM_FORCE_SCALAR=1 tune it without changing results. --sync
               partial:<k> updates on any k of N trajectories. --executor
               multi-process runs each environment as a group of --ranks real
               `drlfoam worker` OS processes with heartbeat fault handling: a
@@ -61,7 +67,9 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
              length-prefixed binary frames on stdin/stdout, plus shm rings
              under --transport shm — not for interactive use)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
-             (--scenario surrogate runs without artifacts)
+             [--cfd-backend xla|native]
+             (--scenario surrogate and --cfd-backend native run without
+              artifacts)
   scenarios: list selectable scenarios
   evaluate:  --policy FILE --horizon N  (deterministic rollout + vorticity PPMs)
   calibrate: --periods N (measurement repetitions)
@@ -93,7 +101,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let value_opts = [
         "artifacts", "out", "variant", "scenario", "seed", "envs", "ranks",
         "horizon", "iterations", "epochs", "io", "inference", "backend",
-        "update-backend", "sync", "episodes", "periods", "calib", "policy",
+        "update-backend", "cfd-backend", "sync", "episodes", "periods", "calib", "policy",
         "work-dir", "log-every", "layout", "cores", "objective", "syncs",
         "ios", "staleness-weight", "executor", "chaos", "env-id", "rank",
         "heartbeat-ms", "transport", "shm-prefix", "root", "tests",
@@ -143,6 +151,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         inference: InferenceMode::parse(&args.get_or("inference", "per-env"))?,
         backend: PolicyBackendKind::parse(&args.get_or("backend", "xla"))?,
         update_backend: UpdateBackendKind::parse(&args.get_or("update-backend", "xla"))?,
+        cfd_backend: CfdBackend::parse(&args.get_or("cfd-backend", "xla"))?,
         sync: sync_policy(args)?,
         executor: ExecutorKind::parse(&args.get_or("executor", "in-process"))?,
         ranks_per_env: args.usize_or("ranks", 1)?,
@@ -180,7 +189,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     // be downgraded by the artifact-free fallback, so the *resolved*
     // engines are reported from inside the training setup instead
     println!(
-        "training: scenario={} variant={} envs={} ranks={} horizon={} iterations={} io={} inference={} sync={} executor={} transport={}",
+        "training: scenario={} variant={} envs={} ranks={} horizon={} iterations={} io={} inference={} cfd={} sync={} executor={} transport={}",
         cfg.scenario,
         cfg.variant,
         cfg.n_envs,
@@ -189,6 +198,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.iterations,
         cfg.io_mode.name(),
         cfg.inference.name(),
+        cfg.cfd_backend.name(),
         cfg.sync.name(),
         cfg.executor.name(),
         cfg.transport.name()
@@ -238,6 +248,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         work_dir: args.get_or("work-dir", "out/work").into(),
         io_mode: IoMode::parse(&args.get_or("io", "memory"))?,
         backend: PolicyBackendKind::parse(&args.get_or("backend", "native"))?,
+        cfd_backend: CfdBackend::parse(&args.get_or("cfd-backend", "xla"))?,
         seed: args.u64_or("seed", 0)?,
         heartbeat_ms: args.u64_or("heartbeat-ms", 200)?,
         shm_prefix: args.get("shm-prefix").map(Into::into),
@@ -252,10 +263,16 @@ fn cmd_episode(args: &Args) -> Result<()> {
     let horizon = args.usize_or("horizon", 20)?;
     let seed = args.u64_or("seed", 0)?;
     let io_mode = IoMode::parse(&args.get_or("io", "memory"))?;
+    let cfd_backend = CfdBackend::parse(&args.get_or("cfd-backend", "xla"))?;
     // the surrogate scenario runs without any artifacts, so a *missing*
     // manifest is fine — but a present-and-broken one is a real error,
-    // not something to silently fall back from
+    // not something to silently fall back from. The native CFD backend
+    // ignores artifacts entirely (uniform with and without them), so the
+    // policy is sized/initialised as if none existed.
     let manifest = Manifest::load_optional(&adir)?;
+    let native_cfd = cfd_backend == CfdBackend::Native
+        && matches!(scenario::spec(&scenario_name)?.kind, env::ScenarioKind::Cylinder { .. });
+    let policy_manifest = if native_cfd { None } else { manifest.as_ref() };
     let work = out_dir(args).join("work");
     std::fs::create_dir_all(&work)?;
 
@@ -266,13 +283,15 @@ fn cmd_episode(args: &Args) -> Result<()> {
         io_mode,
         manifest: manifest.as_ref(),
         variant: &variant,
+        cfd_backend,
         seed,
     };
     let mut e = scenario::build(&scenario_name, &ctx)?;
 
     // XLA serving when the scenario brings a runtime and artifacts exist;
-    // the native twin otherwise (surrogate and artifact-free runs)
-    let (mut lp, params) = match &manifest {
+    // the native twin otherwise (surrogate, native-CFD and artifact-free
+    // runs)
+    let (mut lp, params) = match &policy_manifest {
         Some(m) if e.runtime_mut().is_some() => {
             let params = match args.get("policy") {
                 Some(p) => drlfoam::runtime::read_f32_bin(p)?,
@@ -289,13 +308,18 @@ fn cmd_episode(args: &Args) -> Result<()> {
             (LocalPolicy::native(m.drl.n_obs, m.drl.hidden), params)
         }
         None => {
-            let net = NativePolicy::new(e.n_obs(), SURROGATE_HIDDEN);
+            let (n_obs, hidden) = scenario::policy_dims(&scenario_name, cfd_backend, None);
+            let net = NativePolicy::new(n_obs, hidden);
             let params = match args.get("policy") {
                 Some(p) => drlfoam::runtime::read_f32_bin(p)?,
                 None => net.init_params(seed),
             };
-            println!("no artifacts at {} — native policy backend", adir.display());
-            (LocalPolicy::native(e.n_obs(), SURROGATE_HIDDEN), params)
+            if native_cfd {
+                println!("cfd backend: native (artifact-free) — native policy backend");
+            } else {
+                println!("no artifacts at {} — native policy backend", adir.display());
+            }
+            (LocalPolicy::native(n_obs, hidden), params)
         }
     };
     lp.begin_episode(e.as_mut(), &params)?;
@@ -376,13 +400,13 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
         &u0, &v0, vm.ny, vm.nx, vm.h, 2.0, -2.0, 0.5,
     )?;
 
-    let mut obs = e.reset(cfd)?;
+    let mut obs = e.reset(CfdEngineRef::Xla(cfd))?;
     let mut csv = String::from("step,jet,cd,cl,reward\n");
     let (mut cd_acc, mut r_acc) = (0.0, 0.0);
     for t in 0..horizon {
         // deterministic policy: action = mu (no exploration noise)
         let pout = policy.apply(pol, &params, &obs)?;
-        let sr = e.step(cfd, pout.mu)?;
+        let sr = e.step(CfdEngineRef::Xla(cfd), pout.mu)?;
         csv.push_str(&format!(
             "{t},{:.6},{:.6},{:.6},{:.6}\n",
             sr.jet, sr.cd_mean, sr.cl_mean, sr.reward
@@ -432,10 +456,10 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         make_interface(IoMode::InMemory, &work, 0)?,
     );
     let cfd = rt.get(&vm.cfd_period_file)?;
-    e.reset(cfd)?;
+    e.reset(CfdEngineRef::Xla(cfd))?;
     let mut t_cfd = Vec::new();
     for _ in 0..reps {
-        let sr = e.step(cfd, 0.1)?;
+        let sr = e.step(CfdEngineRef::Xla(cfd), 0.1)?;
         t_cfd.push(sr.timings.cfd_s);
     }
     let t_period = drlfoam::util::stats::mean(&t_cfd);
@@ -627,6 +651,7 @@ fn process_calibration(cfg: &TrainConfig) -> Result<Calibration> {
             variant: cfg.variant.clone(),
             scenario: "surrogate".into(),
             backend: PolicyBackendKind::Native,
+            cfd_backend: CfdBackend::Xla,
             n_envs,
             io_mode: mode,
             seed: cfg.seed,
@@ -687,6 +712,7 @@ fn quick_surrogate_calibration(
             io_mode: mode,
             manifest: None,
             variant: "small",
+            cfd_backend: CfdBackend::Xla,
             seed,
         };
         let mut e = scenario::build("surrogate", &ctx)?;

@@ -15,6 +15,7 @@
 //! ever slips a wall-clock value or a widened accumulator into a scored
 //! path, the double-run comparison here goes red.
 
+use drlfoam::cfd::CfdBackend;
 use drlfoam::cluster::planner::{search, PlannerConfig};
 use drlfoam::cluster::Calibration;
 use drlfoam::coordinator::{train, TrainConfig};
@@ -56,13 +57,16 @@ fn learning_rows(out_dir: &std::path::Path) -> Vec<String> {
         .collect()
 }
 
-fn run_once(tag: &str) -> (Vec<String>, Vec<u8>) {
-    let cfg = base_cfg(tag);
-    train(&cfg).unwrap();
+fn run_cfg(cfg: &TrainConfig) -> (Vec<String>, Vec<u8>) {
+    train(cfg).unwrap();
     let rows = learning_rows(&cfg.out_dir);
     let params = std::fs::read(cfg.out_dir.join("policy_final.bin")).unwrap();
     let _ = std::fs::remove_dir_all(&cfg.out_dir);
     (rows, params)
+}
+
+fn run_once(tag: &str) -> (Vec<String>, Vec<u8>) {
+    run_cfg(&base_cfg(tag))
 }
 
 #[test]
@@ -75,6 +79,34 @@ fn training_is_bitwise_reproducible_across_runs() {
     assert_eq!(
         params_a, params_b,
         "policy_final.bin diverged between identical runs"
+    );
+}
+
+/// The same double-run pin over the pure-Rust CFD engine: a real (tiny)
+/// cylinder training run with `--cfd-backend native` — no artifacts
+/// anywhere — must agree bitwise on the learning columns and the final
+/// parameters. This is the end-to-end face of the engine's bitwise
+/// contract (scalar == SIMD == threaded), which rust/tests/cfd_native.rs
+/// pins at the kernel level.
+#[test]
+fn native_cfd_training_is_bitwise_reproducible_across_runs() {
+    let cfg = |tag: &str| -> TrainConfig {
+        let mut c = base_cfg(&format!("ncfd-{tag}"));
+        c.scenario = "cylinder".into();
+        c.variant = "tiny".into();
+        c.cfd_backend = CfdBackend::Native;
+        c.n_envs = 2;
+        c.horizon = 3;
+        c.iterations = 2;
+        c
+    };
+    let (rows_a, params_a) = run_cfg(&cfg("a"));
+    let (rows_b, params_b) = run_cfg(&cfg("b"));
+    assert!(!rows_a.is_empty(), "no learning rows written");
+    assert_eq!(rows_a, rows_b, "native-cfd learning columns diverged");
+    assert_eq!(
+        params_a, params_b,
+        "native-cfd policy_final.bin diverged between identical runs"
     );
 }
 

@@ -1,7 +1,7 @@
 //! Integration: CfdEnv episode lifecycle over the real artifacts.
 
 use drlfoam::drl::Policy;
-use drlfoam::env::CfdEnv;
+use drlfoam::env::{CfdEngineRef, CfdEnv};
 use drlfoam::io_interface::{make_interface, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::util::rng::Rng;
@@ -28,7 +28,7 @@ fn mk_env(mode: IoMode, tag: &str) -> (Manifest, Runtime, CfdEnv) {
 fn reset_gives_normalised_observation() {
     let (m, rt, mut env) = mk_env(IoMode::InMemory, "reset");
     let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
-    let obs = env.reset(cfd).unwrap();
+    let obs = env.reset(CfdEngineRef::Xla(cfd)).unwrap();
     assert_eq!(obs.len(), m.drl.n_obs);
     assert!(obs.iter().all(|x| x.is_finite()));
     // base-flow probes are normalised by base-flow statistics: z-scores
@@ -43,8 +43,8 @@ fn uncontrolled_reward_near_zero() {
     // the remaining bias is the base-flow lift asymmetry (documented).
     let (_m, rt, mut env) = mk_env(IoMode::InMemory, "r0");
     let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
-    env.reset(cfd).unwrap();
-    let sr = env.step(cfd, 0.0).unwrap();
+    env.reset(CfdEngineRef::Xla(cfd)).unwrap();
+    let sr = env.step(CfdEngineRef::Xla(cfd), 0.0).unwrap();
     let lift_bias = 0.1 * sr.cl_mean.abs();
     assert!(
         (sr.reward + lift_bias).abs() < 0.15,
@@ -57,12 +57,12 @@ fn uncontrolled_reward_near_zero() {
 fn action_smoothing_follows_eq11() {
     let (_m, rt, mut env) = mk_env(IoMode::InMemory, "smooth");
     let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
-    env.reset(cfd).unwrap();
+    env.reset(CfdEngineRef::Xla(cfd)).unwrap();
     let beta = 0.4;
     let a = 1.0;
-    let s1 = env.step(cfd, a).unwrap();
+    let s1 = env.step(CfdEngineRef::Xla(cfd), a).unwrap();
     assert!((s1.jet - beta * a).abs() < 1e-9, "jet {}", s1.jet);
-    let s2 = env.step(cfd, a).unwrap();
+    let s2 = env.step(CfdEngineRef::Xla(cfd), a).unwrap();
     let want = s1.jet + beta * (a - s1.jet);
     assert!((s2.jet - want).abs() < 1e-9);
 }
@@ -71,10 +71,10 @@ fn action_smoothing_follows_eq11() {
 fn jet_cap_enforced() {
     let (_m, rt, mut env) = mk_env(IoMode::InMemory, "cap");
     let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
-    env.reset(cfd).unwrap();
+    env.reset(CfdEngineRef::Xla(cfd)).unwrap();
     let cap = env.variant.jet_max;
     for _ in 0..30 {
-        let sr = env.step(cfd, 100.0).unwrap();
+        let sr = env.step(CfdEngineRef::Xla(cfd), 100.0).unwrap();
         assert!(sr.jet <= cap + 1e-9, "jet {} cap {cap}", sr.jet);
     }
 }
@@ -95,12 +95,12 @@ fn episode_through_all_io_modes_agrees() {
         let params = m.load_params_init().unwrap();
         let policy = Policy::new(m.drl.n_obs);
         let mut rng = Rng::new(77);
-        let mut obs = env.reset(cfd).unwrap();
+        let mut obs = env.reset(CfdEngineRef::Xla(cfd)).unwrap();
         let mut total = 0.0;
         for _ in 0..3 {
             let pout = policy.apply(pol, &params, &obs).unwrap();
             let (a, _) = policy.sample(&pout, &mut rng);
-            let sr = env.step(cfd, a).unwrap();
+            let sr = env.step(CfdEngineRef::Xla(cfd), a).unwrap();
             total += sr.reward;
             obs = sr.obs;
         }
@@ -120,10 +120,10 @@ fn episode_through_all_io_modes_agrees() {
 fn reset_is_reproducible() {
     let (_m, rt, mut env) = mk_env(IoMode::InMemory, "repro");
     let cfd = rt.get(&env.variant.cfd_period_file).unwrap();
-    let o1 = env.reset(cfd).unwrap();
-    let s1 = env.step(cfd, 0.5).unwrap();
-    let o2 = env.reset(cfd).unwrap();
-    let s2 = env.step(cfd, 0.5).unwrap();
+    let o1 = env.reset(CfdEngineRef::Xla(cfd)).unwrap();
+    let s1 = env.step(CfdEngineRef::Xla(cfd), 0.5).unwrap();
+    let o2 = env.reset(CfdEngineRef::Xla(cfd)).unwrap();
+    let s2 = env.step(CfdEngineRef::Xla(cfd), 0.5).unwrap();
     assert_eq!(o1, o2);
     assert_eq!(s1.obs, s2.obs);
     assert_eq!(s1.reward, s2.reward);

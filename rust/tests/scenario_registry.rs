@@ -54,6 +54,7 @@ fn cylinder_without_artifacts_says_so() {
         io_mode: IoMode::InMemory,
         manifest: None,
         variant: "small",
+        cfd_backend: drlfoam::cfd::CfdBackend::Xla,
         seed: 0,
     };
     let err = scenario::build("cylinder", &ctx).unwrap_err().to_string();
