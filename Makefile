@@ -4,7 +4,7 @@
 PY ?= python3
 
 .PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke shm-smoke \
-        cfd-smoke audit loom miri tsan asan
+        net-smoke cfd-smoke audit loom miri tsan asan
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -112,6 +112,43 @@ shm-smoke:
 	cut -d, -f1-9 out/shm-smoke/shm/train_log.csv > out/shm-smoke/shm-learning.csv
 	cmp out/shm-smoke/pipe-learning.csv out/shm-smoke/shm-learning.csv
 	cmp out/shm-smoke/pipe/policy_final.bin out/shm-smoke/shm/policy_final.bin
+	cargo bench --bench exec_transport -- --gate
+
+# Socket transport smoke: train --transport tcp with both workers behind
+# a real `drlfoam agent` on localhost, bitwise-diffed against the pipe
+# transport (learning columns + policy_final.bin), then the
+# exec_transport bench's throughput gate (shm and uds lockstep steps/s
+# must not fall below pipe).
+net-smoke:
+	rm -rf out/net-smoke
+	mkdir -p out/net-smoke
+	cargo build --release
+	cargo run --release --quiet -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --executor multi-process --transport pipe \
+	    --artifacts out/net-smoke/no-artifacts \
+	    --out out/net-smoke/pipe --work-dir out/net-smoke/pipe/work \
+	    --envs 2 --horizon 5 --iterations 2 --quiet
+	@# the agent must outlive the training run, so it runs from the built
+	@# binary (killing a wrapping `cargo run` would orphan the listener)
+	target/release/drlfoam agent --bind 127.0.0.1:7912 \
+	    > out/net-smoke/agent.log 2>&1 & \
+	AGENT_PID=$$!; \
+	for _ in $$(seq 1 100); do \
+	    grep -q "agent listening on" out/net-smoke/agent.log 2>/dev/null && break; \
+	    sleep 0.1; \
+	done; \
+	cargo run --release --quiet -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --executor multi-process --transport tcp --hosts 127.0.0.1:7912:2 \
+	    --artifacts out/net-smoke/no-artifacts \
+	    --out out/net-smoke/tcp --work-dir out/net-smoke/tcp/work \
+	    --envs 2 --horizon 5 --iterations 2 --quiet; \
+	STATUS=$$?; kill $$AGENT_PID 2>/dev/null || true; exit $$STATUS
+	cut -d, -f1-9 out/net-smoke/pipe/train_log.csv > out/net-smoke/pipe-learning.csv
+	cut -d, -f1-9 out/net-smoke/tcp/train_log.csv > out/net-smoke/tcp-learning.csv
+	cmp out/net-smoke/pipe-learning.csv out/net-smoke/tcp-learning.csv
+	cmp out/net-smoke/pipe/policy_final.bin out/net-smoke/tcp/policy_final.bin
 	cargo bench --bench exec_transport -- --gate
 
 # Native CFD engine smoke: cylinder training with zero artifacts on the

@@ -1,8 +1,9 @@
 //! Bench: execution-backend transport costs — wire-protocol frame
 //! round-trip latency (encode + decode through a byte buffer) and live
 //! step/episode throughput per (executor, transport) lane: in-process
-//! threads, worker processes over pipes, and worker processes over the
-//! shared-memory seqlock rings. Surrogate scenario, zero artifacts.
+//! threads, worker processes over pipes, over the shared-memory seqlock
+//! rings, and over the loopback socket transports (tcp, uds). Surrogate
+//! scenario, zero artifacts.
 //!
 //! This is the price tag of closing the sim-to-real gap: how much the
 //! process boundary costs relative to the in-process channel path the
@@ -16,7 +17,8 @@
 //!
 //! CI gate: `cargo bench --bench exec_transport -- --gate` runs only a
 //! quick best-of-N lockstep comparison and exits non-zero if shm step
-//! throughput falls below pipe — the sanity bar for the shm ring.
+//! throughput falls below pipe (the sanity bar for the shm ring) or uds
+//! falls below pipe (the sanity bar for the socket data plane).
 
 use std::io::Cursor;
 use std::sync::Arc;
@@ -53,11 +55,13 @@ fn pool_cfg(
     }
 }
 
-/// The three lanes of the conformance matrix's transport axis.
-const LANES: [(&str, ExecutorKind, TransportKind); 3] = [
+/// The five lanes of the conformance matrix's transport axis.
+const LANES: [(&str, ExecutorKind, TransportKind); 5] = [
     ("in-process", ExecutorKind::InProcess, TransportKind::Pipe),
     ("mp/pipe", ExecutorKind::MultiProcess, TransportKind::Pipe),
     ("mp/shm", ExecutorKind::MultiProcess, TransportKind::Shm),
+    ("mp/tcp", ExecutorKind::MultiProcess, TransportKind::Tcp),
+    ("mp/uds", ExecutorKind::MultiProcess, TransportKind::Uds),
 ];
 
 fn frame_roundtrip_bench(results: &mut Vec<bench::BenchResult>) {
@@ -187,9 +191,12 @@ fn lockstep_bench(results: &mut Vec<bench::BenchResult>) {
     }
 }
 
-/// `--gate`: the CI sanity bar. Quick best-of-N lockstep comparison;
-/// exits 1 if the shm data plane delivers fewer steps/s than the pipe
-/// it is supposed to beat.
+/// `--gate`: the CI sanity bar. Quick best-of-N lockstep comparisons;
+/// exits 1 if the shm data plane delivers fewer steps/s than the pipe it
+/// is supposed to beat, or if the uds socket lane (frames over a
+/// loopback Unix socket, no relay hop) falls below the pipe — a socket
+/// transport slower than stdio would make the multi-node plane a
+/// regression even on one host.
 fn gate() -> ! {
     if option_env!("CARGO_BIN_EXE_drlfoam").is_none() {
         println!("gate skipped: no worker binary");
@@ -198,19 +205,31 @@ fn gate() -> ! {
     let (envs, horizon, reps) = (2usize, 50usize, 7usize);
     let pipe_s = lockstep_best_s("gate-pipe", ExecutorKind::MultiProcess, TransportKind::Pipe, envs, horizon, reps);
     let shm_s = lockstep_best_s("gate-shm", ExecutorKind::MultiProcess, TransportKind::Shm, envs, horizon, reps);
+    let uds_s = lockstep_best_s("gate-uds", ExecutorKind::MultiProcess, TransportKind::Uds, envs, horizon, reps);
     let steps = (envs * horizon) as f64;
     println!(
-        "gate: pipe {:.0} steps/s (best {:.2} ms), shm {:.0} steps/s (best {:.2} ms)",
+        "gate: pipe {:.0} steps/s (best {:.2} ms), shm {:.0} steps/s (best {:.2} ms), \
+         uds {:.0} steps/s (best {:.2} ms)",
         steps / pipe_s,
         pipe_s * 1e3,
         steps / shm_s,
-        shm_s * 1e3
+        shm_s * 1e3,
+        steps / uds_s,
+        uds_s * 1e3
     );
+    let mut failed = false;
     if shm_s > pipe_s {
         eprintln!("GATE FAILED: shm lockstep throughput below pipe");
+        failed = true;
+    }
+    if uds_s > pipe_s {
+        eprintln!("GATE FAILED: uds lockstep throughput below pipe");
+        failed = true;
+    }
+    if failed {
         std::process::exit(1);
     }
-    println!("gate OK: shm >= pipe");
+    println!("gate OK: shm >= pipe, uds >= pipe");
     std::process::exit(0);
 }
 

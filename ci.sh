@@ -21,7 +21,12 @@
 #                            -> respawn + episode re-queue)
 #  10. shm transport smoke   --transport shm train bitwise-diffed against
 #                            --transport pipe, then the exec_transport
-#                            bench's --gate (shm steps/s >= pipe)
+#                            bench's --gate (shm steps/s >= pipe, and
+#                            uds steps/s >= pipe)
+#  10b. socket smoke         --transport tcp trained through a localhost
+#                            `drlfoam agent` process, bitwise-diffed
+#                            against --transport pipe (learning columns
+#                            + policy_final.bin)
 #  11. native CFD smoke      --cfd-backend native cylinder training with
 #                            zero artifacts, bitwise-diffed across a
 #                            re-run, a thread-count change, and
@@ -202,9 +207,51 @@ if ls "$SHM_OUT"/shm/work/*.ring >/dev/null 2>&1; then
 fi
 
 # 9e. transport throughput gate: the shm data plane must not be slower
-#     than the pipe it replaces on the lockstep (data-plane-heavy) path.
-echo "== shm throughput gate (cargo bench exec_transport -- --gate)"
+#     than the pipe it replaces on the lockstep (data-plane-heavy) path,
+#     and neither may the uds socket lane (the multi-node plane's
+#     single-host floor).
+echo "== transport throughput gate (cargo bench exec_transport -- --gate)"
 cargo bench --bench exec_transport -- --gate
+
+# 9e2. socket transport smoke: --transport tcp with the workers behind a
+#      real `drlfoam agent` on localhost, bitwise-diffed against the
+#      pipe transport exactly like 9d — the CI-sized slice of the
+#      multi-node acceptance bar (agents relay frames, never touch them).
+echo "== socket transport smoke (--transport tcp via a localhost agent, bitwise vs pipe)"
+NET_OUT=out/ci-net-smoke
+NET_PORT=7911
+rm -rf "$NET_OUT"
+mkdir -p "$NET_OUT"
+cargo run --release --quiet -- train \
+    --scenario surrogate --backend native --update-backend native \
+    --executor multi-process --transport pipe \
+    --artifacts "$NET_OUT/no-artifacts" \
+    --out "$NET_OUT/pipe" --work-dir "$NET_OUT/pipe/work" \
+    --envs 2 --horizon 5 --iterations 2 --quiet
+# the agent must outlive the training run; use the built binary directly
+# (killing a wrapping `cargo run` would orphan the listener)
+"${CARGO_TARGET_DIR:-target}/release/drlfoam" agent --bind 127.0.0.1:$NET_PORT \
+    > "$NET_OUT/agent.log" 2>&1 &
+AGENT_PID=$!
+trap 'kill $AGENT_PID 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    grep -q "agent listening on" "$NET_OUT/agent.log" 2>/dev/null && break
+    sleep 0.1
+done
+grep -q "agent listening on" "$NET_OUT/agent.log"
+cargo run --release --quiet -- train \
+    --scenario surrogate --backend native --update-backend native \
+    --executor multi-process --transport tcp --hosts 127.0.0.1:$NET_PORT:2 \
+    --artifacts "$NET_OUT/no-artifacts" \
+    --out "$NET_OUT/tcp" --work-dir "$NET_OUT/tcp/work" \
+    --envs 2 --horizon 5 --iterations 2 --quiet
+kill $AGENT_PID 2>/dev/null || true
+wait $AGENT_PID 2>/dev/null || true
+trap - EXIT
+cut -d, -f1-9 "$NET_OUT/pipe/train_log.csv" > "$NET_OUT/pipe-learning.csv"
+cut -d, -f1-9 "$NET_OUT/tcp/train_log.csv" > "$NET_OUT/tcp-learning.csv"
+cmp "$NET_OUT/pipe-learning.csv" "$NET_OUT/tcp-learning.csv"
+cmp "$NET_OUT/pipe/policy_final.bin" "$NET_OUT/tcp/policy_final.bin"
 
 # 9f. native-CFD smoke: a real cylinder training run with zero artifacts
 #     (--cfd-backend native; the base flow develops in-process). Run three

@@ -53,6 +53,11 @@ pub struct Calibration {
     /// shared-disk bandwidth, bytes/s (FIT to the paper's N_envs > 30
     /// baseline cliff: 30 envs x 5 MB / 2.7 s ~ 55 MB/s saturation point)
     pub disk_bw: f64,
+    /// coordinator↔agent socket round-trip, seconds (measured by
+    /// `crate::exec::net::measure_rtt` when a socket transport is live;
+    /// 0 = single-host, no inter-node term). The DES charges each
+    /// remotely-placed env one round trip per actuation period.
+    pub t_net_rtt: f64,
     /// rank-dependent period cost model (fit to Table I, see mpi.rs)
     pub rank_model: RankPeriodModel,
 }
@@ -85,6 +90,7 @@ impl Calibration {
             t_io_cpu_baseline: 0.060,
             t_io_cpu_optimized: 0.004,
             disk_bw: 60.0e6,
+            t_net_rtt: 0.0,
             rank_model: RankPeriodModel::default(),
         }
     }
@@ -135,6 +141,7 @@ impl Calibration {
             ("t_io_cpu_baseline", json::num(self.t_io_cpu_baseline)),
             ("t_io_cpu_optimized", json::num(self.t_io_cpu_optimized)),
             ("disk_bw", json::num(self.disk_bw)),
+            ("t_net_rtt", json::num(self.t_net_rtt)),
         ])
     }
 
@@ -154,6 +161,14 @@ impl Calibration {
             t_io_cpu_baseline: j.get("t_io_cpu_baseline")?.as_f64()?,
             t_io_cpu_optimized: j.get("t_io_cpu_optimized")?.as_f64()?,
             disk_bw: j.get("disk_bw")?.as_f64()?,
+            // absent in calib.json files written before the socket
+            // transports existed — default to the single-host 0
+            t_net_rtt: j
+                .get("t_net_rtt")
+                .ok()
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(0.0),
             rank_model: paper.rank_model,
         })
     }
@@ -188,6 +203,17 @@ mod tests {
         assert_eq!(c2.t_period_1rank, c.t_period_1rank);
         assert_eq!(c2.disk_bw, c.disk_bw);
         assert_eq!(c2.epochs, c.epochs);
+    }
+
+    #[test]
+    fn json_without_net_rtt_loads_with_zero_default() {
+        // calib.json written before the socket transports existed
+        let mut j = Calibration::paper_scale().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("t_net_rtt");
+        }
+        let c = Calibration::from_json(&j).unwrap();
+        assert_eq!(c.t_net_rtt, 0.0);
     }
 
     #[test]

@@ -51,6 +51,13 @@ pub struct SimConfig {
     /// Rollout scheduler policy, mirrored from the live coordinator
     /// (`--sync full|partial:<k>|async`).
     pub sync: SyncPolicy,
+    /// How many of the `n_envs` environments run on a remote host behind
+    /// a `drlfoam agent` (the placement TAIL: the planner packs host 0 —
+    /// the coordinator's — first, so remote envs are always the highest
+    /// indices). Each remote env pays one coordinator↔agent round trip
+    /// ([`Calibration::t_net_rtt`], charged twice: action out + probes
+    /// back) per actuation period, booked as exchange time.
+    pub remote_envs: usize,
     pub seed: u64,
 }
 
@@ -115,6 +122,7 @@ impl SimResult {
     ///         episodes_total: 8,
     ///         io_mode: IoMode::InMemory,
     ///         sync: SyncPolicy::Full,
+    ///         remote_envs: 0,
     ///         seed: 1,
     ///     },
     /// );
@@ -184,6 +192,10 @@ fn simulate_full(calib: &Calibration, cfg: &SimConfig) -> SimResult {
         IoMode::InMemory => (0.0, 0.0),
     };
     let t_period = calib.t_period_1rank * calib.rank_model.period_factor(cfg.n_ranks);
+    // inter-node term: the placement tail lives behind an agent and pays
+    // one socket round trip per period (action out + probes back)
+    let remote = cfg.remote_envs.min(n_envs);
+    let net_of = |e: usize| if e >= n_envs - remote { 2.0 * calib.t_net_rtt } else { 0.0 };
     // serial PPO update at the barrier: epochs x minibatches(total samples)
     let samples = n_envs * horizon;
     let minibatches = samples.div_ceil(calib.minibatch);
@@ -213,9 +225,10 @@ fn simulate_full(calib: &Calibration, cfg: &SimConfig) -> SimResult {
 
         for e in 0..n_envs {
             let jit = ep_factor[e] * (mu_corr + sigma * rng.normal()).exp();
-            let dt = (t_period + calib.t_policy) * jit;
+            let dt = (t_period + calib.t_policy) * jit + net_of(e);
             agg.cfd_s += t_period * jit;
             agg.policy_s += calib.t_policy * jit;
+            agg.io_s += net_of(e);
             heap.push(Event {
                 time: clock + dt,
                 env: e,
@@ -235,6 +248,7 @@ fn simulate_full(calib: &Calibration, cfg: &SimConfig) -> SimResult {
                             ev.env,
                             ev.time,
                             t_period * ep_factor[ev.env],
+                            net_of(ev.env),
                             calib,
                             sigma,
                             mu_corr,
@@ -267,6 +281,7 @@ fn simulate_full(calib: &Calibration, cfg: &SimConfig) -> SimResult {
                         ev.env,
                         ev.time,
                         t_period * ep_factor[ev.env],
+                        net_of(ev.env),
                         calib,
                         sigma,
                         mu_corr,
@@ -315,6 +330,7 @@ fn finish_period(
     env: usize,
     now: f64,
     t_period: f64,
+    net_s: f64,
     calib: &Calibration,
     sigma: f64,
     mu_corr: f64,
@@ -327,9 +343,10 @@ fn finish_period(
         return;
     }
     let jit = (mu_corr + sigma * rng.normal()).exp();
-    let dt = (t_period + calib.t_policy) * jit;
+    let dt = (t_period + calib.t_policy) * jit + net_s;
     agg.cfd_s += t_period * jit;
     agg.policy_s += calib.t_policy * jit;
+    agg.io_s += net_s;
     heap.push(Event {
         time: now + dt,
         env,
@@ -349,6 +366,7 @@ mod tests {
             episodes_total: 300,
             io_mode: mode,
             sync: SyncPolicy::Full,
+            remote_envs: 0,
             seed: 42,
         }
     }
@@ -386,6 +404,35 @@ mod tests {
     }
 
     #[test]
+    fn remote_envs_pay_the_round_trip_only_when_rtt_is_nonzero() {
+        let mut c = Calibration::paper_scale();
+        let mut conf = cfg(8, 1, IoMode::Optimized);
+        let local = simulate_training(&c, &conf);
+        // remote placement with a zero RTT is bit-identical (same draws)
+        conf.remote_envs = 4;
+        let free = simulate_training(&c, &conf);
+        assert_eq!(free.total_s, local.total_s);
+        assert_eq!(free.breakdown.io_s, local.breakdown.io_s);
+        // a real RTT slows the run and lands in the exchange bucket, and
+        // the more envs sit behind the agent the larger the term
+        c.t_net_rtt = 0.050;
+        let remote4 = simulate_training(&c, &conf);
+        assert!(remote4.total_s > local.total_s);
+        assert!(remote4.breakdown.io_s > local.breakdown.io_s);
+        conf.remote_envs = 8;
+        let remote8 = simulate_training(&c, &conf);
+        assert!(remote8.breakdown.io_s > remote4.breakdown.io_s);
+        // async/partial charge the same per-period term
+        for sync in [SyncPolicy::Partial { k: 4 }, SyncPolicy::Async] {
+            let mut sc = cfg(8, 1, IoMode::Optimized);
+            sc.sync = sync;
+            let base = simulate_training(&c, &sc).total_s;
+            sc.remote_envs = 8;
+            assert!(simulate_training(&c, &sc).total_s > base);
+        }
+    }
+
+    #[test]
     fn disk_saturates_at_many_envs() {
         let c = Calibration::paper_scale();
         let u10 = simulate_training(&c, &cfg(10, 1, IoMode::Baseline)).disk_utilisation;
@@ -418,6 +465,7 @@ mod tests {
                     episodes_total: 60,
                     io_mode: mode,
                     sync,
+                    remote_envs: rng.below(envs + 1),
                     seed: rng.next_u64(),
                 },
             );
@@ -458,6 +506,8 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
         IoMode::InMemory => (0.0, 0.0),
     };
     let t_period = calib.t_period_1rank * calib.rank_model.period_factor(cfg.n_ranks);
+    let remote = cfg.remote_envs.min(n_envs);
+    let net_of = |e: usize| if e >= n_envs - remote { 2.0 * calib.t_net_rtt } else { 0.0 };
     // per-episode update (single trajectory): epochs x ceil(horizon/mb)
     let t_update = calib.epochs as f64
         * horizon.div_ceil(calib.minibatch) as f64
@@ -486,16 +536,17 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
     let mut env_version = vec![0usize; n_envs];
     let mut stale_sum = 0u64;
 
-    let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64| -> f64 {
+    let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64, net: f64| -> f64 {
         let jit = f * (mu_corr + sigma * rng.normal()).exp();
         agg.cfd_s += t_period * jit;
         agg.policy_s += calib.t_policy * jit;
-        (t_period + calib.t_policy) * jit
+        agg.io_s += net;
+        (t_period + calib.t_policy) * jit + net
     };
 
     for e in 0..n_envs {
         ep_factor[e] = (ep_mu_corr + ep_sigma * rng.normal()).exp();
-        let dt = draw_period(&mut rng, &mut agg, ep_factor[e]);
+        let dt = draw_period(&mut rng, &mut agg, ep_factor[e], net_of(e));
         heap.push(Event { time: dt, env: e, kind: EventKind::ComputeDone });
     }
 
@@ -538,7 +589,7 @@ fn simulate_async(calib: &Calibration, cfg: &SimConfig) -> SimResult {
             // queued): version = updates completed by next_time
             env_version[ev.env] = update_done.partition_point(|&d| d <= next_time);
         }
-        let dt = draw_period(&mut rng, &mut agg, ep_factor[ev.env]);
+        let dt = draw_period(&mut rng, &mut agg, ep_factor[ev.env], net_of(ev.env));
         heap.push(Event { time: next_time + dt, env: ev.env, kind: EventKind::ComputeDone });
     }
 
@@ -583,6 +634,8 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
         IoMode::InMemory => (0.0, 0.0),
     };
     let t_period = calib.t_period_1rank * calib.rank_model.period_factor(cfg.n_ranks);
+    let remote = cfg.remote_envs.min(n_envs);
+    let net_of = |e: usize| if e >= n_envs - remote { 2.0 * calib.t_net_rtt } else { 0.0 };
     // one update consumes `take` trajectories (= k except a short final
     // batch): epochs x minibatches(take x horizon), like the live trainer
     let t_update_for = |take: usize| -> f64 {
@@ -610,17 +663,18 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
     let mut env_version = vec![0usize; n_envs];
     let mut stale_sum = 0u64;
 
-    let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64| -> f64 {
+    let mut draw_period = |rng: &mut Rng, agg: &mut SimBreakdown, f: f64, net: f64| -> f64 {
         let jit = f * (mu_corr + sigma * rng.normal()).exp();
         agg.cfd_s += t_period * jit;
         agg.policy_s += calib.t_policy * jit;
-        (t_period + calib.t_policy) * jit
+        agg.io_s += net;
+        (t_period + calib.t_policy) * jit + net
     };
 
     let mut started = n_envs.min(total_episodes);
     for e in 0..started {
         ep_factor[e] = (ep_mu_corr + ep_sigma * rng.normal()).exp();
-        let dt = draw_period(&mut rng, &mut agg, ep_factor[e]);
+        let dt = draw_period(&mut rng, &mut agg, ep_factor[e], net_of(e));
         heap.push(Event { time: dt, env: e, kind: EventKind::ComputeDone });
     }
 
@@ -646,7 +700,7 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
         };
         periods_left[ev.env] -= 1;
         if periods_left[ev.env] > 0 {
-            let dt = draw_period(&mut rng, &mut agg, ep_factor[ev.env]);
+            let dt = draw_period(&mut rng, &mut agg, ep_factor[ev.env], net_of(ev.env));
             heap.push(Event { time: next_time + dt, env: ev.env, kind: EventKind::ComputeDone });
             continue;
         }
@@ -689,7 +743,7 @@ fn simulate_partial(calib: &Calibration, cfg: &SimConfig) -> SimResult {
                 started += 1;
                 periods_left[e] = horizon;
                 ep_factor[e] = (ep_mu_corr + ep_sigma * rng.normal()).exp();
-                let dt = draw_period(&mut rng, &mut agg, ep_factor[e]);
+                let dt = draw_period(&mut rng, &mut agg, ep_factor[e], net_of(e));
                 heap.push(Event { time: done + dt, env: e, kind: EventKind::ComputeDone });
             }
         }
@@ -726,6 +780,7 @@ mod async_tests {
             episodes_total: 600,
             io_mode: mode,
             sync: SyncPolicy::Full,
+            remote_envs: 0,
             seed: 9,
         }
     }

@@ -130,6 +130,14 @@ pub struct PlannerConfig {
     /// Wall-time penalty per unit of mean parameter staleness in the
     /// scalar score (`t * (1 + w * staleness)`). 0 = pure wall time.
     pub staleness_weight: f64,
+    /// Host topology (cores per host, index 0 = the coordinator's host;
+    /// mirrors `--hosts host:cores,...`). `None` = one big SMP box.
+    /// When set, a layout is feasible only if its rank groups pack onto
+    /// the hosts first-fit without splitting a group
+    /// ([`crate::exec::net::place_rank_groups`]), and every env placed
+    /// off host 0 is charged the inter-node round trip
+    /// ([`Calibration::t_net_rtt`]) in the DES.
+    pub hosts: Option<Vec<usize>>,
     /// DES seed shared by every scored layout.
     pub seed: u64,
 }
@@ -151,6 +159,7 @@ impl PlannerConfig {
             ],
             io_options: vec![IoMode::Baseline, IoMode::Optimized],
             staleness_weight: 0.5,
+            hosts: None,
             seed: 1,
         }
     }
@@ -166,6 +175,9 @@ pub struct Plan {
     /// dedicated update master under [`SyncPolicy::Async`] (the other
     /// policies serialize the update on the envs' own time).
     pub total_cpus: usize,
+    /// Distinct hosts the first-fit placement uses (1 without a
+    /// [`PlannerConfig::hosts`] topology).
+    pub n_hosts: usize,
     pub sync: SyncPolicy,
     pub io_mode: IoMode,
     /// Simulated wall time (hours) for the layout's shared budget —
@@ -189,19 +201,20 @@ pub struct Plan {
 }
 
 /// Header of `out/plan.csv` (one [`Plan`] per row, ranked best-first).
-pub const PLAN_CSV_HEADER: &str = "n_envs,n_ranks,total_cpus,sync,io,duration_h,speedup,\
-                                   efficiency_pct,mean_staleness,barrier_idle_s,disk_util_pct,\
-                                   pareto,score";
+pub const PLAN_CSV_HEADER: &str = "n_envs,n_ranks,total_cpus,n_hosts,sync,io,duration_h,\
+                                   speedup,efficiency_pct,mean_staleness,barrier_idle_s,\
+                                   disk_util_pct,pareto,score";
 
 impl Plan {
     /// One `plan.csv` row, inverse of [`Plan::from_csv`] up to the
     /// printed precision.
     pub fn to_csv(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.4},{:.3},{:.2},{:.4},{:.3},{:.2},{},{:.6}",
+            "{},{},{},{},{},{},{:.4},{:.3},{:.2},{:.4},{:.3},{:.2},{},{:.6}",
             self.n_envs,
             self.n_ranks,
             self.total_cpus,
+            self.n_hosts,
             self.sync.name(),
             self.io_mode.name(),
             self.duration_h,
@@ -219,8 +232,8 @@ impl Plan {
     /// [`crate::metrics::tables::parse_csv`]).
     pub fn from_csv(fields: &[String]) -> Result<Plan> {
         anyhow::ensure!(
-            fields.len() == 13,
-            "plan.csv row has {} fields, expected 13",
+            fields.len() == 14,
+            "plan.csv row has {} fields, expected 14",
             fields.len()
         );
         let num = |i: usize| -> Result<f64> {
@@ -239,16 +252,17 @@ impl Plan {
             n_envs: int(0)?,
             n_ranks: int(1)?,
             total_cpus: int(2)?,
-            sync: SyncPolicy::parse(&fields[3])?,
-            io_mode: IoMode::parse(&fields[4])?,
-            duration_h: num(5)?,
-            speedup: num(6)?,
-            efficiency_pct: num(7)?,
-            mean_staleness: num(8)?,
-            barrier_idle_s: num(9)?,
-            disk_utilisation: num(10)? / 100.0,
-            pareto: int(11)? != 0,
-            score: num(12)?,
+            n_hosts: int(3)?,
+            sync: SyncPolicy::parse(&fields[4])?,
+            io_mode: IoMode::parse(&fields[5])?,
+            duration_h: num(6)?,
+            speedup: num(7)?,
+            efficiency_pct: num(8)?,
+            mean_staleness: num(9)?,
+            barrier_idle_s: num(10)?,
+            disk_utilisation: num(11)? / 100.0,
+            pareto: int(12)? != 0,
+            score: num(13)?,
         })
     }
 }
@@ -291,6 +305,7 @@ impl PlanSet {
                     p.n_envs.to_string(),
                     p.n_ranks.to_string(),
                     p.total_cpus.to_string(),
+                    p.n_hosts.to_string(),
                     p.sync.name(),
                     p.io_mode.name().to_string(),
                     format!("{:.1}", p.duration_h),
@@ -314,8 +329,8 @@ impl PlanSet {
                 self.plans.len()
             ),
             &[
-                "#", "N_envs", "N_ranks", "N_cpus", "sync", "io", "duration (h)", "speedup",
-                "eff (%)", "staleness", "P",
+                "#", "N_envs", "N_ranks", "N_cpus", "hosts", "sync", "io", "duration (h)",
+                "speedup", "eff (%)", "staleness", "P",
             ],
             &rows,
         )
@@ -383,7 +398,20 @@ pub fn search(calib: &Calibration, cfg: &PlannerConfig) -> Result<PlanSet> {
         min_ranks
     );
 
-    let des = |envs: usize, ranks: usize, io_mode: IoMode, sync: SyncPolicy, episodes: usize| {
+    if let Some(hosts) = &cfg.hosts {
+        anyhow::ensure!(!hosts.is_empty(), "--hosts topology has no hosts");
+        anyhow::ensure!(
+            hosts.iter().all(|&c| c >= 1),
+            "--hosts topology has a zero-core host"
+        );
+    }
+
+    let des = |envs: usize,
+               ranks: usize,
+               io_mode: IoMode,
+               sync: SyncPolicy,
+               episodes: usize,
+               remote_envs: usize| {
         simulate_training(
             calib,
             &SimConfig {
@@ -392,14 +420,17 @@ pub fn search(calib: &Calibration, cfg: &PlannerConfig) -> Result<PlanSet> {
                 episodes_total: episodes,
                 io_mode,
                 sync,
+                remote_envs,
                 seed: cfg.seed,
             },
         )
     };
 
     // the paper's global reference: Table I's 225.2 h corner (reused
-    // below when the sweep enumerates the identical layout)
-    let reference = des(1, 1, IoMode::Baseline, SyncPolicy::Full, cfg.episodes_total);
+    // below when the sweep enumerates the identical layout). A single
+    // env always packs onto host 0 — the coordinator's — so the
+    // reference never pays the inter-node term.
+    let reference = des(1, 1, IoMode::Baseline, SyncPolicy::Full, cfg.episodes_total, 0);
     let reference_h = reference.total_hours();
 
     let mut ranks_options = cfg.ranks_options.clone();
@@ -426,6 +457,23 @@ pub fn search(calib: &Calibration, cfg: &PlannerConfig) -> Result<PlanSet> {
             None => (1..=(cfg.cores / ranks)).collect(),
         };
         for envs in env_candidates {
+            // host topology: the rank groups must pack first-fit without
+            // splitting a group; envs placed off host 0 pay the
+            // inter-node round trip in the DES
+            let (remote_envs, n_hosts) = match &cfg.hosts {
+                Some(hosts) => match crate::exec::net::place_rank_groups(hosts, envs, ranks) {
+                    Ok(placement) => {
+                        let remote = placement.iter().filter(|&&h| h != 0).count();
+                        let mut used: Vec<usize> = placement.clone();
+                        used.sort_unstable();
+                        used.dedup();
+                        (remote, used.len().max(1))
+                    }
+                    // fits the core budget but not the topology
+                    Err(_) => continue,
+                },
+                None => (0, 1),
+            };
             // the shared per-layout budget: smallest whole-per-env count
             // >= episodes_total, so every sync policy of this layout
             // trains the identical number of episodes (the synchronous
@@ -459,7 +507,7 @@ pub fn search(calib: &Calibration, cfg: &PlannerConfig) -> Result<PlanSet> {
                     let r = if is_reference {
                         reference.clone()
                     } else {
-                        des(envs, ranks, io_mode, sync, budget)
+                        des(envs, ranks, io_mode, sync, budget, remote_envs)
                     };
                     let t = r.total_hours();
                     let cpus = r.total_cpus + master;
@@ -467,6 +515,7 @@ pub fn search(calib: &Calibration, cfg: &PlannerConfig) -> Result<PlanSet> {
                         n_envs: envs,
                         n_ranks: ranks,
                         total_cpus: cpus,
+                        n_hosts,
                         sync,
                         io_mode,
                         duration_h: t,
@@ -576,6 +625,47 @@ mod tests {
         assert!(
             set.plans.iter().any(|p| p.sync == SyncPolicy::Async),
             "async layouts missing from the default sweep"
+        );
+    }
+
+    #[test]
+    fn host_topology_gates_packing_and_charges_the_round_trip() {
+        let mut calib = Calibration::paper_scale();
+        calib.t_net_rtt = 0.050;
+        // two 3-core hosts: 6 cores total, but a 5-rank group fits nowhere
+        let mut cfg = small_cfg(6);
+        cfg.hosts = Some(vec![3, 3]);
+        let set = search(&calib, &cfg).unwrap();
+        assert!(
+            set.plans.iter().all(|p| p.n_ranks != 5),
+            "a 5-rank group cannot pack onto 3-core hosts"
+        );
+        // single-host layouts report 1 host; spilled layouts report 2
+        // and are slower than the same layout planned without topology
+        let spilled = set
+            .plans
+            .iter()
+            .find(|p| p.n_hosts == 2 && p.sync == SyncPolicy::Full)
+            .expect("some layout spans both hosts");
+        assert!(spilled.n_envs * spilled.n_ranks > 3);
+        assert!(set.plans.iter().any(|p| p.n_hosts == 1));
+        let flat = search(&calib, &small_cfg(6)).unwrap();
+        let twin = flat
+            .plans
+            .iter()
+            .find(|p| {
+                p.n_envs == spilled.n_envs
+                    && p.n_ranks == spilled.n_ranks
+                    && p.sync == spilled.sync
+                    && p.io_mode == spilled.io_mode
+            })
+            .unwrap();
+        assert_eq!(twin.n_hosts, 1);
+        assert!(
+            spilled.duration_h > twin.duration_h,
+            "remote placement {:.4}h not slower than single-host {:.4}h",
+            spilled.duration_h,
+            twin.duration_h
         );
     }
 

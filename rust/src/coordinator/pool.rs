@@ -74,9 +74,15 @@ pub struct PoolConfig {
     /// `train --chaos`).
     pub fault_injection: Option<String>,
     /// Data plane of the multi-process executor: every frame over the
-    /// worker pipes, or data frames over shared-memory seqlock rings
-    /// with the pipe as control channel + fallback (`--transport`).
+    /// worker pipes, data frames over shared-memory seqlock rings with
+    /// the pipe as control channel + fallback, or every frame over a
+    /// TCP / Unix-domain socket (`--transport`).
     pub transport: TransportKind,
+    /// `--hosts` topology: `drlfoam agent` endpoints with their core
+    /// counts. Empty = spawn workers directly on this machine; non-empty
+    /// requires a socket transport, and rank groups are first-fit packed
+    /// across the listed hosts.
+    pub hosts: Vec<crate::exec::net::HostSpec>,
 }
 
 impl Default for PoolConfig {
@@ -96,6 +102,7 @@ impl Default for PoolConfig {
             worker_bin: None,
             fault_injection: None,
             transport: TransportKind::Pipe,
+            hosts: Vec::new(),
         }
     }
 }
@@ -200,6 +207,11 @@ impl EnvPool {
                     cfg.transport == TransportKind::Pipe,
                     "--transport {} needs worker processes; use --executor multi-process",
                     cfg.transport.name()
+                );
+                anyhow::ensure!(
+                    cfg.hosts.is_empty(),
+                    "--hosts spans machines and needs --executor multi-process with \
+                     --transport tcp or uds"
                 );
                 Box::new(InProcessExecutor::spawn(cfg, manifest)?)
             }

@@ -101,10 +101,14 @@ pub struct TrainConfig {
     /// worker aborts once on receiving that episode (with `midframe`,
     /// leaving partially written frames), exercising respawn + re-queue.
     pub fault_injection: Option<String>,
-    /// Multi-process data plane (`--transport pipe|shm`): worker pipes
-    /// for everything, or shared-memory seqlock rings for the data
-    /// frames with the pipe as control channel + fallback.
+    /// Multi-process data plane (`--transport pipe|shm|tcp|uds`): worker
+    /// pipes for everything, shared-memory seqlock rings for the data
+    /// frames with the pipe as control channel + fallback, or a socket
+    /// per worker.
     pub transport: TransportKind,
+    /// `--hosts` topology for the socket transports: `drlfoam agent`
+    /// endpoints + core counts the rank groups are packed across.
+    pub hosts: Vec<crate::exec::net::HostSpec>,
     /// actuation periods per episode (paper: 100)
     pub horizon: usize,
     /// training iterations == episodes per environment (the episode
@@ -158,6 +162,7 @@ impl Default for TrainConfig {
             worker_bin: None,
             fault_injection: None,
             transport: TransportKind::Pipe,
+            hosts: Vec::new(),
             horizon: 100,
             iterations: 100,
             epochs: 4,
@@ -290,6 +295,7 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
         worker_bin: cfg.worker_bin.clone(),
         fault_injection: cfg.fault_injection.clone(),
         transport: cfg.transport,
+        hosts: cfg.hosts.clone(),
     };
     let pool = match &manifest {
         Some(m) => EnvPool::new(&pool_cfg, m)?,

@@ -19,7 +19,11 @@
 //!   frames (actions out, observations/step results/episodes back) move
 //!   through per-worker memory-mapped seqlock rings ([`shm`]) instead,
 //!   while the pipe remains the control channel and the per-frame
-//!   fallback — see [`TransportKind`]. Supports `ranks_per_env > 1` by
+//!   fallback — see [`TransportKind`]. With `--transport tcp|uds` every
+//!   frame instead rides a socket ([`net`]): loopback sockets to
+//!   directly-spawned children, or connections to per-host `drlfoam
+//!   agent` supervisors when `--hosts` spans machines. Supports
+//!   `ranks_per_env > 1` by
 //!   spawning *rank groups* (rank 0 does the work; ranks 1.. are
 //!   placement/heartbeat members, since the in-repo CFD is
 //!   single-core), plus heartbeat/timeout fault handling: a dead
@@ -49,6 +53,7 @@
 //! `rust/tests/exec_backend.rs`).
 
 pub mod inprocess;
+pub mod net;
 pub mod process;
 pub mod seqlock;
 pub mod shm;
@@ -125,8 +130,8 @@ impl ExecutorKind {
 }
 
 /// Which data plane the multi-process backend moves frames over
-/// (`--transport pipe|shm`). Irrelevant for the in-process backend,
-/// which never serialises anything.
+/// (`--transport pipe|shm|tcp|uds`). Irrelevant for the in-process
+/// backend, which never serialises anything.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransportKind {
     /// Every frame over the worker's stdin/stdout pipes (default).
@@ -135,6 +140,14 @@ pub enum TransportKind {
     /// stays the control channel and the fallback when ring setup fails
     /// or a frame outgrows a slot.
     Shm,
+    /// Every frame over a TCP socket ([`net`]); with `--hosts` the
+    /// connection runs through a remote `drlfoam agent`, without it the
+    /// coordinator listens on an ephemeral loopback port per worker.
+    Tcp,
+    /// Same as [`TransportKind::Tcp`] over a Unix-domain socket (one
+    /// socket file per worker under the work dir, or a `drlfoam agent`
+    /// bound to a socket path).
+    Uds,
 }
 
 impl TransportKind {
@@ -144,7 +157,12 @@ impl TransportKind {
         match s.trim().to_ascii_lowercase().as_str() {
             "pipe" | "stdio" => Ok(TransportKind::Pipe),
             "shm" | "shared-memory" => Ok(TransportKind::Shm),
-            _ => anyhow::bail!("unknown transport {s:?} (accepted: pipe|stdio, shm|shared-memory)"),
+            "tcp" => Ok(TransportKind::Tcp),
+            "uds" | "unix" => Ok(TransportKind::Uds),
+            _ => anyhow::bail!(
+                "unknown transport {s:?} (accepted: pipe|stdio, shm|shared-memory, \
+                 tcp, uds|unix)"
+            ),
         }
     }
 
@@ -153,7 +171,14 @@ impl TransportKind {
         match self {
             TransportKind::Pipe => "pipe",
             TransportKind::Shm => "shm",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
         }
+    }
+
+    /// True for the socket transports ([`net`] data plane).
+    pub fn is_socket(&self) -> bool {
+        matches!(self, TransportKind::Tcp | TransportKind::Uds)
     }
 }
 
@@ -217,7 +242,12 @@ mod tests {
 
     #[test]
     fn transport_kind_parse_round_trips_and_lists_accepted() {
-        for t in [TransportKind::Pipe, TransportKind::Shm] {
+        for t in [
+            TransportKind::Pipe,
+            TransportKind::Shm,
+            TransportKind::Tcp,
+            TransportKind::Uds,
+        ] {
             assert_eq!(TransportKind::parse(t.name()).unwrap(), t);
         }
         assert_eq!(TransportKind::parse(" Stdio ").unwrap(), TransportKind::Pipe);
@@ -225,7 +255,13 @@ mod tests {
             TransportKind::parse("SHARED-MEMORY").unwrap(),
             TransportKind::Shm
         );
-        let err = TransportKind::parse("tcp").unwrap_err().to_string();
-        assert!(err.contains("pipe") && err.contains("shm"), "{err}");
+        assert_eq!(TransportKind::parse("UNIX").unwrap(), TransportKind::Uds);
+        assert!(TransportKind::Tcp.is_socket() && TransportKind::Uds.is_socket());
+        assert!(!TransportKind::Pipe.is_socket() && !TransportKind::Shm.is_socket());
+        let err = TransportKind::parse("rdma").unwrap_err().to_string();
+        assert!(
+            err.contains("pipe") && err.contains("shm") && err.contains("tcp"),
+            "{err}"
+        );
     }
 }

@@ -1,0 +1,632 @@
+//! Socket data plane for the multi-process executor (`--transport
+//! tcp|uds`) and the `drlfoam agent` per-host supervisor.
+//!
+//! The wire protocol is unchanged — the same length-prefixed frames of
+//! [`super::wire`] move over a [`std::net::TcpStream`] or a
+//! [`std::os::unix::net::UnixStream`] instead of stdin/stdout pipes, so
+//! the transport conformance bar (bitwise learning curves,
+//! `rust/tests/exec_transport_conformance.rs`) applies verbatim. Two
+//! connection topologies share this module:
+//!
+//! * **Local (no `--hosts`)** — the coordinator binds one ephemeral
+//!   listener *per worker* (loopback TCP port, or a per-generation
+//!   socket file under the work dir), spawns the child with
+//!   `--connect tcp:127.0.0.1:PORT` / `--connect uds:PATH`, and accepts
+//!   exactly one connection. Listener↔worker is 1:1, so no
+//!   identification handshake is needed and no relay hop taxes the
+//!   throughput gate (`benches/exec_transport.rs --gate`: uds ≥ pipe).
+//!
+//! * **Agent (`--hosts host:cores[,host:cores…]`)** — the coordinator
+//!   connects *out* to a `drlfoam agent` on each host and opens one
+//!   connection per worker slot. The first frame on every connection is
+//!   [`Frame::Spawn`]; the agent execs `drlfoam worker` with piped
+//!   stdio and relays raw bytes both ways. Socket EOF therefore means
+//!   exactly what pipe EOF means, and the executor's respawn + bitwise
+//!   episode re-queue state machine ([`super::process`]) is reused
+//!   unchanged:
+//!
+//! ```text
+//! drlfoam train --hosts hostA:8,hostB:8   drlfoam agent --bind hostB:7700
+//! │ coordinator                            │ per-host supervisor
+//! ├── conn → agentA ── Spawn(env 0) ──►    ├── drlfoam worker --env-id 2
+//! ├── conn → agentA ── Spawn(env 1) ──►    │     (stdio ↔ socket relay)
+//! ├── conn → agentB ── Spawn(env 2) ──►    └── drlfoam worker --env-id 3
+//! └── conn → agentB ── Spawn(env 3) ──►
+//! ```
+//!
+//! Fault mapping: coordinator-side socket close → the agent kills that
+//! connection's worker (orphan reaping); worker exit → the agent closes
+//! the socket → the coordinator's reader sees EOF → `Died` → respawn
+//! (reconnect + re-`Spawn`) with the identical `(episode, seed)` replay.
+//! A dead agent makes the reconnect fail fast (connection refused), so a
+//! SIGKILL'd agent surfaces as a counted worker-restart error instead of
+//! a hang.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::exec::wire::{self, Frame};
+use crate::exec::TransportKind;
+
+/// Port a `drlfoam agent` binds when its `--bind`/`--hosts` entry names
+/// a host without one.
+pub const DEFAULT_AGENT_PORT: u16 = 7700;
+
+/// How long the coordinator waits for a directly-spawned worker to
+/// connect back to its per-worker listener. The worker connects before
+/// any environment setup, so this only trips when the child failed to
+/// start at all.
+pub(crate) const ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+
+// --- host topology ---------------------------------------------------------
+
+/// One `--hosts` entry: an agent endpoint plus the cores it contributes
+/// to the layout. `endpoint` is `host`, `host:port`, or (for
+/// `--transport uds`, agents on this machine) a socket path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostSpec {
+    pub endpoint: String,
+    pub cores: usize,
+}
+
+impl HostSpec {
+    /// Parse one `endpoint:cores` entry. The cores count is the *last*
+    /// `:`-separated field, so `host:port:cores` and `/path.sock:cores`
+    /// both work.
+    pub fn parse(s: &str) -> Result<HostSpec> {
+        let s = s.trim();
+        let (endpoint, cores) = s
+            .rsplit_once(':')
+            .with_context(|| format!("host spec {s:?} needs `endpoint:cores`"))?;
+        let cores: usize = cores.trim().parse().with_context(|| {
+            format!("host spec {s:?}: cores {cores:?} is not a positive integer")
+        })?;
+        ensure!(cores >= 1, "host spec {s:?} must offer at least 1 core");
+        ensure!(!endpoint.trim().is_empty(), "host spec {s:?} has an empty endpoint");
+        Ok(HostSpec {
+            endpoint: endpoint.trim().to_string(),
+            cores,
+        })
+    }
+
+    /// Parse a comma-separated `--hosts` list.
+    pub fn parse_list(s: &str) -> Result<Vec<HostSpec>> {
+        let hosts: Vec<HostSpec> =
+            s.split(',').map(HostSpec::parse).collect::<Result<_>>()?;
+        ensure!(!hosts.is_empty(), "--hosts list is empty");
+        Ok(hosts)
+    }
+
+    /// The address the coordinator dials for this host's agent under
+    /// `transport` — TCP appends [`DEFAULT_AGENT_PORT`] when the entry
+    /// carries no port; UDS uses the endpoint as a socket path.
+    pub fn agent_addr(&self, transport: TransportKind) -> String {
+        match transport {
+            TransportKind::Tcp if !self.endpoint.contains(':') => {
+                format!("{}:{DEFAULT_AGENT_PORT}", self.endpoint)
+            }
+            _ => self.endpoint.clone(),
+        }
+    }
+}
+
+/// First-fit packing of `n_envs` rank groups (each `ranks` cores, never
+/// split across hosts) onto the offered core counts. Returns the host
+/// index of each env; host 0 is the coordinator's host and fills first,
+/// so the planner's "remote env" count is the tail of this vector.
+pub fn place_rank_groups(
+    host_cores: &[usize],
+    n_envs: usize,
+    ranks: usize,
+) -> Result<Vec<usize>> {
+    ensure!(!host_cores.is_empty(), "no hosts to place rank groups on");
+    let mut free = host_cores.to_vec();
+    let mut placement = Vec::with_capacity(n_envs);
+    for env_id in 0..n_envs {
+        let Some(h) = free.iter().position(|&f| f >= ranks) else {
+            bail!(
+                "host topology {host_cores:?} cannot hold env {env_id}: \
+                 {n_envs} rank groups of {ranks} cores need more capacity \
+                 (groups are never split across hosts)"
+            );
+        };
+        free[h] -= ranks;
+        placement.push(h);
+    }
+    Ok(placement)
+}
+
+// --- streams and listeners -------------------------------------------------
+
+/// One established coordinator↔worker (or coordinator↔agent) socket.
+/// TCP runs with `TCP_NODELAY`: frames are small and latency-bound, and
+/// the writer flushes per frame exactly like the pipe transport.
+pub(crate) enum NetStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl NetStream {
+    pub(crate) fn try_clone(&self) -> Result<NetStream> {
+        Ok(match self {
+            NetStream::Tcp(s) => NetStream::Tcp(s.try_clone().context("cloning tcp stream")?),
+            NetStream::Uds(s) => NetStream::Uds(s.try_clone().context("cloning unix stream")?),
+        })
+    }
+
+    /// Close both directions; a peer (or our own reader thread) blocked
+    /// in `read` wakes with EOF.
+    pub(crate) fn shutdown_both(&self) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            NetStream::Uds(s) => s.shutdown(std::net::Shutdown::Both),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Uds(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// A per-worker listener (local socket mode). The UDS variant unlinks
+/// its socket file on drop so a work dir never accumulates stale
+/// sockets.
+pub(crate) enum NetListener {
+    Tcp(TcpListener),
+    Uds(UnixListener, PathBuf),
+}
+
+impl Drop for NetListener {
+    fn drop(&mut self) {
+        if let NetListener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Bind the per-worker listener for a directly-spawned child and return
+/// it with the `--connect` argument the child dials back on.
+pub(crate) fn bind_worker_listener(
+    transport: TransportKind,
+    work_dir: &Path,
+    env_id: usize,
+    rank: usize,
+    generation: u64,
+) -> Result<(NetListener, String)> {
+    match transport {
+        TransportKind::Tcp => {
+            let l = TcpListener::bind("127.0.0.1:0")
+                .context("binding an ephemeral loopback port for a worker")?;
+            let addr = l.local_addr().context("reading the bound worker port")?;
+            Ok((NetListener::Tcp(l), format!("tcp:{addr}")))
+        }
+        TransportKind::Uds => {
+            let path = work_dir.join(format!("net-env{env_id:03}-r{rank}-gen{generation}.sock"));
+            let _ = std::fs::remove_file(&path);
+            let l = UnixListener::bind(&path)
+                .with_context(|| format!("binding worker socket {}", path.display()))?;
+            let arg = format!("uds:{}", path.display());
+            Ok((NetListener::Uds(l, path), arg))
+        }
+        other => bail!("transport {} has no socket listener", other.name()),
+    }
+}
+
+/// Accept exactly one connection within `timeout` (the spawned worker
+/// dials back immediately, before any environment setup).
+pub(crate) fn accept_one(listener: &NetListener, timeout: Duration) -> Result<NetStream> {
+    let deadline = Instant::now() + timeout;
+    match listener {
+        NetListener::Tcp(l) => l.set_nonblocking(true).context("listener nonblocking")?,
+        NetListener::Uds(l, _) => l.set_nonblocking(true).context("listener nonblocking")?,
+    }
+    loop {
+        let got = match listener {
+            NetListener::Tcp(l) => l.accept().map(|(s, _)| NetStream::Tcp(s)),
+            NetListener::Uds(l, _) => l.accept().map(|(s, _)| NetStream::Uds(s)),
+        };
+        match got {
+            Ok(s) => {
+                match &s {
+                    NetStream::Tcp(t) => {
+                        t.set_nonblocking(false).context("stream blocking")?;
+                        let _ = t.set_nodelay(true);
+                    }
+                    NetStream::Uds(u) => u.set_nonblocking(false).context("stream blocking")?,
+                }
+                return Ok(s);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "worker never connected back within {:.0?} (did the child start?)",
+                    timeout
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("accepting the worker connection"),
+        }
+    }
+}
+
+/// Dial `addr` under `transport` (`host:port` for TCP, a socket path for
+/// UDS).
+pub(crate) fn connect(transport: TransportKind, addr: &str) -> Result<NetStream> {
+    match transport {
+        TransportKind::Tcp => {
+            let s = TcpStream::connect(addr)
+                .with_context(|| format!("connecting tcp://{addr}"))?;
+            let _ = s.set_nodelay(true);
+            Ok(NetStream::Tcp(s))
+        }
+        TransportKind::Uds => {
+            let s = UnixStream::connect(addr)
+                .with_context(|| format!("connecting unix socket {addr}"))?;
+            Ok(NetStream::Uds(s))
+        }
+        other => bail!("transport {} is not socket-based", other.name()),
+    }
+}
+
+/// Parse a worker `--connect` argument (`tcp:host:port` / `uds:path`)
+/// and dial it.
+pub(crate) fn connect_arg(spec: &str) -> Result<NetStream> {
+    if let Some(addr) = spec.strip_prefix("tcp:") {
+        connect(TransportKind::Tcp, addr)
+    } else if let Some(path) = spec.strip_prefix("uds:") {
+        connect(TransportKind::Uds, path)
+    } else {
+        bail!("--connect {spec:?} must be tcp:host:port or uds:path")
+    }
+}
+
+// --- inter-node latency calibration ----------------------------------------
+
+/// Measure the socket round-trip time the way `process_calibration`
+/// measures everything else: live, on this machine. A loopback
+/// listener echoes Heartbeat frames; the mean of `reps` ping-pongs is
+/// the [`Calibration::t_net_rtt`](crate::cluster::calib::Calibration)
+/// term the DES charges each remote env per actuation period.
+pub fn measure_rtt(transport: TransportKind, work_dir: &Path, reps: usize) -> Result<f64> {
+    ensure!(transport.is_socket(), "rtt measurement needs tcp or uds");
+    std::fs::create_dir_all(work_dir)
+        .with_context(|| format!("creating {}", work_dir.display()))?;
+    let (listener, arg) =
+        bind_worker_listener(transport, work_dir, 999, 0, u64::from(std::process::id()))?;
+    let echo = std::thread::Builder::new()
+        .name("rtt-echo".into())
+        .spawn(move || -> Result<()> {
+            let mut s = accept_one(&listener, ACCEPT_TIMEOUT)?;
+            while let Some(f) = wire::read_frame(&mut s)? {
+                if matches!(f, Frame::Shutdown) {
+                    break;
+                }
+                wire::write_frame(&mut s, &f)?;
+            }
+            Ok(())
+        })
+        .context("spawning rtt echo thread")?;
+    let mut s = connect_arg(&arg)?;
+    // warmup covers connection setup + first-touch costs
+    for _ in 0..8 {
+        wire::write_frame(&mut s, &Frame::Heartbeat)?;
+        wire::read_frame(&mut s)?;
+    }
+    let reps = reps.max(1);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        wire::write_frame(&mut s, &Frame::Heartbeat)?;
+        wire::read_frame(&mut s)?;
+    }
+    let rtt = t0.elapsed().as_secs_f64() / reps as f64;
+    let _ = wire::write_frame(&mut s, &Frame::Shutdown);
+    let _ = echo.join();
+    Ok(rtt)
+}
+
+// --- the drlfoam agent -----------------------------------------------------
+
+/// Serve `drlfoam agent --bind <addr>` forever: accept coordinator
+/// connections, expect a [`Frame::Spawn`] first on each, exec the
+/// worker, relay bytes. `addr` containing a `/` is a UDS socket path,
+/// anything else is a TCP `host:port` (bare `host` gets
+/// [`DEFAULT_AGENT_PORT`]).
+pub fn run_agent(bind: &str) -> Result<()> {
+    let bin = std::env::current_exe().context("resolving the worker binary for self-exec")?;
+    let uds = bind.contains('/');
+    enum L {
+        Tcp(TcpListener),
+        Uds(UnixListener),
+    }
+    let listener = if uds {
+        L::Uds(UnixListener::bind(bind).with_context(|| {
+            format!(
+                "drlfoam agent: binding {bind} failed — another agent already bound here? \
+                 (a stale socket file from a crashed agent must be removed first)"
+            )
+        })?)
+    } else {
+        let addr = if bind.contains(':') {
+            bind.to_string()
+        } else {
+            format!("{bind}:{DEFAULT_AGENT_PORT}")
+        };
+        L::Tcp(TcpListener::bind(&addr).with_context(|| {
+            format!("drlfoam agent: binding {addr} failed — another agent already bound here?")
+        })?)
+    };
+    // the readiness line scripts/tests wait for before connecting
+    println!("agent listening on {bind}");
+    io::stdout().flush().ok();
+    loop {
+        let conn = match &listener {
+            L::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                NetStream::Tcp(s)
+            }),
+            L::Uds(l) => l.accept().map(|(s, _)| NetStream::Uds(s)),
+        };
+        match conn {
+            Ok(stream) => {
+                let bin = bin.clone();
+                std::thread::Builder::new()
+                    .name("agent-conn".into())
+                    .spawn(move || {
+                        if let Err(e) = serve_connection(stream, &bin) {
+                            eprintln!("agent: connection failed: {e:#}");
+                        }
+                    })
+                    .context("spawning agent connection thread")?;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("agent accept failed"),
+        }
+    }
+}
+
+/// One coordinator connection: read the `Spawn` spec, exec the worker,
+/// relay until either side goes away. The worker is ALWAYS dead when
+/// this returns — a vanished coordinator must not leave orphaned rank
+/// groups holding cores.
+fn serve_connection(mut stream: NetStream, bin: &Path) -> Result<()> {
+    let frame = wire::read_frame(&mut stream)
+        .context("reading the spawn frame")?
+        .context("connection closed before a spawn frame")?;
+    let Frame::Spawn {
+        env_id,
+        rank,
+        seed,
+        heartbeat_ms,
+        scenario,
+        variant,
+        artifact_dir,
+        work_dir,
+        io_mode,
+        backend,
+        cfd_backend,
+        fault_injection,
+    } = frame
+    else {
+        bail!("first frame on an agent connection must be Spawn, got {frame:?}");
+    };
+    std::fs::create_dir_all(&work_dir)
+        .with_context(|| format!("creating worker work dir {work_dir}"))?;
+    let mut cmd = std::process::Command::new(bin);
+    cmd.arg("worker")
+        .arg("--env-id")
+        .arg(env_id.to_string())
+        .arg("--rank")
+        .arg(rank.to_string())
+        .arg("--scenario")
+        .arg(&scenario)
+        .arg("--variant")
+        .arg(&variant)
+        .arg("--artifacts")
+        .arg(&artifact_dir)
+        .arg("--work-dir")
+        .arg(&work_dir)
+        .arg("--io")
+        .arg(&io_mode)
+        .arg("--backend")
+        .arg(&backend)
+        .arg("--cfd-backend")
+        .arg(&cfd_backend)
+        .arg("--seed")
+        .arg(seed.to_string())
+        .arg("--heartbeat-ms")
+        .arg(heartbeat_ms.to_string())
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit());
+    if !fault_injection.is_empty() {
+        cmd.env("DRLFOAM_WORKER_CRASH", &fault_injection);
+    }
+    let mut child = cmd
+        .spawn()
+        .with_context(|| format!("agent: spawning worker env {env_id} rank {rank}"))?;
+    let mut child_in = child.stdin.take().expect("piped stdin");
+    let mut child_out = child.stdout.take().expect("piped stdout");
+    let child = std::sync::Arc::new(std::sync::Mutex::new(child));
+    let child_dn = std::sync::Arc::clone(&child);
+    let mut sock_rd = stream.try_clone()?;
+    // downstream: coordinator → worker stdin; EOF/error = coordinator
+    // gone → reap the orphan
+    let down = std::thread::Builder::new()
+        .name(format!("agent-dn-{env_id}.{rank}"))
+        .spawn(move || {
+            let mut buf = [0u8; 16384];
+            loop {
+                match sock_rd.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => {
+                        if child_in.write_all(&buf[..n]).and_then(|_| child_in.flush()).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            drop(child_in); // stdin EOF: the polite shutdown signal
+            let mut c = child_dn.lock().expect("agent child mutex poisoned");
+            let _ = c.kill();
+        })
+        .context("spawning agent downstream relay")?;
+    // upstream: worker stdout → coordinator (this thread)
+    let mut buf = [0u8; 16384];
+    loop {
+        match child_out.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if stream.write_all(&buf[..n]).and_then(|_| stream.flush()).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    // worker stdout closed (or coordinator unreachable): tear everything
+    // down — socket close tells the coordinator, kill+wait reaps the child
+    let _ = stream.shutdown_both();
+    {
+        let mut c = child.lock().expect("agent child mutex poisoned");
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    let _ = down.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_spec_parses_host_port_and_path_forms() {
+        assert_eq!(
+            HostSpec::parse("localhost:4").unwrap(),
+            HostSpec {
+                endpoint: "localhost".into(),
+                cores: 4
+            }
+        );
+        assert_eq!(
+            HostSpec::parse("node7:7801:12").unwrap(),
+            HostSpec {
+                endpoint: "node7:7801".into(),
+                cores: 12
+            }
+        );
+        assert_eq!(
+            HostSpec::parse("/tmp/agent.sock:2").unwrap(),
+            HostSpec {
+                endpoint: "/tmp/agent.sock".into(),
+                cores: 2
+            }
+        );
+        let hosts = HostSpec::parse_list("localhost:2,localhost:7801:2").unwrap();
+        assert_eq!(hosts.len(), 2);
+        assert_eq!(hosts[1].endpoint, "localhost:7801");
+        for bad in ["", "localhost", "host:0", "host:-1", "host:x", ":4"] {
+            assert!(HostSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn agent_addr_defaults_the_tcp_port_only_when_missing() {
+        let bare = HostSpec::parse("nodeA:4").unwrap();
+        assert_eq!(
+            bare.agent_addr(TransportKind::Tcp),
+            format!("nodeA:{DEFAULT_AGENT_PORT}")
+        );
+        let with_port = HostSpec::parse("nodeA:7801:4").unwrap();
+        assert_eq!(with_port.agent_addr(TransportKind::Tcp), "nodeA:7801");
+        let sock = HostSpec::parse("/run/agent.sock:4").unwrap();
+        assert_eq!(sock.agent_addr(TransportKind::Uds), "/run/agent.sock");
+    }
+
+    #[test]
+    fn placement_is_first_fit_and_never_splits_groups() {
+        // 2-core groups on 5+4 cores: host0 takes 2 groups, host1 takes 2
+        assert_eq!(place_rank_groups(&[5, 4], 4, 2).unwrap(), vec![0, 0, 1, 1]);
+        // exactly full
+        assert_eq!(place_rank_groups(&[2, 2], 2, 2).unwrap(), vec![0, 1]);
+        // a group never splits: 3+3 cores cannot hold two 4-rank groups
+        let err = place_rank_groups(&[3, 3], 1, 4).unwrap_err().to_string();
+        assert!(err.contains("never split"), "{err}");
+        // capacity exhausted mid-way names the env that failed
+        let err = place_rank_groups(&[2, 2], 3, 2).unwrap_err().to_string();
+        assert!(err.contains("env 2"), "{err}");
+    }
+
+    #[test]
+    fn connect_arg_rejects_unknown_schemes() {
+        let err = connect_arg("ipc:/tmp/x").unwrap_err().to_string();
+        assert!(err.contains("tcp:host:port"), "{err}");
+    }
+
+    #[test]
+    fn loopback_rtt_measures_positive_and_finite() {
+        let dir = std::env::temp_dir().join(format!("drlfoam-rtt-{}", std::process::id()));
+        for t in [TransportKind::Tcp, TransportKind::Uds] {
+            let rtt = measure_rtt(t, &dir, 16).unwrap();
+            assert!(rtt.is_finite() && rtt > 0.0, "{t:?} rtt {rtt}");
+            assert!(rtt < 1.0, "{t:?} loopback rtt implausibly slow: {rtt}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_listener_roundtrips_a_frame_and_cleans_up_uds_files() {
+        let dir = std::env::temp_dir().join(format!("drlfoam-lst-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for t in [TransportKind::Tcp, TransportKind::Uds] {
+            let (listener, arg) = bind_worker_listener(t, &dir, 0, 0, 1).unwrap();
+            let dial = arg.clone();
+            let peer = std::thread::spawn(move || {
+                let mut s = connect_arg(&dial).unwrap();
+                wire::write_frame(&mut s, &Frame::Heartbeat).unwrap();
+                wire::read_frame(&mut s).unwrap()
+            });
+            let mut s = accept_one(&listener, Duration::from_secs(5)).unwrap();
+            assert_eq!(
+                wire::read_frame(&mut s).unwrap().unwrap(),
+                Frame::Heartbeat
+            );
+            wire::write_frame(&mut s, &Frame::Shutdown).unwrap();
+            assert_eq!(peer.join().unwrap().unwrap(), Frame::Shutdown);
+            drop(listener);
+        }
+        // the UDS listener unlinked its socket file on drop
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "sock"))
+            .collect();
+        assert!(leftovers.is_empty(), "stale sockets: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

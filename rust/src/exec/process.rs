@@ -39,8 +39,9 @@
 //! recovered run.
 
 use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::path::PathBuf;
-use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -49,6 +50,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::pool::{EpisodeOut, PoolConfig};
+use crate::exec::net::{self, HostSpec, NetStream};
 use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
 use crate::exec::{shm, Executor, Job, LockstepReply, TransportKind};
 
@@ -111,10 +113,64 @@ impl RingLink {
     }
 }
 
+/// The coordinator→worker frame channel: the child's stdin pipe, or a
+/// socket clone under `--transport tcp|uds`.
+enum WorkerWriter {
+    Pipe(ChildStdin),
+    Net(NetStream),
+}
+
+impl Write for WorkerWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            WorkerWriter::Pipe(w) => w.write(buf),
+            WorkerWriter::Net(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            WorkerWriter::Pipe(w) => w.flush(),
+            WorkerWriter::Net(s) => s.flush(),
+        }
+    }
+}
+
+/// How the coordinator ends a worker's life. Directly-spawned children
+/// (pipe/shm transports, and the socket transports without `--hosts`)
+/// are killed and reaped as OS children; agent-spawned workers have no
+/// local `Child` — closing the connection makes the agent kill and reap
+/// them on its host, and our reader's EOF feeds the same `Died` path.
+enum WorkerHandle {
+    Local(Child),
+    Remote(NetStream),
+}
+
+impl WorkerHandle {
+    fn kill(&mut self) -> io::Result<()> {
+        match self {
+            WorkerHandle::Local(c) => c.kill(),
+            WorkerHandle::Remote(s) => s.shutdown_both(),
+        }
+    }
+
+    fn kill_and_reap(&mut self) {
+        match self {
+            WorkerHandle::Local(c) => {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            WorkerHandle::Remote(s) => {
+                let _ = s.shutdown_both();
+            }
+        }
+    }
+}
+
 struct ChildProc {
-    child: Child,
-    /// `None` once shutdown closed the pipe.
-    stdin: Option<ChildStdin>,
+    handle: WorkerHandle,
+    /// `None` once shutdown closed the channel.
+    writer: Option<WorkerWriter>,
+    /// 0 for agent-spawned workers (the pid lives on the remote host).
     pid: u32,
     generation: u64,
     last_seen: Arc<Mutex<Instant>>,
@@ -140,6 +196,11 @@ struct SpawnSpec {
     seed: u64,
     fault_injection: Option<String>,
     transport: TransportKind,
+    /// Agent endpoints (`--hosts`); empty = spawn children directly.
+    hosts: Vec<HostSpec>,
+    /// First-fit rank-group placement: `host_of_env[env_id]` indexes
+    /// `hosts`. Empty when `hosts` is.
+    host_of_env: Vec<usize>,
 }
 
 /// The rollout a worker currently owes us; replayed verbatim on respawn.
@@ -195,6 +256,18 @@ impl ProcessExecutor {
                 }
             }
         }
+        let host_of_env = if cfg.hosts.is_empty() {
+            Vec::new()
+        } else {
+            anyhow::ensure!(
+                cfg.transport.is_socket(),
+                "--hosts spans machines over sockets; use --transport tcp or uds \
+                 (got {})",
+                cfg.transport.name()
+            );
+            let cores: Vec<usize> = cfg.hosts.iter().map(|h| h.cores).collect();
+            net::place_rank_groups(&cores, cfg.n_envs, cfg.ranks_per_env)?
+        };
         let spec = SpawnSpec {
             bin,
             artifact_dir: cfg.artifact_dir.clone(),
@@ -207,6 +280,8 @@ impl ProcessExecutor {
             seed: cfg.seed,
             fault_injection: cfg.fault_injection.clone(),
             transport: cfg.transport,
+            hosts: cfg.hosts.clone(),
+            host_of_env,
         };
         let timeout =
             parse_worker_timeout(std::env::var("DRLFOAM_WORKER_TIMEOUT_S").ok().as_deref())?;
@@ -269,9 +344,9 @@ impl ProcessExecutor {
     fn write_plain(&mut self, env_id: usize, frame: &Frame) -> Result<()> {
         let g = &mut self.groups[env_id].primary;
         let w = g
-            .stdin
+            .writer
             .as_mut()
-            .with_context(|| format!("env worker {env_id} stdin already closed"))?;
+            .with_context(|| format!("env worker {env_id} channel already closed"))?;
         wire::write_frame(w, frame)
             .with_context(|| format!("sending to env worker {env_id} (pid {})", g.pid))
     }
@@ -336,8 +411,7 @@ impl ProcessExecutor {
             if let Some(link) = g.ring.take() {
                 link.teardown(); // stop the ring reader, unlink the files
             }
-            let _ = g.child.kill();
-            let _ = g.child.wait(); // reap the zombie
+            g.handle.kill_and_reap();
             g.pid
         };
         self.next_generation += 1;
@@ -381,8 +455,7 @@ impl ProcessExecutor {
         let rank = idx + 1;
         let old_pid = {
             let s = &mut self.groups[env_id].secondaries[idx];
-            let _ = s.child.kill();
-            let _ = s.child.wait(); // reap the zombie
+            s.handle.kill_and_reap();
             s.pid
         };
         self.next_generation += 1;
@@ -435,7 +508,7 @@ impl ProcessExecutor {
                 );
                 *seen = Instant::now(); // don't re-kill every poll tick
                 drop(seen);
-                let _ = g.primary.child.kill();
+                let _ = g.primary.handle.kill();
             }
         }
         Ok(())
@@ -589,42 +662,52 @@ impl Executor for ProcessExecutor {
 
     fn kill_worker(&mut self, env_id: usize) -> Result<()> {
         anyhow::ensure!(env_id < self.groups.len(), "env id {env_id} out of range");
+        // Local children die by SIGKILL; agent-spawned workers die by
+        // connection-kill (the agent reaps them on its host) — both
+        // surface as the same reader EOF → Died → respawn path.
         self.groups[env_id]
             .primary
-            .child
+            .handle
             .kill()
-            .with_context(|| format!("SIGKILLing env worker {env_id}"))
+            .with_context(|| format!("killing env worker {env_id}"))
     }
 }
 
 impl Drop for ProcessExecutor {
     fn drop(&mut self) {
-        // polite first: Shutdown frame + stdin EOF...
+        // polite first: Shutdown frame + channel close...
         for g in &mut self.groups {
             for c in std::iter::once(&mut g.primary).chain(g.secondaries.iter_mut()) {
-                if let Some(mut w) = c.stdin.take() {
+                if let Some(mut w) = c.writer.take() {
                     let _ = wire::write_frame(&mut w, &Frame::Shutdown);
-                } // dropping w closes the pipe
+                } // dropping w closes the pipe (the reader clone keeps a socket open)
                 if let Some(link) = c.ring.take() {
                     link.teardown();
                 }
             }
         }
-        // ...then a bounded wait, then SIGKILL for stragglers
+        // ...then a bounded wait, then SIGKILL for stragglers. Remote
+        // (agent-spawned) workers have no local child to wait on:
+        // closing the connection makes the agent kill and reap them.
         let deadline = Instant::now() + Duration::from_secs(2);
         for g in &mut self.groups {
             for c in std::iter::once(&mut g.primary).chain(g.secondaries.iter_mut()) {
-                loop {
-                    match c.child.try_wait() {
-                        Ok(Some(_)) => break,
-                        Ok(None) if Instant::now() < deadline => {
-                            std::thread::sleep(Duration::from_millis(10))
+                match &mut c.handle {
+                    WorkerHandle::Local(child) => loop {
+                        match child.try_wait() {
+                            Ok(Some(_)) => break,
+                            Ok(None) if Instant::now() < deadline => {
+                                std::thread::sleep(Duration::from_millis(10))
+                            }
+                            _ => {
+                                let _ = child.kill();
+                                let _ = child.wait();
+                                break;
+                            }
                         }
-                        _ => {
-                            let _ = c.child.kill();
-                            let _ = c.child.wait();
-                            break;
-                        }
+                    },
+                    WorkerHandle::Remote(conn) => {
+                        let _ = conn.shutdown_both();
                     }
                 }
             }
@@ -650,33 +733,8 @@ pub(crate) fn parse_worker_timeout(raw: Option<&str>) -> Result<Duration> {
     Ok(Duration::from_secs_f64(secs))
 }
 
-fn spawn_child(
-    spec: &SpawnSpec,
-    env_id: usize,
-    rank: usize,
-    generation: u64,
-    tx: &Sender<Event>,
-) -> Result<ChildProc> {
-    // Shm transport: create this generation's ring pair up front so the
-    // worker can map it at startup. Failure is never fatal — warn and
-    // run this worker on the pipe alone.
-    let mut rings: Option<(shm::Producer, shm::Consumer, PathBuf)> = None;
-    if rank == 0 && spec.transport == TransportKind::Shm {
-        let prefix = spec
-            .work_dir
-            .join(format!("shm-env{env_id:03}-gen{generation}"));
-        let (c2w, w2c) = shm::ring_paths(&prefix);
-        let made = shm::create(&c2w, shm::DATA_SLOTS, shm::DATA_PAYLOAD)
-            .and_then(|_| shm::create(&w2c, shm::DATA_SLOTS, shm::DATA_PAYLOAD))
-            .and_then(|_| Ok((shm::producer(&c2w)?, shm::consumer(&w2c)?)));
-        match made {
-            Ok((p, c)) => rings = Some((p, c, prefix)),
-            Err(e) => eprintln!(
-                "warning: shm ring setup for env {env_id} failed ({e:#}); \
-                 falling back to the pipe transport for this worker"
-            ),
-        }
-    }
+/// The shared `drlfoam worker` argv (everything but transport wiring).
+fn worker_command(spec: &SpawnSpec, env_id: usize, rank: usize) -> Command {
     let mut cmd = Command::new(&spec.bin);
     cmd.arg("worker")
         .arg("--env-id")
@@ -700,15 +758,134 @@ fn spawn_child(
         .arg("--seed")
         .arg(spec.seed.to_string())
         .arg("--heartbeat-ms")
-        .arg(HEARTBEAT_MS.to_string())
-        .stdin(Stdio::piped())
+        .arg(HEARTBEAT_MS.to_string());
+    if let Some(f) = &spec.fault_injection {
+        cmd.env("DRLFOAM_WORKER_CRASH", f);
+    }
+    cmd
+}
+
+/// Spawn one worker behind a socket (`--transport tcp|uds`): directly,
+/// with a per-worker loopback listener the child dials back on, or via
+/// the host's `drlfoam agent` when `--hosts` placed this env remotely.
+/// Either way the frames flow over one stream and the pipe reader loop
+/// is reused verbatim — socket EOF and pipe EOF are the same `Died`.
+fn spawn_child_socket(
+    spec: &SpawnSpec,
+    env_id: usize,
+    rank: usize,
+    generation: u64,
+    tx: &Sender<Event>,
+) -> Result<ChildProc> {
+    let (handle, stream, pid) = if spec.hosts.is_empty() {
+        let (listener, connect) =
+            net::bind_worker_listener(spec.transport, &spec.work_dir, env_id, rank, generation)?;
+        let mut cmd = worker_command(spec, env_id, rank);
+        cmd.arg("--connect")
+            .arg(&connect)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        let mut child = cmd.spawn().with_context(|| {
+            format!(
+                "spawning worker env {env_id} rank {rank} via {}",
+                spec.bin.display()
+            )
+        })?;
+        let pid = child.id();
+        let stream = match net::accept_one(&listener, net::ACCEPT_TIMEOUT) {
+            Ok(s) => s,
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e)
+                    .with_context(|| format!("env worker {env_id} rank {rank} ({connect})"));
+            }
+        };
+        (WorkerHandle::Local(child), stream, pid)
+    } else {
+        let host = &spec.hosts[spec.host_of_env[env_id]];
+        let addr = host.agent_addr(spec.transport);
+        let mut stream = net::connect(spec.transport, &addr)
+            .with_context(|| format!("dialing agent {addr} for env {env_id} rank {rank}"))?;
+        wire::write_frame(
+            &mut stream,
+            &Frame::Spawn {
+                env_id: env_id as u32,
+                rank: rank as u32,
+                seed: spec.seed,
+                heartbeat_ms: HEARTBEAT_MS,
+                scenario: spec.scenario.clone(),
+                variant: spec.variant.clone(),
+                artifact_dir: spec.artifact_dir.display().to_string(),
+                work_dir: spec.work_dir.display().to_string(),
+                io_mode: spec.io_mode.to_string(),
+                backend: spec.backend.to_string(),
+                cfd_backend: spec.cfd_backend.to_string(),
+                fault_injection: spec.fault_injection.clone().unwrap_or_default(),
+            },
+        )
+        .with_context(|| format!("sending the spawn spec to agent {addr}"))?;
+        // the worker's pid lives on the agent's host — 0 locally
+        (WorkerHandle::Remote(stream.try_clone()?), stream, 0)
+    };
+    let writer = WorkerWriter::Net(stream.try_clone()?);
+    let last_seen = Arc::new(Mutex::new(Instant::now()));
+    let shm_active = Arc::new(AtomicBool::new(false));
+    let txc = tx.clone();
+    let seen = Arc::clone(&last_seen);
+    let active = Arc::clone(&shm_active);
+    let gone = Arc::new(AtomicBool::new(false));
+    std::thread::Builder::new()
+        .name(format!("exec-read-{env_id}.{rank}"))
+        .spawn(move || reader_loop(env_id, rank, generation, stream, txc, seen, active, gone, false))
+        .context("spawning worker reader thread")?;
+    Ok(ChildProc {
+        handle,
+        writer: Some(writer),
+        pid,
+        generation,
+        last_seen,
+        ring: None,
+    })
+}
+
+fn spawn_child(
+    spec: &SpawnSpec,
+    env_id: usize,
+    rank: usize,
+    generation: u64,
+    tx: &Sender<Event>,
+) -> Result<ChildProc> {
+    if spec.transport.is_socket() {
+        return spawn_child_socket(spec, env_id, rank, generation, tx);
+    }
+    // Shm transport: create this generation's ring pair up front so the
+    // worker can map it at startup. Failure is never fatal — warn and
+    // run this worker on the pipe alone.
+    let mut rings: Option<(shm::Producer, shm::Consumer, PathBuf)> = None;
+    if rank == 0 && spec.transport == TransportKind::Shm {
+        let prefix = spec
+            .work_dir
+            .join(format!("shm-env{env_id:03}-gen{generation}"));
+        let (c2w, w2c) = shm::ring_paths(&prefix);
+        let made = shm::create(&c2w, shm::DATA_SLOTS, shm::DATA_PAYLOAD)
+            .and_then(|_| shm::create(&w2c, shm::DATA_SLOTS, shm::DATA_PAYLOAD))
+            .and_then(|_| Ok((shm::producer(&c2w)?, shm::consumer(&w2c)?)));
+        match made {
+            Ok((p, c)) => rings = Some((p, c, prefix)),
+            Err(e) => eprintln!(
+                "warning: shm ring setup for env {env_id} failed ({e:#}); \
+                 falling back to the pipe transport for this worker"
+            ),
+        }
+    }
+    let mut cmd = worker_command(spec, env_id, rank);
+    cmd.stdin(Stdio::piped())
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit());
     if let Some((_, _, prefix)) = &rings {
         cmd.arg("--shm-prefix").arg(prefix);
-    }
-    if let Some(f) = &spec.fault_injection {
-        cmd.env("DRLFOAM_WORKER_CRASH", f);
     }
     let mut child = cmd.spawn().with_context(|| {
         format!(
@@ -762,8 +939,8 @@ fn spawn_child(
         })
         .context("spawning worker reader thread")?;
     Ok(ChildProc {
-        child,
-        stdin: Some(stdin),
+        handle: WorkerHandle::Local(child),
+        writer: Some(WorkerWriter::Pipe(stdin)),
         pid,
         generation,
         last_seen,
@@ -812,13 +989,15 @@ fn event_for_frame(env_id: usize, frame: Frame, shm_active: &AtomicBool) -> Opti
 
 /// Decode worker frames into events until EOF; every frame (heartbeats
 /// included) stamps the liveness clock. The thread detaches — it exits
-/// by itself when the process dies or the executor is dropped.
+/// by itself when the process dies or the executor is dropped. Generic
+/// over the byte source: a stdout pipe, or a socket under the net
+/// transports (whose EOF means exactly the same thing).
 #[allow(clippy::too_many_arguments)]
-fn reader_loop(
+fn reader_loop<R: Read>(
     env_id: usize,
     rank: usize,
     generation: u64,
-    mut stdout: ChildStdout,
+    mut input: R,
     tx: Sender<Event>,
     last_seen: Arc<Mutex<Instant>>,
     shm_active: Arc<AtomicBool>,
@@ -826,7 +1005,7 @@ fn reader_loop(
     has_ring: bool,
 ) {
     loop {
-        let frame = match wire::read_frame(&mut stdout) {
+        let frame = match wire::read_frame(&mut input) {
             Ok(Some(f)) => f,
             // clean close and a torn frame both mean the worker is gone
             Ok(None) | Err(_) => break,

@@ -27,6 +27,13 @@
 //! | `StepOut`   | worker → coordinator | full [`StepResult`] (reply to `Step`) |
 //! | `Episode`   | worker → coordinator | trajectory + [`EpisodeStats`] (reply to `Rollout`) |
 //! | `Error`     | worker → coordinator | terminal failure message |
+//! | `Spawn`     | coordinator → agent  | worker spawn spec (socket transport, `drlfoam agent`) |
+//!
+//! `Spawn` is the only frame addressed to a `drlfoam agent` rather than a
+//! worker: it is the first frame on every coordinator→agent connection
+//! and tells the agent which worker to exec and relay. Everything after
+//! it on that connection is coordinator↔worker traffic, byte-identical
+//! to the pipe transport.
 
 use std::io::{Read, Write};
 
@@ -66,11 +73,12 @@ pub enum Tag {
     StepOut = 9,
     Episode = 10,
     Error = 11,
+    Spawn = 12,
 }
 
 impl Tag {
     /// Every tag, in discriminant order (corpus/coverage iteration).
-    pub const ALL: [Tag; 11] = [
+    pub const ALL: [Tag; 12] = [
         Tag::Hello,
         Tag::SetParams,
         Tag::Reset,
@@ -82,6 +90,7 @@ impl Tag {
         Tag::StepOut,
         Tag::Episode,
         Tag::Error,
+        Tag::Spawn,
     ];
 
     /// Inverse of `as u8`; `None` for bytes outside the protocol.
@@ -132,6 +141,24 @@ pub enum Frame {
     Error {
         msg: String,
     },
+    /// First frame on a coordinator → `drlfoam agent` connection: the
+    /// spawn spec of the worker this connection will carry. Fields
+    /// mirror the `drlfoam worker` argv contract; `fault_injection` is
+    /// the `DRLFOAM_WORKER_CRASH` spec (empty = no chaos).
+    Spawn {
+        env_id: u32,
+        rank: u32,
+        seed: u64,
+        heartbeat_ms: u64,
+        scenario: String,
+        variant: String,
+        artifact_dir: String,
+        work_dir: String,
+        io_mode: String,
+        backend: String,
+        cfd_backend: String,
+        fault_injection: String,
+    },
 }
 
 // --- little-endian scalar packing -----------------------------------------
@@ -165,6 +192,19 @@ fn get_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
 
 fn get_f64(bytes: &[u8], off: &mut usize) -> Result<f64> {
     Ok(f64::from_le_bytes(get_bytes(bytes, 8, off)?.try_into().unwrap()))
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+fn get_str(bytes: &[u8], off: &mut usize) -> Result<String> {
+    let n = get_u32(bytes, off)? as usize;
+    ensure!(n <= MAX_FRAME, "wire string implausibly long ({n})");
+    let b = get_bytes(bytes, n, off)?;
+    Ok(String::from_utf8_lossy(b).into_owned())
 }
 
 fn put_vec_f32(buf: &mut Vec<u8>, xs: &[f32]) {
@@ -354,6 +394,34 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut buf, b.len() as u32);
             buf.extend_from_slice(b);
         }
+        Frame::Spawn {
+            env_id,
+            rank,
+            seed,
+            heartbeat_ms,
+            scenario,
+            variant,
+            artifact_dir,
+            work_dir,
+            io_mode,
+            backend,
+            cfd_backend,
+            fault_injection,
+        } => {
+            buf.push(Tag::Spawn as u8);
+            put_u32(&mut buf, *env_id);
+            put_u32(&mut buf, *rank);
+            put_u64(&mut buf, *seed);
+            put_u64(&mut buf, *heartbeat_ms);
+            put_str(&mut buf, scenario);
+            put_str(&mut buf, variant);
+            put_str(&mut buf, artifact_dir);
+            put_str(&mut buf, work_dir);
+            put_str(&mut buf, io_mode);
+            put_str(&mut buf, backend);
+            put_str(&mut buf, cfd_backend);
+            put_str(&mut buf, fault_injection);
+        }
     }
     buf
 }
@@ -404,6 +472,20 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Frame> {
                 msg: String::from_utf8_lossy(b).into_owned(),
             }
         }
+        Some(Tag::Spawn) => Frame::Spawn {
+            env_id: get_u32(bytes, &mut off)?,
+            rank: get_u32(bytes, &mut off)?,
+            seed: get_u64(bytes, &mut off)?,
+            heartbeat_ms: get_u64(bytes, &mut off)?,
+            scenario: get_str(bytes, &mut off)?,
+            variant: get_str(bytes, &mut off)?,
+            artifact_dir: get_str(bytes, &mut off)?,
+            work_dir: get_str(bytes, &mut off)?,
+            io_mode: get_str(bytes, &mut off)?,
+            backend: get_str(bytes, &mut off)?,
+            cfd_backend: get_str(bytes, &mut off)?,
+            fault_injection: get_str(bytes, &mut off)?,
+        },
         None => bail!("unknown wire frame tag {tag}"),
     };
     ensure!(
@@ -545,6 +627,20 @@ mod tests {
         });
         roundtrip(Frame::Error {
             msg: "env worker setup failed: boom".into(),
+        });
+        roundtrip(Frame::Spawn {
+            env_id: 2,
+            rank: 1,
+            seed: 17,
+            heartbeat_ms: 200,
+            scenario: "surrogate".into(),
+            variant: "tiny".into(),
+            artifact_dir: "/tmp/artifacts".into(),
+            work_dir: "/tmp/work".into(),
+            io_mode: "optimized".into(),
+            backend: "native".into(),
+            cfd_backend: "reference".into(),
+            fault_injection: String::new(),
         });
     }
 

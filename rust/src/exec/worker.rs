@@ -18,8 +18,15 @@
 //! acking the rings via `Hello { shm: 1 }`. If mapping fails the worker
 //! warns on stderr, sends `Hello { shm: 0 }` and serves everything over
 //! the pipe; control frames stay on the pipe either way.
+//!
+//! When spawned with `--connect tcp:host:port|uds:path` (the
+//! coordinator's `--transport tcp|uds`, directly or via a `drlfoam
+//! agent`), the worker dials that address at startup and every frame —
+//! heartbeats included — moves over the socket instead of stdin/stdout;
+//! the serve loop is otherwise identical, which is what keeps the
+//! socket transports inside the bitwise conformance bar.
 
-use std::io::{self, Write};
+use std::io::{self, Read, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
@@ -31,6 +38,7 @@ use anyhow::{Context, Result};
 use crate::cfd::CfdBackend;
 use crate::coordinator::pool::{build_worker, run_episode};
 use crate::drl::policy::PolicyBackendKind;
+use crate::exec::net::{self, NetStream};
 use crate::exec::shm;
 use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
 use crate::io_interface::IoMode;
@@ -59,13 +67,48 @@ pub struct WorkerConfig {
     /// Ring-file prefix (`<prefix>.c2w.ring` / `<prefix>.w2c.ring`) the
     /// coordinator pre-created; `None` = pipe-only transport.
     pub shm_prefix: Option<PathBuf>,
+    /// Socket to dial back instead of serving stdin/stdout
+    /// (`tcp:host:port` / `uds:path`, from the coordinator's
+    /// `--transport tcp|uds`); frames then flow over that stream.
+    pub connect: Option<String>,
 }
 
-/// Serve this rank until Shutdown or stdin EOF. On error, a terminal
+/// Where this worker's frames go: stdout (pipe transport) or the dialed
+/// socket (`--connect`). Mirrors the coordinator's writer enum so both
+/// ends treat the stream exactly like the pipe.
+enum WireOut {
+    Stdout(io::Stdout),
+    Net(NetStream),
+}
+
+impl Write for WireOut {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            WireOut::Stdout(w) => w.write(buf),
+            WireOut::Net(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            WireOut::Stdout(w) => w.flush(),
+            WireOut::Net(s) => s.flush(),
+        }
+    }
+}
+
+/// Serve this rank until Shutdown or channel EOF. On error, a terminal
 /// `Error` frame is emitted before returning so the coordinator gets the
 /// root cause instead of a bare dead channel.
 pub fn run(cfg: &WorkerConfig) -> Result<()> {
-    let out: Arc<Mutex<io::Stdout>> = Arc::new(Mutex::new(io::stdout()));
+    let (input, output): (Box<dyn Read + Send>, WireOut) = match &cfg.connect {
+        Some(spec) => {
+            let stream = net::connect_arg(spec)
+                .with_context(|| format!("env worker {} dialing the coordinator", cfg.env_id))?;
+            (Box::new(stream.try_clone()?), WireOut::Net(stream))
+        }
+        None => (Box::new(io::stdin()), WireOut::Stdout(io::stdout())),
+    };
+    let out: Arc<Mutex<WireOut>> = Arc::new(Mutex::new(output));
     let stop = Arc::new(AtomicBool::new(false));
     let beat = if cfg.heartbeat_ms > 0 {
         let o = Arc::clone(&out);
@@ -88,7 +131,7 @@ pub fn run(cfg: &WorkerConfig) -> Result<()> {
         None
     };
 
-    let res = serve(cfg, &out);
+    let res = serve(cfg, &out, input);
     stop.store(true, Ordering::Relaxed);
     if let Some(b) = beat {
         let _ = b.join();
@@ -99,8 +142,8 @@ pub fn run(cfg: &WorkerConfig) -> Result<()> {
     res
 }
 
-fn send(out: &Mutex<io::Stdout>, frame: &Frame) -> Result<()> {
-    let mut g = out.lock().expect("stdout mutex poisoned");
+fn send(out: &Mutex<WireOut>, frame: &Frame) -> Result<()> {
+    let mut g = out.lock().expect("output mutex poisoned");
     wire::write_frame(&mut *g, frame)
 }
 
@@ -108,7 +151,7 @@ fn send(out: &Mutex<io::Stdout>, frame: &Frame) -> Result<()> {
 /// pipe fallback for frames that outgrow a slot), the pipe otherwise.
 fn send_data(
     ring: Option<&mut shm::Producer>,
-    out: &Mutex<io::Stdout>,
+    out: &Mutex<WireOut>,
     frame: &Frame,
 ) -> Result<()> {
     if let Some(p) = ring {
@@ -135,8 +178,9 @@ fn hello(cfg: &WorkerConfig, n_obs: usize, shm: bool) -> Frame {
 
 /// Where the rank-0 serve loop gets its next coordinator frame from.
 enum FrameSource {
-    /// Pipe-only transport: block on stdin directly.
-    Pipe(io::Stdin),
+    /// Single-channel transports (pipe or socket): block on the input
+    /// stream directly.
+    Stream(Box<dyn Read + Send>),
     /// Shm transport: a detached thread reads stdin into a channel while
     /// the serve loop polls both the channel and the ring.
     Dual {
@@ -149,7 +193,7 @@ enum FrameSource {
 impl FrameSource {
     fn next(&mut self) -> Result<Option<Frame>> {
         match self {
-            FrameSource::Pipe(stdin) => wire::read_frame(stdin),
+            FrameSource::Stream(input) => wire::read_frame(input),
             FrameSource::Dual {
                 frames,
                 ring,
@@ -172,13 +216,15 @@ impl FrameSource {
     }
 }
 
-fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
+fn serve(
+    cfg: &WorkerConfig,
+    out: &Arc<Mutex<WireOut>>,
+    mut input: Box<dyn Read + Send>,
+) -> Result<()> {
     if cfg.rank > 0 {
         // placement rank: hold the core, heartbeat, wait for shutdown
-        let stdin = io::stdin();
-        let mut stdin = stdin.lock();
         send(out, &hello(cfg, 0, false))?;
-        while let Some(frame) = wire::read_frame(&mut stdin)? {
+        while let Some(frame) = wire::read_frame(&mut input)? {
             if matches!(frame, Frame::Shutdown) {
                 break;
             }
@@ -224,14 +270,11 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
             let (ftx, frx) = channel();
             std::thread::Builder::new()
                 .name("stdin-read".into())
-                .spawn(move || {
-                    let mut stdin = io::stdin();
-                    loop {
-                        let item = wire::read_frame(&mut stdin);
-                        let done = matches!(item, Ok(None) | Err(_));
-                        if ftx.send(item).is_err() || done {
-                            return;
-                        }
+                .spawn(move || loop {
+                    let item = wire::read_frame(&mut input);
+                    let done = matches!(item, Ok(None) | Err(_));
+                    if ftx.send(item).is_err() || done {
+                        return;
                     }
                 })
                 .context("spawning stdin reader thread")?;
@@ -244,7 +287,7 @@ fn serve(cfg: &WorkerConfig, out: &Arc<Mutex<io::Stdout>>) -> Result<()> {
                 Some(tx_ring),
             )
         }
-        None => (FrameSource::Pipe(io::stdin()), None),
+        None => (FrameSource::Stream(input), None),
     };
 
     let mut params: Arc<Vec<f32>> = Arc::new(Vec::new());
@@ -307,7 +350,7 @@ fn maybe_crash(
     cfg: &WorkerConfig,
     episode: u64,
     ring: Option<&mut shm::Producer>,
-    out: &Mutex<io::Stdout>,
+    out: &Mutex<WireOut>,
 ) {
     let Ok(spec) = std::env::var("DRLFOAM_WORKER_CRASH") else {
         return;

@@ -6,6 +6,9 @@
 //!                 --executor picks threads or real worker processes)
 //!   worker      — one environment rank behind the exec wire protocol
 //!                 (spawned by `--executor multi-process` via self-exec)
+//!   agent       — per-host worker supervisor for `train --hosts ...`:
+//!                 accepts coordinator connections, spawns local rank
+//!                 groups, relays their frames
 //!   episode     — roll out a single episode and print per-period stats
 //!   scenarios   — list the scenario registry
 //!   calibrate   — measure per-component costs, write out/calib.json
@@ -35,13 +38,14 @@ use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
 
-const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|reproduce|simulate|plan|audit|info> [options]
+const USAGE: &str = "usage: drlfoam <train|worker|agent|episode|scenarios|calibrate|reproduce|simulate|plan|audit|info> [options]
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
              --cfd-backend xla|native --sync full|partial:<k>|async
              --executor in-process|multi-process
-             --transport pipe|shm --ranks N --layout manual|auto [--quiet]
+             --transport pipe|shm|tcp|uds --ranks N --layout manual|auto
+             [--hosts host:cores[,host:cores...]] [--quiet]
              (--scenario surrogate|analytic trains with no artifacts: native
               backends are auto-selected when artifacts/ is absent.
               --cfd-backend native runs the cylinder CFD on the pure-Rust
@@ -54,7 +58,12 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
               dead worker is respawned and its episode re-queued; --chaos
               <env>:<episode>[:midframe] injects one such crash. --transport
               shm moves the data frames over per-worker shared-memory seqlock
-              rings (pipe stays the control channel + fallback). --layout auto
+              rings (pipe stays the control channel + fallback); --transport
+              tcp|uds moves the same frames over sockets, and with --hosts
+              places rank groups first-fit across per-host `drlfoam agent`
+              supervisors (host 0 = the coordinator's; a host entry is
+              host[:port]:cores for tcp, /path.sock:cores for uds; the
+              learning results stay bitwise identical to pipe). --layout auto
               measures a
               small calibration — through the worker processes when the
               executor is multi-process — plans the (envs, ranks, sync, io)
@@ -63,9 +72,16 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
               (--envs/--ranks/--sync/--io, and --executor itself) are pinned,
               not searched.)
   worker:    --env-id N --rank N --heartbeat-ms N [--shm-prefix PATH]
+             [--connect tcp:host:port|uds:/path.sock]
              (internal: spawned by --executor multi-process; speaks
-             length-prefixed binary frames on stdin/stdout, plus shm rings
-             under --transport shm — not for interactive use)
+             length-prefixed binary frames on stdin/stdout — or over the
+             --connect socket — plus shm rings under --transport shm; not
+             for interactive use)
+  agent:     --bind host:port|/path.sock
+             (per-host worker supervisor for `train --hosts ...`: accepts
+              coordinator connections, spawns one local rank group per
+              connection — first frame = the spawn spec — and relays
+              frames; killing a connection kills its workers)
   episode:   --horizon N --io MODE [--policy out/policy_final.bin]
              [--cfd-backend xla|native]
              (--scenario surrogate and --cfd-backend native run without
@@ -81,8 +97,13 @@ const USAGE: &str = "usage: drlfoam <train|worker|episode|scenarios|calibrate|re
              [--envs N1,N2,...] [--syncs full,partial:8,async]
              [--ios baseline,optimized,memory] [--staleness-weight W]
              [--episodes N] [--calib out/calib.json]
+             [--hosts host:cores[,host:cores...]]
              (exhaustive DES-scored sweep of feasible layouts; ranked table on
-              stdout, every layout to out/plan.csv, Pareto front marked)
+              stdout, every layout to out/plan.csv, Pareto front marked.
+              --hosts makes packing part of feasibility — rank groups are
+              never split across hosts — charges envs placed off host 0 the
+              calibrated inter-node round trip, and defaults --cores to the
+              topology's total)
   audit:     [--root DIR] [--allowlist FILE] [--format text|json]
              (repo-invariant lint pass: SAFETY comments on every unsafe,
               no hash collections / wall-clock reads / f32 sums in
@@ -104,14 +125,15 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "update-backend", "cfd-backend", "sync", "episodes", "periods", "calib", "policy",
         "work-dir", "log-every", "layout", "cores", "objective", "syncs",
         "ios", "staleness-weight", "executor", "chaos", "env-id", "rank",
-        "heartbeat-ms", "transport", "shm-prefix", "root", "tests",
-        "allowlist", "format",
+        "heartbeat-ms", "transport", "shm-prefix", "hosts", "bind",
+        "connect", "root", "tests", "allowlist", "format",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
         "worker" => cmd_worker(&args),
+        "agent" => cmd_agent(&args),
         "episode" => cmd_episode(&args),
         "scenarios" => cmd_scenarios(),
         "evaluate" => cmd_evaluate(&args),
@@ -158,6 +180,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         worker_bin: None,
         fault_injection: args.get("chaos").map(|s| s.to_string()),
         transport: TransportKind::parse(&args.get_or("transport", "pipe"))?,
+        hosts: match args.get("hosts") {
+            Some(s) => drlfoam::exec::net::HostSpec::parse_list(s)?,
+            None => Vec::new(),
+        },
         horizon: args.usize_or("horizon", 100)?,
         iterations: args.usize_or("iterations", 100)?,
         epochs: args.usize_or("epochs", 4)?,
@@ -177,8 +203,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     anyhow::ensure!(
         cfg.transport == TransportKind::Pipe || cfg.executor == ExecutorKind::MultiProcess,
-        "--transport shm moves frames between worker processes and needs \
-         --executor multi-process"
+        "--transport {} moves frames between worker processes and needs \
+         --executor multi-process",
+        cfg.transport.name()
+    );
+    anyhow::ensure!(
+        cfg.hosts.is_empty() || cfg.transport.is_socket(),
+        "--hosts spans machines over sockets; use --transport tcp or uds (got {})",
+        cfg.transport.name()
     );
     match args.get_or("layout", "manual").trim().to_ascii_lowercase().as_str() {
         "manual" => {}
@@ -203,6 +235,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.executor.name(),
         cfg.transport.name()
     );
+    if !cfg.hosts.is_empty() {
+        let specs: Vec<String> = cfg
+            .hosts
+            .iter()
+            .map(|h| format!("{}:{}", h.endpoint, h.cores))
+            .collect();
+        println!(
+            "hosts: {} (rank groups packed first-fit; host 0 is the coordinator's)",
+            specs.join(",")
+        );
+    }
     let summary = train(&cfg)?;
     if summary.worker_restarts > 0 {
         println!(
@@ -252,8 +295,20 @@ fn cmd_worker(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0)?,
         heartbeat_ms: args.u64_or("heartbeat-ms", 200)?,
         shm_prefix: args.get("shm-prefix").map(Into::into),
+        connect: args.get("connect").map(|s| s.to_string()),
     };
     drlfoam::exec::worker::run(&cfg)
+}
+
+/// `drlfoam agent`: the per-host worker supervisor behind
+/// `train --hosts ...`. Binds the given TCP address or Unix-socket path
+/// and serves coordinator connections until killed (see
+/// [`drlfoam::exec::net::run_agent`]).
+fn cmd_agent(args: &Args) -> Result<()> {
+    let bind = args
+        .get("bind")
+        .context("agent needs --bind host:port (tcp) or --bind /path.sock (uds)")?;
+    drlfoam::exec::net::run_agent(bind)
 }
 
 fn cmd_episode(args: &Args) -> Result<()> {
@@ -574,15 +629,32 @@ fn synth_traj(n_obs: usize, n: usize) -> drl::Trajectory {
 fn auto_layout(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
     let cores = match args.get("cores") {
         Some(_) => args.usize_or("cores", 1)?,
+        // a --hosts topology IS the core budget
+        None if !cfg.hosts.is_empty() => cfg.hosts.iter().map(|h| h.cores).sum(),
         None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     };
-    let calib = match args.get("calib") {
+    let mut calib = match args.get("calib") {
         Some(p) => Calibration::load(std::path::Path::new(p))
             .with_context(|| format!("loading calibration {p}"))?,
         None if cfg.executor == ExecutorKind::MultiProcess => process_calibration(cfg)?,
         None => quick_surrogate_calibration(&cfg.work_dir.join("auto-calib"), cfg.horizon, cfg.seed)?,
     };
+    if cfg.transport.is_socket() && calib.t_net_rtt == 0.0 {
+        // measure the socket round trip the same way process_calibration
+        // measures the exchange: on the live transport, loopback
+        std::fs::create_dir_all(&cfg.work_dir)?;
+        calib.t_net_rtt =
+            drlfoam::exec::net::measure_rtt(cfg.transport, &cfg.work_dir, 16)?;
+        println!(
+            "layout auto: measured {} round trip {:.1} us (inter-node term for remote envs)",
+            cfg.transport.name(),
+            calib.t_net_rtt * 1e6
+        );
+    }
     let mut pc = planner::PlannerConfig::new(cores);
+    if !cfg.hosts.is_empty() {
+        pc.hosts = Some(cfg.hosts.iter().map(|h| h.cores).collect());
+    }
     pc.ranks_options = if args.get("ranks").is_some() {
         vec![cfg.ranks_per_env]
     } else {
@@ -778,7 +850,18 @@ fn native_policy_update_costs(seed: u64) -> Result<(f64, f64)> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let calib = load_calib(args)?;
-    let mut pc = planner::PlannerConfig::new(args.usize_or("cores", 60)?);
+    // `--hosts host:cores,...` — endpoints are carried for symmetry with
+    // `train --hosts` but only the core counts matter to the sweep
+    let hosts = match args.get("hosts") {
+        Some(s) => Some(drlfoam::exec::net::HostSpec::parse_list(s)?),
+        None => None,
+    };
+    let default_cores = hosts
+        .as_ref()
+        .map(|h| h.iter().map(|s| s.cores).sum())
+        .unwrap_or(60);
+    let mut pc = planner::PlannerConfig::new(args.usize_or("cores", default_cores)?);
+    pc.hosts = hosts.map(|h| h.into_iter().map(|s| s.cores).collect());
     pc.episodes_total = args.usize_or("episodes", pc.episodes_total)?;
     pc.objective = planner::Objective::parse(&args.get_or("objective", "time"))?;
     pc.staleness_weight = args.f64_or("staleness-weight", pc.staleness_weight)?;
@@ -872,6 +955,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         episodes_total: args.usize_or("episodes", 3000)?,
         io_mode: IoMode::parse(&args.get_or("io", "baseline"))?,
         sync: sync_policy(args)?,
+        remote_envs: 0,
         seed: args.u64_or("seed", 1)?,
     };
     let r = simulate_training(&calib, &cfg);

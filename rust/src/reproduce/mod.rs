@@ -43,6 +43,7 @@ fn run(calib: &Calibration, envs: usize, ranks: usize, mode: IoMode, seed: u64) 
             episodes_total: EPISODES,
             io_mode: mode,
             sync: SyncPolicy::Full,
+            remote_envs: 0,
             seed,
         },
     )
@@ -200,6 +201,7 @@ pub fn fig10(calib: &Calibration, out_dir: &std::path::Path) -> Result<String> {
                 episodes_total: EPISODES.min(600 * envs),
                 io_mode: IoMode::Baseline,
                 sync: SyncPolicy::Full,
+                remote_envs: 0,
                 seed: 1,
             },
         );
@@ -387,6 +389,7 @@ pub fn ablation_async(calib: &Calibration, out_dir: &std::path::Path) -> Result<
                 episodes_total: EPISODES,
                 io_mode: mode,
                 sync: SyncPolicy::Full,
+                remote_envs: 0,
                 seed: 1,
             };
             let ts = simulate_training(calib, &cfg).total_s / 3600.0;
@@ -453,6 +456,7 @@ pub fn sync_sweep(calib: &Calibration, out_dir: &std::path::Path) -> Result<Stri
                     episodes_total: EPISODES,
                     io_mode: mode,
                     sync,
+                    remote_envs: 0,
                     seed: 1,
                 },
             );

@@ -1,0 +1,216 @@
+//! `drlfoam agent` lifecycle: the per-host supervisor must fail loudly,
+//! never leak, and never hang.
+//!
+//! Three properties, each the distributed analogue of something the
+//! process executor already guarantees locally:
+//!
+//! * a second agent on an occupied endpoint is refused at startup with
+//!   an error naming the bind (silent port-stealing would split a
+//!   topology across two supervisors);
+//! * a coordinator that vanishes mid-run must not leave orphaned rank
+//!   groups holding cores — connection EOF makes the agent kill and
+//!   reap its worker;
+//! * a SIGKILL'd agent surfaces as a training error (failed respawn →
+//!   counted restart path), not a hang: the coordinator's reconnect hits
+//!   connection-refused immediately, well inside the worker liveness
+//!   timeout.
+//!
+//! Everything runs artifact-free on the surrogate scenario and skips
+//! gracefully when Cargo does not provide the binary.
+
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use drlfoam::coordinator::{EnvPool, PoolConfig};
+use drlfoam::drl::{NativePolicy, PolicyBackendKind};
+use drlfoam::env::scenario::{SURROGATE_HIDDEN, SURROGATE_N_OBS};
+use drlfoam::exec::net::HostSpec;
+use drlfoam::exec::wire::{self, Frame};
+use drlfoam::exec::{ExecutorKind, TransportKind};
+use drlfoam::io_interface::IoMode;
+
+fn worker_bin() -> Option<std::path::PathBuf> {
+    option_env!("CARGO_BIN_EXE_drlfoam").map(Into::into)
+}
+
+macro_rules! require_worker_bin {
+    () => {
+        match worker_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: CARGO_BIN_EXE_drlfoam not provided by cargo");
+                return;
+            }
+        }
+    };
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("drlfoam-agent-{tag}-{}", std::process::id()))
+}
+
+/// A spawned `drlfoam agent`, killed + reaped on drop.
+struct AgentProc {
+    child: std::process::Child,
+}
+
+impl AgentProc {
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for AgentProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Start an agent on `sock` and block until its readiness line.
+fn spawn_agent(bin: &std::path::Path, sock: &std::path::Path) -> AgentProc {
+    let mut child = std::process::Command::new(bin)
+        .arg("agent")
+        .arg("--bind")
+        .arg(sock)
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .expect("spawning drlfoam agent");
+    let stdout = child.stdout.take().expect("piped agent stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("reading the agent readiness line");
+    assert!(
+        line.contains("agent listening on"),
+        "unexpected agent banner: {line:?}"
+    );
+    AgentProc { child }
+}
+
+#[test]
+fn double_bind_is_refused_with_a_clear_error() {
+    let bin = require_worker_bin!();
+    let root = scratch("bind");
+    std::fs::create_dir_all(&root).unwrap();
+    let sock = root.join("agent.sock");
+    let _agent = spawn_agent(&bin, &sock);
+
+    // a second supervisor on the same endpoint must die at startup, and
+    // its error must say which bind failed — not steal or queue behind
+    // the first one
+    let out = std::process::Command::new(&bin)
+        .arg("agent")
+        .arg("--bind")
+        .arg(&sock)
+        .output()
+        .expect("running the second agent");
+    assert!(!out.status.success(), "second bind must be refused");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("already bound") && stderr.contains(sock.to_str().unwrap()),
+        "error must name the occupied bind: {stderr}"
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn orphaned_worker_is_reaped_on_coordinator_disconnect() {
+    let bin = require_worker_bin!();
+    let root = scratch("orphan");
+    std::fs::create_dir_all(root.join("work")).unwrap();
+    let sock = root.join("agent.sock");
+    let _agent = spawn_agent(&bin, &sock);
+
+    // play coordinator by hand: dial, send the Spawn spec, and take the
+    // worker's pid from its Hello
+    let mut conn = std::os::unix::net::UnixStream::connect(&sock).unwrap();
+    wire::write_frame(
+        &mut conn,
+        &Frame::Spawn {
+            env_id: 0,
+            rank: 0,
+            seed: 7,
+            heartbeat_ms: 50,
+            scenario: "surrogate".into(),
+            variant: "small".into(),
+            artifact_dir: root.join("no-artifacts").display().to_string(),
+            work_dir: root.join("work").display().to_string(),
+            io_mode: "in-memory".into(),
+            backend: "native".into(),
+            cfd_backend: "xla".into(),
+            fault_injection: String::new(),
+        },
+    )
+    .unwrap();
+    let pid = loop {
+        match wire::read_frame(&mut conn).unwrap() {
+            Some(Frame::Hello { pid, .. }) => break pid,
+            Some(_) => continue, // heartbeats may land first
+            None => panic!("agent closed the connection before the worker's Hello"),
+        }
+    };
+    let proc_path = std::path::PathBuf::from(format!("/proc/{pid}"));
+    assert!(proc_path.exists(), "worker pid {pid} should be alive");
+
+    // the coordinator vanishes: the agent must kill and reap the worker
+    // rather than leave it holding its cores
+    drop(conn);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while proc_path.exists() {
+        assert!(
+            Instant::now() < deadline,
+            "worker {pid} still alive 10 s after its coordinator disconnected"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn sigkilled_agent_surfaces_as_an_error_not_a_hang() {
+    let bin = require_worker_bin!();
+    let root = scratch("sigkill");
+    std::fs::create_dir_all(root.join("work")).unwrap();
+    let sock = root.join("agent.sock");
+    let mut agent = spawn_agent(&bin, &sock);
+
+    let cfg = PoolConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        n_envs: 2,
+        io_mode: IoMode::InMemory,
+        seed: 5,
+        executor: ExecutorKind::MultiProcess,
+        transport: TransportKind::Uds,
+        worker_bin: worker_bin(),
+        hosts: HostSpec::parse_list(&format!("{}:2", sock.display())).unwrap(),
+        ..PoolConfig::default()
+    };
+    let params = Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(9));
+    let mut pool = EnvPool::standalone(&cfg).unwrap();
+    // prove the topology works before breaking it
+    let outs = pool.rollout(&params, 3, 0).unwrap();
+    assert_eq!(outs.len(), 2);
+
+    // SIGKILL the supervisor: its relays die with it, the coordinator's
+    // readers see EOF, and the respawn's re-dial hits connection-refused
+    // — a counted, contextual error, never a silent wait
+    agent.kill();
+    let t0 = Instant::now();
+    let err = pool.rollout(&params, 3, 1);
+    assert!(err.is_err(), "rollout through a dead agent must fail");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "dead agent took {:?} to surface — the liveness timeout should never be the \
+         mechanism here (reconnects fail fast)",
+        t0.elapsed()
+    );
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -1,15 +1,16 @@
 //! Transport conformance: the bar any executor data plane must clear.
 //!
 //! The multi-process executor can move frames over stdin/stdout pipes
-//! (`--transport pipe`) or over shared-memory seqlock rings
-//! (`--transport shm`, the pipe staying control channel + fallback).
-//! Whatever the transport, training must be *indistinguishable* — the
-//! learning-curve CSV and the final parameter vector must match the
-//! in-process golden reference bitwise. This suite runs that equivalence
-//! matrix across
+//! (`--transport pipe`), over shared-memory seqlock rings (`--transport
+//! shm`, the pipe staying control channel + fallback), or over sockets
+//! (`--transport tcp|uds`, one stream per worker — the multi-node data
+//! plane). Whatever the transport, training must be *indistinguishable*
+//! — the learning-curve CSV and the final parameter vector must match
+//! the in-process golden reference bitwise. This suite runs that
+//! equivalence matrix across
 //!
 //! ```text
-//! {in-process, pipe, shm} × {full, partial:k, async} × {per-env, batched}
+//! {in-process, pipe, shm, tcp, uds} × {full, partial:k, async} × {per-env, batched}
 //! ```
 //!
 //! restricted to the cells where the schedule itself is deterministic:
@@ -71,7 +72,7 @@ struct Lane {
     transport: TransportKind,
 }
 
-const LANES: [Lane; 3] = [
+const LANES: [Lane; 5] = [
     Lane {
         name: "in-process",
         executor: ExecutorKind::InProcess,
@@ -86,6 +87,16 @@ const LANES: [Lane; 3] = [
         name: "shm",
         executor: ExecutorKind::MultiProcess,
         transport: TransportKind::Shm,
+    },
+    Lane {
+        name: "tcp",
+        executor: ExecutorKind::MultiProcess,
+        transport: TransportKind::Tcp,
+    },
+    Lane {
+        name: "uds",
+        executor: ExecutorKind::MultiProcess,
+        transport: TransportKind::Uds,
     },
 ];
 
@@ -144,7 +155,7 @@ fn learning_rows(out_dir: &std::path::Path) -> Vec<String> {
 }
 
 /// Run one matrix cell on every transport lane and assert the learning
-/// CSV and final parameters are bitwise identical across all three.
+/// CSV and final parameters are bitwise identical across all five.
 fn assert_cell_bitwise(
     cell: &str,
     n_envs: usize,
@@ -354,6 +365,153 @@ fn pipe_midframe_crash_also_recovers_bitwise() {
     assert_eq!(rows, rows_clean);
     assert_eq!(clean.final_params, s.final_params);
     std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn socket_sigkilled_worker_is_respawned_and_episode_requeued() {
+    // connection-kill recovery on both socket transports: SIGKILL leaves
+    // the coordinator's socket reader at EOF mid-episode; respawn dials a
+    // fresh listener and the identical (episode, seed) replay keeps the
+    // run bitwise
+    let _ = require_worker_bin!();
+    for lane in [LANES[3], LANES[4]] {
+        let params =
+            Arc::new(NativePolicy::new(SURROGATE_N_OBS, SURROGATE_HIDDEN).init_params(3));
+        let mut twin =
+            EnvPool::standalone(&pool_cfg(&format!("skill-twin-{}", lane.name), lane, 2)).unwrap();
+        let want = twin.rollout(&params, 5, 0).unwrap();
+
+        let mut pool =
+            EnvPool::standalone(&pool_cfg(&format!("skill-{}", lane.name), lane, 2)).unwrap();
+        let pids_before = pool.worker_pids();
+        pool.kill_worker(0).unwrap();
+        let got = pool.rollout(&params, 5, 0).unwrap();
+
+        assert_eq!(got.len(), 2, "lane {}", lane.name);
+        assert_eq!(pool.restarts(), 1, "lane {}: exactly one restart", lane.name);
+        assert_eq!(pool.restarts_by_env(), vec![1, 0], "lane {}", lane.name);
+        let pids_after = pool.worker_pids();
+        assert_ne!(pids_before[0], pids_after[0], "lane {}: env 0 respawned", lane.name);
+        assert_eq!(pids_before[1], pids_after[1], "lane {}: env 1 untouched", lane.name);
+        for (x, y) in want.iter().zip(&got) {
+            assert_eq!(x.env_id, y.env_id);
+            assert_eq!(x.traj, y.traj, "lane {} env {}", lane.name, x.env_id);
+        }
+    }
+}
+
+#[test]
+fn socket_midframe_crash_recovers_bitwise_with_exact_accounting() {
+    // the pipe chaos shape on tcp and uds: a worker dying after writing a
+    // truncated socket frame must read as death (never as data), and the
+    // respawn + re-queue must reproduce the fault-free run bitwise with
+    // the kill counted exactly once in workers.csv
+    let _ = require_worker_bin!();
+    for lane in [LANES[3], LANES[4]] {
+        let clean_cfg = train_cfg(&format!("storn-clean-{}", lane.name), lane, 2);
+        let clean = train(&clean_cfg)
+            .unwrap_or_else(|e| panic!("fault-free {} training failed: {e:#}", lane.name));
+        let rows_clean = learning_rows(&clean_cfg.out_dir);
+        std::fs::remove_dir_all(&clean_cfg.out_dir).ok();
+
+        let mut cfg = train_cfg(&format!("storn-{}", lane.name), lane, 2);
+        cfg.fault_injection = Some("0:1:midframe".into());
+        let s = train(&cfg)
+            .unwrap_or_else(|e| panic!("{} training with mid-frame crash failed: {e:#}", lane.name));
+        let rows = learning_rows(&cfg.out_dir);
+        assert_eq!(s.worker_restarts, 1, "lane {}: exactly the injected kill", lane.name);
+        assert_eq!(rows, rows_clean, "lane {}: learning curve perturbed", lane.name);
+        assert_eq!(clean.final_params, s.final_params, "lane {}: params diverged", lane.name);
+
+        let text = std::fs::read_to_string(cfg.out_dir.join("workers.csv")).unwrap();
+        let (header, wrows) = parse_csv(&text).unwrap();
+        assert_eq!(
+            header,
+            vec!["env_id", "episodes", "restarts", "wall_s", "cfd_s", "io_s", "policy_s"]
+        );
+        assert_eq!(wrows[0][2], "1", "lane {}: env 0 restarted once", lane.name);
+        assert_eq!(wrows[1][2], "0", "lane {}: env 1 untouched", lane.name);
+        let episodes: usize = wrows.iter().map(|r| r[1].parse::<usize>().unwrap()).sum();
+        assert_eq!(episodes, cfg.n_envs * cfg.iterations);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}
+
+// --- multi-node: training through real drlfoam agent processes --------------
+
+/// A spawned `drlfoam agent` process, killed on drop so a failing test
+/// never leaks a listener.
+struct AgentProc {
+    child: std::process::Child,
+}
+
+impl Drop for AgentProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Start `drlfoam agent --bind <sock>` and wait for its readiness line.
+fn spawn_agent(bin: &std::path::Path, sock: &std::path::Path) -> AgentProc {
+    use std::io::BufRead;
+    let mut child = std::process::Command::new(bin)
+        .arg("agent")
+        .arg("--bind")
+        .arg(sock)
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .expect("spawning drlfoam agent");
+    let stdout = child.stdout.take().expect("piped agent stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("reading the agent readiness line");
+    assert!(
+        line.contains("agent listening on"),
+        "unexpected agent banner: {line:?}"
+    );
+    AgentProc { child }
+}
+
+#[test]
+fn training_through_two_agents_matches_in_process_bitwise() {
+    // the acceptance bar of the socket transport: a layout spanning two
+    // per-host supervisors (both on localhost here) must reproduce the
+    // in-process learning curve bitwise — agents relay frames, they never
+    // touch them
+    let _ = require_worker_bin!();
+    let bin = worker_bin().unwrap();
+
+    let reference_cfg = train_cfg("agents-ref", LANES[0], 2);
+    let reference = train(&reference_cfg).expect("in-process reference training failed");
+    let rows_ref = learning_rows(&reference_cfg.out_dir);
+    std::fs::remove_dir_all(&reference_cfg.out_dir).ok();
+
+    let root = scratch("agents");
+    std::fs::create_dir_all(&root).unwrap();
+    let sock_a = root.join("agent-a.sock");
+    let sock_b = root.join("agent-b.sock");
+    let _agent_a = spawn_agent(&bin, &sock_a);
+    let _agent_b = spawn_agent(&bin, &sock_b);
+
+    let mut cfg = train_cfg("agents-run", LANES[4], 2);
+    // one core per agent: first-fit packing sends env 0 to A, env 1 to B
+    cfg.hosts = drlfoam::exec::net::HostSpec::parse_list(&format!(
+        "{}:1,{}:1",
+        sock_a.display(),
+        sock_b.display()
+    ))
+    .unwrap();
+    let s = train(&cfg).expect("training through two agents failed");
+    let rows = learning_rows(&cfg.out_dir);
+    assert_eq!(rows, rows_ref, "learning curve diverged through the agents");
+    assert_eq!(reference.final_params, s.final_params, "final params diverged");
+    assert_eq!(s.worker_restarts, 0, "no restarts expected in a fault-free run");
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+    std::fs::remove_dir_all(&root).ok();
 }
 
 // --- guard rails ------------------------------------------------------------

@@ -16,6 +16,7 @@ fn hours(c: &Calibration, envs: usize, ranks: usize, mode: IoMode) -> f64 {
             episodes_total: 3000,
             io_mode: mode,
             sync: SyncPolicy::Full,
+            remote_envs: 0,
             seed: 1,
         },
     )

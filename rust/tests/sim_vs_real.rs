@@ -123,6 +123,7 @@ fn des_with_measured_calibration_predicts_real_components() {
             episodes_total: iterations,
             io_mode: IoMode::InMemory,
             sync: SyncPolicy::Full,
+            remote_envs: 0,
             seed: 3,
         },
     );
