@@ -4,7 +4,7 @@
 PY ?= python3
 
 .PHONY: artifacts artifacts-paper ci doc train-smoke sync-smoke plan-smoke exec-smoke shm-smoke \
-        net-smoke cfd-smoke audit loom miri tsan asan
+        net-smoke cfd-smoke trace-smoke audit loom miri tsan asan
 
 # Standard artifact set: training/demo variant + the second-Reynolds
 # scenario, plus the B=8 batched-serving executable.
@@ -178,6 +178,61 @@ cfd-smoke:
 	cmp out/cfd-smoke/a/policy_final.bin out/cfd-smoke/b/policy_final.bin
 	cmp out/cfd-smoke/a/policy_final.bin out/cfd-smoke/scalar/policy_final.bin
 	cargo bench --bench cfd_scaling -- --gate
+
+# Tracing smoke: a traced in-process run re-parsed by `drlfoam trace`,
+# then the acceptance topology — two localhost `drlfoam agent` processes,
+# one merged trace with a lane per host, drift.csv populated, and the
+# traced run bitwise-identical to its untraced twin — then the
+# episode_breakdown bench's overhead gate (tracing <=2% lockstep
+# steps/s).
+trace-smoke:
+	rm -rf out/trace-smoke
+	mkdir -p out/trace-smoke
+	cargo build --release
+	cargo run --release --quiet -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --artifacts out/trace-smoke/no-artifacts \
+	    --out out/trace-smoke/ip --work-dir out/trace-smoke/ip/work \
+	    --trace out/trace-smoke/ip/trace.json \
+	    --envs 2 --horizon 5 --iterations 2 --quiet
+	cargo run --release --quiet -- trace out/trace-smoke/ip/trace.json
+	@# agents must outlive the training runs, so they run from the built
+	@# binary (killing a wrapping `cargo run` would orphan the listeners)
+	target/release/drlfoam agent --bind 127.0.0.1:7915 \
+	    > out/trace-smoke/agent-a.log 2>&1 & \
+	AGENT_A=$$!; \
+	target/release/drlfoam agent --bind 127.0.0.1:7916 \
+	    > out/trace-smoke/agent-b.log 2>&1 & \
+	AGENT_B=$$!; \
+	for log in out/trace-smoke/agent-a.log out/trace-smoke/agent-b.log; do \
+	    for _ in $$(seq 1 100); do \
+	        grep -q "agent listening on" $$log 2>/dev/null && break; \
+	        sleep 0.1; \
+	    done; \
+	done; \
+	cargo run --release --quiet -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --executor multi-process --transport tcp \
+	    --hosts 127.0.0.1:7915:1,127.0.0.1:7916:1 \
+	    --artifacts out/trace-smoke/no-artifacts \
+	    --out out/trace-smoke/plain --work-dir out/trace-smoke/plain/work \
+	    --envs 2 --horizon 5 --iterations 2 --quiet && \
+	cargo run --release --quiet -- train \
+	    --scenario surrogate --backend native --update-backend native \
+	    --executor multi-process --transport tcp \
+	    --hosts 127.0.0.1:7915:1,127.0.0.1:7916:1 \
+	    --artifacts out/trace-smoke/no-artifacts \
+	    --out out/trace-smoke/traced --work-dir out/trace-smoke/traced/work \
+	    --trace out/trace-smoke/traced/trace.json \
+	    --envs 2 --horizon 5 --iterations 2 --quiet; \
+	STATUS=$$?; kill $$AGENT_A $$AGENT_B 2>/dev/null || true; exit $$STATUS
+	grep -q "127.0.0.1:7915" out/trace-smoke/traced/trace.json
+	grep -q "127.0.0.1:7916" out/trace-smoke/traced/trace.json
+	cut -d, -f1-9 out/trace-smoke/plain/train_log.csv > out/trace-smoke/plain-learning.csv
+	cut -d, -f1-9 out/trace-smoke/traced/train_log.csv > out/trace-smoke/traced-learning.csv
+	cmp out/trace-smoke/plain-learning.csv out/trace-smoke/traced-learning.csv
+	cmp out/trace-smoke/plain/policy_final.bin out/trace-smoke/traced/policy_final.bin
+	cargo bench --bench episode_breakdown -- --gate
 
 # Rollout-scheduler smoke: the same artifact-free loop once per sync
 # policy (full episode barrier, partial barrier, async).

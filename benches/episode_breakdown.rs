@@ -1,75 +1,149 @@
 //! Bench: Fig 10 — per-episode time breakdown (CFD vs I/O vs DRL) as the
 //! environment count grows, via the DES at paper scale; plus the real
-//! measured breakdown of one episode on this machine (XLA engine when
-//! artifacts exist, skipped per-lane otherwise).
+//! measured breakdown on this machine, read from the unified tracing
+//! plane (`drlfoam::obs`, ARCHITECTURE.md §12) instead of ad-hoc timers:
+//! each lane runs a short artifact-free surrogate training with span
+//! recording enabled and aggregates the drained spans per phase — the
+//! same numbers `--trace` exports to `out/obs_summary.csv`.
 //!
 //! Run: `cargo bench --bench episode_breakdown`
+//! CI gate: `cargo bench --bench episode_breakdown -- --gate` runs a
+//! lockstep (central batched inference) training twice — tracing off,
+//! tracing on — best-of-3 each, and exits 1 if enabling span recording
+//! costs more than 2% lockstep steps/s. Export cost is excluded by
+//! design: it is a one-shot end-of-run write, not a per-step tax.
 
 use drlfoam::cluster::Calibration;
-use drlfoam::drl::Policy;
-use drlfoam::env::{CfdEngineRef, CfdEnv};
-use drlfoam::io_interface::{make_interface, IoMode};
+use drlfoam::coordinator::{train, InferenceMode, TrainConfig};
+use drlfoam::drl::{PolicyBackendKind, UpdateBackendKind};
+use drlfoam::io_interface::IoMode;
+use drlfoam::obs;
 use drlfoam::reproduce;
-use drlfoam::runtime::{Manifest, Runtime};
-use drlfoam::util::rng::Rng;
+
+fn bench_cfg(tag: &str, io_mode: IoMode) -> TrainConfig {
+    let root = std::env::temp_dir().join(format!("drlfoam-bench-bd-{tag}-{}", std::process::id()));
+    TrainConfig {
+        artifact_dir: root.join("no-artifacts"),
+        work_dir: root.join("work"),
+        out_dir: root.clone(),
+        variant: "small".into(),
+        scenario: "surrogate".into(),
+        backend: PolicyBackendKind::Native,
+        update_backend: UpdateBackendKind::Native,
+        n_envs: 4,
+        io_mode,
+        horizon: 20,
+        iterations: 2,
+        epochs: 2,
+        seed: 11,
+        log_every: 1,
+        quiet: true,
+        ..TrainConfig::default()
+    }
+}
+
+/// Run one traced lane and return `(phase -> (count, total_s), counters)`
+/// from the drained span plane. Draining resets the plane, so lanes are
+/// isolated from each other.
+fn traced_lane(
+    cfg: &TrainConfig,
+) -> (
+    std::collections::BTreeMap<&'static str, (usize, f64)>,
+    std::collections::BTreeMap<String, u64>,
+) {
+    obs::enable();
+    train(cfg).unwrap();
+    let drained = obs::drain_all();
+    obs::disable();
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    let mut by_phase = std::collections::BTreeMap::new();
+    for s in &drained.spans {
+        if let Some(p) = obs::Phase::from_u8(s.phase) {
+            let e = by_phase.entry(p.name()).or_insert((0usize, 0.0f64));
+            e.0 += 1;
+            e.1 += s.dur_us as f64 / 1e6;
+        }
+    }
+    (by_phase, drained.counters)
+}
+
+/// `--gate`: span recording must cost <= 2% lockstep steps/s. Both twins
+/// run the identical central-batched training; the traced twin records
+/// spans into the plane (drained and discarded afterwards). Best-of-3
+/// wall time is the robust statistic.
+fn gate() -> ! {
+    let run = |tag: &str, traced: bool| -> f64 {
+        let mut cfg = bench_cfg(tag, IoMode::InMemory);
+        cfg.inference = InferenceMode::Batched;
+        cfg.n_envs = 4;
+        cfg.horizon = 64;
+        cfg.iterations = 6;
+        // warmup run, then best-of-3
+        let mut best = f64::INFINITY;
+        for i in 0..4 {
+            if traced {
+                obs::enable();
+            } else {
+                obs::disable();
+            }
+            let t0 = std::time::Instant::now();
+            train(&cfg).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            let _ = obs::drain_all();
+            obs::disable();
+            if i > 0 {
+                best = best.min(wall);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&cfg.out_dir);
+        let steps = (cfg.iterations * cfg.n_envs * cfg.horizon) as f64;
+        steps / best
+    };
+    let off = run("gate-off", false);
+    let on = run("gate-on", true);
+    println!(
+        "gate: lockstep steps/s untraced {off:.0}, traced {on:.0} ({:.3}x)",
+        on / off
+    );
+    if on < off * 0.98 {
+        eprintln!("GATE FAILED: enabling tracing costs >2% lockstep steps/s");
+        std::process::exit(1);
+    }
+    println!("gate OK: tracing overhead within 2%");
+    std::process::exit(0);
+}
 
 fn main() {
+    if std::env::args().any(|a| a == "--gate") {
+        gate();
+    }
     let out = std::path::Path::new("out");
     std::fs::create_dir_all(out).unwrap();
     let calib = Calibration::paper_scale();
     println!("{}", reproduce::fig10(&calib, out).unwrap());
 
-    // --- real measured breakdown, one 20-period episode per I/O mode
-    let m = match Manifest::load_optional("artifacts").unwrap() {
-        Some(m) => m,
-        None => {
-            println!("real breakdown (xla): skipped: no artifacts");
-            return;
-        }
-    };
-    let mut rt = Runtime::new("artifacts").unwrap();
-    let vm = m.variant("small").unwrap().clone();
-    rt.load(&vm.cfd_period_file).unwrap();
-    rt.load(&m.drl.policy_apply_file).unwrap();
-    let params = m.load_params_init().unwrap();
-    let policy = Policy::new(m.drl.n_obs);
-
-    println!("real breakdown on this machine (20 periods, `small` grid):");
+    // --- real measured breakdown from the span plane, one short
+    // artifact-free training per I/O mode (4 envs x 20 steps x 2 iters)
+    println!("measured breakdown on this machine (surrogate, per obs span plane):");
     println!(
-        "{:<12} {:>10} {:>10} {:>12}",
-        "mode", "cfd (ms)", "io (ms)", "policy (ms)"
+        "{:<12} {:>10} {:>10} {:>12} {:>10} {:>12}",
+        "mode", "cfd (ms)", "io (ms)", "policy (ms)", "update (ms)", "idle (ms)"
     );
     for mode in [IoMode::InMemory, IoMode::Optimized, IoMode::Baseline] {
-        let work = std::env::temp_dir().join(format!("drlfoam-bench-bd-{}", mode.name()));
-        std::fs::create_dir_all(&work).unwrap();
-        let mut env = CfdEnv::new(
-            vm.clone(),
-            m.load_state0("small").unwrap(),
-            m.drl.action_smoothing_beta,
-            m.drl.reward_lift_penalty,
-            make_interface(mode, &work, 0).unwrap(),
-        );
-        let cfd = rt.get(&vm.cfd_period_file).unwrap();
-        let pol = rt.get(&m.drl.policy_apply_file).unwrap();
-        let mut rng = Rng::new(0);
-        let mut obs = env.reset(CfdEngineRef::Xla(cfd)).unwrap();
-        let (mut t_cfd, mut t_io, mut t_pol) = (0.0, 0.0, 0.0);
-        for _ in 0..20 {
-            let t0 = std::time::Instant::now();
-            let pout = policy.apply(pol, &params, &obs).unwrap();
-            t_pol += t0.elapsed().as_secs_f64();
-            let (a, _) = policy.sample(&pout, &mut rng);
-            let sr = env.step(CfdEngineRef::Xla(cfd), a).unwrap();
-            t_cfd += sr.timings.cfd_s;
-            t_io += sr.timings.io_s;
-            obs = sr.obs;
-        }
+        let cfg = bench_cfg(&format!("lane-{}", mode.name()), mode);
+        let (by_phase, _counters) = traced_lane(&cfg);
+        let ms = |k: &str| by_phase.get(k).map(|e| e.1 * 1e3).unwrap_or(0.0);
         println!(
-            "{:<12} {:>10.1} {:>10.1} {:>12.1}",
+            "{:<12} {:>10.1} {:>10.1} {:>12.1} {:>10.1} {:>12.1}",
             mode.name(),
-            t_cfd * 1e3,
-            t_io * 1e3,
-            t_pol * 1e3
+            ms("cfd"),
+            ms("io"),
+            ms("policy") + ms("policy_batch"),
+            ms("update"),
+            ms("barrier_idle"),
         );
     }
+    println!(
+        "\n(same aggregation `--trace` writes to out/obs_summary.csv; load the\n trace JSON in ui.perfetto.dev for the per-env timeline)"
+    );
 }

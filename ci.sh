@@ -34,6 +34,15 @@
 #                            bench's --gate (SIMD period >= scalar)
 #  12. repo-invariant audit  drlfoam audit (SAFETY comments, determinism
 #                            bans, wire-tag coverage; ARCHITECTURE.md §9)
+#  13. tracing smoke         train --trace (in-process): the Perfetto
+#                            JSON + obs_summary.csv + drift.csv validated
+#                            through `drlfoam trace` (util/json.rs parse
+#                            + metrics::parse_csv); then a two-agent tcp
+#                            traced run merged into one trace with a lane
+#                            per host, bitwise-diffed against its
+#                            untraced twin; then the episode_breakdown
+#                            bench's --gate (tracing costs <=2% lockstep
+#                            steps/s)
 #
 # Deeper verification stages run on demand behind env gates (set any to 1;
 # they need toolchain components tier-1 does not assume):
@@ -287,6 +296,83 @@ cmp "$CFD_OUT/a/policy_final.bin" "$CFD_OUT/scalar/policy_final.bin"
 #     is unavailable — the paths are then identical code).
 echo "== native CFD SIMD gate (cargo bench cfd_scaling -- --gate)"
 cargo bench --bench cfd_scaling -- --gate
+
+# 13a. tracing smoke, in-process: a traced artifact-free run must leave
+#      all three exporter outputs, and `drlfoam trace` must re-parse them
+#      (the trace JSON through the util/json.rs parser, the CSVs through
+#      metrics::parse_csv) into the component-breakdown table.
+echo "== tracing smoke (train --trace, in-process)"
+TRACE_OUT=out/ci-trace-smoke
+rm -rf "$TRACE_OUT"
+cargo run --release --quiet -- train \
+    --scenario surrogate --backend native --update-backend native \
+    --artifacts "$TRACE_OUT/no-artifacts" \
+    --out "$TRACE_OUT" --work-dir "$TRACE_OUT/work" \
+    --trace "$TRACE_OUT/trace.json" \
+    --envs 2 --horizon 5 --iterations 2 --quiet
+test -f "$TRACE_OUT/trace.json"
+test -f "$TRACE_OUT/obs_summary.csv"
+test -f "$TRACE_OUT/drift.csv"
+cargo run --release --quiet -- trace "$TRACE_OUT/trace.json" > "$TRACE_OUT/summary.txt"
+grep -q "per-phase percentiles" "$TRACE_OUT/summary.txt"
+grep -q "plan-vs-actual drift" "$TRACE_OUT/summary.txt"
+grep -q "cfd" "$TRACE_OUT/summary.txt"
+
+# 13b. tracing smoke, two localhost agents: the acceptance topology — a
+#      tcp training across two `drlfoam agent` processes must merge every
+#      worker's spans into ONE trace with a distinct lane per host (the
+#      agent endpoints appear as Perfetto process labels), populate
+#      drift.csv, and stay bitwise identical to its untraced twin.
+echo "== tracing smoke (two localhost agents, merged trace, bitwise vs untraced)"
+TRACE2_OUT=out/ci-trace-agents
+TRACE_PORT_A=7913
+TRACE_PORT_B=7914
+rm -rf "$TRACE2_OUT"
+mkdir -p "$TRACE2_OUT"
+"${CARGO_TARGET_DIR:-target}/release/drlfoam" agent --bind 127.0.0.1:$TRACE_PORT_A \
+    > "$TRACE2_OUT/agent-a.log" 2>&1 &
+AGENT_A_PID=$!
+"${CARGO_TARGET_DIR:-target}/release/drlfoam" agent --bind 127.0.0.1:$TRACE_PORT_B \
+    > "$TRACE2_OUT/agent-b.log" 2>&1 &
+AGENT_B_PID=$!
+trap 'kill $AGENT_A_PID $AGENT_B_PID 2>/dev/null || true' EXIT
+for log in "$TRACE2_OUT/agent-a.log" "$TRACE2_OUT/agent-b.log"; do
+    for _ in $(seq 1 100); do
+        grep -q "agent listening on" "$log" 2>/dev/null && break
+        sleep 0.1
+    done
+    grep -q "agent listening on" "$log"
+done
+run_traced_agents() {    # $1 = subdir, $2.. = extra flags
+    local sub=$1; shift
+    cargo run --release --quiet -- train \
+        --scenario surrogate --backend native --update-backend native \
+        --executor multi-process --transport tcp \
+        --hosts 127.0.0.1:$TRACE_PORT_A:1,127.0.0.1:$TRACE_PORT_B:1 \
+        --artifacts "$TRACE2_OUT/no-artifacts" \
+        --out "$TRACE2_OUT/$sub" --work-dir "$TRACE2_OUT/$sub/work" \
+        --envs 2 --horizon 5 --iterations 2 --quiet "$@"
+}
+run_traced_agents plain
+run_traced_agents traced --trace "$TRACE2_OUT/traced/trace.json"
+kill $AGENT_A_PID $AGENT_B_PID 2>/dev/null || true
+wait $AGENT_A_PID $AGENT_B_PID 2>/dev/null || true
+trap - EXIT
+# one merged trace, a lane per agent host, populated drift report
+grep -q "127.0.0.1:$TRACE_PORT_A" "$TRACE2_OUT/traced/trace.json"
+grep -q "127.0.0.1:$TRACE_PORT_B" "$TRACE2_OUT/traced/trace.json"
+test "$(wc -l < "$TRACE2_OUT/traced/drift.csv")" -gt 1
+cargo run --release --quiet -- trace "$TRACE2_OUT/traced/trace.json" > /dev/null
+# tracing must be bitwise-invisible: learning columns + final parameters
+cut -d, -f1-9 "$TRACE2_OUT/plain/train_log.csv" > "$TRACE2_OUT/plain-learning.csv"
+cut -d, -f1-9 "$TRACE2_OUT/traced/train_log.csv" > "$TRACE2_OUT/traced-learning.csv"
+cmp "$TRACE2_OUT/plain-learning.csv" "$TRACE2_OUT/traced-learning.csv"
+cmp "$TRACE2_OUT/plain/policy_final.bin" "$TRACE2_OUT/traced/policy_final.bin"
+
+# 13c. tracing overhead gate: enabling span recording must cost no more
+#      than 2% lockstep steps/s (best-of-3 each way).
+echo "== tracing overhead gate (cargo bench episode_breakdown -- --gate)"
+cargo bench --bench episode_breakdown -- --gate
 
 # ---------------------------------------------------------------------------
 # Deeper verification, opt-in (each stage needs a toolchain component the

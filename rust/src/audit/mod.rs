@@ -18,10 +18,12 @@
 //! | `allowlist-stale`       | the allowlist itself | every allowlist entry still suppresses at least one finding |
 //!
 //! Determinism-critical modules (`cluster/des.rs`, `cluster/planner.rs`,
-//! `coordinator/scheduler.rs`, `drl/*`, `env/*`, `cfd/*`) are the ones
-//! whose outputs the bitwise tests compare: DES scores, planner rankings,
+//! `coordinator/scheduler.rs`, `drl/*`, `env/*`, `cfd/*`, `obs/*`) are
+//! the ones whose outputs the bitwise tests compare — or, for `obs/*`,
+//! whose *absence of effect* they compare: DES scores, planner rankings,
 //! learning columns, policy parameters, environment rewards/observations,
-//! and the native CFD engine's fields and force histories.
+//! the native CFD engine's fields and force histories, and the traced-
+//! vs-untraced twin runs of `rust/tests/determinism.rs`.
 //!
 //! Audited exceptions live in `rust/audit.allow`, one per line:
 //!
@@ -209,6 +211,7 @@ impl SourceFile {
         ) || self.rel.starts_with("rust/src/drl/")
             || self.rel.starts_with("rust/src/env/")
             || self.rel.starts_with("rust/src/cfd/")
+            || self.rel.starts_with("rust/src/obs/")
     }
 }
 

@@ -252,6 +252,7 @@ impl NativeEngine {
     /// One actuation period (`substeps` projection substeps at constant
     /// jet amplitude), in place on (u, v, p).
     pub fn period(&mut self, u: &mut [f32], v: &mut [f32], p: &mut [f32], jet: f32) -> PeriodOutput {
+        crate::obs::bump("cfd.native_periods", 1);
         let n = self.spec.substeps;
         let mut out = PeriodOutput {
             probes: Vec::with_capacity(N_PROBES),

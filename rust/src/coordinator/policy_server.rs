@@ -122,6 +122,8 @@ impl PolicyServer {
         params: &[f32],
         obs: &[Vec<f32>],
     ) -> Result<Vec<PolicyOutput>> {
+        let _g = crate::obs::span(crate::obs::Phase::PolicyBatch);
+        crate::obs::bump("policy.batch_rows", obs.len() as u64);
         match &self.kind {
             ServerKind::Native { net } => net.apply_batch(params, obs),
             ServerKind::Xla {

@@ -83,6 +83,10 @@ pub struct PoolConfig {
     /// requires a socket transport, and rank groups are first-fit packed
     /// across the listed hosts.
     pub hosts: Vec<crate::exec::net::HostSpec>,
+    /// Obs tracing (`train --trace`): in-process workers record spans
+    /// directly, process workers are spawned with `--trace-spans` and
+    /// batch them back over `Frame::Telemetry` (ARCHITECTURE.md §12).
+    pub trace: bool,
 }
 
 impl Default for PoolConfig {
@@ -103,6 +107,7 @@ impl Default for PoolConfig {
             fault_injection: None,
             transport: TransportKind::Pipe,
             hosts: Vec::new(),
+            trace: false,
         }
     }
 }
@@ -672,7 +677,9 @@ pub(crate) fn run_episode(
         let tp = std::time::Instant::now();
         let pout = lp.apply(env, params, &obs)?;
         let (action, logp) = policy.sample(&pout, &mut rng);
-        stats.policy_s += tp.elapsed().as_secs_f64();
+        let policy_dt = tp.elapsed().as_secs_f64();
+        stats.policy_s += policy_dt;
+        crate::obs::record_measured_here(crate::obs::Phase::Policy, tp, policy_dt);
 
         let sr = env.step(action)?;
         stats.cfd_s += sr.timings.cfd_s;
@@ -695,8 +702,11 @@ pub(crate) fn run_episode(
     // bootstrap value for the truncated horizon
     let tp = std::time::Instant::now();
     traj.last_value = lp.apply(env, params, &obs)?.value;
-    stats.policy_s += tp.elapsed().as_secs_f64();
+    let policy_dt = tp.elapsed().as_secs_f64();
+    stats.policy_s += policy_dt;
+    crate::obs::record_measured_here(crate::obs::Phase::Policy, tp, policy_dt);
     stats.wall_s = t_wall.elapsed().as_secs_f64();
+    crate::obs::record_measured_here(crate::obs::Phase::Episode, t_wall, stats.wall_s);
 
     Ok(EpisodeOut {
         env_id,

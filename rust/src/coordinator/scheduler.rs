@@ -129,6 +129,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     std::fs::create_dir_all(&cfg.work_dir)?;
     let n = cfg.n_envs;
     let k = cfg.sync.effective_k(n);
+    // The tracing plane must be live BEFORE the pool spawns workers:
+    // spawn registers host lanes and sends the clock-offset probes, both
+    // of which need an enabled plane with a pinned epoch.
+    if cfg.trace.is_some() {
+        crate::obs::enable();
+    }
     let TrainSetup {
         manifest,
         mut pool,
@@ -204,12 +210,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     let mut barrier_idle_s = 0.0f64;
     let t_total = telemetry_now();
 
-    let mut csv = std::fs::File::create(cfg.out_dir.join("train_log.csv"))?;
+    // Buffered writers so the per-row writeln!s don't issue one tiny
+    // syscall each; flushed once per iteration so a crashed or killed run
+    // still leaves every completed iteration on disk.
+    let mut csv =
+        std::io::BufWriter::new(std::fs::File::create(cfg.out_dir.join("train_log.csv"))?);
     writeln!(
         csv,
         "iteration,episodes,mean_reward,mean_cd,mean_cl_abs,jet_final,pi_loss,v_loss,approx_kl,rollout_s,update_s,cfd_s,io_s,policy_s"
     )?;
-    let mut stale_csv = std::fs::File::create(cfg.out_dir.join("staleness.csv"))?;
+    let mut stale_csv =
+        std::io::BufWriter::new(std::fs::File::create(cfg.out_dir.join("staleness.csv"))?);
     writeln!(stale_csv, "update,env_id,episode,staleness,wait_s")?;
 
     for it in 0..total_updates {
@@ -290,6 +301,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
                 .saturating_duration_since(o.completed_at)
                 .as_secs_f64();
             barrier_idle_s += wait;
+            crate::obs::record_measured(
+                crate::obs::Phase::BarrierIdle,
+                o.completed_at,
+                wait,
+                e as u32,
+                ep_count[e] - 1,
+            );
             writeln!(
                 stale_csv,
                 "{},{},{},{},{:.4}",
@@ -318,6 +336,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
 
         let trajs: Vec<_> = batch_eps.into_iter().map(|o| o.traj).collect();
         let batch = Batch::assemble(&trajs, n_obs, gamma, gae_lambda);
+        crate::obs::set_thread_episode(it as u64);
         let upd = trainer.update(update_engine(&updater, &rt, &update_file)?, &batch, &mut rng)?;
         version += 1;
 
@@ -362,6 +381,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             );
         }
         log.push(row);
+        csv.flush()?;
+        stale_csv.flush()?;
     }
 
     let final_params = trainer.params.clone();
@@ -376,7 +397,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     // from.
     let restarts_by_env = pool.restarts_by_env();
     let worker_restarts: usize = restarts_by_env.iter().sum::<usize>();
-    let mut wcsv = std::fs::File::create(cfg.out_dir.join("workers.csv"))?;
+    let mut wcsv =
+        std::io::BufWriter::new(std::fs::File::create(cfg.out_dir.join("workers.csv"))?);
     writeln!(wcsv, "env_id,episodes,restarts,wall_s,cfd_s,io_s,policy_s")?;
     for (e, t) in pool.telemetry().iter().enumerate() {
         writeln!(
@@ -385,6 +407,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             e, t.episodes, restarts_by_env[e], t.wall_s, t.cfd_s, t.io_s, t.policy_s
         )?;
     }
+    wcsv.flush()?;
     if worker_restarts > 0 && !cfg.quiet {
         println!(
             "fault handling: {worker_restarts} worker restart(s); each lost episode was \
@@ -402,6 +425,62 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             stale_hist,
             barrier_idle_s
         );
+    }
+
+    // Tracing export: tear the pool down FIRST so process workers receive
+    // Shutdown, flush their final telemetry batches, and the reader
+    // threads ingest them on the way out; then give stragglers a short
+    // settle window (ingest_seq ticks while batches are still landing).
+    if let Some(trace_path) = &cfg.trace {
+        drop(server);
+        drop(pool);
+        let mut last = crate::obs::ingest_seq();
+        let mut stable = 0u32;
+        for _ in 0..10 {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            let cur = crate::obs::ingest_seq();
+            if cur == last {
+                stable += 1;
+                if stable >= 2 {
+                    break;
+                }
+            } else {
+                stable = 0;
+                last = cur;
+            }
+        }
+        let drift = cfg
+            .trace_calib
+            .clone()
+            .map(|calib| crate::obs::export::DriftSpec {
+                calib,
+                sim: crate::cluster::SimConfig {
+                    n_envs: n,
+                    n_ranks: cfg.ranks_per_env,
+                    episodes_total: consumed,
+                    io_mode: cfg.io_mode,
+                    sync: cfg.sync,
+                    remote_envs: if cfg.hosts.is_empty() { 0 } else { n },
+                    seed: cfg.seed,
+                },
+                episodes: consumed,
+                rounds: log.len(),
+            });
+        let rep = crate::obs::export::export(trace_path, &cfg.out_dir, drift.as_ref())?;
+        if !cfg.quiet {
+            println!(
+                "trace: {} span(s) -> {} (load in ui.perfetto.dev); per-phase summary {}",
+                rep.spans,
+                rep.trace_path.display(),
+                rep.summary_path.display()
+            );
+            if let Some(d) = &rep.drift_path {
+                println!("trace: plan-vs-actual drift -> {}", d.display());
+            }
+        }
+        for w in &rep.drift_warnings {
+            eprintln!("warning: {w}");
+        }
     }
 
     Ok(TrainSummary {

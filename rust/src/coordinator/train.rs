@@ -119,6 +119,12 @@ pub struct TrainConfig {
     pub seed: u64,
     pub log_every: usize,
     pub quiet: bool,
+    /// `--trace <path>`: record obs spans across every worker and write
+    /// a merged Chrome-trace JSON there, plus `obs_summary.csv` and
+    /// `drift.csv` next to the other outputs (ARCHITECTURE.md §12).
+    pub trace: Option<std::path::PathBuf>,
+    /// Calibration behind the drift report; `None` skips `drift.csv`.
+    pub trace_calib: Option<crate::cluster::Calibration>,
 }
 
 impl TrainConfig {
@@ -169,6 +175,8 @@ impl Default for TrainConfig {
             seed: 0,
             log_every: 1,
             quiet: false,
+            trace: None,
+            trace_calib: None,
         }
     }
 }
@@ -296,6 +304,7 @@ pub(crate) fn setup(cfg: &TrainConfig, serve_batched: bool) -> Result<TrainSetup
         fault_injection: cfg.fault_injection.clone(),
         transport: cfg.transport,
         hosts: cfg.hosts.clone(),
+        trace: cfg.trace.is_some(),
     };
     let pool = match &manifest {
         Some(m) => EnvPool::new(&pool_cfg, m)?,

@@ -143,6 +143,7 @@ impl PpoTrainer {
         agg.clip_frac /= k;
         agg.grad_norm /= k;
         agg.wall_s = t0.elapsed().as_secs_f64();
+        crate::obs::record_measured_here(crate::obs::Phase::Update, t0, agg.wall_s);
         Ok(agg)
     }
 

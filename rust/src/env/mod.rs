@@ -221,6 +221,7 @@ impl CfdEnv {
             }
         };
         let cfd_s = t0.elapsed().as_secs_f64();
+        crate::obs::record_measured_here(crate::obs::Phase::Cfd, t0, cfd_s);
 
         // CFD -> DRL: outputs travel through the exchange interface; the
         // agent consumes the parsed-back copy.
@@ -255,6 +256,7 @@ impl CfdEnv {
         let (parsed, mut io) = self.exchange.exchange(self.step_idx, &out, &flow)?;
         io.accumulate(&io_inject);
         let io_s = t1.elapsed().as_secs_f64() + io_inject_s;
+        crate::obs::record_measured_here(crate::obs::Phase::Io, t_io0, io_s);
 
         let cd_mean = mean(&parsed.cd_hist);
         let cl_mean = mean(&parsed.cl_hist);

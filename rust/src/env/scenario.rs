@@ -471,6 +471,7 @@ impl SurrogateEnv {
             })
             .collect();
         let cfd_s = t0.elapsed().as_secs_f64();
+        crate::obs::record_measured_here(crate::obs::Phase::Cfd, t0, cfd_s);
 
         // CFD -> DRL through the exchange interface
         let t1 = telemetry_now();
@@ -519,6 +520,7 @@ impl SurrogateEnv {
         let (parsed, mut io) = self.exchange.exchange(self.step_idx, &out, &flow)?;
         io.accumulate(&io_inject);
         let io_s = t1.elapsed().as_secs_f64() + io_inject_s;
+        crate::obs::record_measured_here(crate::obs::Phase::Io, t_io0, io_s);
 
         let cd_mean = mean(&parsed.cd_hist);
         let cl_mean = mean(&parsed.cl_hist);

@@ -186,15 +186,17 @@ fn worker_main(
         }
     };
 
+    crate::obs::set_thread_env(env_id as u32);
     while let Ok(job) = rx.recv() {
         match job {
             Job::Shutdown => break,
             Job::Rollout {
                 params,
                 horizon,
-                episode: _,
+                episode,
                 episode_seed,
             } => {
+                crate::obs::set_thread_episode(episode);
                 let out = run_episode(
                     env_id,
                     env.as_mut(),

@@ -431,6 +431,7 @@ fn serve_connection(mut stream: NetStream, bin: &Path) -> Result<()> {
         backend,
         cfd_backend,
         fault_injection,
+        trace,
     } = frame
     else {
         bail!("first frame on an agent connection must be Spawn, got {frame:?}");
@@ -460,8 +461,11 @@ fn serve_connection(mut stream: NetStream, bin: &Path) -> Result<()> {
         .arg("--seed")
         .arg(seed.to_string())
         .arg("--heartbeat-ms")
-        .arg(heartbeat_ms.to_string())
-        .stdin(std::process::Stdio::piped())
+        .arg(heartbeat_ms.to_string());
+    if trace != 0 {
+        cmd.arg("--trace-spans");
+    }
+    cmd.stdin(std::process::Stdio::piped())
         .stdout(std::process::Stdio::piped())
         .stderr(std::process::Stdio::inherit());
     if !fault_injection.is_empty() {

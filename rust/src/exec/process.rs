@@ -53,6 +53,11 @@ use crate::coordinator::pool::{EpisodeOut, PoolConfig};
 use crate::exec::net::{self, HostSpec, NetStream};
 use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
 use crate::exec::{shm, Executor, Job, LockstepReply, TransportKind};
+use crate::obs;
+
+/// Clock probes sent to each freshly (re)spawned rank-0 worker when
+/// tracing is on; the min-RTT echo wins (ARCHITECTURE.md §12).
+const CLOCK_PROBES: usize = 5;
 
 /// How often a blocked receive wakes to re-check worker liveness.
 const LIVENESS_POLL: Duration = Duration::from_millis(250);
@@ -201,6 +206,8 @@ struct SpawnSpec {
     /// First-fit rank-group placement: `host_of_env[env_id]` indexes
     /// `hosts`. Empty when `hosts` is.
     host_of_env: Vec<usize>,
+    /// Spawn workers with `--trace-spans` (obs tracing on).
+    trace: bool,
 }
 
 /// The rollout a worker currently owes us; replayed verbatim on respawn.
@@ -282,7 +289,21 @@ impl ProcessExecutor {
             transport: cfg.transport,
             hosts: cfg.hosts.clone(),
             host_of_env,
+            trace: cfg.trace,
         };
+        if cfg.trace {
+            // Perfetto lane map: pid 0 = this (coordinator) host, agent
+            // hosts count from 1 in --hosts order
+            for env_id in 0..cfg.n_envs {
+                let (host, label) = if spec.host_of_env.is_empty() {
+                    (0, "local".to_string())
+                } else {
+                    let h = spec.host_of_env[env_id];
+                    (h as u32 + 1, spec.hosts[h].endpoint.clone())
+                };
+                obs::set_env_host(env_id as u32, host, &label);
+            }
+        }
         let timeout =
             parse_worker_timeout(std::env::var("DRLFOAM_WORKER_TIMEOUT_S").ok().as_deref())?;
         let (tx, rx) = channel();
@@ -290,7 +311,10 @@ impl ProcessExecutor {
         let mut next_generation = 0u64;
         for env_id in 0..cfg.n_envs {
             next_generation += 1;
-            let primary = spawn_child(&spec, env_id, 0, next_generation, &tx)?;
+            let mut primary = spawn_child(&spec, env_id, 0, next_generation, &tx)?;
+            if spec.trace {
+                send_clock_probes(&mut primary);
+            }
             let mut secondaries = Vec::with_capacity(cfg.ranks_per_env - 1);
             for rank in 1..cfg.ranks_per_env {
                 next_generation += 1;
@@ -342,6 +366,7 @@ impl ProcessExecutor {
     }
 
     fn write_plain(&mut self, env_id: usize, frame: &Frame) -> Result<()> {
+        let _g = obs::span(obs::Phase::WireSend);
         let g = &mut self.groups[env_id].primary;
         let w = g
             .writer
@@ -415,7 +440,11 @@ impl ProcessExecutor {
             g.pid
         };
         self.next_generation += 1;
-        let fresh = spawn_child(&self.spec, env_id, 0, self.next_generation, &self.tx)?;
+        let mut fresh = spawn_child(&self.spec, env_id, 0, self.next_generation, &self.tx)?;
+        if self.spec.trace {
+            send_clock_probes(&mut fresh);
+            obs::event(obs::Phase::Respawn, env_id as u32);
+        }
         eprintln!(
             "warning: env worker {env_id} {why}; respawned (pid {old_pid} -> {})",
             fresh.pid
@@ -460,6 +489,9 @@ impl ProcessExecutor {
         };
         self.next_generation += 1;
         let fresh = spawn_child(&self.spec, env_id, rank, self.next_generation, &self.tx)?;
+        if self.spec.trace {
+            obs::event(obs::Phase::Respawn, env_id as u32);
+        }
         eprintln!(
             "warning: placement rank {rank} of env {env_id} exited; \
              respawned (pid {old_pid} -> {})",
@@ -733,6 +765,30 @@ pub(crate) fn parse_worker_timeout(raw: Option<&str>) -> Result<Duration> {
     Ok(Duration::from_secs_f64(secs))
 }
 
+/// Clock-offset handshake: fire a burst of probe frames at a freshly
+/// (re)spawned rank-0 worker. Each probe carries the coordinator's clock;
+/// the worker echoes it with its own, and the reader thread keeps the
+/// offset from the minimum-RTT exchange ([`obs::record_probe_echo`]).
+/// Best-effort — a worker that dies here is caught by the normal paths.
+fn send_clock_probes(proc_: &mut ChildProc) {
+    let Some(w) = proc_.writer.as_mut() else {
+        return;
+    };
+    for _ in 0..CLOCK_PROBES {
+        let probe = Frame::Telemetry {
+            env_id: 0,
+            rank: 0,
+            kind: 1,
+            clock_us: obs::now_us(),
+            echo_us: 0,
+            spans: Vec::new(),
+        };
+        if wire::write_frame(w, &probe).is_err() {
+            return;
+        }
+    }
+}
+
 /// The shared `drlfoam worker` argv (everything but transport wiring).
 fn worker_command(spec: &SpawnSpec, env_id: usize, rank: usize) -> Command {
     let mut cmd = Command::new(&spec.bin);
@@ -759,6 +815,9 @@ fn worker_command(spec: &SpawnSpec, env_id: usize, rank: usize) -> Command {
         .arg(spec.seed.to_string())
         .arg("--heartbeat-ms")
         .arg(HEARTBEAT_MS.to_string());
+    if spec.trace {
+        cmd.arg("--trace-spans");
+    }
     if let Some(f) = &spec.fault_injection {
         cmd.env("DRLFOAM_WORKER_CRASH", f);
     }
@@ -823,6 +882,7 @@ fn spawn_child_socket(
                 backend: spec.backend.to_string(),
                 cfd_backend: spec.cfd_backend.to_string(),
                 fault_injection: spec.fault_injection.clone().unwrap_or_default(),
+                trace: spec.trace as u8,
             },
         )
         .with_context(|| format!("sending the spawn spec to agent {addr}"))?;
@@ -980,6 +1040,27 @@ fn event_for_frame(env_id: usize, frame: Frame, shm_active: &AtomicBool) -> Opti
             completed_at: Instant::now(),
         })),
         Frame::Error { msg } => Some(Event::WorkerError { env_id, msg }),
+        // tracing plane: span batches merge into the coordinator's sink
+        // (shifted by this worker's clock offset), probe echoes update
+        // that offset. Never an event — telemetry must not be able to
+        // perturb scheduling.
+        Frame::Telemetry {
+            env_id: tenv,
+            rank,
+            kind,
+            clock_us,
+            echo_us,
+            spans,
+        } => {
+            if obs::enabled() {
+                match kind {
+                    0 => obs::ingest_remote(tenv, rank, spans),
+                    2 => obs::record_probe_echo(tenv, rank, echo_us, clock_us, obs::now_us()),
+                    _ => {}
+                }
+            }
+            None
+        }
         other => Some(Event::WorkerError {
             env_id,
             msg: format!("protocol violation: worker sent {other:?}"),

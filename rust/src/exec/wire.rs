@@ -28,6 +28,7 @@
 //! | `Episode`   | worker → coordinator | trajectory + [`EpisodeStats`] (reply to `Rollout`) |
 //! | `Error`     | worker → coordinator | terminal failure message |
 //! | `Spawn`     | coordinator → agent  | worker spawn spec (socket transport, `drlfoam agent`) |
+//! | `Telemetry` | both directions      | obs span batch / clock probe / probe echo (ARCHITECTURE.md §12) |
 //!
 //! `Spawn` is the only frame addressed to a `drlfoam agent` rather than a
 //! worker: it is the first frame on every coordinator→agent connection
@@ -44,10 +45,11 @@ use crate::drl::{Trajectory, Transition};
 use crate::env::{StepResult, StepTimings};
 use crate::io_interface::binary::{get_f32s, put_f32s};
 use crate::io_interface::IoStats;
+use crate::obs::SpanRec;
 
 /// Bumped on any incompatible frame-layout change; the coordinator
 /// rejects a `Hello` carrying a different version.
-pub const PROTOCOL_VERSION: u32 = 2;
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Corrupt-stream guard: no legitimate frame (even a full cylinder-grid
 /// trajectory) comes close to this.
@@ -74,11 +76,12 @@ pub enum Tag {
     Episode = 10,
     Error = 11,
     Spawn = 12,
+    Telemetry = 13,
 }
 
 impl Tag {
     /// Every tag, in discriminant order (corpus/coverage iteration).
-    pub const ALL: [Tag; 12] = [
+    pub const ALL: [Tag; 13] = [
         Tag::Hello,
         Tag::SetParams,
         Tag::Reset,
@@ -91,6 +94,7 @@ impl Tag {
         Tag::Episode,
         Tag::Error,
         Tag::Spawn,
+        Tag::Telemetry,
     ];
 
     /// Inverse of `as u8`; `None` for bytes outside the protocol.
@@ -158,6 +162,25 @@ pub enum Frame {
         backend: String,
         cfd_backend: String,
         fault_injection: String,
+        /// nonzero = spawn the worker with `--trace-spans` (obs tracing
+        /// on). Raw byte, not a bool: fuzz requires every decoded frame
+        /// to re-encode bit-exactly.
+        trace: u8,
+    },
+    /// Tracing-plane traffic (ARCHITECTURE.md §12). `kind` selects the
+    /// payload interpretation — 0 = span batch (worker → coordinator,
+    /// `spans` populated, clocks unused), 1 = clock probe (coordinator →
+    /// worker, `clock_us` = coordinator send time), 2 = probe echo
+    /// (worker → coordinator, `clock_us` = worker clock at echo,
+    /// `echo_us` = the probe's `clock_us` reflected back). Kept as a raw
+    /// byte so corrupt/fuzzed frames re-encode bit-exactly.
+    Telemetry {
+        env_id: u32,
+        rank: u32,
+        kind: u8,
+        clock_us: u64,
+        echo_us: u64,
+        spans: Vec<SpanRec>,
     },
 }
 
@@ -325,6 +348,33 @@ fn get_traj(bytes: &[u8], off: &mut usize) -> Result<Trajectory> {
     })
 }
 
+fn put_spans(buf: &mut Vec<u8>, spans: &[SpanRec]) {
+    put_u32(buf, spans.len() as u32);
+    for s in spans {
+        buf.push(s.phase);
+        put_u64(buf, s.start_us);
+        put_u64(buf, s.dur_us);
+        put_u32(buf, s.env_id);
+        put_u64(buf, s.episode);
+    }
+}
+
+fn get_spans(bytes: &[u8], off: &mut usize) -> Result<Vec<SpanRec>> {
+    let n = get_u32(bytes, off)? as usize;
+    ensure!(n <= 1 << 24, "wire span batch implausibly long ({n})");
+    let mut spans = Vec::with_capacity(n);
+    for _ in 0..n {
+        spans.push(SpanRec {
+            phase: get_bytes(bytes, 1, off)?[0],
+            start_us: get_u64(bytes, off)?,
+            dur_us: get_u64(bytes, off)?,
+            env_id: get_u32(bytes, off)?,
+            episode: get_u64(bytes, off)?,
+        });
+    }
+    Ok(spans)
+}
+
 // --- frame encode / decode -------------------------------------------------
 
 /// Encode a frame *body* (`[u8 tag][payload]`, no length prefix). The
@@ -407,6 +457,7 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             backend,
             cfd_backend,
             fault_injection,
+            trace,
         } => {
             buf.push(Tag::Spawn as u8);
             put_u32(&mut buf, *env_id);
@@ -421,6 +472,23 @@ pub(crate) fn encode(frame: &Frame) -> Vec<u8> {
             put_str(&mut buf, backend);
             put_str(&mut buf, cfd_backend);
             put_str(&mut buf, fault_injection);
+            buf.push(*trace);
+        }
+        Frame::Telemetry {
+            env_id,
+            rank,
+            kind,
+            clock_us,
+            echo_us,
+            spans,
+        } => {
+            buf.push(Tag::Telemetry as u8);
+            put_u32(&mut buf, *env_id);
+            put_u32(&mut buf, *rank);
+            buf.push(*kind);
+            put_u64(&mut buf, *clock_us);
+            put_u64(&mut buf, *echo_us);
+            put_spans(&mut buf, spans);
         }
     }
     buf
@@ -485,6 +553,15 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Frame> {
             backend: get_str(bytes, &mut off)?,
             cfd_backend: get_str(bytes, &mut off)?,
             fault_injection: get_str(bytes, &mut off)?,
+            trace: get_bytes(bytes, 1, &mut off)?[0],
+        },
+        Some(Tag::Telemetry) => Frame::Telemetry {
+            env_id: get_u32(bytes, &mut off)?,
+            rank: get_u32(bytes, &mut off)?,
+            kind: get_bytes(bytes, 1, &mut off)?[0],
+            clock_us: get_u64(bytes, &mut off)?,
+            echo_us: get_u64(bytes, &mut off)?,
+            spans: get_spans(bytes, &mut off)?,
         },
         None => bail!("unknown wire frame tag {tag}"),
     };
@@ -641,6 +718,38 @@ mod tests {
             backend: "native".into(),
             cfd_backend: "reference".into(),
             fault_injection: String::new(),
+            trace: 1,
+        });
+        roundtrip(Frame::Telemetry {
+            env_id: 3,
+            rank: 0,
+            kind: 0,
+            clock_us: 0,
+            echo_us: 0,
+            spans: vec![
+                SpanRec {
+                    phase: 0,
+                    start_us: 12,
+                    dur_us: 3400,
+                    env_id: 3,
+                    episode: 9,
+                },
+                SpanRec {
+                    phase: 0xEE, // out-of-taxonomy phase must still round-trip
+                    start_us: u64::MAX - 1,
+                    dur_us: 0,
+                    env_id: u32::MAX,
+                    episode: u64::MAX,
+                },
+            ],
+        });
+        roundtrip(Frame::Telemetry {
+            env_id: 0,
+            rank: 2,
+            kind: 2,
+            clock_us: 123_456_789,
+            echo_us: 123_400_000,
+            spans: Vec::new(),
         });
     }
 

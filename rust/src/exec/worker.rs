@@ -42,6 +42,7 @@ use crate::exec::net::{self, NetStream};
 use crate::exec::shm;
 use crate::exec::wire::{self, Frame, PROTOCOL_VERSION};
 use crate::io_interface::IoMode;
+use crate::obs;
 use crate::runtime::Manifest;
 
 /// How long a ring push may block on a full ring before the worker gives
@@ -71,6 +72,9 @@ pub struct WorkerConfig {
     /// (`tcp:host:port` / `uds:path`, from the coordinator's
     /// `--transport tcp|uds`); frames then flow over that stream.
     pub connect: Option<String>,
+    /// `--trace-spans`: record obs spans and batch them to the
+    /// coordinator as `Frame::Telemetry` (ARCHITECTURE.md §12).
+    pub trace: bool,
 }
 
 /// Where this worker's frames go: stdout (pipe transport) or the dialed
@@ -100,6 +104,10 @@ impl Write for WireOut {
 /// `Error` frame is emitted before returning so the coordinator gets the
 /// root cause instead of a bare dead channel.
 pub fn run(cfg: &WorkerConfig) -> Result<()> {
+    if cfg.trace {
+        obs::enable();
+        obs::set_thread_env(cfg.env_id as u32);
+    }
     let (input, output): (Box<dyn Read + Send>, WireOut) = match &cfg.connect {
         Some(spec) => {
             let stream = net::connect_arg(spec)
@@ -291,7 +299,21 @@ fn serve(
     };
 
     let mut params: Arc<Vec<f32>> = Arc::new(Vec::new());
-    while let Some(frame) = source.next()? {
+    loop {
+        // WireRecv deliberately includes the wait for the coordinator's
+        // next job — in the merged Perfetto timeline this is what makes
+        // worker idle visible on the env lane (ARCHITECTURE.md §12)
+        let t_recv = if cfg.trace { obs::now_us() } else { 0 };
+        let Some(frame) = source.next()? else { break };
+        if cfg.trace {
+            obs::record(
+                obs::Phase::WireRecv,
+                t_recv,
+                obs::now_us().saturating_sub(t_recv),
+                cfg.env_id as u32,
+                0,
+            );
+        }
         match frame {
             Frame::SetParams { params: p } => params = Arc::new(p),
             Frame::Rollout {
@@ -300,6 +322,7 @@ fn serve(
                 episode_seed,
             } => {
                 maybe_crash(cfg, episode, tx_ring.as_mut(), out);
+                obs::set_thread_episode(episode);
                 let eo = run_episode(
                     cfg.env_id,
                     env.as_mut(),
@@ -309,6 +332,7 @@ fn serve(
                     horizon as usize,
                     cfg.seed ^ episode_seed,
                 )?;
+                let t_send = if cfg.trace { obs::now_us() } else { 0 };
                 send_data(
                     tx_ring.as_mut(),
                     out,
@@ -318,8 +342,21 @@ fn serve(
                         traj: eo.traj,
                     },
                 )?;
+                if cfg.trace {
+                    obs::record(
+                        obs::Phase::WireSend,
+                        t_send,
+                        obs::now_us().saturating_sub(t_send),
+                        cfg.env_id as u32,
+                        episode,
+                    );
+                }
+                flush_telemetry(cfg, out)?;
             }
             Frame::Reset => {
+                // lockstep boundary: ship whatever the previous episode
+                // accumulated before the step loop starts
+                flush_telemetry(cfg, out)?;
                 let obs = env.reset()?;
                 send_data(tx_ring.as_mut(), out, &Frame::Obs { obs })?;
             }
@@ -327,12 +364,57 @@ fn serve(
                 let result = env.step(action)?;
                 send_data(tx_ring.as_mut(), out, &Frame::StepOut { result })?;
             }
-            Frame::Shutdown => break,
+            Frame::Shutdown => {
+                flush_telemetry(cfg, out)?;
+                break;
+            }
             Frame::Heartbeat => {}
+            // clock probe: echo the coordinator's timestamp back with
+            // ours so it can compute this worker's clock offset
+            Frame::Telemetry {
+                kind: 1, clock_us, ..
+            } => {
+                send(
+                    out,
+                    &Frame::Telemetry {
+                        env_id: cfg.env_id as u32,
+                        rank: cfg.rank as u32,
+                        kind: 2,
+                        clock_us: obs::now_us(),
+                        echo_us: clock_us,
+                        spans: Vec::new(),
+                    },
+                )?;
+            }
+            Frame::Telemetry { .. } => {}
             other => anyhow::bail!("unexpected coordinator frame {other:?}"),
         }
     }
     Ok(())
+}
+
+/// Batch this worker's recorded spans into one `Telemetry` frame on the
+/// control channel (never the ring: span batches are rare and the rings
+/// are reserved for the latency-critical data frames).
+fn flush_telemetry(cfg: &WorkerConfig, out: &Mutex<WireOut>) -> Result<()> {
+    if !cfg.trace {
+        return Ok(());
+    }
+    let spans = obs::take_all_spans();
+    if spans.is_empty() {
+        return Ok(());
+    }
+    send(
+        out,
+        &Frame::Telemetry {
+            env_id: cfg.env_id as u32,
+            rank: cfg.rank as u32,
+            kind: 0,
+            clock_us: 0,
+            echo_us: 0,
+            spans,
+        },
+    )
 }
 
 /// Chaos hook behind `train --chaos <env>:<episode>[:midframe]` (the

@@ -37,6 +37,7 @@ pub mod env;
 pub mod exec;
 pub mod io_interface;
 pub mod metrics;
+pub mod obs;
 pub mod reproduce;
 pub mod runtime;
 pub mod util;

@@ -38,7 +38,7 @@ use drlfoam::io_interface::{make_interface, CfdOutput, FlowSnapshot, IoMode};
 use drlfoam::runtime::{Manifest, Runtime};
 use drlfoam::{drl, env, reproduce};
 
-const USAGE: &str = "usage: drlfoam <train|worker|agent|episode|scenarios|calibrate|reproduce|simulate|plan|audit|info> [options]
+const USAGE: &str = "usage: drlfoam <train|worker|agent|episode|scenarios|calibrate|reproduce|simulate|plan|audit|trace|info> [options]
   common options: --artifacts DIR  --out DIR  --variant small  --scenario cylinder  --seed N
   train:     --envs N --horizon N --iterations N --epochs N --io baseline|optimized|memory
              --inference per-env|batched --backend xla|native --update-backend xla|native
@@ -46,6 +46,13 @@ const USAGE: &str = "usage: drlfoam <train|worker|agent|episode|scenarios|calibr
              --executor in-process|multi-process
              --transport pipe|shm|tcp|uds --ranks N --layout manual|auto
              [--hosts host:cores[,host:cores...]] [--quiet]
+             [--trace out/trace.json]  (record spans from every worker —
+              local threads and remote processes alike — and merge them into
+              one Chrome-trace JSON for ui.perfetto.dev, plus
+              out/obs_summary.csv percentiles and an out/drift.csv
+              plan-vs-actual report against the DES prediction [--calib FILE
+              supplies the calibration, otherwise a quick surrogate
+              measurement]; learning output stays bitwise identical)
              (--scenario surrogate|analytic trains with no artifacts: native
               backends are auto-selected when artifacts/ is absent.
               --cfd-backend native runs the cylinder CFD on the pure-Rust
@@ -104,6 +111,9 @@ const USAGE: &str = "usage: drlfoam <train|worker|agent|episode|scenarios|calibr
               never split across hosts — charges envs placed off host 0 the
               calibrated inter-node round trip, and defaults --cores to the
               topology's total)
+  trace:     [FILE]  (default out/trace.json: per-phase time table + lane
+             count of a `train --trace` recording; renders the sibling
+             obs_summary.csv / drift.csv tables when present)
   audit:     [--root DIR] [--allowlist FILE] [--format text|json]
              (repo-invariant lint pass: SAFETY comments on every unsafe,
               no hash collections / wall-clock reads / f32 sums in
@@ -126,7 +136,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "work-dir", "log-every", "layout", "cores", "objective", "syncs",
         "ios", "staleness-weight", "executor", "chaos", "env-id", "rank",
         "heartbeat-ms", "transport", "shm-prefix", "hosts", "bind",
-        "connect", "root", "tests", "allowlist", "format",
+        "connect", "root", "tests", "allowlist", "format", "trace",
     ];
     let args = Args::parse(argv, &value_opts)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
@@ -142,6 +152,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "plan" => cmd_plan(&args),
         "audit" => cmd_audit(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         _ => bail!("{USAGE}"),
     }
@@ -190,6 +201,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0)?,
         log_every: args.usize_or("log-every", 1)?,
         quiet: args.has_flag("quiet"),
+        trace: args.get("trace").map(std::path::PathBuf::from),
+        trace_calib: None,
     };
     anyhow::ensure!(cfg.ranks_per_env >= 1, "--ranks must be >= 1");
     anyhow::ensure!(
@@ -216,6 +229,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         "manual" => {}
         "auto" => auto_layout(args, &mut cfg)?,
         other => bail!("unknown layout {other:?} (accepted: manual, auto)"),
+    }
+    if cfg.trace.is_some() {
+        // the drift report compares measured spans against the DES
+        // prediction, which needs a calibration: --calib when given,
+        // otherwise the same quick surrogate measurement --layout auto uses
+        cfg.trace_calib = Some(match args.get("calib") {
+            Some(p) => Calibration::load(std::path::Path::new(p))
+                .with_context(|| format!("loading calibration {p}"))?,
+            None => quick_surrogate_calibration(
+                &cfg.work_dir.join("trace-calib"),
+                cfg.horizon,
+                cfg.seed,
+            )?,
+        });
     }
     // io/inference are used as requested; the policy/update backends may
     // be downgraded by the artifact-free fallback, so the *resolved*
@@ -296,6 +323,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         heartbeat_ms: args.u64_or("heartbeat-ms", 200)?,
         shm_prefix: args.get("shm-prefix").map(Into::into),
         connect: args.get("connect").map(|s| s.to_string()),
+        trace: args.has_flag("trace-spans"),
     };
     drlfoam::exec::worker::run(&cfg)
 }
@@ -732,6 +760,7 @@ fn process_calibration(cfg: &TrainConfig) -> Result<Calibration> {
             worker_bin: cfg.worker_bin.clone(),
             fault_injection: None,
             transport: cfg.transport,
+            trace: false,
         };
         let mut pool = EnvPool::standalone(&pool_cfg)?;
         let params =
@@ -1000,6 +1029,18 @@ fn cmd_audit(args: &Args) -> Result<()> {
     if !report.ok() {
         bail!("audit failed: {} finding(s)", report.findings.len());
     }
+    Ok(())
+}
+
+/// `drlfoam trace [FILE]`: summarize a Chrome-trace recording written by
+/// `train --trace` — per-phase totals and lane count from the JSON, plus
+/// the sibling `obs_summary.csv` / `drift.csv` tables when present.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = match args.positional.get(1) {
+        Some(p) => std::path::PathBuf::from(p),
+        None => out_dir(args).join("trace.json"),
+    };
+    print!("{}", drlfoam::obs::export::summarize_trace(&path)?);
     Ok(())
 }
 

@@ -1,0 +1,387 @@
+//! Trace exporters: Perfetto JSON, per-phase percentile summary, and the
+//! plan-vs-actual drift report (ARCHITECTURE.md §12).
+//!
+//! All three run once, at the end of a traced training run, from the
+//! coordinator thread — they drain the global span sink, so the tracing
+//! plane is reset for the next run in this process.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{simulate_training, Calibration, SimConfig};
+use crate::metrics::tables::{parse_csv, render_table, write_csv};
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+use super::{drain_all, Phase, SpanRec, NO_ENV};
+
+/// Measured/predicted ratio beyond which (in either direction) a
+/// component is flagged as calibration drift.
+pub const DRIFT_WARN_RATIO: f64 = 3.0;
+
+/// What the drift report compares against: the DES prediction for the
+/// layout that actually trained, plus the live run's episode/round
+/// counts used to normalise the measured totals into the DES units.
+pub struct DriftSpec {
+    pub calib: Calibration,
+    pub sim: SimConfig,
+    /// episodes the live run completed
+    pub episodes: usize,
+    /// PPO update rounds the live run performed
+    pub rounds: usize,
+}
+
+/// Paths written + any drift warnings (the caller prints them).
+pub struct TraceReport {
+    pub trace_path: PathBuf,
+    pub summary_path: PathBuf,
+    pub drift_path: Option<PathBuf>,
+    pub spans: usize,
+    pub drift_warnings: Vec<String>,
+}
+
+/// Drain the tracing plane and write every exporter's output. `trace_path`
+/// is the Chrome-trace-event JSON (`--trace <path>`); the summary and
+/// drift CSVs land in `out_dir`.
+pub fn export(trace_path: &Path, out_dir: &Path, drift: Option<&DriftSpec>) -> Result<TraceReport> {
+    let d = drain_all();
+    super::disable();
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    if let Some(parent) = trace_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+
+    write_chrome_trace(trace_path, &d.spans, &d.hosts)?;
+    let summary_path = out_dir.join("obs_summary.csv");
+    write_summary(&summary_path, &d.spans, &d.counters)?;
+
+    let mut drift_path = None;
+    let mut drift_warnings = Vec::new();
+    if let Some(spec) = drift {
+        let p = out_dir.join("drift.csv");
+        drift_warnings = write_drift(&p, &d.spans, spec)?;
+        drift_path = Some(p);
+    }
+
+    Ok(TraceReport {
+        trace_path: trace_path.to_path_buf(),
+        summary_path,
+        drift_path,
+        spans: d.spans.len(),
+        drift_warnings,
+    })
+}
+
+fn phase_label(raw: u8) -> String {
+    match Phase::from_u8(raw) {
+        Some(p) => p.name().to_string(),
+        None => format!("phase_{raw}"),
+    }
+}
+
+/// Chrome trace events (Perfetto-loadable): one process lane per host,
+/// one thread lane per environment, plus a coordinator lane on host 0.
+fn write_chrome_trace(
+    path: &Path,
+    spans: &[SpanRec],
+    hosts: &BTreeMap<u32, (u32, String)>,
+) -> Result<()> {
+    let lane = |env: u32| -> (u32, u64) {
+        if env == NO_ENV {
+            (0, 0) // coordinator lane
+        } else {
+            let pid = hosts.get(&env).map(|(h, _)| *h).unwrap_or(0);
+            (pid, u64::from(env) + 1)
+        }
+    };
+    let mut events = Vec::new();
+    // metadata: process (host) and thread (env) lane names
+    let mut host_names: BTreeMap<u32, String> = BTreeMap::new();
+    host_names.insert(0, "host0".to_string());
+    for (h, label) in hosts.values() {
+        host_names.insert(*h, format!("host{h} {label}"));
+    }
+    for (pid, name) in &host_names {
+        events.push(json::obj(vec![
+            ("ph", json::s("M")),
+            ("name", json::s("process_name")),
+            ("pid", json::num(f64::from(*pid))),
+            ("args", json::obj(vec![("name", json::s(name))])),
+        ]));
+    }
+    let mut lanes_seen: BTreeMap<(u32, u64), String> = BTreeMap::new();
+    lanes_seen.insert((0, 0), "coordinator".to_string());
+    for s in spans {
+        if s.env_id != NO_ENV {
+            let (pid, tid) = lane(s.env_id);
+            lanes_seen
+                .entry((pid, tid))
+                .or_insert_with(|| format!("env {}", s.env_id));
+        }
+    }
+    for ((pid, tid), name) in &lanes_seen {
+        events.push(json::obj(vec![
+            ("ph", json::s("M")),
+            ("name", json::s("thread_name")),
+            ("pid", json::num(f64::from(*pid))),
+            ("tid", json::num(*tid as f64)),
+            ("args", json::obj(vec![("name", json::s(name))])),
+        ]));
+    }
+    for s in spans {
+        let (pid, tid) = lane(s.env_id);
+        events.push(json::obj(vec![
+            ("name", json::s(&phase_label(s.phase))),
+            ("cat", json::s("obs")),
+            ("ph", json::s("X")),
+            ("ts", json::num(s.start_us as f64)),
+            ("dur", json::num(s.dur_us as f64)),
+            ("pid", json::num(f64::from(pid))),
+            ("tid", json::num(tid as f64)),
+            ("args", json::obj(vec![("episode", json::num(s.episode as f64))])),
+        ]));
+    }
+    let root = json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ]);
+    std::fs::write(path, root.to_string())
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    Ok(())
+}
+
+/// `obs_summary.csv`: per-phase count/total/percentiles (seconds), plus
+/// one row per named counter (count column only).
+fn write_summary(
+    path: &Path,
+    spans: &[SpanRec],
+    counters: &BTreeMap<String, u64>,
+) -> Result<()> {
+    let mut by_phase: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for s in spans {
+        by_phase
+            .entry(phase_label(s.phase))
+            .or_default()
+            .push(s.dur_us as f64 / 1e6);
+    }
+    let mut rows = Vec::new();
+    for (name, durs) in &by_phase {
+        let total = durs.iter().sum::<f64>();
+        rows.push(format!(
+            "{name},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
+            durs.len(),
+            total,
+            total / durs.len() as f64,
+            stats::percentile(durs, 50.0),
+            stats::percentile(durs, 95.0),
+            stats::percentile(durs, 99.0),
+        ));
+    }
+    for (name, n) in counters {
+        rows.push(format!("{name},{n},0.000000,0.000000,0.000000,0.000000,0.000000"));
+    }
+    write_csv(path, "phase,count,total_s,mean_s,p50_s,p95_s,p99_s", &rows)?;
+    Ok(())
+}
+
+/// `drift.csv`: measured per-phase seconds vs the DES prediction for the
+/// trained layout, in the DES's own units (cfd/io/policy/barrier_idle
+/// per episode; update_barrier per update round). Returns warning lines
+/// for components drifting beyond [`DRIFT_WARN_RATIO`].
+fn write_drift(path: &Path, spans: &[SpanRec], spec: &DriftSpec) -> Result<Vec<String>> {
+    let predicted = simulate_training(&spec.calib, &spec.sim).breakdown;
+    let episodes = spec.episodes.max(1) as f64;
+    let rounds = spec.rounds.max(1) as f64;
+    let total = |p: Phase| -> f64 {
+        spans
+            .iter()
+            .filter(|s| s.phase == p as u8)
+            .map(|s| s.dur_us as f64 / 1e6)
+            .sum::<f64>()
+    };
+    let idle_per_episode = total(Phase::BarrierIdle) / episodes;
+    let components: [(&str, f64, f64); 5] = [
+        ("cfd", predicted.cfd_s, total(Phase::Cfd) / episodes),
+        ("io", predicted.io_s, total(Phase::Io) / episodes),
+        (
+            "policy",
+            predicted.policy_s,
+            (total(Phase::Policy) + total(Phase::PolicyBatch)) / episodes,
+        ),
+        (
+            "update_barrier",
+            predicted.update_barrier_s,
+            total(Phase::Update) / rounds + idle_per_episode,
+        ),
+        ("barrier_idle", predicted.barrier_idle_s, idle_per_episode),
+    ];
+    let mut rows = Vec::new();
+    let mut warnings = Vec::new();
+    for (name, pred, meas) in components {
+        let ratio = if pred > 1e-12 { meas / pred } else { 0.0 };
+        rows.push(format!("{name},{pred:.6},{meas:.6},{ratio:.4}"));
+        if pred > 1e-6 && meas > 1e-6 && (ratio > DRIFT_WARN_RATIO || ratio < 1.0 / DRIFT_WARN_RATIO)
+        {
+            warnings.push(format!(
+                "calibration drift: {name} measured {meas:.4}s vs predicted {pred:.4}s \
+                 (x{ratio:.2}, threshold x{DRIFT_WARN_RATIO:.1}) — re-run `drlfoam calibrate` \
+                 or pass --calib for this machine"
+            ));
+        }
+    }
+    write_csv(path, "component,predicted_s,measured_s,ratio", &rows)?;
+    Ok(warnings)
+}
+
+/// `drlfoam trace <file>`: summarise a Chrome-trace JSON into the
+/// paper-style component-breakdown table; sibling `obs_summary.csv` /
+/// `drift.csv` files (same directory) are validated and rendered too.
+pub fn summarize_trace(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing trace {}", path.display()))?;
+    let events = j.get("traceEvents")?.as_arr()?;
+    let mut agg: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+    let mut lanes: std::collections::BTreeSet<(u64, u64)> = Default::default();
+    for ev in events {
+        if ev.get("ph")?.as_str()? != "X" {
+            continue;
+        }
+        let name = ev.get("name")?.as_str()?.to_string();
+        let dur_s = ev.get("dur")?.as_f64()? / 1e6;
+        let e = agg.entry(name).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dur_s;
+        lanes.insert((
+            ev.get("pid")?.as_f64()? as u64,
+            ev.get("tid")?.as_f64()? as u64,
+        ));
+    }
+    let grand = agg.values().map(|(_, t)| t).sum::<f64>();
+    let rows: Vec<Vec<String>> = agg
+        .iter()
+        .map(|(name, (n, t))| {
+            vec![
+                name.clone(),
+                n.to_string(),
+                format!("{t:.4}"),
+                format!("{:.1}", 100.0 * t / grand.max(1e-12)),
+            ]
+        })
+        .collect();
+    let mut out = render_table(
+        &format!(
+            "trace {} — {} span(s), {} lane(s)",
+            path.display(),
+            agg.values().map(|(n, _)| n).sum::<usize>(),
+            lanes.len()
+        ),
+        &["component", "count", "total_s", "share_%"],
+        &rows,
+    );
+    let dir = path.parent().unwrap_or(Path::new("."));
+    for (file, title) in [
+        ("obs_summary.csv", "per-phase percentiles"),
+        ("drift.csv", "plan-vs-actual drift"),
+    ] {
+        let p = dir.join(file);
+        if !p.exists() {
+            continue;
+        }
+        let (header, rows) = parse_csv(&std::fs::read_to_string(&p)?)
+            .with_context(|| format!("parsing {}", p.display()))?;
+        let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        out.push('\n');
+        out.push_str(&render_table(&format!("{title} ({})", p.display()), &hdr, &rows));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SyncPolicy;
+    use crate::io_interface::IoMode;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("drlfoam-obs-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn export_writes_all_three_and_trace_summarises() {
+        super::super::enable();
+        super::super::set_thread_env(0);
+        super::super::set_thread_episode(1);
+        super::super::record(Phase::Cfd, 0, 2_000_000, 0, 1);
+        super::super::record(Phase::Io, 2_000_000, 500_000, 0, 1);
+        super::super::record(Phase::Update, 3_000_000, 100_000, NO_ENV, 1);
+        super::super::record(Phase::BarrierIdle, 2_500_000, 400_000, 0, 1);
+        super::super::bump("cfd.native_periods", 7);
+        super::super::set_env_host(0, 1, "nodeB:7700");
+
+        let dir = tmp("exp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.json");
+        let spec = DriftSpec {
+            calib: Calibration::paper_scale(),
+            sim: SimConfig {
+                n_envs: 1,
+                n_ranks: 1,
+                episodes_total: 1,
+                io_mode: IoMode::InMemory,
+                sync: SyncPolicy::Full,
+                remote_envs: 0,
+                seed: 1,
+            },
+            episodes: 1,
+            rounds: 1,
+        };
+        let rep = export(&trace, &dir, Some(&spec)).unwrap();
+        assert!(rep.spans >= 4);
+        assert!(!super::super::enabled(), "export disables the plane");
+
+        // Perfetto JSON parses and carries the host lane
+        let j = Json::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| {
+            e.get("ph").map(|p| p == &Json::Str("M".into())).unwrap_or(false)
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .map(|n| n.as_str().unwrap_or("").contains("nodeB"))
+                    .unwrap_or(false)
+        }));
+
+        // summary + drift parse with the strict CSV reader
+        let (h, rows) = parse_csv(&std::fs::read_to_string(&rep.summary_path).unwrap()).unwrap();
+        assert_eq!(h[0], "phase");
+        assert!(rows.iter().any(|r| r[0] == "cfd"));
+        assert!(rows.iter().any(|r| r[0] == "cfd.native_periods" && r[1] == "7"));
+        let (h, rows) =
+            parse_csv(&std::fs::read_to_string(rep.drift_path.as_ref().unwrap()).unwrap()).unwrap();
+        assert_eq!(h, vec!["component", "predicted_s", "measured_s", "ratio"]);
+        assert_eq!(rows.len(), 5);
+        // surrogate-speed spans vs paper-scale prediction must drift
+        assert!(!rep.drift_warnings.is_empty());
+
+        // the trace subcommand summarises file + sibling CSVs
+        let summary = summarize_trace(&trace).unwrap();
+        assert!(summary.contains("cfd"));
+        assert!(summary.contains("plan-vs-actual drift"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summarize_rejects_non_trace_json() {
+        let dir = tmp("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("not-a-trace.json");
+        std::fs::write(&p, "{\"x\": 1}").unwrap();
+        assert!(summarize_trace(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

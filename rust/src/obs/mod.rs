@@ -1,0 +1,506 @@
+//! Unified tracing plane: span/counter telemetry across every executor.
+//!
+//! Off by default and bitwise-invisible to learning output: recording is
+//! gated on one relaxed atomic load, spans carry only wall-time
+//! measurements, and nothing here feeds a scored or learned value. The
+//! module is part of the determinism-critical audit set, so its two
+//! sanctioned clock reads are capped in `rust/audit.allow` like every
+//! other telemetry read (ARCHITECTURE.md §9, §12).
+//!
+//! Recording model:
+//! * every thread buffers spans locally ([`span`] guards, [`record`]);
+//!   buffers drain into the global sink on thread exit, on explicit
+//!   [`flush_thread`], and when a worker packs them into a
+//!   [`Frame::Telemetry`](crate::exec::wire::Frame) batch;
+//! * worker *processes* ship their batches on the control channel; the
+//!   coordinator's reader threads ingest them via [`ingest_remote`],
+//!   shifting each span by the worker's clock offset;
+//! * clock offsets come from a probe/echo handshake over the same frame:
+//!   the coordinator stamps a probe with its own µs clock, the worker
+//!   echoes it alongside its clock, and [`record_probe_echo`] keeps the
+//!   minimum-RTT NTP-style estimate (the same midpoint arithmetic
+//!   `exec::net::measure_rtt` rests on).
+//!
+//! Exporters live in [`export`]: Chrome-trace-event JSON (Perfetto), the
+//! per-phase percentile summary CSV, and the plan-vs-actual drift report
+//! against the DES prediction.
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::clock::telemetry_now;
+
+/// `env_id` for spans that belong to the coordinator itself (the PPO
+/// update, batched inference) rather than to one environment lane.
+pub const NO_ENV: u32 = u32::MAX;
+
+/// The span taxonomy (ARCHITECTURE.md §12). Discriminants are the wire
+/// encoding inside `Frame::Telemetry`; an unknown byte from a newer peer
+/// is preserved raw, never dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// One CFD actuation period (XLA or native engine).
+    Cfd = 0,
+    /// Exchange-interface packing/parsing (`io_interface`).
+    Io = 1,
+    /// Per-env policy forward pass (worker-side serving).
+    Policy = 2,
+    /// One batched forward pass over all envs (`PolicyServer`).
+    PolicyBatch = 3,
+    /// Encoding + writing one frame to a worker.
+    WireSend = 4,
+    /// Waiting for and reading the next frame (on worker lanes this is
+    /// the worker's idle time between commands).
+    WireRecv = 5,
+    /// Coordinator barrier idle: episode finished, update not started.
+    BarrierIdle = 6,
+    /// One PPO update round (all epochs/minibatches).
+    Update = 7,
+    /// A worker died and was respawned (zero-duration event).
+    Respawn = 8,
+    /// One whole episode rollout on an environment.
+    Episode = 9,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 10] = [
+        Phase::Cfd,
+        Phase::Io,
+        Phase::Policy,
+        Phase::PolicyBatch,
+        Phase::WireSend,
+        Phase::WireRecv,
+        Phase::BarrierIdle,
+        Phase::Update,
+        Phase::Respawn,
+        Phase::Episode,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Cfd => "cfd",
+            Phase::Io => "io",
+            Phase::Policy => "policy",
+            Phase::PolicyBatch => "policy_batch",
+            Phase::WireSend => "wire_send",
+            Phase::WireRecv => "wire_recv",
+            Phase::BarrierIdle => "barrier_idle",
+            Phase::Update => "update",
+            Phase::Respawn => "respawn",
+            Phase::Episode => "episode",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| *p as u8 == v)
+    }
+}
+
+/// One recorded span. `phase` stays a raw byte end to end (a decoded
+/// telemetry frame must re-encode bit-exactly, see the wire fuzz tests).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRec {
+    pub phase: u8,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub env_id: u32,
+    pub episode: u64,
+}
+
+// --- global state ----------------------------------------------------------
+
+struct Global {
+    sink: Vec<SpanRec>,
+    /// env_id -> (host index, host label) for per-host Perfetto lanes
+    hosts: BTreeMap<u32, (u32, String)>,
+    /// (env_id, rank) -> (best rtt_us, offset_us): add offset to a
+    /// peer-clock timestamp to land on the coordinator clock
+    offsets: BTreeMap<(u32, u32), (u64, i64)>,
+    counters: BTreeMap<String, u64>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static INGESTED: AtomicU64 = AtomicU64::new(0);
+
+fn global() -> &'static Mutex<Global> {
+    static G: OnceLock<Mutex<Global>> = OnceLock::new();
+    G.get_or_init(|| {
+        Mutex::new(Global {
+            sink: Vec::new(),
+            hosts: BTreeMap::new(),
+            offsets: BTreeMap::new(),
+            counters: BTreeMap::new(),
+        })
+    })
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(telemetry_now)
+}
+
+/// Turn recording on (idempotent). The first call pins the process-local
+/// µs epoch every span is measured against.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the tracing epoch on this process's clock.
+pub fn now_us() -> u64 {
+    telemetry_now()
+        .checked_duration_since(epoch())
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+// --- thread-local recording ------------------------------------------------
+
+struct ThreadBuf {
+    env: u32,
+    episode: u64,
+    spans: Vec<SpanRec>,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        if !self.spans.is_empty() {
+            if let Ok(mut g) = global().lock() {
+                g.sink.append(&mut self.spans);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static TL: RefCell<ThreadBuf> = const {
+        RefCell::new(ThreadBuf { env: NO_ENV, episode: 0, spans: Vec::new() })
+    };
+}
+
+/// Attach this thread's future spans to environment `env`.
+pub fn set_thread_env(env: u32) {
+    TL.with(|b| b.borrow_mut().env = env);
+}
+
+/// Attach this thread's future spans to episode `ep`.
+pub fn set_thread_episode(ep: u64) {
+    TL.with(|b| b.borrow_mut().episode = ep);
+}
+
+/// Push one raw span into this thread's buffer (no clock read).
+pub fn record(phase: Phase, start_us: u64, dur_us: u64, env: u32, episode: u64) {
+    if !enabled() {
+        return;
+    }
+    TL.with(|b| {
+        b.borrow_mut().spans.push(SpanRec {
+            phase: phase as u8,
+            start_us,
+            dur_us,
+            env_id: env,
+            episode,
+        })
+    });
+}
+
+/// Record a span from a measurement a caller already took — used by the
+/// determinism-critical modules so tracing adds no clock reads there:
+/// `start` is the Instant they measured from, `dur_s` the elapsed
+/// seconds they report as telemetry anyway.
+pub fn record_measured(phase: Phase, start: Instant, dur_s: f64, env: u32, episode: u64) {
+    if !enabled() {
+        return;
+    }
+    let start_us = start
+        .checked_duration_since(epoch())
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    record(phase, start_us, (dur_s.max(0.0) * 1e6) as u64, env, episode);
+}
+
+/// [`record_measured`] against this thread's ambient env/episode (set by
+/// the worker loops via [`set_thread_env`] / [`set_thread_episode`]) —
+/// for call sites like the CFD advance that don't know their env id.
+pub fn record_measured_here(phase: Phase, start: Instant, dur_s: f64) {
+    if !enabled() {
+        return;
+    }
+    let (env, episode) = TL.with(|b| {
+        let b = b.borrow();
+        (b.env, b.episode)
+    });
+    record_measured(phase, start, dur_s, env, episode);
+}
+
+/// Zero-duration marker (respawn events and the like).
+pub fn event(phase: Phase, env: u32) {
+    if !enabled() {
+        return;
+    }
+    record(phase, now_us(), 0, env, 0);
+}
+
+/// Bump a named counter by `n` (e.g. native CFD periods, batched rows).
+pub fn bump(name: &str, n: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Ok(mut g) = global().lock() {
+        *g.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+}
+
+/// RAII span: records on drop. Cheap no-op when tracing is off.
+pub struct SpanGuard {
+    phase: Phase,
+    start_us: u64,
+    env: Option<u32>,
+    on: bool,
+}
+
+impl SpanGuard {
+    /// Use `env` instead of the thread's ambient environment.
+    pub fn for_env(mut self, env: u32) -> SpanGuard {
+        self.env = Some(env);
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.on {
+            return;
+        }
+        let end = now_us();
+        let dur = end.saturating_sub(self.start_us);
+        TL.with(|b| {
+            let mut b = b.borrow_mut();
+            let env = self.env.unwrap_or(b.env);
+            let episode = b.episode;
+            b.spans.push(SpanRec {
+                phase: self.phase as u8,
+                start_us: self.start_us,
+                dur_us: dur,
+                env_id: env,
+                episode,
+            });
+        });
+    }
+}
+
+/// Open a span for `phase`; it records when the guard drops.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    let on = enabled();
+    SpanGuard {
+        phase,
+        start_us: if on { now_us() } else { 0 },
+        env: None,
+        on,
+    }
+}
+
+/// Move this thread's buffered spans into the global sink.
+pub fn flush_thread() {
+    TL.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.spans.is_empty() {
+            if let Ok(mut g) = global().lock() {
+                g.sink.append(&mut b.spans);
+            }
+        }
+    });
+}
+
+/// Take every span this process has buffered (thread-local + sink) —
+/// what a worker packs into a `Frame::Telemetry` batch.
+pub fn take_all_spans() -> Vec<SpanRec> {
+    let mut out = TL.with(|b| std::mem::take(&mut b.borrow_mut().spans));
+    if let Ok(mut g) = global().lock() {
+        out.append(&mut g.sink);
+    }
+    out
+}
+
+// --- coordinator-side merge ------------------------------------------------
+
+/// NTP-style midpoint estimate from one probe/echo exchange, all on the
+/// coordinator clock except `peer_us`: `sent_us` = probe departure,
+/// `recv_us` = echo arrival, `peer_us` = the worker clock inside the
+/// echo. Returns `(rtt_us, offset_us)` where adding `offset_us` to a
+/// peer timestamp lands it on the coordinator clock.
+pub fn clock_offset(sent_us: u64, recv_us: u64, peer_us: u64) -> (u64, i64) {
+    let rtt = recv_us.saturating_sub(sent_us);
+    let mid = sent_us + rtt / 2;
+    (rtt, mid as i64 - peer_us as i64)
+}
+
+/// Fold one probe echo into the per-worker offset table, keeping the
+/// minimum-RTT sample (the least-delayed, hence least-biased, estimate).
+pub fn record_probe_echo(env: u32, rank: u32, sent_us: u64, peer_us: u64, recv_us: u64) {
+    let (rtt, offset) = clock_offset(sent_us, recv_us, peer_us);
+    if let Ok(mut g) = global().lock() {
+        let e = g.offsets.entry((env, rank)).or_insert((u64::MAX, 0));
+        if rtt < e.0 {
+            *e = (rtt, offset);
+        }
+    }
+    INGESTED.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Merge a worker's span batch onto the coordinator timeline, shifting
+/// every span by the worker's current best clock offset.
+pub fn ingest_remote(env: u32, rank: u32, spans: Vec<SpanRec>) {
+    if let Ok(mut g) = global().lock() {
+        let off = g.offsets.get(&(env, rank)).map(|e| e.1).unwrap_or(0);
+        for mut s in spans {
+            s.start_us = (s.start_us as i64).saturating_add(off).max(0) as u64;
+            g.sink.push(s);
+        }
+    }
+    INGESTED.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Monotone ingest counter — the exporter polls it briefly after pool
+/// shutdown so late-arriving worker batches still land in the trace.
+pub fn ingest_seq() -> u64 {
+    INGESTED.load(Ordering::SeqCst)
+}
+
+/// Label environment `env`'s Perfetto lane with its host.
+pub fn set_env_host(env: u32, host_idx: u32, label: &str) {
+    if let Ok(mut g) = global().lock() {
+        g.hosts.insert(env, (host_idx, label.to_string()));
+    }
+}
+
+/// Everything the exporters consume; draining resets the plane for the
+/// next run in this process.
+pub struct Drained {
+    pub spans: Vec<SpanRec>,
+    pub hosts: BTreeMap<u32, (u32, String)>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+pub fn drain_all() -> Drained {
+    flush_thread();
+    let mut g = global().lock().expect("obs global poisoned");
+    Drained {
+        spans: std::mem::take(&mut g.sink),
+        hosts: std::mem::take(&mut g.hosts),
+        counters: std::mem::take(&mut g.counters),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: obs state is process-global; these tests drain what they
+    // record and never assert on absolute sink contents.
+
+    #[test]
+    fn disabled_span_records_nothing_enabled_span_records() {
+        disable();
+        {
+            let _g = span(Phase::Cfd);
+        }
+        enable();
+        set_thread_env(3);
+        set_thread_episode(5);
+        {
+            let _g = span(Phase::Policy);
+        }
+        {
+            let _g = span(Phase::Io).for_env(9);
+        }
+        let spans = take_all_spans();
+        disable();
+        let pol: Vec<_> = spans.iter().filter(|s| s.phase == Phase::Policy as u8).collect();
+        assert_eq!(pol.len(), 1);
+        assert_eq!(pol[0].env_id, 3);
+        assert_eq!(pol[0].episode, 5);
+        let io: Vec<_> = spans.iter().filter(|s| s.phase == Phase::Io as u8).collect();
+        assert_eq!(io[0].env_id, 9, "for_env overrides the thread env");
+        assert!(!spans.iter().any(|s| s.phase == Phase::Cfd as u8));
+    }
+
+    #[test]
+    fn phase_round_trips_and_is_dense() {
+        for (i, p) in Phase::ALL.into_iter().enumerate() {
+            assert_eq!(p as u8, i as u8);
+            assert_eq!(Phase::from_u8(p as u8), Some(p));
+            assert!(!p.name().is_empty());
+        }
+        assert_eq!(Phase::from_u8(200), None);
+    }
+
+    #[test]
+    fn clock_offset_midpoint_math() {
+        // probe at 100, echo back at 300 -> rtt 200, midpoint 200.
+        // peer stamped 1200 at the midpoint -> peer is 1000 ahead.
+        let (rtt, off) = clock_offset(100, 300, 1200);
+        assert_eq!(rtt, 200);
+        assert_eq!(off, -1000);
+        // symmetric case: peer behind by 50
+        let (_, off) = clock_offset(1000, 1100, 1000);
+        assert_eq!(off, 50);
+    }
+
+    #[test]
+    fn ingest_applies_min_rtt_offset() {
+        enable();
+        // high-rtt sample first, better sample second: the second wins
+        record_probe_echo(7, 0, 0, 5000, 1000); // rtt 1000, off -4500
+        record_probe_echo(7, 0, 100, 5150, 200); // rtt 100, off -5000
+        ingest_remote(
+            7,
+            0,
+            vec![SpanRec {
+                phase: Phase::Cfd as u8,
+                start_us: 6000,
+                dur_us: 10,
+                env_id: 7,
+                episode: 1,
+            }],
+        );
+        let spans = take_all_spans();
+        disable();
+        let s = spans.iter().find(|s| s.env_id == 7).unwrap();
+        assert_eq!(s.start_us, 1000, "6000 shifted by the -5000 min-rtt offset");
+    }
+
+    #[test]
+    fn record_measured_uses_caller_measurement() {
+        enable();
+        // reuse the module's pinned epoch as the caller's Instant — this
+        // file is audited to exactly two wall-clock reads, and a test
+        // fixture must not be a third
+        let t0 = epoch();
+        record_measured(Phase::Update, t0, 0.25, NO_ENV, 2);
+        let spans = take_all_spans();
+        disable();
+        let s = spans
+            .iter()
+            .find(|s| s.phase == Phase::Update as u8 && s.episode == 2)
+            .unwrap();
+        assert_eq!(s.dur_us, 250_000);
+        assert_eq!(s.env_id, NO_ENV);
+    }
+}

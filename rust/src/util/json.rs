@@ -219,36 +219,78 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> Result<String> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        // accumulate raw UTF-8 bytes: the input is a &str, so multi-byte
+        // sequences copied byte-for-byte stay valid (the quote/backslash
+        // bytes never occur inside a multi-byte sequence), and escape
+        // decoding appends complete encoded chars
+        let mut out: Vec<u8> = Vec::new();
+        let mut buf = [0u8; 4];
         loop {
             let c = self.peek()?;
             self.i += 1;
             match c {
-                b'"' => return Ok(out),
+                b'"' => return Ok(String::from_utf8(out)?),
                 b'\\' => {
                     let e = self.peek()?;
                     self.i += 1;
                     match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'n' => out.push('\n'),
-                        b't' => out.push('\t'),
-                        b'r' => out.push('\r'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let ch = self.unicode_escape()?;
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
                         }
                         _ => bail!("bad escape at {}", self.i),
                     }
                 }
-                c => out.push(c as char),
+                c => out.push(c),
             }
         }
+    }
+
+    /// The code point of one `\uXXXX` escape (the `\u` already consumed),
+    /// combining UTF-16 surrogate pairs (`\uD83D\uDE00` -> U+1F600).
+    /// Truncated or non-hex input is an error, never a panic; an unpaired
+    /// surrogate decodes to U+FFFD like any other unrepresentable code
+    /// point.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xD800..0xDC00).contains(&hi) {
+            // high surrogate: consume the paired \uXXXX if present
+            if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                let mark = self.i;
+                self.i += 2;
+                let lo = self.hex4()?;
+                if (0xDC00..0xE000).contains(&lo) {
+                    let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                    return Ok(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                }
+                // not a low surrogate: rewind so it parses on its own
+                self.i = mark;
+            }
+            return Ok('\u{fffd}');
+        }
+        Ok(char::from_u32(hi).unwrap_or('\u{fffd}'))
+    }
+
+    /// Four hex digits at the cursor; bounds-checked (a truncated `\uXX`
+    /// tail used to slice out of range and panic).
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.i + 4;
+        if end > self.b.len() {
+            bail!("truncated \\u escape at byte {}", self.i);
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..end])?;
+        let cp = u32::from_str_radix(hex, 16)
+            .map_err(|e| anyhow!("bad \\u escape {hex:?} at byte {}: {e}", self.i))?;
+        self.i = end;
+        Ok(cp)
     }
 
     fn array(&mut self) -> Result<Json> {
@@ -345,5 +387,52 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+        // surrogate pair -> one supplementary-plane char
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+        // unpaired surrogates decode to U+FFFD, never panic
+        assert_eq!(
+            Json::parse(r#""x\ud83dy""#).unwrap(),
+            Json::Str("x\u{fffd}y".into())
+        );
+        assert_eq!(
+            Json::parse(r#""\ude00""#).unwrap(),
+            Json::Str("\u{fffd}".into())
+        );
+        // a truncated \u tail is an error, not an out-of-bounds panic
+        assert!(Json::parse(r#""\u00"#).is_err());
+        assert!(Json::parse(r#""\uZZZZ""#).is_err());
+    }
+
+    /// The escaping contract the trace exporter leans on: every string —
+    /// quotes, backslashes, control characters, multi-byte UTF-8 — must
+    /// survive write -> parse bit-exactly. The old parser pushed raw
+    /// bytes as chars, mangling anything outside ASCII.
+    #[test]
+    fn strings_roundtrip_bit_exactly() {
+        let cases = [
+            "plain",
+            "quote \" backslash \\ slash /",
+            "tabs\tnewlines\nreturns\r",
+            "control \u{1} \u{1f} bell \u{7}",
+            "caf\u{e9} \u{4e2d}\u{6587} \u{1f600}",
+            "windows\\path\\\"quoted\"",
+            "",
+        ];
+        for case in cases {
+            let written = Json::Str(case.to_string()).to_string();
+            let parsed = Json::parse(&written).unwrap();
+            assert_eq!(
+                parsed,
+                Json::Str(case.to_string()),
+                "string {case:?} did not round-trip (wire form {written})"
+            );
+        }
+        // and through a nested document, where keys get escaped too
+        let doc = obj(vec![("k\"ey\\", s("v\nal \u{1f600}"))]);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
     }
 }

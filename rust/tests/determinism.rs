@@ -20,7 +20,15 @@ use drlfoam::cluster::planner::{search, PlannerConfig};
 use drlfoam::cluster::Calibration;
 use drlfoam::coordinator::{train, TrainConfig};
 use drlfoam::drl::{PolicyBackendKind, UpdateBackendKind};
+use drlfoam::exec::ExecutorKind;
 use drlfoam::io_interface::IoMode;
+
+/// The obs plane is process-global (`obs::enable()`), so the
+/// traced-vs-untraced twin tests serialize on this lock: a concurrently
+/// tracing test would otherwise drain another run's spans into its own
+/// trace file. Learning output is unaffected either way — that is the
+/// invariant under test — only the trace *contents* need isolation.
+static TRACE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 fn base_cfg(tag: &str) -> TrainConfig {
     let root = std::env::temp_dir().join(format!("drlfoam-det-{tag}-{}", std::process::id()));
@@ -107,6 +115,90 @@ fn native_cfd_training_is_bitwise_reproducible_across_runs() {
     assert_eq!(
         params_a, params_b,
         "native-cfd policy_final.bin diverged between identical runs"
+    );
+}
+
+/// Like [`run_cfg`], but for a `--trace` run: additionally asserts the
+/// three trace artifacts landed (Chrome-trace JSON with at least one
+/// complete-event span, the percentile summary, the drift report) before
+/// cleaning up.
+fn run_traced(cfg: &TrainConfig) -> (Vec<String>, Vec<u8>) {
+    train(cfg).unwrap();
+    let rows = learning_rows(&cfg.out_dir);
+    let params = std::fs::read(cfg.out_dir.join("policy_final.bin")).unwrap();
+    let trace_path = cfg.trace.as_ref().unwrap();
+    let trace = std::fs::read_to_string(trace_path).unwrap();
+    assert!(
+        trace.contains("\"traceEvents\"") && trace.contains("\"ph\":\"X\""),
+        "trace.json should hold Chrome-trace complete events: {}",
+        &trace[..trace.len().min(200)]
+    );
+    let summary = std::fs::read_to_string(cfg.out_dir.join("obs_summary.csv")).unwrap();
+    assert!(summary.lines().count() > 1, "obs_summary.csv is empty");
+    let drift = std::fs::read_to_string(cfg.out_dir.join("drift.csv")).unwrap();
+    assert!(drift.lines().count() > 1, "drift.csv is empty");
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    (rows, params)
+}
+
+/// The tentpole invariant, in-process lane: a `--trace` run must be
+/// bitwise identical — every learning column and the final parameters —
+/// to its untraced twin. Tracing reuses the Instants the timing columns
+/// already read, so the only way this goes red is a new clock read or a
+/// reordered side effect on a scored path.
+#[test]
+fn tracing_is_bitwise_invisible_in_process() {
+    let _g = TRACE_LOCK.lock().unwrap();
+    let (rows_plain, params_plain) = run_cfg(&base_cfg("plain-ip"));
+    let mut cfg = base_cfg("traced-ip");
+    cfg.trace = Some(cfg.out_dir.join("trace.json"));
+    cfg.trace_calib = Some(Calibration::paper_scale());
+    let (rows_traced, params_traced) = run_traced(&cfg);
+    assert!(!rows_plain.is_empty(), "no learning rows written");
+    assert_eq!(
+        rows_plain, rows_traced,
+        "--trace changed the learning columns (in-process)"
+    );
+    assert_eq!(
+        params_plain, params_traced,
+        "--trace changed policy_final.bin (in-process)"
+    );
+}
+
+/// The same twin comparison across real `drlfoam worker` OS processes:
+/// workers record spans locally, batch them over `Frame::Telemetry`, and
+/// the coordinator clock-shifts them into the merged trace — none of
+/// which may perturb the learning output.
+#[test]
+fn tracing_is_bitwise_invisible_multi_process() {
+    let worker_bin: Option<std::path::PathBuf> =
+        option_env!("CARGO_BIN_EXE_drlfoam").map(Into::into);
+    if worker_bin.is_none() {
+        eprintln!("skipping: CARGO_BIN_EXE_drlfoam not provided by cargo");
+        return;
+    }
+    let _g = TRACE_LOCK.lock().unwrap();
+    let mp = |tag: &str| -> TrainConfig {
+        let mut c = base_cfg(tag);
+        c.executor = ExecutorKind::MultiProcess;
+        c.worker_bin = worker_bin.clone();
+        c.n_envs = 2;
+        c.iterations = 2;
+        c
+    };
+    let (rows_plain, params_plain) = run_cfg(&mp("plain-mp"));
+    let mut cfg = mp("traced-mp");
+    cfg.trace = Some(cfg.out_dir.join("trace.json"));
+    cfg.trace_calib = Some(Calibration::paper_scale());
+    let (rows_traced, params_traced) = run_traced(&cfg);
+    assert!(!rows_plain.is_empty(), "no learning rows written");
+    assert_eq!(
+        rows_plain, rows_traced,
+        "--trace changed the learning columns (multi-process)"
+    );
+    assert_eq!(
+        params_plain, params_traced,
+        "--trace changed policy_final.bin (multi-process)"
     );
 }
 

@@ -143,6 +143,7 @@ fn orphaned_worker_is_reaped_on_coordinator_disconnect() {
             backend: "native".into(),
             cfd_backend: "xla".into(),
             fault_injection: String::new(),
+            trace: 0,
         },
     )
     .unwrap();

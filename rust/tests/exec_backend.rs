@@ -296,7 +296,7 @@ mod wire_fuzz {
     /// `wire-tag-coverage` checks this corpus, so a frame added to the
     /// protocol without a fuzz case fails the audit.
     fn random_frame(rng: &mut Rng) -> Frame {
-        match rng.below(12) {
+        match rng.below(13) {
             0 => Frame::Hello {
                 env_id: rng.next_u64() as u32,
                 rank: rng.below(8) as u32,
@@ -378,8 +378,27 @@ mod wire_fuzz {
                     backend: s(rng, 16),
                     cfd_backend: s(rng, 16),
                     fault_injection: s(rng, 24),
+                    trace: rng.below(256) as u8,
                 }
             }
+            12 => Frame::Telemetry {
+                env_id: rng.below(64) as u32,
+                rank: rng.below(8) as u32,
+                // raw u8, not just the live kinds {0,1,2}: unknown kinds
+                // must round-trip bit-exactly like every other frame
+                kind: rng.below(256) as u8,
+                clock_us: rng.next_u64(),
+                echo_us: rng.next_u64(),
+                spans: (0..rng.below(32))
+                    .map(|_| drlfoam::obs::SpanRec {
+                        phase: rng.below(256) as u8,
+                        start_us: rng.next_u64(),
+                        dur_us: rng.next_u64(),
+                        env_id: rng.below(64) as u32,
+                        episode: rng.next_u64(),
+                    })
+                    .collect(),
+            },
             _ => Frame::Error {
                 msg: String::from_utf8_lossy(
                     &(0..rng.below(256)).map(|_| rng.below(256) as u8).collect::<Vec<_>>(),
